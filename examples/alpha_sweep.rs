@@ -1,0 +1,44 @@
+//! Surplus-factor sweep (Fig. 6 workload): how average latency and budget
+//! headroom respond to α under latency-min, including the α = 0 pathology.
+//!
+//! Run: `cargo run --release --example alpha_sweep -- [app]`
+
+use skedge::config::{default_artifact_dir, ExperimentSettings, Meta, Objective};
+use skedge::experiments::best_latmin_set;
+use skedge::metrics::budget_metrics;
+use skedge::sim;
+
+fn main() -> anyhow::Result<()> {
+    let app = std::env::args().nth(1).unwrap_or_else(|| "fd".into());
+    let meta = Meta::load(&default_artifact_dir())?;
+    let am = meta.app(&app);
+    let set = best_latmin_set(&app);
+    println!(
+        "alpha sweep: {} latency-min, set {:?} + edge, C_max = ${:.4e} \
+         (paper α = {})\n",
+        app.to_uppercase(),
+        set.iter().map(|m| *m as i64).collect::<Vec<_>>(),
+        am.cmax,
+        am.alpha
+    );
+    println!(
+        "{:>6} {:>14} {:>16} {:>7} {:>12} {:>14}",
+        "α", "avg e2e (s)", "pred e2e (s)", "edge", "used %", "remaining $"
+    );
+    for alpha in [0.0, 0.005, 0.01, 0.02, 0.03, 0.04, 0.05, 0.08] {
+        let s = ExperimentSettings::new(&app, Objective::LatencyMin, &set).with_alpha(alpha);
+        let o = sim::run(&meta, &s)?;
+        let (_, used) = budget_metrics(&o.records, am.cmax);
+        let remaining = am.cmax * o.summary.n as f64 - o.summary.total_actual_cost;
+        println!(
+            "{:>6.3} {:>14.3} {:>16.3} {:>7} {:>12.1} {:>14.8}",
+            alpha,
+            o.summary.avg_actual_e2e_ms / 1e3,
+            o.summary.avg_predicted_e2e_ms / 1e3,
+            o.summary.edge_count,
+            used,
+            remaining
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Deadline sweep (Fig. 5 workload): how total cost and edge usage respond
+//! to the cost-min deadline δ for one app.
+//!
+//! Run: `cargo run --release --example deadline_sweep -- [app] [n_steps]`
+
+use skedge::config::{default_artifact_dir, ExperimentSettings, Meta, Objective};
+use skedge::experiments::best_costmin_set;
+use skedge::metrics::deadline_violations;
+use skedge::sim;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = argv.first().map(|s| s.as_str()).unwrap_or("stt").to_string();
+    let steps: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(9);
+
+    let meta = Meta::load(&default_artifact_dir())?;
+    let am = meta.app(&app);
+    let set = best_costmin_set(&app);
+    println!(
+        "deadline sweep: {} cost-min, set {:?} + edge, paper δ = {:.1} s\n",
+        app.to_uppercase(),
+        set.iter().map(|m| *m as i64).collect::<Vec<_>>(),
+        am.deadline_ms / 1e3
+    );
+    println!(
+        "{:>8} {:>14} {:>16} {:>7} {:>10} {:>12}",
+        "δ (s)", "actual $", "predicted $", "edge", "viol %", "avg e2e (s)"
+    );
+    for i in 0..steps {
+        let delta = am.deadline_ms * (0.6 + 0.2 * i as f64);
+        let s = ExperimentSettings::new(&app, Objective::CostMin, &set).with_deadline(delta);
+        let o = sim::run(&meta, &s)?;
+        let (viol, _) = deadline_violations(&o.records, delta);
+        println!(
+            "{:>8.2} {:>14.8} {:>16.8} {:>7} {:>10.2} {:>12.3}",
+            delta / 1e3,
+            o.summary.total_actual_cost,
+            o.summary.total_predicted_cost,
+            o.summary.edge_count,
+            viol,
+            o.summary.avg_actual_e2e_ms / 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the AOT artifacts, scores one input through the XLA predictor,
+//! runs a 100-task latency-min placement simulation for the FD app, and
+//! prints the decisions — the 60-second tour of the framework.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use skedge::config::{default_artifact_dir, ExperimentSettings, Meta, Objective,
+                     PredictorBackendKind};
+use skedge::predictor::{Backend, Placement, Predictor};
+use skedge::runtime::XlaEngine;
+use skedge::sim;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load(&default_artifact_dir())?;
+    let app = meta.app("fd").clone();
+
+    // 1. Score one input through the AOT-compiled predictor (L1 Pallas
+    //    kernel + L2 JAX graph, running under PJRT from Rust).
+    let engine = XlaEngine::load(&meta, "fd")?;
+    let mut predictor = Predictor::new(&meta, &app, Backend::Xla(engine));
+    let size = 2.5e6; // a 2.5-megapixel frame
+    let pred = predictor.predict(size, 0.0)?;
+    println!("input: {size:.0} pixels");
+    println!(
+        "  edge : predicted e2e {:.0} ms (free)",
+        pred.edge_e2e_ms
+    );
+    for &mem in &[640.0, 1536.0, 2944.0] {
+        let j = meta.config_index(mem).unwrap();
+        let c = &pred.cloud[j];
+        println!(
+            "  cloud {:>4} MB: predicted e2e {:>6.0} ms, cost ${:.7} ({})",
+            mem as i64,
+            c.e2e_ms,
+            c.cost,
+            if c.warm { "warm" } else { "cold" }
+        );
+    }
+
+    // 2. Run the full framework on 100 tasks: minimize latency under the
+    //    per-task budget, cloud set {1536, 1664, 2048} + λ_edge.
+    let settings = ExperimentSettings::new("fd", Objective::LatencyMin,
+                                           &[1536.0, 1664.0, 2048.0])
+        .with_backend(PredictorBackendKind::Xla)
+        .with_n_inputs(100);
+    let out = sim::run(&meta, &settings)?;
+    let s = &out.summary;
+    println!("\n100-task latency-min run (C_max = ${:.4e}, α = {}):", app.cmax, app.alpha);
+    println!("  avg e2e       : {:.3} s (prediction error {:.2}%)",
+             s.avg_actual_e2e_ms / 1e3, s.latency_prediction_error_pct());
+    println!("  placements    : {} edge / {} cloud", s.edge_count, s.cloud_count);
+    println!("  total cost    : ${:.8}", s.total_actual_cost);
+    println!("  warm starts   : {} warm, {} cold, {} mispredicted",
+             s.cloud_actual_warm, s.cloud_actual_cold, s.warm_cold_mismatches);
+
+    // 3. Peek at the first few decisions.
+    println!("\nfirst 5 decisions:");
+    for r in &out.records[..5] {
+        let what = match r.placement {
+            Placement::Edge => "edge".to_string(),
+            Placement::Cloud(j) => format!("cloud {} MB", meta.memory_configs_mb[j] as i64),
+        };
+        println!(
+            "  task {:>2} @{:>7.0} ms -> {:<13} predicted {:>6.0} ms, actual {:>6.0} ms",
+            r.id, r.arrive_ms, what, r.predicted_e2e_ms, r.actual_e2e_ms
+        );
+    }
+    Ok(())
+}

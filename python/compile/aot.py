@@ -1,0 +1,265 @@
+"""AOT pipeline: train the performance models, lower the per-app prediction
+graph to HLO text, and emit everything the Rust coordinator consumes.
+
+Outputs (under ``artifacts/``):
+
+  {app}_b{B}.hlo.txt   per-app predictor at batch sizes B in {1, 64}.
+                       HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+                       emits 64-bit instruction ids that xla_extension 0.5.1
+                       rejects; the text parser reassigns ids cleanly.
+  meta.json            memory configs, pricing constants, component means and
+                       sigmas, T_idl, trained model parameters (for the
+                       Rust-native mirror backend), ground-truth parameters
+                       (for the Rust generative workload path), Table II
+                       metrics, and per-app experiment constants (delta,
+                       C_max, alpha, arrival rates).
+  {app}_eval.csv       600-input replay tables of *actual* component
+                       latencies, mirroring the paper's simulation protocol
+                       ("we simulate execution using the actual end-to-end
+                       latency and actual costs from the measured data").
+
+Run once via ``make artifacts``; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import synthdata
+from .model import TrainedModels, make_predict_fn
+from .training import fit_gbrt, fit_ols, fit_ridge, mape
+
+BATCH_SIZES = (1, 64)
+TRAIN_SEED = 2020           # publication year; fixed for reproducibility
+EVAL_SEED = 7_102_026
+
+
+def train_app(app: synthdata.AppGroundTruth, seed: int = TRAIN_SEED):
+    """Collect a synthetic training set and fit all component models."""
+    rng = np.random.default_rng(seed)
+    ds = synthdata.sample_dataset(app, app.n_train, rng)
+    train, test = synthdata.train_test_split(ds, 0.8, rng)
+
+    theta = fit_ols(train["bytes"], train["upld"])
+    phi = fit_ridge(train["size"], train["edge_comp"], lam=1.0)
+
+    mems = np.asarray(synthdata.MEMORY_CONFIGS_MB, dtype=np.float64)
+    n_tr = len(train["size"])
+    feats = np.stack([
+        np.repeat(train["size"], len(mems)),
+        np.tile(mems, n_tr),
+    ], axis=1)
+    targets = train["comp"].ravel()
+    forest = fit_gbrt(feats, targets, n_trees=100, depth=3, learning_rate=0.1,
+                      subsample=0.9, min_leaf=16, n_bins=32, seed=seed)
+
+    models = TrainedModels(
+        app=app.name,
+        theta=theta,
+        phi=phi,
+        forest=forest,
+        bytes_per_unit=app.bytes_per_unit,
+        start_warm_mean=float(train["start_w"].mean()),
+        start_cold_mean=float(train["start_c"].mean()),
+        store_mean=float(train["store"].mean()),
+        iotup_mean=float(train["iotup"].mean()) if app.iotup_mean >= 0 else -1.0,
+        edge_store_mean=float(train["edge_store"].mean()),
+    )
+    return models, train, test
+
+
+def evaluate(models: TrainedModels, test: dict) -> dict:
+    """Table II: MAPE of end-to-end latency predictions on the test split."""
+    pred_cloud = models.predict_cloud_e2e_warm(test["size"])      # [B, 19]
+    actual_cloud = synthdata.e2e_cloud_warm(test)
+    pred_edge = models.predict_edge_e2e(test["size"])
+    actual_edge = synthdata.e2e_edge(test)
+    return {
+        "mape_cloud_e2e": mape(actual_cloud.ravel(), pred_cloud.ravel()),
+        "mape_edge_e2e": mape(actual_edge, pred_edge),
+        "mape_comp_cloud": mape(test["comp"].ravel(),
+                                np.maximum(models.forest.predict(np.stack([
+                                    np.repeat(test["size"], 19),
+                                    np.tile(np.asarray(synthdata.MEMORY_CONFIGS_MB,
+                                                       dtype=np.float64),
+                                            len(test["size"]))], axis=1))
+                                    .reshape(-1, 19), 1.0).ravel()),
+    }
+
+
+# Per-app C_max anchors: (which candidate memory to anchor on, cost
+# percentile). IR/FD anchor the cheapest candidate at p80 (the priciest
+# ~15% of inputs need surplus); STT anchors the *fastest* candidate at p45
+# (half the inputs must fall back to slower configs or the edge), because
+# STT's flat comp-vs-memory curve otherwise never makes the budget bind.
+CMAX_ANCHORS = {"ir": ("min", 80.0), "fd": ("min", 80.0), "stt": ("max", 45.0)}
+
+
+def derive_cmax(models: TrainedModels, train: dict, app: synthdata.AppGroundTruth,
+                candidate_mems: tuple[int, ...]) -> float:
+    """Pick C_max so the lat-min constraint binds like the paper's Fig. 6.
+
+    The paper's absolute C_max values are inconsistent with the AWS pricing
+    formula at the reported latencies (see DESIGN.md §2), so we derive
+    C_max = 1.05 x a per-app percentile of the actual cost of an anchor
+    candidate configuration over the training inputs (CMAX_ANCHORS): enough
+    inputs are unaffordable at alpha = 0 to produce the paper's edge blow-up,
+    while modest surplus (alpha ~ 0.02-0.03) restores cloud affordability,
+    yielding the 85-99 % budget-used regime of Tables IV/V.
+    """
+    anchor, pctl = CMAX_ANCHORS[app.name]
+    target = min(candidate_mems) if anchor == "min" else max(candidate_mems)
+    mems = np.asarray(synthdata.MEMORY_CONFIGS_MB, dtype=np.float64)
+    j = int(np.argmin(np.abs(mems - target)))
+    costs = synthdata.billed_cost(train["comp"][:, j], mems[j])
+    return float(np.percentile(costs, pctl) * 1.05)
+
+
+# Best-performing configuration sets from the paper's Table IV (lat-min);
+# used only to anchor the C_max derivation. Experiment harnesses in Rust
+# carry the full table sets.
+LATMIN_BEST_SETS = {
+    "ir": (1408, 1664, 2944),
+    "fd": (1536, 1664, 2048),
+    "stt": (1152, 1280, 1664),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # CRITICAL: the default printer elides large constants as `{...}`, which
+    # the downstream HLO text parser silently accepts as garbage — the trained
+    # tree tables would never reach the Rust runtime. Print them in full.
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.get_hlo_module().to_string(opts)
+
+
+# Pallas batch-block per artifact batch size (block-size sweep, §Perf):
+# the b1 request path is fastest with small blocks; bulk scoring prefers 64.
+KERNEL_BLOCK_B = {1: 32, 64: 64}
+
+
+def lower_app(models: TrainedModels, out_dir: str) -> dict:
+    paths = {}
+    for b in BATCH_SIZES:
+        fn = make_predict_fn(models, block_b=KERNEL_BLOCK_B.get(b, 64))
+        spec = jax.ShapeDtypeStruct((b,), np.float32)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        name = f"{models.app}_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        paths[f"b{b}"] = name
+    return paths
+
+
+def write_eval_csv(app: synthdata.AppGroundTruth, path: str) -> None:
+    rng = np.random.default_rng(EVAL_SEED + hash(app.name) % 1000)
+    ds = synthdata.sample_dataset(app, app.n_eval, rng)
+    cols = (["size", "bytes", "upld"]
+            + [f"comp_{m}" for m in synthdata.MEMORY_CONFIGS_MB]
+            + ["start_w", "start_c", "store", "edge_comp", "iotup", "edge_store"])
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for i in range(app.n_eval):
+            row = ([ds["size"][i], ds["bytes"][i], ds["upld"][i]]
+                   + list(ds["comp"][i])
+                   + [ds["start_w"][i], ds["start_c"][i], ds["store"][i],
+                      ds["edge_comp"][i], ds["iotup"][i], ds["edge_store"][i]])
+            f.write(",".join(f"{v:.6f}" for v in row) + "\n")
+
+
+def app_meta(app: synthdata.AppGroundTruth, models: TrainedModels,
+             train: dict, metrics: dict, artifact_paths: dict) -> dict:
+    cmax = derive_cmax(models, train, app, LATMIN_BEST_SETS[app.name])
+    return {
+        "size_unit": app.size_unit,
+        "arrival_rate_per_s": app.arrival_rate_per_s,
+        "deadline_ms": app.deadline_ms,
+        "alpha": app.alpha,
+        "cmax": cmax,
+        "n_train": app.n_train,
+        "n_eval": app.n_eval,
+        "ground_truth": dataclasses.asdict(app),
+        "models": {
+            "theta": list(models.theta),
+            "phi": list(models.phi),
+            "bytes_per_unit": models.bytes_per_unit,
+            "forest": models.forest.to_flat(),
+            "start_warm_mean": models.start_warm_mean,
+            "start_warm_sigma": app.start_warm_sigma,
+            "start_cold_mean": models.start_cold_mean,
+            "start_cold_sigma": app.start_cold_sigma,
+            "store_mean": models.store_mean,
+            "store_sigma": app.store_sigma,
+            "iotup_mean": models.iotup_mean,
+            "iotup_sigma": app.iotup_sigma,
+            "edge_store_mean": models.edge_store_mean,
+            "edge_store_sigma": app.edge_store_sigma,
+        },
+        "metrics": metrics,
+        "table1": {
+            "warm_start_ms": models.start_warm_mean,
+            "cold_start_ms": models.start_cold_mean,
+            "store_ms": models.store_mean,
+            "iot_upload_ms": models.iotup_mean,
+            "edge_store_ms": models.edge_store_mean,
+        },
+        "artifacts": artifact_paths,
+        "batch_sizes": list(BATCH_SIZES),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--apps", default="ir,fd,stt")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meta = {
+        "memory_configs_mb": synthdata.MEMORY_CONFIGS_MB,
+        "pricing": {
+            "price_per_gb_s": synthdata.PRICE_PER_GB_S,
+            "bill_quantum_ms": synthdata.BILL_QUANTUM_MS,
+            "request_fee": synthdata.REQUEST_FEE,
+        },
+        "cpu_knee_mb": synthdata.CPU_KNEE_MB,
+        "cpu_exp_below": synthdata.CPU_EXP_BELOW,
+        "cpu_exp_above": synthdata.CPU_EXP_ABOVE,
+        "tidl_mean_ms": synthdata.TIDL_MEAN_MS,
+        "tidl_sigma_ms": synthdata.TIDL_SIGMA_MS,
+        "train_seed": TRAIN_SEED,
+        "eval_seed": EVAL_SEED,
+        "apps": {},
+    }
+
+    for name in args.apps.split(","):
+        app = synthdata.GROUND_TRUTH[name]
+        print(f"[aot] {name}: training on {app.n_train} synthetic inputs ...")
+        models, train, test = train_app(app)
+        metrics = evaluate(models, test)
+        print(f"[aot] {name}: MAPE cloud e2e = {metrics['mape_cloud_e2e']:.2f}%  "
+              f"edge e2e = {metrics['mape_edge_e2e']:.2f}%")
+        print(f"[aot] {name}: lowering predictor (B={BATCH_SIZES}) ...")
+        paths = lower_app(models, args.out)
+        write_eval_csv(app, os.path.join(args.out, f"{name}_eval.csv"))
+        meta["apps"][name] = app_meta(app, models, train, metrics, paths)
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] wrote {args.out}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Pallas kernel: GBRT forest evaluation (the L1 compute hot-spot).
+
+The Predictor must score every input against all 19 cloud container
+configurations: a [B, F] feature block (input size, container memory) is
+pushed through T depth-D regression trees.
+
+Formulation — gather-free select-tree, all trees at once:
+
+  * node feature values are materialized with per-feature masks:
+    ``xv[b,t,n] = select(feat[t,n] == f, x[b,f], ...)`` (F is tiny);
+  * one vectorized compare produces all node decisions ``cmp [Bb, T, NI]``;
+  * the descent is a *static* select-tree: node indices are Python-level
+    constants, so each level is a static slice + lane-wise select over
+    [Bb, T] planes — 2^D − 1 selects total, no dynamic gather anywhere;
+  * leaf values are static column slices of the leaf table (no leaf
+    gather), and trees reduce with one sum over the T axis. (Equivalently
+    a one-hot × leaf contraction — MXU-shaped if a real TPU wants it.)
+
+This matters twice: XLA 0.5.1's CPU backend lowers dynamic gathers and
+rolled while-loops poorly (the original fori_loop-over-trees kernel paid
+per-iteration dispatch), and on TPU the select-tree is pure lane-parallel
+VPU work with no serialization. Measured effect on the Rust request path:
+see EXPERIMENTS.md §Perf.
+
+Layout/TPU mapping: the batch is tiled over the grid (`block_b` rows per
+step); tree tables are replicated to every grid step via constant
+BlockSpec index maps (they are compile-time constants in the surrounding
+graph, ≈ 9 KB); the per-step VMEM working set is the [Bb, T, NI] compare
+plane (block 32: 32·100·7·4 B ≈ 90 KB — comfortably inside the ~16 MB VMEM
+budget; 32 was chosen by a block-size sweep on the CPU request path,
+see EXPERIMENTS.md §Perf).
+
+`interpret=True` always: the CPU PJRT client cannot execute Mosaic
+custom-calls, and this repo's AOT path (HLO text → Rust) runs on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _forest_kernel(x_ref, fi_ref, th_ref, lf_ref, o_ref, *, n_feat: int,
+                   depth: int, base: float, learning_rate: float):
+    x = x_ref[...]                      # [Bb, F] f32
+    fi = fi_ref[...]                    # [T, NI] i32
+    th = th_ref[...]                    # [T, NI] f32
+    lf = lf_ref[...]                    # [T, NL] f32
+    bb = x.shape[0]
+    n_trees, n_internal = fi.shape
+
+    # xv[b, t, n] = x[b, fi[t, n]] via per-feature masks — no gather
+    xv = jnp.zeros((bb, n_trees, n_internal), jnp.float32)
+    for f in range(n_feat):
+        xv = jnp.where((fi == f)[None, :, :], x[:, f][:, None, None], xv)
+    cmp = xv >= th[None, :, :]          # [Bb, T, NI] node decisions
+
+    # static select-tree descent: value(node) = [Bb, T] plane of leaf
+    # values reachable from `node`; node indices are Python constants
+    def value(node: int):
+        if node >= n_internal:          # leaf column, static slice
+            col = lf[:, node - n_internal]
+            return jnp.broadcast_to(col[None, :], (bb, n_trees))
+        return jnp.where(cmp[:, :, node], value(2 * node + 2),
+                         value(2 * node + 1))
+
+    acc = value(0).sum(axis=1)          # [Bb]
+    o_ref[...] = jnp.float32(base) + jnp.float32(learning_rate) * acc
+
+
+def forest_eval(x, feat, thresh, leaf, *, base: float, learning_rate: float,
+                block_b: int = 32):
+    """Evaluate a dense GBRT forest with the Pallas kernel.
+
+    x: [B, F] float32; feat/thresh: [T, 2^D - 1]; leaf: [T, 2^D].
+    Returns [B] float32. B is padded up to a multiple of `block_b`
+    internally; callers see the exact size back.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    feat = jnp.asarray(feat, jnp.int32)
+    thresh = jnp.asarray(thresh, jnp.float32)
+    leaf = jnp.asarray(leaf, jnp.float32)
+
+    b, f_dim = x.shape
+    n_trees, n_internal = feat.shape
+    depth = int(n_internal + 1).bit_length() - 1
+    assert 2 ** depth - 1 == n_internal, "internal node count must be 2^D - 1"
+    assert leaf.shape == (n_trees, 2 ** depth)
+
+    bb = min(block_b, max(b, 1))
+    b_pad = ((b + bb - 1) // bb) * bb
+    if b_pad != b:
+        x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
+    grid = (b_pad // bb,)
+
+    kernel = functools.partial(_forest_kernel, n_feat=f_dim, depth=depth,
+                               base=base, learning_rate=learning_rate)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, f_dim), lambda i: (i, 0)),
+            pl.BlockSpec((n_trees, n_internal), lambda i: (0, 0)),
+            pl.BlockSpec((n_trees, n_internal), lambda i: (0, 0)),
+            pl.BlockSpec((n_trees, 2 ** depth), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b_pad,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls (see module doc)
+    )(x, feat, thresh, leaf)
+    return out[:b]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the GBRT forest-evaluation kernel.
+
+Same dense complete-binary-tree layout as ``training.GbrtForest``:
+  feat   [T, 2^D - 1] int32
+  thresh [T, 2^D - 1] float32   (descend right iff x[f] >= t; +inf = always left)
+  leaf   [T, 2^D]     float32
+Prediction = base + lr * sum_t leaf_t(descend(x)).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def forest_eval_ref(x, feat, thresh, leaf, *, base, learning_rate):
+    """Evaluate the forest. x: [B, F] -> [B] (float32).
+
+    Vectorized level-by-level descent over all trees at once; the
+    correctness oracle for the Pallas kernel and the Rust-native mirror.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    feat = jnp.asarray(feat, jnp.int32)
+    thresh = jnp.asarray(thresh, jnp.float32)
+    leaf = jnp.asarray(leaf, jnp.float32)
+
+    n_trees, n_internal = feat.shape
+    depth = int(n_internal + 1).bit_length() - 1  # 2^D - 1 internal -> D levels
+    assert 2 ** depth - 1 == n_internal, "internal node count must be 2^D - 1"
+    b = x.shape[0]
+
+    # idx[B, T]: current internal-node index per (sample, tree)
+    idx = jnp.zeros((b, n_trees), jnp.int32)
+    feat_bt = jnp.broadcast_to(feat[None, :, :], (b, n_trees, n_internal))
+    thr_bt = jnp.broadcast_to(thresh[None, :, :], (b, n_trees, n_internal))
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat_bt, idx[:, :, None], axis=2)[..., 0]  # [B,T]
+        t = jnp.take_along_axis(thr_bt, idx[:, :, None], axis=2)[..., 0]   # [B,T]
+        xv = jnp.take_along_axis(x, f.reshape(b, -1), axis=1).reshape(b, n_trees)
+        idx = 2 * idx + 1 + (xv >= t).astype(jnp.int32)
+    leaf_idx = idx - n_internal                                            # [B,T]
+    n_leaf = leaf.shape[1]
+    leaf_bt = jnp.broadcast_to(leaf[None, :, :], (b, n_trees, n_leaf))
+    vals = jnp.take_along_axis(leaf_bt, leaf_idx[:, :, None], axis=2)[..., 0]
+    return jnp.float32(base) + jnp.float32(learning_rate) * vals.sum(axis=1)

@@ -1,0 +1,110 @@
+"""L2: the paper's performance-prediction graph in JAX.
+
+For one application, ``make_predict_fn`` builds
+
+    predict(sizes [B]) -> (upld [B], comp_cloud [B, 19], comp_edge [B],
+                           cost_cloud [B, 19])
+
+where
+  * ``upld``       — linear upload-time model  theta0 + theta1 * bytes(k),
+  * ``comp_cloud`` — GBRT forest over (size, memory) via the L1 Pallas kernel,
+    one column per cloud container configuration,
+  * ``comp_edge``  — ridge linear model  phi0 + phi1 * size(k),
+  * ``cost_cloud`` — in-graph AWS billing: ceil(comp / 100 ms) GB-s price
+    plus the per-request fee.
+
+Scalar components (warm/cold start means, store, iotup) stay on the Rust
+side: the CIL decides warm-vs-cold per request, so they are added by the
+coordinator when assembling Eqn. (1)/(2).
+
+All trained parameters are baked into the graph as constants at lowering
+time; the AOT artifact is self-contained per application.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import synthdata
+from .kernels import gbrt
+from .training import GbrtForest
+
+
+@dataclasses.dataclass
+class TrainedModels:
+    """Everything the Predictor needs for one application."""
+
+    app: str
+    theta: tuple[float, float]        # upld ~ theta0 + theta1 * bytes
+    phi: tuple[float, float]          # comp_e ~ phi0 + phi1 * size
+    forest: GbrtForest                # comp(k, m), features = (size, mem MB)
+    bytes_per_unit: float
+    # scalar component means (ms) — consumed by Rust, also kept here for eval
+    start_warm_mean: float
+    start_cold_mean: float
+    store_mean: float
+    iotup_mean: float                 # <0 -> n/a (IR)
+    edge_store_mean: float
+
+    def edge_overhead_ms(self) -> float:
+        iot = self.iotup_mean if self.iotup_mean >= 0 else 0.0
+        return iot + self.edge_store_mean
+
+    def predict_cloud_e2e_warm(self, sizes: np.ndarray) -> np.ndarray:
+        """[B] -> [B, 19] warm end-to-end prediction (numpy, for evaluation)."""
+        sizes = np.asarray(sizes, dtype=np.float64)
+        byts = sizes * self.bytes_per_unit
+        upld = self.theta[0] + self.theta[1] * byts
+        mems = np.asarray(synthdata.MEMORY_CONFIGS_MB, dtype=np.float64)
+        feats = np.stack([
+            np.repeat(sizes, len(mems)),
+            np.tile(mems, len(sizes)),
+        ], axis=1)
+        comp = self.forest.predict(feats).reshape(len(sizes), len(mems))
+        comp = np.maximum(comp, 1.0)
+        return upld[:, None] + self.start_warm_mean + comp + self.store_mean
+
+    def predict_edge_e2e(self, sizes: np.ndarray) -> np.ndarray:
+        sizes = np.asarray(sizes, dtype=np.float64)
+        comp_e = np.maximum(self.phi[0] + self.phi[1] * sizes, 1.0)
+        return comp_e + self.edge_overhead_ms()
+
+
+def make_predict_fn(models: TrainedModels, block_b: int = 32):
+    """Build the jittable predict function with parameters baked as constants."""
+    mems = jnp.asarray(synthdata.MEMORY_CONFIGS_MB, jnp.float32)       # [N]
+    n_cfg = mems.shape[0]
+    theta0, theta1 = (jnp.float32(v) for v in models.theta)
+    phi0, phi1 = (jnp.float32(v) for v in models.phi)
+    bpu = jnp.float32(models.bytes_per_unit)
+    feat = jnp.asarray(models.forest.feat, jnp.int32)
+    thresh = jnp.asarray(models.forest.thresh, jnp.float32)
+    leaf = jnp.asarray(models.forest.leaf, jnp.float32)
+    base = float(models.forest.base)
+    lr = float(models.forest.learning_rate)
+
+    price = jnp.float32(synthdata.PRICE_PER_GB_S)
+    quantum = jnp.float32(synthdata.BILL_QUANTUM_MS)
+    fee = jnp.float32(synthdata.REQUEST_FEE)
+    mem_gb = mems / jnp.float32(1024.0)                                 # [N]
+
+    def predict(sizes):
+        sizes = jnp.asarray(sizes, jnp.float32)                         # [B]
+        b = sizes.shape[0]
+        upld = theta0 + theta1 * (sizes * bpu)                          # [B]
+        # feature grid [B*N, 2]: (size, mem)
+        size_col = jnp.repeat(sizes, n_cfg)
+        mem_col = jnp.tile(mems, b)
+        feats = jnp.stack([size_col, mem_col], axis=1)
+        comp = gbrt.forest_eval(feats, feat, thresh, leaf, base=base,
+                                learning_rate=lr, block_b=block_b)
+        comp = jnp.maximum(comp.reshape(b, n_cfg), 1.0)                 # [B, N]
+        comp_edge = jnp.maximum(phi0 + phi1 * sizes, 1.0)               # [B]
+        billed_s = jnp.ceil(comp / quantum) * (quantum / jnp.float32(1e3))
+        cost = price * mem_gb[None, :] * billed_s + fee                 # [B, N]
+        return (upld, comp, comp_edge, cost)
+
+    return predict

@@ -1,0 +1,247 @@
+"""Synthetic ground-truth generator for the AWS edge-cloud substrate.
+
+The paper trains its performance models on measurements collected from AWS
+Lambda / Greengrass (IR, FD, STT applications).  That testbed is unavailable,
+so this module implements a *generative ground truth*: per-application latency
+component distributions calibrated so that
+
+  * component means match the paper's Table I,
+  * model MAPE ordering matches Table II (IR-cloud noisy, edge pipelines tight),
+  * comp(k, m) is monotone decreasing in container memory m with diminishing
+    returns past ~1769 MB (1 vCPU), monotone increasing in input size,
+  * the cost-latency tradeoff that drives the placement decisions is preserved.
+
+Everything is seeded and deterministic.  The same parameters are exported to
+``artifacts/meta.json`` so the Rust simulator's generative path
+(``rust/src/platform/latency.rs``) samples from identical distributions; a
+cross-language test compares the moments.
+
+Units: milliseconds for all latencies, bytes / pixels for sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# The 19 AWS Lambda memory configurations used throughout the paper:
+# 640 MB .. 2944 MB in 128 MB steps.
+MEMORY_CONFIGS_MB = [640 + 128 * i for i in range(19)]
+assert len(MEMORY_CONFIGS_MB) == 19 and MEMORY_CONFIGS_MB[-1] == 2944
+
+# AWS Lambda pricing model (paper Sec. II-A): $1.667e-6 per GB-s, billed
+# duration rounded UP to the next 100 ms; flat $0.20 per 1M requests.
+PRICE_PER_GB_S = 1.667e-6
+BILL_QUANTUM_MS = 100.0
+REQUEST_FEE = 0.20 / 1e6
+
+# CPU share grows linearly with memory up to ~1769 MB (1 vCPU), then with
+# strongly diminishing returns.  Exponents below/above the knee.
+CPU_KNEE_MB = 1769.0
+CPU_EXP_BELOW = 0.85
+CPU_EXP_ABOVE = 0.30
+
+APPS = ("ir", "fd", "stt")
+
+
+@dataclasses.dataclass(frozen=True)
+class AppGroundTruth:
+    """All generative parameters for one application."""
+
+    name: str
+    # input size distribution (lognormal over `size` units)
+    size_unit: str          # "pixels" or "bytes"
+    size_log_mu: float
+    size_log_sigma: float
+    size_min: float
+    size_max: float
+    bytes_per_unit: float   # upload bytes per size unit (JPEG ~0.35 B/pixel)
+    # cloud components
+    upld_base_ms: float
+    upld_per_byte_ms: float
+    upld_noise_sigma: float       # multiplicative lognormal on the whole term
+    start_warm_mean: float
+    start_warm_sigma: float
+    start_cold_mean: float
+    start_cold_sigma: float
+    comp_work_coeff: float        # w(k) = coeff * (size/size_scale)^size_exp
+    comp_work_exp: float
+    comp_size_scale: float        # 1e6 pixels or 1e3 bytes
+    comp_noise_sigma: float       # multiplicative lognormal
+    store_mean: float
+    store_sigma: float
+    # edge components
+    edge_comp_base: float         # comp_e = base + slope * size
+    edge_comp_slope: float
+    edge_comp_noise_sigma: float
+    iotup_mean: float             # <0 means "n/a" (IR posts result direct to S3)
+    iotup_sigma: float
+    edge_store_mean: float
+    edge_store_sigma: float
+    # workload arrival (for the simulator): Poisson rate, tasks per second
+    arrival_rate_per_s: float
+    # experiment constants
+    deadline_ms: float            # delta for cost-min (paper values)
+    alpha: float                  # surplus factor for lat-min (paper values)
+    n_train: int
+    n_eval: int
+
+
+# Calibration rationale lives in DESIGN.md §6.
+IR = AppGroundTruth(
+    name="ir",
+    size_unit="pixels",
+    size_log_mu=math.log(2.5e6), size_log_sigma=0.28,
+    size_min=2.0e5, size_max=6.0e6,
+    bytes_per_unit=0.35,
+    upld_base_ms=120.0, upld_per_byte_ms=4.0e-4, upld_noise_sigma=0.55,
+    start_warm_mean=162.0, start_warm_sigma=30.0,
+    start_cold_mean=741.0, start_cold_sigma=180.0,
+    comp_work_coeff=350.0, comp_work_exp=0.9, comp_size_scale=1.0e6,
+    comp_noise_sigma=0.55,
+    store_mean=549.0, store_sigma=150.0,
+    edge_comp_base=40.0, edge_comp_slope=73.0 / 1.0e6, edge_comp_noise_sigma=0.03,
+    iotup_mean=-1.0, iotup_sigma=0.0,           # n/a: resized image goes direct to S3
+    edge_store_mean=579.0, edge_store_sigma=28.0,
+    arrival_rate_per_s=4.0,
+    deadline_ms=2700.0, alpha=0.02,
+    n_train=1400, n_eval=600,
+)
+
+FD = AppGroundTruth(
+    name="fd",
+    size_unit="pixels",
+    size_log_mu=math.log(2.5e6), size_log_sigma=0.28,
+    size_min=2.0e5, size_max=6.0e6,
+    bytes_per_unit=0.25,
+    upld_base_ms=120.0, upld_per_byte_ms=4.0e-4, upld_noise_sigma=0.18,
+    start_warm_mean=163.0, start_warm_sigma=30.0,
+    start_cold_mean=1500.0, start_cold_sigma=250.0,
+    comp_work_coeff=260.0, comp_work_exp=1.0, comp_size_scale=1.0e6,
+    comp_noise_sigma=0.30,
+    store_mean=584.0, store_sigma=150.0,
+    edge_comp_base=500.0, edge_comp_slope=3000.0 / 1.0e6, edge_comp_noise_sigma=0.05,
+    iotup_mean=25.0, iotup_sigma=6.0,
+    edge_store_mean=583.0, edge_store_sigma=25.0,
+    arrival_rate_per_s=4.0,
+    deadline_ms=4500.0, alpha=0.02,
+    n_train=1400, n_eval=600,
+)
+
+STT = AppGroundTruth(
+    name="stt",
+    size_unit="bytes",
+    size_log_mu=math.log(45.0e3), size_log_sigma=0.40,
+    size_min=4.0e3, size_max=4.0e5,
+    bytes_per_unit=1.0,
+    upld_base_ms=120.0, upld_per_byte_ms=4.0e-4, upld_noise_sigma=0.12,
+    start_warm_mean=145.0, start_warm_sigma=28.0,
+    start_cold_mean=1404.0, start_cold_sigma=230.0,
+    comp_work_coeff=34.0, comp_work_exp=1.0, comp_size_scale=1.0e3,
+    comp_noise_sigma=0.16,
+    store_mean=533.0, store_sigma=260.0,
+    edge_comp_base=300.0, edge_comp_slope=112.0 / 1.0e3, edge_comp_noise_sigma=0.12,
+    iotup_mean=27.0, iotup_sigma=6.0,
+    edge_store_mean=579.0, edge_store_sigma=60.0,
+    arrival_rate_per_s=0.1,
+    deadline_ms=5500.0, alpha=0.03,
+    n_train=3400, n_eval=600,
+)
+
+GROUND_TRUTH = {"ir": IR, "fd": FD, "stt": STT}
+
+# Container idle lifetime (paper: T_idl ~= 27 minutes, cf. Wang et al.).
+TIDL_MEAN_MS = 27.0 * 60.0 * 1000.0
+TIDL_SIGMA_MS = 2.0 * 60.0 * 1000.0
+
+
+def cpu_speed_factor(mem_mb: np.ndarray | float) -> np.ndarray | float:
+    """Relative compute-time multiplier for a container with `mem_mb` memory.
+
+    1.0 at the 1-vCPU knee (1769 MB); >1 below (slower), <1 above with
+    diminishing returns.
+    """
+    m = np.asarray(mem_mb, dtype=np.float64)
+    below = (CPU_KNEE_MB / m) ** CPU_EXP_BELOW
+    above = (CPU_KNEE_MB / m) ** CPU_EXP_ABOVE
+    return np.where(m <= CPU_KNEE_MB, below, above)
+
+
+def base_work_ms(app: AppGroundTruth, size: np.ndarray) -> np.ndarray:
+    """Noise-free compute work w(k) at the 1-vCPU knee."""
+    return app.comp_work_coeff * (np.asarray(size, dtype=np.float64)
+                                  / app.comp_size_scale) ** app.comp_work_exp
+
+
+def billed_cost(comp_ms: np.ndarray, mem_mb: np.ndarray) -> np.ndarray:
+    """AWS cost of a function execution: ceil-to-100ms GB-s price + request fee."""
+    billed_s = np.ceil(np.maximum(comp_ms, 1.0) / BILL_QUANTUM_MS) * (BILL_QUANTUM_MS / 1e3)
+    return PRICE_PER_GB_S * (np.asarray(mem_mb, dtype=np.float64) / 1024.0) * billed_s + REQUEST_FEE
+
+
+def _quantize(x: np.ndarray, q: float) -> np.ndarray:
+    return np.maximum(np.round(x / q) * q, 0.0)
+
+
+def sample_sizes(app: AppGroundTruth, n: int, rng: np.random.Generator) -> np.ndarray:
+    s = rng.lognormal(app.size_log_mu, app.size_log_sigma, size=n)
+    return np.clip(s, app.size_min, app.size_max)
+
+
+def sample_dataset(app: AppGroundTruth, n: int, rng: np.random.Generator) -> dict:
+    """Draw a full measurement table: n inputs x (19 cloud configs + edge).
+
+    Mirrors the paper's data collection: warm-start cloud runs for every
+    config, edge runs, plus per-config cold-start samples.
+    Returns a dict of numpy arrays.
+    """
+    size = sample_sizes(app, n, rng)
+    bytes_ = size * app.bytes_per_unit
+    mems = np.asarray(MEMORY_CONFIGS_MB, dtype=np.float64)
+
+    upld = (app.upld_base_ms + app.upld_per_byte_ms * bytes_) * rng.lognormal(
+        0.0, app.upld_noise_sigma, size=n)
+    # comp[n, 19]
+    work = base_work_ms(app, size)[:, None]
+    speed = cpu_speed_factor(mems)[None, :]
+    comp = work * speed * rng.lognormal(0.0, app.comp_noise_sigma, size=(n, 19))
+    comp = np.maximum(comp, 1.0)
+    start_w = np.maximum(rng.normal(app.start_warm_mean, app.start_warm_sigma, size=n), 5.0)
+    start_c = np.maximum(rng.normal(app.start_cold_mean, app.start_cold_sigma, size=n), 50.0)
+    store = _quantize(rng.normal(app.store_mean, app.store_sigma, size=n), 100.0)
+
+    edge_comp = (app.edge_comp_base + app.edge_comp_slope * size) * rng.lognormal(
+        0.0, app.edge_comp_noise_sigma, size=n)
+    if app.iotup_mean >= 0:
+        iotup = np.maximum(rng.normal(app.iotup_mean, app.iotup_sigma, size=n), 0.0)
+    else:
+        iotup = np.zeros(n)
+    edge_store = _quantize(rng.normal(app.edge_store_mean, app.edge_store_sigma, size=n), 100.0)
+
+    return {
+        "size": size, "bytes": bytes_, "upld": upld, "comp": comp,
+        "start_w": start_w, "start_c": start_c, "store": store,
+        "edge_comp": edge_comp, "iotup": iotup, "edge_store": edge_store,
+    }
+
+
+def e2e_cloud_warm(ds: dict) -> np.ndarray:
+    """End-to-end warm-start cloud latency per (input, config): Eqn. (1)."""
+    return (ds["upld"][:, None] + ds["start_w"][:, None] + ds["comp"]
+            + ds["store"][:, None])
+
+
+def e2e_edge(ds: dict) -> np.ndarray:
+    """End-to-end edge latency per input (no queue wait): Eqn. (2)."""
+    return ds["edge_comp"] + ds["iotup"] + ds["edge_store"]
+
+
+def train_test_split(ds: dict, train_frac: float, rng: np.random.Generator):
+    n = len(ds["size"])
+    idx = rng.permutation(n)
+    cut = int(n * train_frac)
+    tr_i, te_i = idx[:cut], idx[cut:]
+    take = lambda i: {k: v[i] for k, v in ds.items()}
+    return take(tr_i), take(te_i)

@@ -1,0 +1,239 @@
+"""Model training for the paper's performance models — no sklearn available,
+so the estimators are implemented here in numpy:
+
+  * ``fit_ols`` / ``fit_ridge`` — linear models for upld(k) and comp_e(k),
+  * ``GbrtForest`` — gradient-boosted regression trees (squared loss, exact
+    greedy splits over quantile-binned thresholds) for comp(k, m), matching
+    the paper's choice of Gradient Boosted Regression Trees [Friedman 2002].
+
+The trained forest is exported as three dense arrays (complete binary trees):
+
+  feat   [T, 2^D - 1] int32   feature index tested at each internal node
+  thresh [T, 2^D - 1] float32 split threshold (go right if x[f] >= t)
+  leaf   [T, 2^D]     float32 leaf values
+
+Dead internal nodes (below a leaf-ified ancestor) carry feature 0 and
+threshold +inf, so descent always goes left and lands on the ancestor's value,
+which is replicated down to the corresponding leaves.  This dense layout is
+what the Pallas kernel (L1) and the Rust-native mirror consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+# ---------------------------------------------------------------- linear ----
+
+def fit_ols(x: np.ndarray, y: np.ndarray) -> tuple[float, float]:
+    """Least-squares fit y ~ b0 + b1*x. Returns (b0, b1)."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    xm, ym = x.mean(), y.mean()
+    vx = ((x - xm) ** 2).sum()
+    b1 = ((x - xm) * (y - ym)).sum() / max(vx, 1e-12)
+    return float(ym - b1 * xm), float(b1)
+
+
+def fit_ridge(x: np.ndarray, y: np.ndarray, lam: float = 1.0) -> tuple[float, float]:
+    """Ridge fit y ~ b0 + b1*x with standardized x (penalty on slope only)."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    xm, ym = x.mean(), y.mean()
+    sx = x.std() + 1e-12
+    xs = (x - xm) / sx
+    b1s = (xs * (y - ym)).sum() / (float((xs ** 2).sum()) + lam)
+    b1 = b1s / sx
+    return float(ym - b1 * xm), float(b1)
+
+
+# ------------------------------------------------------------------ GBRT ----
+
+@dataclasses.dataclass
+class GbrtForest:
+    """Dense complete-binary-tree forest. Arrays as described in the module doc."""
+
+    base: float                 # initial prediction (mean of y)
+    learning_rate: float
+    feat: np.ndarray            # [T, 2^D - 1] int32
+    thresh: np.ndarray          # [T, 2^D - 1] float32
+    leaf: np.ndarray            # [T, 2^D]     float32
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return int(np.log2(self.leaf.shape[1]))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Reference inference, [B, F] -> [B]. The oracle for L1/Rust."""
+        x = np.asarray(x, dtype=np.float64)
+        n_internal = self.feat.shape[1]
+        out = np.full(x.shape[0], self.base, dtype=np.float64)
+        for t in range(self.n_trees):
+            idx = np.zeros(x.shape[0], dtype=np.int64)
+            for _ in range(self.depth):
+                f = self.feat[t, idx]
+                thr = self.thresh[t, idx]
+                go_right = x[np.arange(x.shape[0]), f] >= thr
+                idx = 2 * idx + 1 + go_right.astype(np.int64)
+            out += self.learning_rate * self.leaf[t, idx - n_internal]
+        return out
+
+    def to_flat(self) -> dict:
+        """JSON-friendly export consumed by meta.json / Rust."""
+        return {
+            "base": self.base,
+            "learning_rate": self.learning_rate,
+            "n_trees": int(self.n_trees),
+            "depth": int(self.depth),
+            "feat": self.feat.astype(int).ravel().tolist(),
+            # +inf marks dead branches; JSON has no Infinity, so export a
+            # finite f32 sentinel far above any real feature value.
+            "thresh": [float(v) if np.isfinite(v) else 3.0e38
+                       for v in self.thresh.ravel()],
+            "leaf": [float(v) for v in self.leaf.ravel()],
+        }
+
+
+def _best_split(x: np.ndarray, g: np.ndarray, feature_bins: list[np.ndarray],
+                min_leaf: int):
+    """Exact greedy split of residuals g over candidate thresholds.
+
+    Returns (gain, feature, threshold) or None. Split criterion is variance
+    reduction (equivalently squared-loss gain).
+    """
+    n = x.shape[0]
+    if n < 2 * min_leaf:
+        return None
+    best = None
+    total_sum = g.sum()
+    total_cnt = n
+    base_score = total_sum * total_sum / total_cnt
+    for f, bins in enumerate(feature_bins):
+        xf = x[:, f]
+        order = np.argsort(xf, kind="stable")
+        xs, gs = xf[order], g[order]
+        csum = np.cumsum(gs)
+        # candidate split positions: where threshold separates xs[i-1] < t <= xs[i]
+        for t in bins:
+            i = np.searchsorted(xs, t, side="left")
+            if i < min_leaf or total_cnt - i < min_leaf:
+                continue
+            left_sum = csum[i - 1]
+            right_sum = total_sum - left_sum
+            score = left_sum * left_sum / i + right_sum * right_sum / (total_cnt - i)
+            gain = score - base_score
+            if gain > 1e-9 and (best is None or gain > best[0]):
+                best = (gain, f, float(t))
+    return best
+
+
+def _fit_tree(x: np.ndarray, g: np.ndarray, depth: int, min_leaf: int,
+              n_bins: int, rng: np.random.Generator):
+    """Fit one dense regression tree of exactly `depth` levels on residuals g."""
+    n_internal = 2 ** depth - 1
+    n_leaf = 2 ** depth
+    feat = np.zeros(n_internal, dtype=np.int32)
+    thresh = np.full(n_internal, np.inf, dtype=np.float32)  # dead node: always left
+    leaf = np.zeros(n_leaf, dtype=np.float32)
+
+    # Quantile bins per feature, computed once on this tree's sample.
+    feature_bins = []
+    for f in range(x.shape[1]):
+        qs = np.unique(np.quantile(x[:, f], np.linspace(0.02, 0.98, n_bins)))
+        feature_bins.append(qs)
+
+    # node -> boolean mask of samples reaching it
+    masks = {0: np.ones(x.shape[0], dtype=bool)}
+    values = {0: float(g.mean()) if x.shape[0] else 0.0}
+    for node in range(n_internal):
+        mask = masks.get(node)
+        if mask is None or not mask.any():
+            # Dead branch: keep +inf threshold, propagate ancestor value.
+            for child in (2 * node + 1, 2 * node + 2):
+                if child < n_internal:
+                    masks[child] = None
+                    values[child] = values.get(node, 0.0)
+            continue
+        xm, gm = x[mask], g[mask]
+        values[node] = float(gm.mean())
+        split = _best_split(xm, gm, feature_bins, min_leaf)
+        if split is None:
+            feat[node] = 0
+            thresh[node] = np.inf  # everything goes left; right side dead
+            left = mask
+            right = np.zeros_like(mask)
+        else:
+            _, f, t = split
+            feat[node] = f
+            thresh[node] = t
+            go_right = x[:, f] >= t
+            left = mask & ~go_right
+            right = mask & go_right
+        for child, cmask in ((2 * node + 1, left), (2 * node + 2, right)):
+            if child < n_internal:
+                masks[child] = cmask if cmask.any() else None
+                values[child] = float(g[cmask].mean()) if cmask.any() else values[node]
+
+    # Leaves: children of the last internal level.
+    first_leaf_parent = (n_internal - 1) // 2
+    for parent in range(first_leaf_parent, n_internal):
+        pmask = masks.get(parent)
+        pval = values.get(parent, 0.0)
+        f, t = feat[parent], thresh[parent]
+        li = 2 * parent + 1 - n_internal
+        ri = 2 * parent + 2 - n_internal
+        if pmask is None or not pmask.any():
+            leaf[li] = pval
+            leaf[ri] = pval
+            continue
+        go_right = (x[:, f] >= t) & pmask
+        go_left = pmask & ~go_right
+        leaf[li] = float(g[go_left].mean()) if go_left.any() else pval
+        leaf[ri] = float(g[go_right].mean()) if go_right.any() else pval
+    return feat, thresh, leaf
+
+
+def fit_gbrt(x: np.ndarray, y: np.ndarray, *, n_trees: int = 100, depth: int = 3,
+             learning_rate: float = 0.1, subsample: float = 0.9,
+             min_leaf: int = 8, n_bins: int = 32,
+             seed: int = 0) -> GbrtForest:
+    """Gradient boosting with squared loss: each tree fits the residuals."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    base = float(y.mean())
+    pred = np.full_like(y, base)
+    feats, threshs, leaves = [], [], []
+    n = x.shape[0]
+    for _ in range(n_trees):
+        g = y - pred
+        if subsample < 1.0:
+            sel = rng.random(n) < subsample
+            if sel.sum() < 4 * min_leaf:
+                sel = np.ones(n, dtype=bool)
+        else:
+            sel = np.ones(n, dtype=bool)
+        f, t, l = _fit_tree(x[sel], g[sel], depth, min_leaf, n_bins, rng)
+        feats.append(f)
+        threshs.append(t)
+        leaves.append(l)
+        # update predictions on the FULL set with the new tree
+        tree = GbrtForest(0.0, 1.0, f[None, :], t[None, :], l[None, :])
+        pred = pred + learning_rate * tree.predict(x)
+    return GbrtForest(base, learning_rate,
+                      np.stack(feats), np.stack(threshs), np.stack(leaves))
+
+
+# --------------------------------------------------------------- metrics ----
+
+def mape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    denom = np.maximum(np.abs(y_true), 1e-9)
+    return float(np.mean(np.abs(y_true - y_pred) / denom) * 100.0)

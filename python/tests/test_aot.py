@@ -1,0 +1,96 @@
+"""End-to-end tests of the AOT pipeline: artifact files, meta.json schema,
+eval CSV layout, and the C_max derivation."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import synthdata as sd
+from compile.aot import (BATCH_SIZES, LATMIN_BEST_SETS, derive_cmax, train_app,
+                         write_eval_csv)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def built_artifacts():
+    """Use the checked-out artifacts if present, else build them."""
+    meta_path = os.path.join(ART, "meta.json")
+    if not os.path.exists(meta_path):
+        subprocess.run([sys.executable, "-m", "compile.aot", "--out", ART],
+                       check=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    with open(meta_path) as f:
+        return json.load(f)
+
+
+def test_meta_schema(built_artifacts):
+    meta = built_artifacts
+    assert meta["memory_configs_mb"] == sd.MEMORY_CONFIGS_MB
+    assert set(meta["apps"]) == {"ir", "fd", "stt"}
+    for name, app in meta["apps"].items():
+        m = app["models"]
+        assert len(m["theta"]) == 2 and len(m["phi"]) == 2
+        forest = m["forest"]
+        ni = 2 ** forest["depth"] - 1
+        assert len(forest["feat"]) == forest["n_trees"] * ni
+        assert len(forest["leaf"]) == forest["n_trees"] * 2 ** forest["depth"]
+        assert app["deadline_ms"] > 0 and app["cmax"] > 0
+        assert 0.0 <= app["alpha"] <= 1.0
+
+
+def test_hlo_artifacts_exist_and_are_text(built_artifacts):
+    for name, app in built_artifacts["apps"].items():
+        for b in BATCH_SIZES:
+            path = os.path.join(ART, app["artifacts"][f"b{b}"])
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), path
+
+
+def test_eval_csv_layout(built_artifacts):
+    for name, app in built_artifacts["apps"].items():
+        path = os.path.join(ART, f"{name}_eval.csv")
+        with open(path) as f:
+            header = f.readline().strip().split(",")
+            rows = f.readlines()
+        assert header[:3] == ["size", "bytes", "upld"]
+        assert len([c for c in header if c.startswith("comp_")]) == 19
+        assert len(rows) == app["n_eval"]
+        first = [float(v) for v in rows[0].split(",")]
+        assert len(first) == len(header)
+        assert all(np.isfinite(first))
+
+
+def test_eval_csv_deterministic(tmp_path):
+    p1, p2 = tmp_path / "a.csv", tmp_path / "b.csv"
+    write_eval_csv(sd.IR, str(p1))
+    write_eval_csv(sd.IR, str(p2))
+    assert p1.read_text() == p2.read_text()
+
+
+def test_cmax_binds_for_median_but_not_all():
+    """C_max must sit inside the cost distribution of the cheapest candidate
+    config: some inputs affordable, some not (else alpha has no effect)."""
+    for name, app in sd.GROUND_TRUTH.items():
+        models, train, _ = train_app(app)
+        cmax = derive_cmax(models, train, app, LATMIN_BEST_SETS[name])
+        mems = np.asarray(sd.MEMORY_CONFIGS_MB, dtype=np.float64)
+        j = int(np.argmin(np.abs(mems - min(LATMIN_BEST_SETS[name]))))
+        costs = sd.billed_cost(train["comp"][:, j], mems[j])
+        frac_affordable = float((costs <= cmax).mean())
+        assert 0.3 < frac_affordable < 0.95, (name, frac_affordable)
+
+
+def test_table1_values_recorded(built_artifacts):
+    t1 = built_artifacts["apps"]["fd"]["table1"]
+    assert t1["warm_start_ms"] == pytest.approx(163, rel=0.05)
+    assert t1["cold_start_ms"] == pytest.approx(1500, rel=0.05)
+    ir = built_artifacts["apps"]["ir"]["table1"]
+    assert ir["iot_upload_ms"] == -1.0  # n/a in the paper's Table I

@@ -1,0 +1,129 @@
+"""Pallas forest-evaluation kernel vs the pure-jnp oracle and the numpy
+training-time reference — the core L1 correctness signal.
+
+Hypothesis sweeps batch sizes, tree counts, depths, block sizes and feature
+dimensions; dedicated cases cover degenerate trees (dead branches, +inf
+thresholds), non-divisible grid tiling, and dtype handling.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gbrt import forest_eval
+from compile.kernels.ref import forest_eval_ref
+from compile.training import GbrtForest, fit_gbrt
+
+
+def random_forest(rng, n_trees, depth, n_feat, dead_fraction=0.0):
+    n_internal = 2 ** depth - 1
+    n_leaf = 2 ** depth
+    feat = rng.integers(0, n_feat, size=(n_trees, n_internal)).astype(np.int32)
+    thresh = rng.normal(0, 2, size=(n_trees, n_internal)).astype(np.float32)
+    if dead_fraction > 0:
+        dead = rng.random((n_trees, n_internal)) < dead_fraction
+        thresh = np.where(dead, np.float32(np.inf), thresh)
+        feat = np.where(dead, np.int32(0), feat)
+    leaf = rng.normal(0, 3, size=(n_trees, n_leaf)).astype(np.float32)
+    return feat, thresh, leaf
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 97),
+    n_trees=st.integers(1, 40),
+    depth=st.integers(1, 5),
+    n_feat=st.integers(1, 4),
+    block_b=st.sampled_from([1, 7, 32, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(b, n_trees, depth, n_feat, block_b, seed):
+    rng = np.random.default_rng(seed)
+    feat, thresh, leaf = random_forest(rng, n_trees, depth, n_feat)
+    x = rng.normal(0, 2, size=(b, n_feat)).astype(np.float32)
+    base, lr = float(rng.normal()), float(rng.uniform(0.01, 1.0))
+    got = np.asarray(forest_eval(x, feat, thresh, leaf, base=base,
+                                 learning_rate=lr, block_b=block_b))
+    want = np.asarray(forest_eval_ref(x, feat, thresh, leaf, base=base,
+                                      learning_rate=lr))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    depth=st.integers(1, 4),
+    dead=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_degenerate_trees(b, depth, dead, seed):
+    """Dead branches (+inf thresholds) must route left and stay finite."""
+    rng = np.random.default_rng(seed)
+    feat, thresh, leaf = random_forest(rng, 10, depth, 2, dead_fraction=dead)
+    x = rng.normal(0, 2, size=(b, 2)).astype(np.float32)
+    got = np.asarray(forest_eval(x, feat, thresh, leaf, base=0.0,
+                                 learning_rate=0.5))
+    want = np.asarray(forest_eval_ref(x, feat, thresh, leaf, base=0.0,
+                                      learning_rate=0.5))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_matches_numpy_trained_forest():
+    """Kernel vs the numpy GbrtForest.predict on a real trained forest."""
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0, 8, size=(400, 2))
+    y = 10 * np.sin(x[:, 0]) + x[:, 1] ** 2
+    forest = fit_gbrt(x, y, n_trees=50, depth=3, seed=4)
+    want = forest.predict(x)
+    got = np.asarray(forest_eval(x.astype(np.float32), forest.feat,
+                                 forest.thresh, forest.leaf,
+                                 base=forest.base,
+                                 learning_rate=forest.learning_rate))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_kernel_single_sample_single_tree():
+    feat = np.array([[0]], dtype=np.int32)
+    thresh = np.array([[1.5]], dtype=np.float32)
+    leaf = np.array([[10.0, 20.0]], dtype=np.float32)
+    lo = np.asarray(forest_eval(np.array([[1.0]], np.float32), feat, thresh,
+                                leaf, base=1.0, learning_rate=1.0))
+    hi = np.asarray(forest_eval(np.array([[2.0]], np.float32), feat, thresh,
+                                leaf, base=1.0, learning_rate=1.0))
+    assert lo[0] == pytest.approx(11.0)
+    assert hi[0] == pytest.approx(21.0)
+
+
+def test_kernel_threshold_boundary_goes_right():
+    """Descent rule is x[f] >= t (ties go right), matching training/ref."""
+    feat = np.array([[0]], dtype=np.int32)
+    thresh = np.array([[2.0]], dtype=np.float32)
+    leaf = np.array([[-1.0, +1.0]], dtype=np.float32)
+    out = np.asarray(forest_eval(np.array([[2.0]], np.float32), feat, thresh,
+                                 leaf, base=0.0, learning_rate=1.0))
+    assert out[0] == pytest.approx(1.0)
+
+
+def test_kernel_padding_not_leaked():
+    """B not divisible by block_b: padded rows must not alter real outputs."""
+    rng = np.random.default_rng(11)
+    feat, thresh, leaf = random_forest(rng, 8, 3, 2)
+    x = rng.normal(size=(13, 2)).astype(np.float32)
+    a = np.asarray(forest_eval(x, feat, thresh, leaf, base=0.0,
+                               learning_rate=1.0, block_b=8))
+    b = np.asarray(forest_eval(x, feat, thresh, leaf, base=0.0,
+                               learning_rate=1.0, block_b=13))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+    assert a.shape == (13,)
+
+
+def test_kernel_rejects_bad_tree_shape():
+    feat = np.zeros((2, 6), dtype=np.int32)      # 6 is not 2^D - 1
+    thresh = np.zeros((2, 6), dtype=np.float32)
+    leaf = np.zeros((2, 7), dtype=np.float32)
+    with pytest.raises(AssertionError):
+        forest_eval(np.zeros((1, 2), np.float32), feat, thresh, leaf,
+                    base=0.0, learning_rate=1.0)

@@ -1,0 +1,103 @@
+"""Tests for the L2 prediction graph: shapes, in-graph billing parity with
+the reference pricing model, numpy-vs-jax path agreement, and lowering."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile import synthdata as sd
+from compile.aot import evaluate, to_hlo_text, train_app
+from compile.model import make_predict_fn
+
+
+@pytest.fixture(scope="module")
+def fd_models():
+    models, train, test = train_app(sd.FD)
+    return models, train, test
+
+
+def test_predict_fn_shapes(fd_models):
+    models, _, _ = fd_models
+    fn = make_predict_fn(models)
+    sizes = np.array([1e6, 3e6, 8e6, 2e6], np.float32)
+    upld, comp, comp_edge, cost = fn(sizes)
+    assert upld.shape == (4,)
+    assert comp.shape == (4, 19)
+    assert comp_edge.shape == (4,)
+    assert cost.shape == (4, 19)
+
+
+def test_predict_jax_matches_numpy_path(fd_models):
+    """The jitted graph (Pallas kernel inside) must agree with the pure-numpy
+    TrainedModels path used at evaluation time."""
+    models, _, test = fd_models
+    sizes = test["size"][:32].astype(np.float32)
+    fn = jax.jit(make_predict_fn(models))
+    upld, comp, comp_edge, _ = fn(sizes)
+    want_cloud = models.predict_cloud_e2e_warm(sizes)
+    got_cloud = (np.asarray(upld)[:, None] + models.start_warm_mean
+                 + np.asarray(comp) + models.store_mean)
+    np.testing.assert_allclose(got_cloud, want_cloud, rtol=2e-3)
+    want_edge = models.predict_edge_e2e(sizes)
+    got_edge = np.asarray(comp_edge) + models.edge_overhead_ms()
+    np.testing.assert_allclose(got_edge, want_edge, rtol=2e-3)
+
+
+def test_ingraph_billing_matches_reference(fd_models):
+    models, _, _ = fd_models
+    fn = make_predict_fn(models)
+    sizes = np.array([5e5, 2.5e6, 1.1e7], np.float32)
+    _, comp, _, cost = fn(sizes)
+    comp = np.asarray(comp, np.float64)
+    mems = np.asarray(sd.MEMORY_CONFIGS_MB, np.float64)
+    want = sd.billed_cost(comp, mems[None, :])
+    np.testing.assert_allclose(np.asarray(cost), want, rtol=1e-5)
+
+
+def test_predicted_comp_mostly_monotone_in_memory(fd_models):
+    """The learned forest should recover comp decreasing in memory (allow a
+    few local inversions from binning)."""
+    models, _, _ = fd_models
+    fn = make_predict_fn(models)
+    _, comp, _, _ = fn(np.array([2.5e6], np.float32))
+    comp = np.asarray(comp)[0]
+    inversions = int((np.diff(comp) > 0).sum())
+    assert inversions <= 6
+    assert comp[0] > comp[-1] * 1.5  # 640 MB much slower than 2944 MB
+
+
+def test_mape_metrics_close_to_table2(fd_models):
+    models, _, test = fd_models
+    m = evaluate(models, test)
+    # paper Table II FD: cloud 13.24, edge 3.78 — allow a band
+    assert 9.0 < m["mape_cloud_e2e"] < 18.0
+    assert 1.5 < m["mape_edge_e2e"] < 7.0
+
+
+def test_lowering_emits_hlo_text(fd_models):
+    models, _, _ = fd_models
+    fn = make_predict_fn(models)
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((1,), np.float32))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[1,19]" in text        # comp/cost outputs
+    # forest tables embedded as constants: thresholds as [T, NI]; the
+    # constant-folded feature masks as pred[T, NI]; leaf columns sliced to
+    # 8 x f32[T] by the select-tree kernel
+    assert "f32[100,7]" in text
+    assert "pred[100,7]" in text
+    assert text.count("f32[100]") >= 8
+
+
+def test_lowered_graph_executes_same_as_eager(fd_models):
+    """Sanity: jit(fn) == fn elementwise (XLA compile path vs trace path)."""
+    models, _, _ = fd_models
+    fn = make_predict_fn(models)
+    sizes = np.array([1.5e6] * 8, np.float32)
+    eager = fn(sizes)
+    jitted = jax.jit(fn)(sizes)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,154 @@
+"""Tests for the synthetic AWS ground truth: calibration against the paper's
+Table I, structural properties the placement logic depends on, and the
+pricing model."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import synthdata as sd
+
+
+@pytest.fixture(scope="module")
+def datasets():
+    rng = np.random.default_rng(123)
+    return {name: sd.sample_dataset(app, 2000, rng)
+            for name, app in sd.GROUND_TRUTH.items()}
+
+
+def test_memory_configs_match_paper():
+    assert len(sd.MEMORY_CONFIGS_MB) == 19
+    assert sd.MEMORY_CONFIGS_MB[0] == 640
+    assert sd.MEMORY_CONFIGS_MB[-1] == 2944
+    assert 1536 in sd.MEMORY_CONFIGS_MB and 2048 in sd.MEMORY_CONFIGS_MB
+
+
+# Paper Table I component means (ms).
+TABLE1 = {
+    "ir": {"start_w": 162, "start_c": 741, "store": 549, "edge_store": 579},
+    "fd": {"start_w": 163, "start_c": 1500, "store": 584, "iotup": 25, "edge_store": 583},
+    "stt": {"start_w": 145, "start_c": 1404, "store": 533, "iotup": 27, "edge_store": 579},
+}
+
+
+@pytest.mark.parametrize("app", sd.APPS)
+def test_table1_component_means(app, datasets):
+    ds = datasets[app]
+    want = TABLE1[app]
+    assert ds["start_w"].mean() == pytest.approx(want["start_w"], rel=0.05)
+    assert ds["start_c"].mean() == pytest.approx(want["start_c"], rel=0.05)
+    assert ds["store"].mean() == pytest.approx(want["store"], rel=0.08)
+    assert ds["edge_store"].mean() == pytest.approx(want["edge_store"], rel=0.08)
+    if "iotup" in want:
+        assert ds["iotup"].mean() == pytest.approx(want["iotup"], rel=0.15)
+    else:
+        assert (ds["iotup"] == 0).all()  # IR: result goes direct to S3
+
+
+@pytest.mark.parametrize("app", sd.APPS)
+def test_comp_monotone_decreasing_in_memory(app):
+    """Noise-free compute time must strictly decrease with container memory."""
+    gt = sd.GROUND_TRUTH[app]
+    mems = np.asarray(sd.MEMORY_CONFIGS_MB, dtype=np.float64)
+    speed = sd.cpu_speed_factor(mems)
+    assert (np.diff(speed) < 0).all()
+    # and the knee gives diminishing returns: speedup below knee > above knee
+    below = speed[0] / speed[8]     # 640 -> 1664
+    above = speed[10] / speed[18]   # 1920 -> 2944
+    assert below > above
+
+
+@pytest.mark.parametrize("app", sd.APPS)
+def test_comp_monotone_increasing_in_size(app):
+    gt = sd.GROUND_TRUTH[app]
+    sizes = np.linspace(gt.size_min, gt.size_max, 50)
+    w = sd.base_work_ms(gt, sizes)
+    assert (np.diff(w) > 0).all()
+
+
+def test_cost_latency_tradeoff_exists(datasets):
+    """The cheapest configuration must not be the fastest (else placement is
+    trivial): check mean comp and mean cost orderings disagree."""
+    ds = datasets["fd"]
+    mems = np.asarray(sd.MEMORY_CONFIGS_MB, dtype=np.float64)
+    mean_comp = ds["comp"].mean(axis=0)
+    mean_cost = sd.billed_cost(ds["comp"], mems[None, :]).mean(axis=0)
+    assert np.argmin(mean_comp) != np.argmin(mean_cost)
+    # fastest is the largest memory; cheapest is a small/mid memory
+    assert np.argmin(mean_comp) == len(mems) - 1
+    assert np.argmin(mean_cost) < len(mems) // 2
+
+
+def test_billed_cost_quantization():
+    # 98 ms -> billed as 100 ms; 101 ms -> billed as 200 ms (paper example)
+    c98 = sd.billed_cost(np.array([98.0]), np.array([1024.0]))[0]
+    c100 = sd.billed_cost(np.array([100.0]), np.array([1024.0]))[0]
+    c101 = sd.billed_cost(np.array([101.0]), np.array([1024.0]))[0]
+    assert c98 == pytest.approx(c100)
+    assert c101 == pytest.approx(2 * c100 - sd.REQUEST_FEE)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ms=st.floats(1.0, 1e5), mem=st.sampled_from(sd.MEMORY_CONFIGS_MB))
+def test_billed_cost_monotone_and_positive(ms, mem):
+    c = sd.billed_cost(np.array([ms]), np.array([float(mem)]))[0]
+    c2 = sd.billed_cost(np.array([ms + 100.0]), np.array([float(mem)]))[0]
+    assert c > 0
+    assert c2 > c
+
+
+def test_edge_queue_stability_constants():
+    """IR edge service must be stable at 4 req/s; FD must NOT be (the paper's
+    edge-only blow-up depends on it)."""
+    ir, fd, stt = sd.IR, sd.FD, sd.STT
+    ir_mean_comp = ir.edge_comp_base + ir.edge_comp_slope * np.exp(
+        ir.size_log_mu + ir.size_log_sigma ** 2 / 2)
+    fd_mean_comp = fd.edge_comp_base + fd.edge_comp_slope * np.exp(
+        fd.size_log_mu + fd.size_log_sigma ** 2 / 2)
+    stt_mean_comp = stt.edge_comp_base + stt.edge_comp_slope * np.exp(
+        stt.size_log_mu + stt.size_log_sigma ** 2 / 2)
+    assert ir_mean_comp < 1000.0 / ir.arrival_rate_per_s      # stable
+    assert fd_mean_comp > 3 * 1000.0 / fd.arrival_rate_per_s  # heavily unstable
+    assert stt_mean_comp < 1000.0 / stt.arrival_rate_per_s    # stable
+
+
+def test_stt_edge_feasible_near_deadline():
+    """STT edge e2e must straddle the 5.5 s deadline so delta sweeps move
+    executions between edge and cloud (paper Fig. 5)."""
+    stt = sd.STT
+    mean_comp = stt.edge_comp_base + stt.edge_comp_slope * np.exp(
+        stt.size_log_mu + stt.size_log_sigma ** 2 / 2)
+    e2e = mean_comp + stt.iotup_mean + stt.edge_store_mean
+    assert 0.6 * stt.deadline_ms < e2e < 1.2 * stt.deadline_ms
+
+
+def test_sample_sizes_bounds_and_determinism():
+    app = sd.IR
+    a = sd.sample_sizes(app, 500, np.random.default_rng(9))
+    b = sd.sample_sizes(app, 500, np.random.default_rng(9))
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= app.size_min and a.max() <= app.size_max
+
+
+def test_train_test_split_disjoint_and_complete():
+    rng = np.random.default_rng(10)
+    ds = sd.sample_dataset(sd.STT, 300, rng)
+    tr, te = sd.train_test_split(ds, 0.8, rng)
+    assert len(tr["size"]) == 240 and len(te["size"]) == 60
+    merged = np.sort(np.concatenate([tr["size"], te["size"]]))
+    np.testing.assert_array_equal(merged, np.sort(ds["size"]))
+
+
+def test_e2e_formulas_match_eqn1_eqn2():
+    rng = np.random.default_rng(11)
+    ds = sd.sample_dataset(sd.FD, 10, rng)
+    cloud = sd.e2e_cloud_warm(ds)
+    assert cloud.shape == (10, 19)
+    np.testing.assert_allclose(
+        cloud[3, 7],
+        ds["upld"][3] + ds["start_w"][3] + ds["comp"][3, 7] + ds["store"][3])
+    edge = sd.e2e_edge(ds)
+    np.testing.assert_allclose(
+        edge[5], ds["edge_comp"][5] + ds["iotup"][5] + ds["edge_store"][5])

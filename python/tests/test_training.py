@@ -1,0 +1,122 @@
+"""Tests for the numpy estimators (OLS, ridge, GBRT) in compile.training."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.training import GbrtForest, fit_gbrt, fit_ols, fit_ridge, mape
+
+
+def test_ols_recovers_exact_line():
+    x = np.linspace(0, 10, 50)
+    y = 3.5 + 2.25 * x
+    b0, b1 = fit_ols(x, y)
+    assert b0 == pytest.approx(3.5, abs=1e-9)
+    assert b1 == pytest.approx(2.25, abs=1e-9)
+
+
+def test_ols_with_noise_close():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 100, 2000)
+    y = -4.0 + 0.7 * x + rng.normal(0, 1.0, 2000)
+    b0, b1 = fit_ols(x, y)
+    assert b0 == pytest.approx(-4.0, abs=0.3)
+    assert b1 == pytest.approx(0.7, abs=0.01)
+
+
+def test_ridge_shrinks_toward_zero_slope():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 10, 100)
+    y = 5.0 + 2.0 * x + rng.normal(0, 0.1, 100)
+    _, b1_small = fit_ridge(x, y, lam=1e-9)
+    _, b1_big = fit_ridge(x, y, lam=1e6)
+    assert b1_small == pytest.approx(2.0, abs=0.05)
+    assert abs(b1_big) < abs(b1_small)
+
+
+def test_ridge_lambda_zero_equals_ols():
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0, 10, 200)
+    y = 1.0 - 0.5 * x + rng.normal(0, 0.2, 200)
+    assert fit_ridge(x, y, lam=1e-12) == pytest.approx(fit_ols(x, y), abs=1e-6)
+
+
+def test_gbrt_beats_mean_baseline():
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0, 10, size=(800, 2))
+    y = np.sin(x[:, 0]) * 5 + np.sqrt(x[:, 1]) * 3 + rng.normal(0, 0.2, 800)
+    forest = fit_gbrt(x, y, n_trees=80, depth=3, seed=5)
+    pred = forest.predict(x)
+    rmse = np.sqrt(((pred - y) ** 2).mean())
+    rmse_mean = y.std()
+    assert rmse < 0.35 * rmse_mean
+
+
+def test_gbrt_generalizes_on_holdout():
+    rng = np.random.default_rng(4)
+    x = rng.uniform(0, 10, size=(1200, 2))
+    y = x[:, 0] * x[:, 1] + rng.normal(0, 0.5, 1200)
+    forest = fit_gbrt(x[:900], y[:900], n_trees=100, depth=4, seed=6)
+    pred = forest.predict(x[900:])
+    rmse = np.sqrt(((pred - y[900:]) ** 2).mean())
+    assert rmse < 0.5 * y[900:].std()
+
+
+def test_gbrt_monotone_response_on_monotone_target():
+    """For a monotone target the fitted function should be ~monotone."""
+    rng = np.random.default_rng(5)
+    x = rng.uniform(0, 10, size=(600, 1))
+    y = 3 * x[:, 0] + rng.normal(0, 0.05, 600)
+    forest = fit_gbrt(x, y, n_trees=60, depth=3, seed=7)
+    grid = np.linspace(0.5, 9.5, 40)[:, None]
+    pred = forest.predict(grid)
+    # allow tiny local wiggles but require global increase
+    assert pred[-1] - pred[0] > 0.8 * (grid[-1, 0] - grid[0, 0]) * 3
+
+
+def test_gbrt_constant_target_yields_base():
+    x = np.random.default_rng(6).uniform(0, 1, size=(100, 2))
+    y = np.full(100, 42.0)
+    forest = fit_gbrt(x, y, n_trees=10, depth=2, seed=8)
+    np.testing.assert_allclose(forest.predict(x), 42.0, atol=1e-6)
+
+
+def test_forest_flat_export_roundtrip():
+    rng = np.random.default_rng(7)
+    x = rng.uniform(0, 5, size=(300, 2))
+    y = x[:, 0] ** 2 - x[:, 1]
+    forest = fit_gbrt(x, y, n_trees=20, depth=3, seed=9)
+    flat = forest.to_flat()
+    assert flat["n_trees"] == 20 and flat["depth"] == 3
+    ni, nl = 2 ** 3 - 1, 2 ** 3
+    rebuilt = GbrtForest(
+        base=flat["base"],
+        learning_rate=flat["learning_rate"],
+        feat=np.array(flat["feat"], np.int32).reshape(20, ni),
+        thresh=np.array(flat["thresh"], np.float32).reshape(20, ni),
+        leaf=np.array(flat["leaf"], np.float32).reshape(20, nl),
+    )
+    np.testing.assert_allclose(rebuilt.predict(x), forest.predict(x),
+                               rtol=1e-6, atol=1e-6)
+    # JSON-serializable: all plain python types
+    import json
+    json.dumps(flat)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(30, 200), seed=st.integers(0, 10_000))
+def test_gbrt_predictions_bounded_by_target_range(n, seed):
+    """Tree averages can never exceed the observed target range."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-5, 5, size=(n, 2))
+    y = rng.uniform(10, 20, size=n)
+    forest = fit_gbrt(x, y, n_trees=30, depth=3, seed=seed)
+    pred = forest.predict(x)
+    assert pred.min() >= 10 - 1e-6 and pred.max() <= 20 + 1e-6
+
+
+def test_mape_basic():
+    assert mape(np.array([100.0, 200.0]), np.array([110.0, 180.0])) == pytest.approx(10.0)
+    assert mape(np.array([50.0]), np.array([50.0])) == 0.0

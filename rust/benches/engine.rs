@@ -1,0 +1,52 @@
+//! Decision Engine benches: per-task decision latency for both objectives
+//! (pure L3 logic, no model scoring) and the surplus bookkeeping.
+
+use skedge::benchkit::{bench, black_box, section};
+use skedge::config::Objective;
+use skedge::engine::DecisionEngine;
+use skedge::predictor::{CloudPrediction, Prediction};
+
+fn synthetic_prediction() -> Prediction {
+    Prediction {
+        cloud: (0..19)
+            .map(|j| CloudPrediction {
+                e2e_ms: 3200.0 - 90.0 * j as f64,
+                cost: 3.0e-6 + 2.5e-7 * j as f64,
+                warm: j % 2 == 0,
+                upld_ms: 470.0,
+                start_ms: 163.0,
+                comp_ms: 1500.0,
+            })
+            .collect(),
+        edge_e2e_ms: 8600.0,
+        edge_comp_ms: 8000.0,
+        cloud_sigma_frac: 0.16,
+        edge_sigma_frac: 0.05,
+    }
+}
+
+fn main() {
+    let pred = synthetic_prediction();
+    let idxs: Vec<usize> = vec![7, 8, 11];
+    let all: Vec<usize> = (0..19).collect();
+
+    section("decision latency (3-config candidate set)");
+    let mut cost = DecisionEngine::new(Objective::CostMin, idxs.clone(), 4500.0, 0.0, 0.0);
+    bench("cost-min decide", || {
+        black_box(cost.decide(black_box(&pred), black_box(120.0)));
+    });
+    let mut lat = DecisionEngine::new(Objective::LatencyMin, idxs, 0.0, 4.4e-6, 0.02);
+    bench("latency-min decide (+surplus update)", || {
+        black_box(lat.decide(black_box(&pred), black_box(120.0)));
+    });
+
+    section("decision latency (full 19-config Φ)");
+    let mut cost = DecisionEngine::new(Objective::CostMin, all.clone(), 4500.0, 0.0, 0.0);
+    bench("cost-min decide (19 configs)", || {
+        black_box(cost.decide(black_box(&pred), black_box(120.0)));
+    });
+    let mut lat = DecisionEngine::new(Objective::LatencyMin, all, 0.0, 4.4e-6, 0.02);
+    bench("latency-min decide (19 configs)", || {
+        black_box(lat.decide(black_box(&pred), black_box(120.0)));
+    });
+}

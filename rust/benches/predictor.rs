@@ -1,0 +1,62 @@
+//! Predictor hot-path benches: the L3 request-path cost of scoring one
+//! input (XLA/PJRT vs the native mirror), bulk scoring, CIL operations and
+//! prediction assembly. The XLA b1 number is *the* per-request overhead the
+//! framework adds in production.
+
+use skedge::benchkit::{bench, black_box, section};
+use skedge::config::{default_artifact_dir, Meta};
+use skedge::models::NativeModels;
+use skedge::predictor::cil::Cil;
+use skedge::predictor::{Backend, Predictor};
+use skedge::runtime::XlaEngine;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load(&default_artifact_dir())?;
+    let app = meta.app("fd").clone();
+
+    section("raw model scoring (FD)");
+    let native = NativeModels::from_meta(&meta, &app);
+    bench("native predict (1 input, 19 configs)", || {
+        black_box(native.predict(black_box(2.5e6)));
+    });
+    let engine = XlaEngine::load(&meta, "fd")?;
+    bench("xla b1 predict (1 input, 19 configs)", || {
+        black_box(engine.predict(black_box(2.5e6)).unwrap());
+    });
+    let sizes: Vec<f64> = (0..64).map(|i| 1e6 + 3e4 * i as f64).collect();
+    bench("xla b64 predict_batch (64 inputs)", || {
+        black_box(engine.predict_batch(black_box(&sizes)).unwrap());
+    });
+    bench("native predict_batch (64 inputs)", || {
+        black_box(native.predict_batch(black_box(&sizes)));
+    });
+
+    section("forest inference alone");
+    let forest = skedge::models::Forest::from_params(&app.models.forest);
+    bench("native forest eval2 (1 point)", || {
+        black_box(forest.eval2(black_box(2.5e6), black_box(1536.0)));
+    });
+
+    section("CIL");
+    let mut cil = Cil::new(19, meta.tidl_mean_ms);
+    for j in 0..19 {
+        cil.update(j, 0.0, 2000.0);
+    }
+    bench("cil predicts_warm query", || {
+        black_box(cil.predicts_warm(black_box(7), black_box(5000.0)));
+    });
+    let mut t = 0.0;
+    bench("cil update (reuse path)", || {
+        t += 3000.0;
+        black_box(cil.update(7, t, 2000.0));
+    });
+
+    section("full Predictor::predict (native backend, CIL assembly)");
+    let mut predictor = Predictor::new(&meta, &app, Backend::Native(NativeModels::from_meta(&meta, &app)));
+    let mut now = 0.0;
+    bench("predictor predict+assemble", || {
+        now += 250.0;
+        black_box(predictor.predict(black_box(2.5e6), now).unwrap());
+    });
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Simulator benches: end-to-end simulation throughput (tasks/s through the
+//! whole predict→decide→execute pipeline), event-queue operations, and the
+//! ground-truth substrate samplers.
+
+use skedge::benchkit::{bench, bench_n, black_box, section};
+use skedge::config::{default_artifact_dir, ExperimentSettings, Meta, Objective};
+use skedge::platform::latency::GroundTruthSampler;
+use skedge::sim::events::{Event, EventQueue};
+use skedge::sim;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load(&default_artifact_dir())?;
+
+    section("end-to-end simulation (600 tasks, native backend)");
+    for app in ["ir", "fd", "stt"] {
+        let set = skedge::experiments::best_costmin_set(app);
+        let s = ExperimentSettings::new(app, Objective::CostMin, &set);
+        let r = bench(&format!("{app} cost-min full sim"), || {
+            black_box(sim::run(&meta, &s).unwrap());
+        });
+        println!(
+            "{:<44} {:>10.0} tasks/s through the framework",
+            format!("  -> {app} placement throughput"),
+            600.0 * r.ops_per_s
+        );
+    }
+    let s = ExperimentSettings::new("fd", Objective::LatencyMin,
+                                    &skedge::experiments::best_latmin_set("fd"));
+    bench("fd latency-min full sim", || {
+        black_box(sim::run(&meta, &s).unwrap());
+    });
+
+    section("event queue");
+    bench_n("schedule+pop 1k events", 1000, 5, || {
+        let mut q = EventQueue::new();
+        for i in 0..1000usize {
+            q.schedule(((i * 7919) % 100_000) as f64, Event::Arrival { id: i });
+        }
+        while let Some(e) = q.pop() {
+            black_box(e);
+        }
+    });
+
+    section("ground-truth sampling");
+    let mut gt = GroundTruthSampler::new(&meta, "fd", 1);
+    bench("sample_task (19-config actuals)", || {
+        black_box(gt.sample_task());
+    });
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! One bench per paper table/figure: wall time to regenerate each artifact
+//! of the evaluation section (the deliverable-d harness, timed). Each runs
+//! once — these are end-to-end experiment timings, not micro-benches.
+
+use std::time::Instant;
+
+use skedge::config::{default_artifact_dir, Meta};
+use skedge::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load(&default_artifact_dir())?;
+    println!("== per-table/figure regeneration wall time ==");
+    // table5 (live) is timed at a fast scale through its own path below.
+    for id in ["table1", "table2", "fig3", "fig4", "table3", "fig5", "table4",
+               "fig6", "edgeonly", "baselines", "tidl", "configsel", "ablations"] {
+        let t0 = Instant::now();
+        // render without printing the full table to keep bench output tight
+        let out = experiments::run_quiet(&meta, id)?;
+        println!("{id:<12} {:>9.2} s   ({} chars)", t0.elapsed().as_secs_f64(), out.len());
+    }
+    let t0 = Instant::now();
+    let out = experiments::live_table::table5_with(&meta, false, 1, 120, 0.01)?;
+    println!("{:<12} {:>9.2} s   ({} chars, reduced: 1 run x 120 inputs @0.01x)",
+             "table5", t0.elapsed().as_secs_f64(), out.len());
+    Ok(())
+}

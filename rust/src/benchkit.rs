@@ -1,0 +1,105 @@
+//! Tiny benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (all `harness = false`): warmup,
+//! repeated timed runs, median-of-runs reporting in ns/op plus derived
+//! throughput. Deliberately simple — no outlier rejection beyond the median,
+//! deterministic iteration counts so before/after comparisons in
+//! EXPERIMENTS.md §Perf are stable.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub ns_per_op: f64,
+    pub ops_per_s: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let per_op = if self.ns_per_op >= 1e6 {
+            format!("{:>10.3} ms/op", self.ns_per_op / 1e6)
+        } else if self.ns_per_op >= 1e3 {
+            format!("{:>10.3} µs/op", self.ns_per_op / 1e3)
+        } else {
+            format!("{:>10.1} ns/op", self.ns_per_op)
+        };
+        format!(
+            "{:<44} {per_op}   {:>12.0} ops/s   ({} iters)",
+            self.name, self.ops_per_s, self.iters
+        )
+    }
+}
+
+/// Run `f` for `iters` iterations per run, `runs` times; report the median.
+pub fn bench_n<F: FnMut()>(name: &str, iters: u64, runs: usize, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..iters.min(10) {
+        f();
+    }
+    let mut per_run = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_run.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ns = per_run[per_run.len() / 2];
+    let r = BenchResult {
+        name: name.to_string(),
+        ns_per_op: ns,
+        ops_per_s: 1e9 / ns,
+        iters: iters * runs as u64,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Bench with auto-chosen iteration count targeting ~0.3 s per run.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.3 / once) as u64).clamp(1, 1_000_000);
+    bench_n(name, iters, 5, f)
+}
+
+/// Section header for bench groups.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench_n("spin", 1000, 3, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.ns_per_op > 0.0);
+        assert!(r.ops_per_s > 0.0);
+        assert_eq!(r.iters, 3000);
+    }
+
+    #[test]
+    fn report_units() {
+        let r = BenchResult { name: "x".into(), ns_per_op: 2_500_000.0, ops_per_s: 400.0, iters: 1 };
+        assert!(r.report().contains("ms/op"));
+        let r = BenchResult { name: "x".into(), ns_per_op: 2_500.0, ops_per_s: 4e5, iters: 1 };
+        assert!(r.report().contains("µs/op"));
+    }
+}

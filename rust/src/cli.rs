@@ -1,0 +1,137 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `skedge <subcommand> [--flag value]... [--switch]...`
+//! Flags accept both `--key value` and `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let subcommand = match it.next() {
+            Some(s) if !s.starts_with('-') => s,
+            Some(s) => bail!("expected a subcommand, got flag `{s}`"),
+            None => String::new(),
+        };
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let Some(stripped) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument `{tok}`");
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                flags.insert(stripped.to_string(), it.next().unwrap());
+            } else {
+                switches.push(stripped.to_string());
+            }
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|s| s.parse::<f64>().map_err(|_| anyhow::anyhow!("--{key}: bad number `{s}`")))
+            .transpose()
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("--{key}: bad integer `{s}`")))
+            .transpose()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer `{s}`")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has_switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("sim --app fd --alpha 0.02 --replay");
+        assert_eq!(a.subcommand, "sim");
+        assert_eq!(a.get("app"), Some("fd"));
+        assert_eq!(a.f64("alpha").unwrap(), Some(0.02));
+        assert!(a.has_switch("replay"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("tables --id=table3 --n=100");
+        assert_eq!(a.get("id"), Some("table3"));
+        assert_eq!(a.usize("n").unwrap(), Some(100));
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = parse("sim");
+        assert!(a.req("app").is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("sim --alpha abc");
+        assert!(a.f64("alpha").is_err());
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(["sim".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn empty_args_ok() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("sim --offset -5");
+        assert_eq!(a.f64("offset").unwrap(), Some(-5.0));
+    }
+}

@@ -1,0 +1,380 @@
+//! Typed configuration: the artifact metadata (`artifacts/meta.json`)
+//! produced by the AOT pipeline, plus runtime experiment settings.
+//!
+//! `Meta` is the single source of truth shared with the Python side: memory
+//! configurations, pricing constants, trained model parameters (for the
+//! native mirror backend), ground-truth generative parameters (for the Rust
+//! workload generator) and per-app experiment constants.
+
+mod settings;
+
+pub use settings::{ExperimentSettings, Objective, PredictorBackendKind};
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// AWS pricing model constants (paper Sec. II-A).
+#[derive(Debug, Clone, Copy)]
+pub struct Pricing {
+    pub price_per_gb_s: f64,
+    pub bill_quantum_ms: f64,
+    pub request_fee: f64,
+}
+
+/// Generative ground-truth parameters for one application (mirror of
+/// `python/compile/synthdata.AppGroundTruth`; milliseconds / bytes / pixels).
+#[derive(Debug, Clone)]
+pub struct GroundTruth {
+    pub size_log_mu: f64,
+    pub size_log_sigma: f64,
+    pub size_min: f64,
+    pub size_max: f64,
+    pub bytes_per_unit: f64,
+    pub upld_base_ms: f64,
+    pub upld_per_byte_ms: f64,
+    pub upld_noise_sigma: f64,
+    pub start_warm_mean: f64,
+    pub start_warm_sigma: f64,
+    pub start_cold_mean: f64,
+    pub start_cold_sigma: f64,
+    pub comp_work_coeff: f64,
+    pub comp_work_exp: f64,
+    pub comp_size_scale: f64,
+    pub comp_noise_sigma: f64,
+    pub store_mean: f64,
+    pub store_sigma: f64,
+    pub edge_comp_base: f64,
+    pub edge_comp_slope: f64,
+    pub edge_comp_noise_sigma: f64,
+    pub iotup_mean: f64,
+    pub iotup_sigma: f64,
+    pub edge_store_mean: f64,
+    pub edge_store_sigma: f64,
+}
+
+/// Trained GBRT forest in the dense complete-binary-tree layout.
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub base: f64,
+    pub learning_rate: f64,
+    pub n_trees: usize,
+    pub depth: usize,
+    /// [n_trees * (2^depth - 1)]
+    pub feat: Vec<u32>,
+    pub thresh: Vec<f32>,
+    /// [n_trees * 2^depth]
+    pub leaf: Vec<f32>,
+}
+
+impl ForestParams {
+    pub fn n_internal(&self) -> usize {
+        (1 << self.depth) - 1
+    }
+
+    pub fn n_leaf(&self) -> usize {
+        1 << self.depth
+    }
+}
+
+/// Trained per-app model parameters: what the Predictor needs beyond the
+/// compiled HLO (scalar component means the CIL chooses between) plus the
+/// full parameter set for the native mirror backend.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub theta: (f64, f64),
+    pub phi: (f64, f64),
+    pub bytes_per_unit: f64,
+    pub forest: ForestParams,
+    pub start_warm_mean: f64,
+    pub start_warm_sigma: f64,
+    pub start_cold_mean: f64,
+    pub start_cold_sigma: f64,
+    pub store_mean: f64,
+    pub store_sigma: f64,
+    /// negative = n/a (IR posts results straight to S3)
+    pub iotup_mean: f64,
+    pub iotup_sigma: f64,
+    pub edge_store_mean: f64,
+    pub edge_store_sigma: f64,
+}
+
+impl ModelParams {
+    /// Fixed (size-independent) edge overhead added to comp_e: Eqn. (2).
+    pub fn edge_overhead_ms(&self) -> f64 {
+        self.iotup_mean.max(0.0) + self.edge_store_mean
+    }
+}
+
+/// One application's metadata.
+#[derive(Debug, Clone)]
+pub struct AppMeta {
+    pub name: String,
+    pub size_unit: String,
+    pub arrival_rate_per_s: f64,
+    pub deadline_ms: f64,
+    pub alpha: f64,
+    pub cmax: f64,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub ground_truth: GroundTruth,
+    pub models: ModelParams,
+    /// artifact file names by batch key ("b1", "b64")
+    pub artifacts: BTreeMap<String, String>,
+    pub mape_cloud_e2e: f64,
+    pub mape_edge_e2e: f64,
+}
+
+/// Parsed artifacts/meta.json.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub memory_configs_mb: Vec<f64>,
+    pub pricing: Pricing,
+    pub cpu_knee_mb: f64,
+    pub cpu_exp_below: f64,
+    pub cpu_exp_above: f64,
+    pub tidl_mean_ms: f64,
+    pub tidl_sigma_ms: f64,
+    pub apps: BTreeMap<String, AppMeta>,
+    /// directory meta.json was loaded from (artifact paths are relative)
+    pub dir: String,
+}
+
+impl Meta {
+    pub fn load(dir: &str) -> Result<Meta> {
+        let path = format!("{dir}/meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &str) -> Result<Meta> {
+        let pricing = {
+            let p = j.req("pricing");
+            Pricing {
+                price_per_gb_s: p.req("price_per_gb_s").f64(),
+                bill_quantum_ms: p.req("bill_quantum_ms").f64(),
+                request_fee: p.req("request_fee").f64(),
+            }
+        };
+        let mems = j.req("memory_configs_mb").f64_vec();
+        if mems.len() != 19 {
+            bail!("expected 19 memory configs, got {}", mems.len());
+        }
+        let mut apps = BTreeMap::new();
+        for (name, aj) in j.req("apps").obj() {
+            apps.insert(name.clone(), parse_app(name, aj)?);
+        }
+        Ok(Meta {
+            memory_configs_mb: mems,
+            pricing,
+            cpu_knee_mb: j.req("cpu_knee_mb").f64(),
+            cpu_exp_below: j.req("cpu_exp_below").f64(),
+            cpu_exp_above: j.req("cpu_exp_above").f64(),
+            tidl_mean_ms: j.req("tidl_mean_ms").f64(),
+            tidl_sigma_ms: j.req("tidl_sigma_ms").f64(),
+            apps,
+            dir: dir.to_string(),
+        })
+    }
+
+    pub fn app(&self, name: &str) -> &AppMeta {
+        self.apps
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown app `{name}` (have: {:?})", self.apps.keys()))
+    }
+
+    /// Index of a memory configuration (MB) in the config list.
+    pub fn config_index(&self, mem_mb: f64) -> Option<usize> {
+        self.memory_configs_mb
+            .iter()
+            .position(|&m| (m - mem_mb).abs() < 0.5)
+    }
+
+    /// Absolute path of an app's HLO artifact for a batch key.
+    pub fn artifact_path(&self, app: &str, batch_key: &str) -> String {
+        format!("{}/{}", self.dir, self.app(app).artifacts[batch_key])
+    }
+
+    /// Absolute path of the app's eval replay table.
+    pub fn eval_csv_path(&self, app: &str) -> String {
+        format!("{}/{}_eval.csv", self.dir, app)
+    }
+
+    /// Relative compute-time multiplier of a memory config (ground truth).
+    pub fn cpu_speed_factor(&self, mem_mb: f64) -> f64 {
+        if mem_mb <= self.cpu_knee_mb {
+            (self.cpu_knee_mb / mem_mb).powf(self.cpu_exp_below)
+        } else {
+            (self.cpu_knee_mb / mem_mb).powf(self.cpu_exp_above)
+        }
+    }
+}
+
+fn parse_app(name: &str, aj: &Json) -> Result<AppMeta> {
+    let g = aj.req("ground_truth");
+    let ground_truth = GroundTruth {
+        size_log_mu: g.req("size_log_mu").f64(),
+        size_log_sigma: g.req("size_log_sigma").f64(),
+        size_min: g.req("size_min").f64(),
+        size_max: g.req("size_max").f64(),
+        bytes_per_unit: g.req("bytes_per_unit").f64(),
+        upld_base_ms: g.req("upld_base_ms").f64(),
+        upld_per_byte_ms: g.req("upld_per_byte_ms").f64(),
+        upld_noise_sigma: g.req("upld_noise_sigma").f64(),
+        start_warm_mean: g.req("start_warm_mean").f64(),
+        start_warm_sigma: g.req("start_warm_sigma").f64(),
+        start_cold_mean: g.req("start_cold_mean").f64(),
+        start_cold_sigma: g.req("start_cold_sigma").f64(),
+        comp_work_coeff: g.req("comp_work_coeff").f64(),
+        comp_work_exp: g.req("comp_work_exp").f64(),
+        comp_size_scale: g.req("comp_size_scale").f64(),
+        comp_noise_sigma: g.req("comp_noise_sigma").f64(),
+        store_mean: g.req("store_mean").f64(),
+        store_sigma: g.req("store_sigma").f64(),
+        edge_comp_base: g.req("edge_comp_base").f64(),
+        edge_comp_slope: g.req("edge_comp_slope").f64(),
+        edge_comp_noise_sigma: g.req("edge_comp_noise_sigma").f64(),
+        iotup_mean: g.req("iotup_mean").f64(),
+        iotup_sigma: g.req("iotup_sigma").f64(),
+        edge_store_mean: g.req("edge_store_mean").f64(),
+        edge_store_sigma: g.req("edge_store_sigma").f64(),
+    };
+
+    let m = aj.req("models");
+    let fj = m.req("forest");
+    let forest = ForestParams {
+        base: fj.req("base").f64(),
+        learning_rate: fj.req("learning_rate").f64(),
+        n_trees: fj.req("n_trees").usize(),
+        depth: fj.req("depth").usize(),
+        feat: fj.req("feat").arr().iter().map(|v| v.f64() as u32).collect(),
+        thresh: fj.req("thresh").f32_vec(),
+        leaf: fj.req("leaf").f32_vec(),
+    };
+    let ni = (1usize << forest.depth) - 1;
+    if forest.feat.len() != forest.n_trees * ni {
+        bail!("forest feat length mismatch for app {name}");
+    }
+    if forest.leaf.len() != forest.n_trees * (ni + 1) {
+        bail!("forest leaf length mismatch for app {name}");
+    }
+
+    let theta = m.req("theta").f64_vec();
+    let phi = m.req("phi").f64_vec();
+    let models = ModelParams {
+        theta: (theta[0], theta[1]),
+        phi: (phi[0], phi[1]),
+        bytes_per_unit: m.req("bytes_per_unit").f64(),
+        forest,
+        start_warm_mean: m.req("start_warm_mean").f64(),
+        start_warm_sigma: m.req("start_warm_sigma").f64(),
+        start_cold_mean: m.req("start_cold_mean").f64(),
+        start_cold_sigma: m.req("start_cold_sigma").f64(),
+        store_mean: m.req("store_mean").f64(),
+        store_sigma: m.req("store_sigma").f64(),
+        iotup_mean: m.req("iotup_mean").f64(),
+        iotup_sigma: m.req("iotup_sigma").f64(),
+        edge_store_mean: m.req("edge_store_mean").f64(),
+        edge_store_sigma: m.req("edge_store_sigma").f64(),
+    };
+
+    let metrics = aj.req("metrics");
+    let mut artifacts = BTreeMap::new();
+    for (k, v) in aj.req("artifacts").obj() {
+        artifacts.insert(k.clone(), v.str().to_string());
+    }
+    Ok(AppMeta {
+        name: name.to_string(),
+        size_unit: aj.req("size_unit").str().to_string(),
+        arrival_rate_per_s: aj.req("arrival_rate_per_s").f64(),
+        deadline_ms: aj.req("deadline_ms").f64(),
+        alpha: aj.req("alpha").f64(),
+        cmax: aj.req("cmax").f64(),
+        n_train: aj.req("n_train").usize(),
+        n_eval: aj.req("n_eval").usize(),
+        ground_truth,
+        models,
+        artifacts,
+        mape_cloud_e2e: metrics.req("mape_cloud_e2e").f64(),
+        mape_edge_e2e: metrics.req("mape_edge_e2e").f64(),
+    })
+}
+
+/// Default artifact directory: `$SKEDGE_ARTIFACTS` or `artifacts` relative to
+/// the crate root (works from `cargo test` / `cargo run` anywhere in-tree).
+pub fn default_artifact_dir() -> String {
+    if let Ok(d) = std::env::var("SKEDGE_ARTIFACTS") {
+        return d;
+    }
+    let manifest = env!("CARGO_MANIFEST_DIR");
+    format!("{manifest}/artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> Meta {
+        Meta::load(&default_artifact_dir()).expect("meta.json (run `make artifacts`)")
+    }
+
+    #[test]
+    fn loads_real_meta() {
+        let m = meta();
+        assert_eq!(m.memory_configs_mb.len(), 19);
+        assert_eq!(m.memory_configs_mb[0], 640.0);
+        assert_eq!(m.memory_configs_mb[18], 2944.0);
+        assert_eq!(m.apps.len(), 3);
+        for app in ["ir", "fd", "stt"] {
+            let a = m.app(app);
+            assert!(a.deadline_ms > 0.0 && a.cmax > 0.0);
+            assert_eq!(a.models.forest.n_trees, 100);
+            assert_eq!(a.models.forest.depth, 3);
+            assert!(std::path::Path::new(&m.artifact_path(app, "b1")).exists());
+            assert!(std::path::Path::new(&m.eval_csv_path(app)).exists());
+        }
+    }
+
+    #[test]
+    fn config_index_lookup() {
+        let m = meta();
+        assert_eq!(m.config_index(640.0), Some(0));
+        assert_eq!(m.config_index(1536.0), Some(7));
+        assert_eq!(m.config_index(2944.0), Some(18));
+        assert_eq!(m.config_index(512.0), None);
+    }
+
+    #[test]
+    fn speed_factor_monotone() {
+        let m = meta();
+        let mut prev = f64::INFINITY;
+        for &mem in &m.memory_configs_mb {
+            let s = m.cpu_speed_factor(mem);
+            assert!(s < prev, "speed factor must decrease with memory");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn table1_means_survive_roundtrip() {
+        let m = meta();
+        // means recorded in meta must match the paper's Table I within 5%
+        assert!((m.app("ir").models.start_warm_mean - 162.0).abs() / 162.0 < 0.05);
+        assert!((m.app("fd").models.start_cold_mean - 1500.0).abs() / 1500.0 < 0.05);
+        assert!((m.app("stt").models.store_mean - 533.0).abs() / 533.0 < 0.10);
+        assert!(m.app("ir").models.iotup_mean < 0.0); // n/a
+    }
+
+    #[test]
+    fn edge_overhead_excludes_negative_iotup() {
+        let m = meta();
+        let ir = &m.app("ir").models;
+        assert!((ir.edge_overhead_ms() - ir.edge_store_mean).abs() < 1e-9);
+        let fd = &m.app("fd").models;
+        assert!(fd.edge_overhead_ms() > fd.edge_store_mean);
+    }
+}

@@ -1,0 +1,180 @@
+//! Runtime experiment settings: what a single framework run needs beyond the
+//! artifact metadata. Parsed from CLI `key=value` overrides (clap is not
+//! available offline; see `crate::cli`).
+
+use anyhow::{bail, Result};
+
+/// The paper's two placement objectives (Sec. III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// minimize cost subject to an end-to-end deadline δ per task
+    CostMin,
+    /// minimize latency subject to per-task budget C_max (+ α·surplus)
+    LatencyMin,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "cost-min" | "cost_min" | "cost" => Ok(Objective::CostMin),
+            "latency-min" | "latency_min" | "latency" | "lat-min" => Ok(Objective::LatencyMin),
+            _ => bail!("unknown objective `{s}` (cost-min | latency-min)"),
+        }
+    }
+}
+
+/// Which backend the Predictor scores inputs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorBackendKind {
+    /// AOT-compiled HLO via PJRT (the production hot path)
+    Xla,
+    /// pure-Rust mirror of the trained models (fallback / baseline)
+    Native,
+}
+
+impl PredictorBackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "xla" => Ok(Self::Xla),
+            "native" => Ok(Self::Native),
+            _ => bail!("unknown backend `{s}` (xla | native)"),
+        }
+    }
+}
+
+/// Settings for one framework run (simulation or live).
+#[derive(Debug, Clone)]
+pub struct ExperimentSettings {
+    pub app: String,
+    pub objective: Objective,
+    /// cloud configuration set (memory MB); λ_edge is always included
+    pub config_set: Vec<f64>,
+    /// deadline δ override (ms); None → app default from meta.json
+    pub deadline_ms: Option<f64>,
+    /// C_max override ($/task); None → derived value from meta.json
+    pub cmax: Option<f64>,
+    /// α override; None → app default
+    pub alpha: Option<f64>,
+    /// number of inputs to process; None → the full eval trace (600)
+    pub n_inputs: Option<usize>,
+    /// workload source: replay the eval CSV (paper protocol) or generate
+    pub replay: bool,
+    pub backend: PredictorBackendKind,
+    pub seed: u64,
+    /// override of the Predictor's believed container idle lifetime (ms);
+    /// None → the calibrated T_idl. 0.0 disables the CIL (always-cold).
+    pub tidl_belief_ms: Option<f64>,
+    /// variance-aware margin in σ units (paper §VIII future work); 0 = the
+    /// published mean-prediction behaviour
+    pub risk_factor: f64,
+}
+
+impl ExperimentSettings {
+    pub fn new(app: &str, objective: Objective, config_set: &[f64]) -> Self {
+        ExperimentSettings {
+            app: app.to_string(),
+            objective,
+            config_set: config_set.to_vec(),
+            deadline_ms: None,
+            cmax: None,
+            alpha: None,
+            n_inputs: None,
+            replay: true,
+            backend: PredictorBackendKind::Native,
+            seed: 2020,
+            tidl_belief_ms: None,
+            risk_factor: 0.0,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_backend(mut self, b: PredictorBackendKind) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn with_alpha(mut self, a: f64) -> Self {
+        self.alpha = Some(a);
+        self
+    }
+
+    pub fn with_deadline(mut self, d: f64) -> Self {
+        self.deadline_ms = Some(d);
+        self
+    }
+
+    pub fn with_cmax(mut self, c: f64) -> Self {
+        self.cmax = Some(c);
+        self
+    }
+
+    pub fn with_n_inputs(mut self, n: usize) -> Self {
+        self.n_inputs = Some(n);
+        self
+    }
+
+    pub fn with_tidl_belief(mut self, tidl_ms: f64) -> Self {
+        self.tidl_belief_ms = Some(tidl_ms);
+        self
+    }
+
+    pub fn with_risk_factor(mut self, r: f64) -> Self {
+        self.risk_factor = r;
+        self
+    }
+
+    /// Parse a comma-separated memory list like "1536,1664,2048".
+    pub fn parse_config_set(s: &str) -> Result<Vec<f64>> {
+        let mut v = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mem: f64 = part
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad memory value `{part}` in config set"))?;
+            v.push(mem);
+        }
+        if v.is_empty() {
+            bail!("empty configuration set");
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parse() {
+        assert_eq!(Objective::parse("cost-min").unwrap(), Objective::CostMin);
+        assert_eq!(Objective::parse("latency").unwrap(), Objective::LatencyMin);
+        assert!(Objective::parse("x").is_err());
+    }
+
+    #[test]
+    fn config_set_parse() {
+        let v = ExperimentSettings::parse_config_set("1536, 1664,2048").unwrap();
+        assert_eq!(v, vec![1536.0, 1664.0, 2048.0]);
+        assert!(ExperimentSettings::parse_config_set("a,b").is_err());
+        assert!(ExperimentSettings::parse_config_set("").is_err());
+    }
+
+    #[test]
+    fn builder_chain() {
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0])
+            .with_seed(7)
+            .with_alpha(0.05)
+            .with_n_inputs(10);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.alpha, Some(0.05));
+        assert_eq!(s.n_inputs, Some(10));
+        assert!(s.replay);
+    }
+}

@@ -1,0 +1,157 @@
+//! Cost minimization subject to a per-task deadline δ (paper Sec. III-B a).
+//!
+//! Build M = { λ_j ∈ Φ ∪ {λ_edge} : predicted latency ≤ δ } and pick the
+//! cheapest member. Edge executions are free, so a deadline-feasible edge is
+//! always chosen. If M = ∅ the task is queued at the edge anyway — the
+//! deadline cannot be met, so the engine at least avoids paying for it.
+
+use crate::predictor::{Placement, Prediction};
+
+use super::{Decision, DecisionEngine};
+
+pub fn decide(eng: &mut DecisionEngine, pred: &Prediction, edge_wait_pred_ms: f64) -> Decision {
+    let delta = eng.deadline_ms;
+    let edge_e2e = edge_wait_pred_ms + pred.edge_e2e_ms;
+    // variance-aware margins (risk_factor = 0 ⇒ the paper's mean check)
+    let edge_guard = edge_e2e * (1.0 + eng.risk_factor * pred.edge_sigma_frac);
+    let cloud_margin = 1.0 + eng.risk_factor * pred.cloud_sigma_frac;
+
+    let mut best: Option<(f64, f64, Placement)> = None; // (cost, e2e, placement)
+    if edge_guard <= delta {
+        best = Some((0.0, edge_e2e, Placement::Edge));
+    }
+    for &j in &eng.config_idxs {
+        let c = &pred.cloud[j];
+        if c.e2e_ms * cloud_margin <= delta {
+            let better = match best {
+                None => true,
+                Some((bc, be, _)) => c.cost < bc || (c.cost == bc && c.e2e_ms < be),
+            };
+            if better {
+                best = Some((c.cost, c.e2e_ms, Placement::Cloud(j)));
+            }
+        }
+    }
+
+    match best {
+        Some((cost, e2e, placement)) => Decision {
+            placement,
+            predicted_e2e_ms: e2e,
+            predicted_cost: cost,
+            allowed_cost: f64::INFINITY,
+            feasible_found: true,
+        },
+        None => Decision {
+            placement: Placement::Edge,
+            predicted_e2e_ms: edge_e2e,
+            predicted_cost: 0.0,
+            allowed_cost: f64::INFINITY,
+            feasible_found: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Objective;
+    use crate::engine::test_support::pred;
+
+    fn engine(idxs: &[usize], delta: f64) -> DecisionEngine {
+        DecisionEngine::new(Objective::CostMin, idxs.to_vec(), delta, 0.0, 0.0)
+    }
+
+    #[test]
+    fn picks_cheapest_feasible_cloud_when_edge_misses_deadline() {
+        let p = pred(&[(2000.0, 5e-6), (1500.0, 3e-6), (1200.0, 8e-6)], 9000.0);
+        let mut e = engine(&[0, 1, 2], 2500.0);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, crate::predictor::Placement::Cloud(1));
+        assert!((d.predicted_cost - 3e-6).abs() < 1e-12);
+        assert!(d.feasible_found);
+    }
+
+    #[test]
+    fn edge_wins_when_feasible_because_free() {
+        let p = pred(&[(1000.0, 3e-6)], 1800.0);
+        let mut e = engine(&[0], 2000.0);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, crate::predictor::Placement::Edge);
+        assert_eq!(d.predicted_cost, 0.0);
+    }
+
+    #[test]
+    fn queue_wait_disqualifies_edge() {
+        let p = pred(&[(1000.0, 3e-6)], 1800.0);
+        let mut e = engine(&[0], 2000.0);
+        let d = e.decide(&p, 500.0); // wait pushes edge to 2300 > δ
+        assert_eq!(d.placement, crate::predictor::Placement::Cloud(0));
+        assert_eq!(d.predicted_e2e_ms, 1000.0);
+    }
+
+    #[test]
+    fn infeasible_everything_queues_at_edge() {
+        let p = pred(&[(5000.0, 3e-6)], 8000.0);
+        let mut e = engine(&[0], 2000.0);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, crate::predictor::Placement::Edge);
+        assert!(!d.feasible_found);
+        assert_eq!(d.predicted_e2e_ms, 8000.0);
+    }
+
+    #[test]
+    fn only_candidate_configs_considered() {
+        // config 2 is fastest+cheapest but not in the candidate set
+        let p = pred(&[(2000.0, 5e-6), (1900.0, 4e-6), (1000.0, 1e-6)], 9000.0);
+        let mut e = engine(&[0, 1], 2500.0);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, crate::predictor::Placement::Cloud(1));
+    }
+
+    #[test]
+    fn cost_tie_broken_by_latency() {
+        let p = pred(&[(2000.0, 3e-6), (1500.0, 3e-6)], 9000.0);
+        let mut e = engine(&[0, 1], 2500.0);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, crate::predictor::Placement::Cloud(1));
+    }
+}
+
+#[cfg(test)]
+mod risk_tests {
+    use crate::config::Objective;
+    use crate::engine::test_support::pred;
+    use crate::engine::DecisionEngine;
+    use crate::predictor::Placement;
+
+    #[test]
+    fn risk_margin_tightens_feasibility() {
+        // e2e 1900 with σ̂ = 15%: mean check passes δ = 2000, a 1σ-guarded
+        // check (1900 · 1.15 = 2185) does not — task shifts to the cheaper
+        // slower config or edge.
+        let p = pred(&[(1900.0, 3e-6)], 1500.0);
+        let mut mean_eng =
+            DecisionEngine::new(Objective::CostMin, vec![0], 2000.0, 0.0, 0.0);
+        assert_eq!(mean_eng.decide(&p, 0.0).placement, Placement::Edge,
+                   "edge (1500 ms, free) is feasible and cheapest");
+        // push edge out of feasibility with queue wait, cloud borderline
+        let mut mean_eng =
+            DecisionEngine::new(Objective::CostMin, vec![0], 2000.0, 0.0, 0.0);
+        let d = mean_eng.decide(&p, 600.0); // edge 2100 > δ
+        assert_eq!(d.placement, Placement::Cloud(0));
+        let mut risky = DecisionEngine::new(Objective::CostMin, vec![0], 2000.0, 0.0, 0.0)
+            .with_risk_factor(1.0);
+        let d = risky.decide(&p, 600.0); // cloud 1900·1.15 > δ too → fallback
+        assert_eq!(d.placement, Placement::Edge);
+        assert!(!d.feasible_found);
+    }
+
+    #[test]
+    fn risk_zero_is_published_behaviour() {
+        let p = pred(&[(1900.0, 3e-6)], 9000.0);
+        let mut a = DecisionEngine::new(Objective::CostMin, vec![0], 2000.0, 0.0, 0.0);
+        let mut b = DecisionEngine::new(Objective::CostMin, vec![0], 2000.0, 0.0, 0.0)
+            .with_risk_factor(0.0);
+        assert_eq!(a.decide(&p, 0.0).placement, b.decide(&p, 0.0).placement);
+    }
+}

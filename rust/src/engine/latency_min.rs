@@ -1,0 +1,116 @@
+//! Latency minimization subject to a per-task cost budget (paper Alg. 1):
+//!
+//! ```text
+//! M := { λ_j ∈ Φ ∪ {λ_edge} : costs(λ_j) ≤ C_max + α·surplus }
+//! config ← λ_j ∈ M with minimum latency
+//! surplus += C_max − costs(config)
+//! ```
+//!
+//! The edge is free, so M is never empty and the surplus never goes
+//! negative (paper Sec. III-B b). α scales how much banked budget a single
+//! task may spend; α = 0 reproduces the paper's pathological edge-queueing
+//! blow-up when C_max is tight.
+
+use crate::predictor::{Placement, Prediction};
+
+use super::{Decision, DecisionEngine};
+
+pub fn decide(eng: &mut DecisionEngine, pred: &Prediction, edge_wait_pred_ms: f64) -> Decision {
+    let allowed = eng.cmax + eng.alpha * eng.surplus;
+    let edge_e2e = edge_wait_pred_ms + pred.edge_e2e_ms;
+
+    // λ_edge is always feasible (cost 0)
+    let mut best = (edge_e2e, 0.0, Placement::Edge);
+    for &j in &eng.config_idxs {
+        let c = &pred.cloud[j];
+        if c.cost <= allowed && c.e2e_ms < best.0 {
+            best = (c.e2e_ms, c.cost, Placement::Cloud(j));
+        }
+    }
+
+    eng.surplus += eng.cmax - best.1;
+    debug_assert!(eng.surplus >= -1e-12, "surplus must never go negative");
+
+    Decision {
+        placement: best.2,
+        predicted_e2e_ms: best.0,
+        predicted_cost: best.1,
+        allowed_cost: allowed,
+        feasible_found: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Objective;
+    use crate::engine::test_support::pred;
+    use crate::predictor::Placement;
+
+    fn engine(idxs: &[usize], cmax: f64, alpha: f64) -> DecisionEngine {
+        DecisionEngine::new(Objective::LatencyMin, idxs.to_vec(), 0.0, cmax, alpha)
+    }
+
+    #[test]
+    fn picks_fastest_affordable() {
+        let p = pred(&[(2000.0, 3e-6), (1500.0, 5e-6), (1200.0, 9e-6)], 9000.0);
+        let mut e = engine(&[0, 1, 2], 6e-6, 0.0);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, Placement::Cloud(1), "config 2 too expensive");
+        assert_eq!(d.predicted_e2e_ms, 1500.0);
+    }
+
+    #[test]
+    fn edge_when_nothing_affordable() {
+        let p = pred(&[(1500.0, 5e-6)], 9000.0);
+        let mut e = engine(&[0], 1e-6, 0.0);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, Placement::Edge);
+        assert!(d.feasible_found, "edge always satisfies the constraint");
+    }
+
+    #[test]
+    fn surplus_accumulates_on_edge_and_unlocks_cloud() {
+        // cloud costs 5e-6, C_max 3e-6, α = 0.5: after one edge run the
+        // surplus is 3e-6, allowed = 3e-6 + 1.5e-6 = 4.5e-6 (still short);
+        // after two edge runs allowed = 3e-6 + 3e-6 = 6e-6 ≥ 5e-6.
+        let p = pred(&[(1500.0, 5e-6)], 9000.0);
+        let mut e = engine(&[0], 3e-6, 0.5);
+        assert_eq!(e.decide(&p, 0.0).placement, Placement::Edge);
+        assert_eq!(e.decide(&p, 0.0).placement, Placement::Edge);
+        let d = e.decide(&p, 0.0);
+        assert_eq!(d.placement, Placement::Cloud(0));
+        assert!((d.allowed_cost - 6e-6).abs() < 1e-18);
+        // spending the cloud cost shrinks the surplus
+        assert!((e.surplus - (6e-6 + 3e-6 - 5e-6)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn alpha_zero_ignores_surplus() {
+        let p = pred(&[(1500.0, 5e-6)], 9000.0);
+        let mut e = engine(&[0], 4e-6, 0.0);
+        for _ in 0..10 {
+            assert_eq!(e.decide(&p, 0.0).placement, Placement::Edge);
+        }
+        assert!(e.surplus > 0.0, "surplus banks but is never spendable");
+    }
+
+    #[test]
+    fn surplus_never_negative() {
+        let p = pred(&[(1500.0, 2e-6)], 9000.0);
+        let mut e = engine(&[0], 3e-6, 1.0);
+        for _ in 0..100 {
+            e.decide(&p, 0.0);
+            assert!(e.surplus >= 0.0);
+        }
+    }
+
+    #[test]
+    fn queue_wait_steers_back_to_cloud() {
+        // edge nominally fastest, but a long queue makes the cloud win
+        let p = pred(&[(1500.0, 1e-6)], 1000.0);
+        let mut e = engine(&[0], 5e-6, 0.0);
+        assert_eq!(e.decide(&p, 0.0).placement, Placement::Edge);
+        assert_eq!(e.decide(&p, 2000.0).placement, Placement::Cloud(0));
+    }
+}

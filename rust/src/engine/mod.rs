@@ -1,0 +1,105 @@
+//! The Decision Engine (paper Sec. III-B, V-B, Alg. 1): given the
+//! Predictor's per-configuration latency/cost predictions and the edge
+//! Executor's predicted queue wait, place each task.
+//!
+//! Two policies:
+//!  * [`cost_min`]: cheapest configuration meeting the deadline δ; if none
+//!    qualifies the task is queued at the edge to save cost.
+//!  * [`latency_min`]: fastest configuration whose predicted cost fits
+//!    C_max + α·surplus, where surplus accumulates unused budget (Eqn. 4).
+
+pub mod cost_min;
+pub mod latency_min;
+
+use crate::config::Objective;
+use crate::predictor::{Placement, Prediction};
+
+/// The engine's verdict for one task.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    pub placement: Placement,
+    /// predicted end-to-end latency of the chosen placement (edge includes
+    /// the predicted Executor queue wait)
+    pub predicted_e2e_ms: f64,
+    /// predicted execution cost of the chosen placement
+    pub predicted_cost: f64,
+    /// the cost cap applied at decision time (∞ for cost-min)
+    pub allowed_cost: f64,
+    /// whether any configuration satisfied the constraint
+    pub feasible_found: bool,
+}
+
+/// Decision Engine state: policy constants plus the running budget surplus.
+#[derive(Debug, Clone)]
+pub struct DecisionEngine {
+    pub objective: Objective,
+    /// candidate cloud configurations (indices into the 19-config list);
+    /// λ_edge is always a candidate
+    pub config_idxs: Vec<usize>,
+    pub deadline_ms: f64,
+    pub cmax: f64,
+    pub alpha: f64,
+    /// accumulated unused budget: Σ (C_max − C(i)) over past tasks
+    pub surplus: f64,
+    /// variance-aware margin (paper §VIII future work): constraints are
+    /// checked against `e2e · (1 + risk_factor · σ_frac)` instead of the
+    /// mean prediction. 0 = the paper's published behaviour.
+    pub risk_factor: f64,
+}
+
+impl DecisionEngine {
+    pub fn new(
+        objective: Objective,
+        config_idxs: Vec<usize>,
+        deadline_ms: f64,
+        cmax: f64,
+        alpha: f64,
+    ) -> Self {
+        assert!(!config_idxs.is_empty() || objective == Objective::CostMin,
+                "latency-min needs at least one cloud candidate");
+        DecisionEngine {
+            objective, config_idxs, deadline_ms, cmax, alpha,
+            surplus: 0.0, risk_factor: 0.0,
+        }
+    }
+
+    pub fn with_risk_factor(mut self, r: f64) -> Self {
+        self.risk_factor = r;
+        self
+    }
+
+    /// Place one task. `edge_wait_pred_ms` is the Executor's predicted queue
+    /// wait at this instant.
+    pub fn decide(&mut self, pred: &Prediction, edge_wait_pred_ms: f64) -> Decision {
+        match self.objective {
+            Objective::CostMin => cost_min::decide(self, pred, edge_wait_pred_ms),
+            Objective::LatencyMin => latency_min::decide(self, pred, edge_wait_pred_ms),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::predictor::{CloudPrediction, Prediction};
+
+    /// Hand-built prediction: cloud configs with given (e2e, cost) pairs.
+    pub fn pred(cloud: &[(f64, f64)], edge_e2e: f64) -> Prediction {
+        Prediction {
+            cloud: cloud
+                .iter()
+                .map(|&(e2e, cost)| CloudPrediction {
+                    e2e_ms: e2e,
+                    cost,
+                    warm: true,
+                    upld_ms: 100.0,
+                    start_ms: 160.0,
+                    comp_ms: e2e - 100.0 - 160.0 - 550.0,
+                })
+                .collect(),
+            edge_e2e_ms: edge_e2e,
+            edge_comp_ms: edge_e2e - 600.0,
+            cloud_sigma_frac: 0.15,
+            edge_sigma_frac: 0.05,
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Ablations of the framework's design choices (DESIGN.md §5):
+//!  * α = 0 pathology (paper: IR 10.5 s, FD 452 s, STT 12.6 s averages),
+//!  * CIL value: warm/cold-aware prediction vs an always-cold predictor,
+//!  * backend parity: native mirror vs the AOT XLA artifact must make the
+//!    same placement decisions.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentSettings, Meta, Objective, PredictorBackendKind};
+use crate::metrics::deadline_violations;
+use crate::sim;
+
+use super::render::{self, Table};
+
+/// α = 0: surplus can never be spent, pinning expensive tasks to the edge.
+fn alpha_zero(meta: &Meta) -> Result<String> {
+    let mut t = Table::new(&[
+        "App", "Avg E2E α=0 (s)", "Avg E2E α=paper (s)", "Blow-up ×", "Paper α=0 (s)",
+    ]);
+    let paper = [("ir", 10.5), ("fd", 452.2), ("stt", 12.64)];
+    for (app, paper_s) in paper {
+        let set = super::best_latmin_set(app);
+        let base = ExperimentSettings::new(app, Objective::LatencyMin, &set);
+        let a0 = sim::run(meta, &base.clone().with_alpha(0.0))?;
+        let ap = sim::run(meta, &base)?;
+        t.row(vec![
+            app.to_uppercase(),
+            render::f(a0.summary.avg_actual_e2e_ms / 1000.0, 2),
+            render::f(ap.summary.avg_actual_e2e_ms / 1000.0, 3),
+            render::f(a0.summary.avg_actual_e2e_ms / ap.summary.avg_actual_e2e_ms, 1),
+            render::f(paper_s, 1),
+        ]);
+    }
+    Ok(format!("### α = 0 pathology (lat-min)\n\n{}", t.render()))
+}
+
+/// Disable the CIL by forcing every prediction cold: measures what the
+/// warm/cold model buys in deadline compliance.
+fn no_cil(meta: &Meta) -> Result<String> {
+    let mut t = Table::new(&[
+        "App", "Violations % (with CIL)", "Violations % (always-cold)",
+        "Cost pred err % (with CIL)", "Cost pred err % (always-cold)",
+    ]);
+    for app in ["ir", "fd", "stt"] {
+        let am = meta.app(app);
+        let set = super::best_costmin_set(app);
+        let with = sim::run(meta, &ExperimentSettings::new(app, Objective::CostMin, &set))?;
+        // "always cold": belief T_idl = 0 → no container ever believed warm
+        let without = sim::run_with_tidl_belief(
+            meta,
+            &ExperimentSettings::new(app, Objective::CostMin, &set),
+            0.0,
+        )?;
+        let (v1, _) = deadline_violations(&with.records, am.deadline_ms);
+        let (v2, _) = deadline_violations(&without.records, am.deadline_ms);
+        t.row(vec![
+            app.to_uppercase(),
+            render::pct(v1),
+            render::pct(v2),
+            render::pct(with.summary.cost_prediction_error_pct()),
+            render::pct(without.summary.cost_prediction_error_pct()),
+        ]);
+    }
+    Ok(format!(
+        "### CIL ablation — always-cold belief (T_idl = 0)\n\n{}",
+        t.render()
+    ))
+}
+
+/// Native vs XLA backend: decisions and metrics must match.
+fn backend_parity(meta: &Meta, xla: bool) -> Result<String> {
+    if !xla {
+        return Ok("### Backend parity — skipped (run with --xla)\n".into());
+    }
+    let mut t = Table::new(&[
+        "App", "Decisions differing", "Δ total cost ($)", "Δ avg e2e (ms)",
+    ]);
+    for app in ["ir", "fd", "stt"] {
+        let set = super::best_latmin_set(app);
+        let base = ExperimentSettings::new(app, Objective::LatencyMin, &set).with_n_inputs(300);
+        let nat = sim::run(meta, &base.clone().with_backend(PredictorBackendKind::Native))?;
+        let xla_o = sim::run(meta, &base.with_backend(PredictorBackendKind::Xla))?;
+        let diff = nat
+            .records
+            .iter()
+            .zip(&xla_o.records)
+            .filter(|(a, b)| a.placement != b.placement)
+            .count();
+        t.row(vec![
+            app.to_uppercase(),
+            format!("{diff} / 300"),
+            format!("{:+.2e}", xla_o.summary.total_actual_cost - nat.summary.total_actual_cost),
+            render::f(xla_o.summary.avg_actual_e2e_ms - nat.summary.avg_actual_e2e_ms, 2),
+        ]);
+    }
+    Ok(format!(
+        "### Backend parity — native mirror vs AOT XLA artifact\n\n{}",
+        t.render()
+    ))
+}
+
+/// Variance-aware placement (paper §VIII future work): sweep the risk
+/// margin on STT cost-min, the most violation-prone workload.
+fn risk_sweep(meta: &Meta) -> Result<String> {
+    let mut t = Table::new(&[
+        "risk (σ)", "Violations %", "Avg violation (ms)", "Total cost ($)",
+        "Avg e2e (s)", "Edge execs",
+    ]);
+    let am = meta.app("stt");
+    let set = super::best_costmin_set("stt");
+    for risk in [0.0, 0.5, 1.0, 1.5, 2.0] {
+        let s = ExperimentSettings::new("stt", Objective::CostMin, &set)
+            .with_risk_factor(risk);
+        let o = sim::run(meta, &s)?;
+        let (v, avg) = deadline_violations(&o.records, am.deadline_ms);
+        t.row(vec![
+            format!("{risk:.1}"),
+            render::pct(v),
+            render::f(avg, 1),
+            render::money(o.summary.total_actual_cost),
+            render::f(o.summary.avg_actual_e2e_ms / 1000.0, 3),
+            format!("{}", o.summary.edge_count),
+        ]);
+    }
+    Ok(format!(
+        "### Variance-aware placement (future-work extension) — STT cost-min\n\n\
+         Constraints checked against e2e·(1 + risk·σ̂) with σ̂ from train-time \
+         MAPE: buying violation rate with cost/latency headroom.\n\n{}",
+        t.render()
+    ))
+}
+
+pub fn all(meta: &Meta, xla: bool) -> Result<String> {
+    Ok(format!(
+        "## Ablations\n\n{}\n\n{}\n\n{}\n\n{}",
+        alpha_zero(meta)?,
+        no_cil(meta)?,
+        risk_sweep(meta)?,
+        backend_parity(meta, xla)?
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+
+    #[test]
+    fn alpha_zero_blows_up_fd() {
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let s = alpha_zero(&meta).unwrap();
+        let fd = s.lines().find(|l| l.starts_with("| FD")).unwrap();
+        let cols: Vec<&str> = fd.split('|').map(|c| c.trim()).collect();
+        let blowup: f64 = cols[4].parse::<f64>().unwrap_or(f64::NAN);
+        assert!(blowup > 10.0, "FD α=0 blow-up only {blowup}×");
+    }
+
+    #[test]
+    fn no_cil_hurts_or_matches() {
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let s = no_cil(&meta).unwrap();
+        assert!(s.contains("always-cold"));
+    }
+}

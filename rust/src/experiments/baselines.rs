@@ -1,0 +1,158 @@
+//! Baseline placement policies and the paper's edge-only claim (§VI-B:
+//! "when the same input workload is processed only using the edge pipeline,
+//! the average end-to-end latency is 2404 s ... compared to 1.71 s with
+//! cloud offload").
+
+use anyhow::Result;
+
+use crate::config::{ExperimentSettings, Meta, Objective};
+use crate::platform::greengrass::EdgeExecutor;
+use crate::platform::pricing::aws_pricing;
+use crate::sim;
+use crate::util::stats::mean;
+use crate::workload::build_workload;
+
+use super::render::{self, Table};
+
+/// Edge-only execution of the FD workload: every task is queued on the
+/// single long-lived edge function.
+pub fn edge_only(meta: &Meta) -> Result<String> {
+    let mut t = Table::new(&[
+        "App", "Avg E2E (s)", "P50 (s)", "Max (s)", "Framework Avg E2E (s)", "Speedup",
+    ]);
+    for app in ["ir", "fd", "stt"] {
+        let tasks = build_workload(meta, app, meta.app(app).n_eval, true, 2020)?;
+        let mut edge = EdgeExecutor::new();
+        let mut e2e = Vec::new();
+        for task in &tasks {
+            let a = &task.actuals;
+            let (_, _, comp_end) = edge.submit(task.arrive_ms, a.edge_comp, a.edge_comp);
+            e2e.push((comp_end + a.iotup + a.edge_store - task.arrive_ms) / 1000.0);
+        }
+        // framework (lat-min, best set) for comparison
+        let s = ExperimentSettings::new(app, Objective::LatencyMin, &super::best_latmin_set(app));
+        let o = sim::run(meta, &s)?;
+        let fw = o.summary.avg_actual_e2e_ms / 1000.0;
+        let avg = mean(&e2e);
+        let mut sorted = e2e.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(vec![
+            app.to_uppercase(),
+            render::f(avg, 2),
+            render::f(sorted[sorted.len() / 2], 2),
+            render::f(*sorted.last().unwrap(), 2),
+            render::f(fw, 3),
+            format!("{:.0}×", avg / fw),
+        ]);
+    }
+    Ok(format!(
+        "## Edge-only baseline (paper §VI-B: FD edge-only ≈ 2404 s vs 1.71 s \
+         with offload — three orders of magnitude)\n\n{}",
+        t.render()
+    ))
+}
+
+/// Baseline comparison: framework vs static policies on each app (lat-min
+/// budget accounting).
+pub fn comparison(meta: &Meta) -> Result<String> {
+    let mut out = String::from(
+        "## Baseline comparison — average end-to-end latency (s) and total \
+         cost ($) over the 600-input eval workload\n\n",
+    );
+    for app in ["ir", "fd", "stt"] {
+        let am = meta.app(app);
+        let mut t = Table::new(&["Policy", "Avg E2E (s)", "Total Cost ($)", "Edge Execs"]);
+
+        // framework, both objectives
+        for (name, obj, set) in [
+            ("skedge cost-min", Objective::CostMin, super::best_costmin_set(app)),
+            ("skedge lat-min", Objective::LatencyMin, super::best_latmin_set(app)),
+        ] {
+            let o = sim::run(meta, &ExperimentSettings::new(app, obj, &set))?;
+            t.row(vec![
+                name.into(),
+                render::f(o.summary.avg_actual_e2e_ms / 1000.0, 3),
+                render::money(o.summary.total_actual_cost),
+                format!("{}", o.summary.edge_count),
+            ]);
+        }
+
+        // static cloud-only at three fixed configs (always offload)
+        let tasks = build_workload(meta, app, am.n_eval, true, 2020)?;
+        for mem in [640.0, 1536.0, 2944.0] {
+            let j = meta.config_index(mem).unwrap();
+            let mut e2e = Vec::new();
+            let mut cost = 0.0;
+            for task in &tasks {
+                let a = &task.actuals;
+                // steady-state warm (a dedicated pool at fixed rate stays warm)
+                e2e.push(a.cloud_e2e(j, false) / 1000.0);
+                cost += aws_pricing().cost(a.comp[j], mem);
+            }
+            t.row(vec![
+                format!("cloud-only {}MB", mem as i64),
+                render::f(mean(&e2e), 3),
+                render::money(cost),
+                "0".into(),
+            ]);
+        }
+
+        // oracle: per task, the minimum actual e2e over edge (no queue) and
+        // all configs in the lat-min set — a lower bound, not a real policy
+        let set = super::best_latmin_set(app);
+        let mut e2e = Vec::new();
+        let mut cost = 0.0;
+        for task in &tasks {
+            let a = &task.actuals;
+            let mut best = a.edge_e2e();
+            let mut best_cost = 0.0;
+            for &mem in &set {
+                let j = meta.config_index(mem).unwrap();
+                let c = a.cloud_e2e(j, false);
+                if c < best {
+                    best = c;
+                    best_cost = aws_pricing().cost(a.comp[j], mem);
+                }
+            }
+            e2e.push(best / 1000.0);
+            cost += best_cost;
+        }
+        t.row(vec![
+            "oracle (lower bound)".into(),
+            render::f(mean(&e2e), 3),
+            render::money(cost),
+            "-".into(),
+        ]);
+
+        out.push_str(&format!("### {}\n\n{}\n", app.to_uppercase(), t.render()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+
+    #[test]
+    fn fd_edge_only_is_three_orders_slower() {
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let s = edge_only(&meta).unwrap();
+        // FD row: avg must be >1000 s while the framework is a few seconds
+        let fd_line = s.lines().find(|l| l.starts_with("| FD")).unwrap();
+        let cols: Vec<&str> = fd_line.split('|').map(|c| c.trim()).collect();
+        let avg: f64 = cols[2].parse().unwrap();
+        let fw: f64 = cols[5].parse().unwrap();
+        assert!(avg > 1000.0, "edge-only FD avg {avg}s");
+        assert!(fw < 10.0, "framework FD avg {fw}s");
+        assert!(avg / fw > 300.0, "speedup {}", avg / fw);
+    }
+
+    #[test]
+    fn oracle_lower_bounds_framework() {
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let s = comparison(&meta).unwrap();
+        assert!(s.contains("oracle"));
+        assert!(s.contains("skedge lat-min"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Table V: the live prototype — FD application, latency-min with the best
+//! configuration set, averaged over four runs on real threads with the XLA
+//! predictor on the hot path.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentSettings, Meta, Objective, PredictorBackendKind};
+use crate::live::{self, LiveConfig};
+use crate::metrics::budget_metrics;
+use crate::util::stats::mean;
+
+use super::render::{self, Table};
+
+/// Run the live prototype `runs` times and average, as the paper does.
+pub fn table5_with(meta: &Meta, xla: bool, runs: usize, n_inputs: usize,
+                   time_scale: f64) -> Result<String> {
+    let am = meta.app("fd");
+    let set = super::best_latmin_set("fd");
+    let backend = if xla { PredictorBackendKind::Xla } else { PredictorBackendKind::Native };
+
+    let mut avg_e2e = Vec::new();
+    let mut lat_err = Vec::new();
+    let mut viol = Vec::new();
+    let mut used = Vec::new();
+    let mut mismatches = Vec::new();
+    let mut wall = Vec::new();
+    for run in 0..runs {
+        let settings = ExperimentSettings::new("fd", Objective::LatencyMin, &set)
+            .with_backend(backend)
+            .with_n_inputs(n_inputs)
+            .with_seed(2020 + run as u64);
+        let cfg = LiveConfig { settings, time_scale, fixed_rate: true };
+        let o = live::run(meta, &cfg)?;
+        let (v, u) = budget_metrics(&o.records, am.cmax);
+        avg_e2e.push(o.summary.avg_actual_e2e_ms / 1000.0);
+        lat_err.push(o.summary.latency_prediction_error_pct());
+        viol.push(v);
+        used.push(u);
+        mismatches.push(o.summary.warm_cold_mismatches as f64);
+        wall.push(o.wall_seconds);
+    }
+
+    let mut t = Table::new(&[
+        "Avg. Actual End-To-End Latency (s)", "Latency Prediction Error %",
+        "Violations of cost budget", "% Budget Used", "Warm-Cold Mismatches",
+    ]);
+    let n = n_inputs as f64;
+    t.row(vec![
+        render::f(mean(&avg_e2e), 3),
+        render::pct(mean(&lat_err)),
+        format!("{:.1} / {} = {:.2}%", mean(&viol) * n / 100.0, n_inputs, mean(&viol)),
+        render::pct(mean(&used)),
+        format!("{:.1} / {} = {:.2}%", mean(&mismatches), n_inputs,
+                mean(&mismatches) / n * 100.0),
+    ]);
+    Ok(format!(
+        "## Table V — live prototype, FD, set {{{}}}, C_max = ${:.4e}, α = {} \
+         (avg of {} runs, {} inputs each, time scale {}×; predictor backend: \
+         {}; mean wall time {:.1}s/run)\n\n{}",
+        render::set_label(&set), am.cmax, am.alpha, runs, n_inputs,
+        time_scale,
+        if xla { "XLA/PJRT" } else { "native" },
+        mean(&wall),
+        t.render()
+    ))
+}
+
+/// Default Table V: 4 runs × 600 inputs at 1/20 time scale.
+pub fn table5(meta: &Meta, xla: bool) -> Result<String> {
+    table5_with(meta, xla, 4, 600, 0.05)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+
+    #[test]
+    fn table5_small_smoke() {
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        // 2 runs × 30 inputs at 1/500 scale keeps the test fast
+        let s = table5_with(&meta, false, 2, 30, 0.002).unwrap();
+        assert!(s.contains("Warm-Cold Mismatches"));
+        assert!(s.contains("live prototype"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Experiment harness: one module per table/figure in the paper's
+//! evaluation, plus baselines and ablations (DESIGN.md §5 carries the
+//! experiment-id → module map).
+//!
+//! Every experiment renders a markdown table (and CSV series for figures)
+//! to stdout and into `results/`, and is deterministic given its seed.
+
+pub mod ablate;
+pub mod baselines;
+pub mod configsel;
+pub mod live_table;
+pub mod model_tables;
+pub mod placement_tables;
+pub mod render;
+pub mod sweeps;
+pub mod tidl;
+
+use anyhow::{bail, Result};
+
+use crate::config::Meta;
+
+/// The paper's Table III configuration sets (cost-min), per app.
+pub fn costmin_sets(app: &str) -> Vec<Vec<f64>> {
+    let sets: &[&[f64]] = match app {
+        "ir" => &[
+            &[640.0, 1024.0, 1152.0],
+            &[640.0, 1024.0, 1408.0],
+            &[640.0, 896.0, 1152.0, 1280.0],
+            &[640.0, 768.0, 1152.0],
+        ],
+        "fd" => &[
+            &[1280.0, 1408.0, 1664.0],
+            &[1152.0, 1408.0, 1664.0],
+            &[1152.0, 1536.0, 1792.0],
+            &[1280.0, 1408.0, 1536.0, 1792.0],
+        ],
+        "stt" => &[
+            &[768.0, 1152.0, 1280.0, 1664.0],
+            &[640.0, 768.0, 1280.0, 1664.0, 1792.0],
+            &[640.0, 768.0, 896.0, 1280.0, 1664.0],
+            &[640.0, 896.0, 1152.0, 1664.0],
+        ],
+        _ => panic!("unknown app {app}"),
+    };
+    sets.iter().map(|s| s.to_vec()).collect()
+}
+
+/// The paper's Table IV configuration sets (latency-min), per app.
+pub fn latmin_sets(app: &str) -> Vec<Vec<f64>> {
+    let sets: &[&[f64]] = match app {
+        "ir" => &[
+            &[1408.0, 1664.0, 2944.0],
+            &[1536.0, 1664.0, 2048.0, 2944.0],
+            &[1280.0, 1536.0, 1664.0, 2944.0],
+            &[1280.0, 1408.0, 1536.0, 2944.0],
+        ],
+        "fd" => &[
+            &[1536.0, 1664.0, 2048.0],
+            &[1664.0, 1920.0, 2048.0],
+            &[1280.0, 1664.0, 2048.0],
+            &[1536.0, 1664.0, 1920.0],
+        ],
+        "stt" => &[
+            &[1152.0, 1280.0, 1664.0],
+            &[1664.0],
+            &[1024.0, 1280.0, 1664.0],
+            &[1024.0, 1152.0, 1280.0, 1664.0],
+        ],
+        _ => panic!("unknown app {app}"),
+    };
+    sets.iter().map(|s| s.to_vec()).collect()
+}
+
+/// Best-performing set per app for each objective (bold rows in the paper).
+pub fn best_costmin_set(app: &str) -> Vec<f64> {
+    costmin_sets(app)[0].clone()
+}
+
+pub fn best_latmin_set(app: &str) -> Vec<f64> {
+    latmin_sets(app)[0].clone()
+}
+
+/// Directory experiment outputs are written to.
+pub fn results_dir() -> String {
+    if let Ok(d) = std::env::var("SKEDGE_RESULTS") {
+        return d;
+    }
+    format!("{}/results", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Write a rendered experiment output under `results/`.
+pub fn write_result(name: &str, content: &str) -> Result<String> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = format!("{dir}/{name}");
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Render an experiment by id without printing (benches). Never uses XLA.
+pub fn run_quiet(meta: &Meta, id: &str) -> Result<String> {
+    render_experiment(meta, id, false)
+}
+
+/// Run an experiment by id; returns the rendered report.
+pub fn run_experiment(meta: &Meta, id: &str, xla: bool) -> Result<String> {
+    let out = render_experiment(meta, id, xla)?;
+    println!("{out}");
+    let path = write_result(&format!("{id}.md"), &out)?;
+    eprintln!("[skedge] wrote {path}");
+    Ok(out)
+}
+
+fn render_experiment(meta: &Meta, id: &str, xla: bool) -> Result<String> {
+    let out = match id {
+        "table1" => model_tables::table1(meta)?,
+        "table2" => model_tables::table2(meta)?,
+        "fig3" => model_tables::fig_pred_vs_actual(meta, true)?,
+        "fig4" => model_tables::fig_pred_vs_actual(meta, false)?,
+        "table3" => placement_tables::table3(meta, xla)?,
+        "table4" => placement_tables::table4(meta, xla)?,
+        "table5" => live_table::table5(meta, xla)?,
+        "fig5" => sweeps::fig5(meta)?,
+        "fig6" => sweeps::fig6(meta)?,
+        "edgeonly" => baselines::edge_only(meta)?,
+        "baselines" => baselines::comparison(meta)?,
+        "tidl" => tidl::probe(meta)?,
+        "configsel" => configsel::discover(meta)?,
+        "ablations" => ablate::all(meta, xla)?,
+        _ => bail!("unknown experiment id `{id}`"),
+    };
+    Ok(out)
+}
+
+/// All experiment ids in report order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "fig3", "fig4", "table3", "fig5", "table4", "fig6",
+    "table5", "edgeonly", "baselines", "tidl", "configsel", "ablations",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sets_are_valid_configs() {
+        // every memory value in every set must be one of the 19 configs
+        let meta = Meta::load(&crate::config::default_artifact_dir()).unwrap();
+        for app in ["ir", "fd", "stt"] {
+            for set in costmin_sets(app).iter().chain(latmin_sets(app).iter()) {
+                for &m in set {
+                    assert!(meta.config_index(m).is_some(), "{app}: {m} MB not a config");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn four_sets_each() {
+        for app in ["ir", "fd", "stt"] {
+            assert_eq!(costmin_sets(app).len(), 4);
+            assert_eq!(latmin_sets(app).len(), 4);
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let meta = Meta::load(&crate::config::default_artifact_dir()).unwrap();
+        assert!(run_experiment(&meta, "nope", false).is_err());
+    }
+}

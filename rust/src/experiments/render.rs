@@ -1,0 +1,117 @@
+//! Markdown table rendering for experiment reports.
+
+/// Column-aligned markdown table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format helpers used across experiment modules.
+pub fn f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+pub fn money(x: f64) -> String {
+    format!("{x:.8}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn set_label(set: &[f64]) -> String {
+    set.iter()
+        .map(|m| format!("{}", *m as i64))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Render a CSV block (for figure series) fenced for markdown embedding.
+pub fn csv_block(headers: &[&str], rows: &[Vec<f64>]) -> String {
+    let mut s = String::from("```csv\n");
+    s.push_str(&headers.join(","));
+    s.push('\n');
+    for r in rows {
+        s.push_str(
+            &r.iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(","),
+        );
+        s.push('\n');
+    }
+    s.push_str("```\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | value |"));
+        assert!(s.contains("| long-name | 2.5   |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Table::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn label_and_csv() {
+        assert_eq!(set_label(&[640.0, 1024.0]), "640,1024");
+        let c = csv_block(&["x", "y"], &[vec![1.0, 2.0]]);
+        assert!(c.contains("x,y\n1.000000,2.000000\n"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Figs. 5 and 6: parameter sweeps over the deadline δ (cost-min) and the
+//! surplus factor α (latency-min) for each app's best configuration set.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentSettings, Meta, Objective};
+use crate::sim;
+
+use super::render;
+
+/// Fig. 5: predicted/actual total cost and edge-execution count vs δ.
+pub fn fig5(meta: &Meta) -> Result<String> {
+    let mut out = String::from(
+        "## Fig. 5 — total execution cost vs deadline δ (cost-min, best set \
+         per app; bar = edge executions out of 600)\n\n",
+    );
+    for app in ["ir", "fd", "stt"] {
+        let am = meta.app(app);
+        let set = super::best_costmin_set(app);
+        // sweep around the paper's δ: 0.6×..2.2× in 9 steps
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for step in 0..9 {
+            let delta = am.deadline_ms * (0.6 + 0.2 * step as f64);
+            let s = ExperimentSettings::new(app, Objective::CostMin, &set)
+                .with_deadline(delta);
+            let o = sim::run(meta, &s)?;
+            rows.push(vec![
+                delta / 1000.0,
+                o.summary.total_actual_cost,
+                o.summary.total_predicted_cost,
+                o.summary.edge_count as f64,
+            ]);
+        }
+        out.push_str(&format!(
+            "### {} — set {{{}}}\n\n",
+            app.to_uppercase(),
+            render::set_label(&set)
+        ));
+        out.push_str(&render::csv_block(
+            &["delta_s", "actual_total_cost", "predicted_total_cost", "edge_execs"],
+            &rows,
+        ));
+        out.push('\n');
+        let mut csv = String::from("delta_s,actual_total_cost,predicted_total_cost,edge_execs\n");
+        for r in &rows {
+            csv.push_str(&format!("{:.3},{:.8},{:.8},{}\n", r[0], r[1], r[2], r[3] as u64));
+        }
+        super::write_result(&format!("fig5_{app}.csv"), &csv)?;
+    }
+    Ok(out)
+}
+
+/// Fig. 6: predicted/actual average latency and remaining budget vs α
+/// (α = 0 included: the paper's pathological edge-queueing regime).
+pub fn fig6(meta: &Meta) -> Result<String> {
+    let mut out = String::from(
+        "## Fig. 6 — average end-to-end latency vs α (lat-min, best set per \
+         app; bar = total budget $ remaining)\n\n",
+    );
+    for app in ["ir", "fd", "stt"] {
+        let am = meta.app(app);
+        let set = super::best_latmin_set(app);
+        let alphas = [0.0, 0.01, 0.02, 0.03, 0.04, 0.05, 0.08];
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for &alpha in &alphas {
+            let s = ExperimentSettings::new(app, Objective::LatencyMin, &set)
+                .with_alpha(alpha);
+            let o = sim::run(meta, &s)?;
+            let budget = am.cmax * o.summary.n as f64;
+            rows.push(vec![
+                alpha,
+                o.summary.avg_actual_e2e_ms / 1000.0,
+                o.summary.avg_predicted_e2e_ms / 1000.0,
+                budget - o.summary.total_actual_cost,
+                o.summary.edge_count as f64,
+            ]);
+        }
+        out.push_str(&format!(
+            "### {} — set {{{}}}, C_max = ${:.4e}\n\n",
+            app.to_uppercase(),
+            render::set_label(&set),
+            am.cmax
+        ));
+        out.push_str(&render::csv_block(
+            &["alpha", "actual_avg_e2e_s", "predicted_avg_e2e_s", "budget_remaining", "edge_execs"],
+            &rows,
+        ));
+        out.push('\n');
+        let mut csv =
+            String::from("alpha,actual_avg_e2e_s,predicted_avg_e2e_s,budget_remaining,edge_execs\n");
+        for r in &rows {
+            csv.push_str(&format!(
+                "{:.3},{:.4},{:.4},{:.8},{}\n",
+                r[0], r[1], r[2], r[3], r[4] as u64
+            ));
+        }
+        super::write_result(&format!("fig6_{app}.csv"), &csv)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+
+    #[test]
+    fn fig5_cost_non_decreasing_in_looser_budget_for_stt() {
+        // STT: larger δ → more edge executions → cost falls (paper's
+        // "expected behaviour")
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let am = meta.app("stt");
+        let set = super::super::best_costmin_set("stt");
+        let tight = sim::run(
+            &meta,
+            &ExperimentSettings::new("stt", Objective::CostMin, &set)
+                .with_deadline(am.deadline_ms * 0.8),
+        )
+        .unwrap();
+        let loose = sim::run(
+            &meta,
+            &ExperimentSettings::new("stt", Objective::CostMin, &set)
+                .with_deadline(am.deadline_ms * 1.8),
+        )
+        .unwrap();
+        assert!(loose.summary.edge_count > tight.summary.edge_count);
+        assert!(loose.summary.total_actual_cost < tight.summary.total_actual_cost);
+    }
+
+    #[test]
+    fn fig6_latency_decreases_with_alpha_for_fd() {
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let set = super::super::best_latmin_set("fd");
+        let a0 = sim::run(
+            &meta,
+            &ExperimentSettings::new("fd", Objective::LatencyMin, &set)
+                .with_alpha(0.0)
+                .with_n_inputs(300),
+        )
+        .unwrap();
+        let a4 = sim::run(
+            &meta,
+            &ExperimentSettings::new("fd", Objective::LatencyMin, &set)
+                .with_alpha(0.04)
+                .with_n_inputs(300),
+        )
+        .unwrap();
+        assert!(
+            a4.summary.avg_actual_e2e_ms < a0.summary.avg_actual_e2e_ms,
+            "α=0.04 {} should beat α=0 {}",
+            a4.summary.avg_actual_e2e_ms,
+            a0.summary.avg_actual_e2e_ms
+        );
+    }
+}

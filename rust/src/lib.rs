@@ -1,0 +1,32 @@
+//! # skedge — dynamic task placement for edge-cloud serverless platforms
+//!
+//! Reproduction of Das, Imai, Patterson & Wittie, *Performance Optimization
+//! for Edge-Cloud Serverless Platforms via Dynamic Task Placement* (2020).
+//!
+//! Three layers:
+//!  * **L3 (this crate)** — the coordinator: Predictor + CIL, Decision
+//!    Engine, event-driven simulator, threaded live prototype, AWS substrate
+//!    simulator, experiment harness.
+//!  * **L2** — the JAX prediction graph (`python/compile/model.py`),
+//!    AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//!  * **L1** — the Pallas GBRT forest-evaluation kernel
+//!    (`python/compile/kernels/gbrt.py`).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod live;
+pub mod testkit;
+pub mod engine;
+pub mod experiments;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod models;
+pub mod platform;
+pub mod util;
+pub mod workload;

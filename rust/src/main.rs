@@ -1,0 +1,176 @@
+//! `skedge` — launcher for the dynamic task placement framework.
+//!
+//! Subcommands:
+//!   tables  --id <table1|table2|table3|table4|table5|edgeonly|baselines|
+//!                 tidl|configsel|ablations|all> [--xla]
+//!   figures --id <fig3|fig4|fig5|fig6>
+//!   sim     --app <ir|fd|stt> --objective <cost-min|latency-min>
+//!           --set 1536,1664,2048 [--alpha A] [--deadline MS] [--cmax $]
+//!           [--n N] [--seed S] [--backend xla|native] [--generate]
+//!   live    --app <ir|fd|stt> [--set ...] [--n N] [--scale 0.05]
+//!           [--runs R] [--backend xla|native]
+//!   report                       # run every experiment in order
+//!
+//! `--xla` / `--backend xla` put the AOT-compiled artifact (PJRT) on the
+//! request path; the default native backend needs no artifacts beyond
+//! meta.json.
+
+use anyhow::{bail, Result};
+
+use skedge::cli::Args;
+use skedge::config::{
+    default_artifact_dir, ExperimentSettings, Meta, Objective, PredictorBackendKind,
+};
+use skedge::experiments;
+use skedge::live::{self, LiveConfig};
+use skedge::metrics::{budget_metrics, deadline_violations};
+use skedge::sim;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifact_dir = args.get_or("artifacts", &default_artifact_dir()).to_string();
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "tables" | "figures" => {
+            let meta = Meta::load(&artifact_dir)?;
+            let id = args.get_or("id", "all");
+            let xla = args.has_switch("xla");
+            if id == "all" {
+                for id in experiments::ALL_EXPERIMENTS {
+                    experiments::run_experiment(&meta, id, xla)?;
+                }
+            } else {
+                experiments::run_experiment(&meta, id, xla)?;
+            }
+            Ok(())
+        }
+        "report" => {
+            let meta = Meta::load(&artifact_dir)?;
+            for id in experiments::ALL_EXPERIMENTS {
+                experiments::run_experiment(&meta, id, args.has_switch("xla"))?;
+            }
+            Ok(())
+        }
+        "sim" => {
+            let meta = Meta::load(&artifact_dir)?;
+            let settings = settings_from_args(&meta, &args)?;
+            let o = sim::run(&meta, &settings)?;
+            print_run_summary(&meta, &settings, &o.summary, &o.records);
+            Ok(())
+        }
+        "live" => {
+            let meta = Meta::load(&artifact_dir)?;
+            let mut settings = settings_from_args(&meta, &args)?;
+            settings.objective = Objective::LatencyMin;
+            let scale = args.f64("scale")?.unwrap_or(0.05);
+            let runs = args.usize("runs")?.unwrap_or(1);
+            for r in 0..runs {
+                let cfg = LiveConfig {
+                    settings: settings.clone().with_seed(settings.seed + r as u64),
+                    time_scale: scale,
+                    fixed_rate: true,
+                };
+                let o = live::run(&meta, &cfg)?;
+                println!("-- live run {} ({:.1}s wall) --", r + 1, o.wall_seconds);
+                print_run_summary(&meta, &settings, &o.summary, &o.records);
+            }
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `skedge help`)"),
+    }
+}
+
+fn settings_from_args(meta: &Meta, args: &Args) -> Result<ExperimentSettings> {
+    let app = args.get_or("app", "fd").to_string();
+    if !meta.apps.contains_key(&app) {
+        bail!("unknown app `{app}`");
+    }
+    let objective = Objective::parse(args.get_or("objective", "latency-min"))?;
+    let set = match args.get("set") {
+        Some(s) => ExperimentSettings::parse_config_set(s)?,
+        None => experiments::best_latmin_set(&app),
+    };
+    let mut settings = ExperimentSettings::new(&app, objective, &set);
+    settings.deadline_ms = args.f64("deadline")?;
+    settings.cmax = args.f64("cmax")?;
+    settings.alpha = args.f64("alpha")?;
+    settings.n_inputs = args.usize("n")?;
+    settings.seed = args.u64_or("seed", 2020)?;
+    settings.replay = !args.has_switch("generate");
+    settings.risk_factor = args.f64("risk")?.unwrap_or(0.0);
+    settings.backend = PredictorBackendKind::parse(args.get_or("backend", "native"))?;
+    Ok(settings)
+}
+
+fn print_run_summary(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+    summary: &skedge::metrics::Summary,
+    records: &[skedge::metrics::TaskRecord],
+) {
+    let am = meta.app(&settings.app);
+    println!("app            : {}", settings.app);
+    println!("objective      : {:?}", settings.objective);
+    println!(
+        "tasks          : {} ({} edge, {} cloud)",
+        summary.n, summary.edge_count, summary.cloud_count
+    );
+    println!(
+        "avg e2e        : {:.3} s (predicted {:.3} s, err {:.2}%)",
+        summary.avg_actual_e2e_ms / 1e3,
+        summary.avg_predicted_e2e_ms / 1e3,
+        summary.latency_prediction_error_pct()
+    );
+    println!(
+        "total cost     : ${:.8} (predicted ${:.8}, err {:.2}%)",
+        summary.total_actual_cost,
+        summary.total_predicted_cost,
+        summary.cost_prediction_error_pct()
+    );
+    match settings.objective {
+        Objective::CostMin => {
+            let delta = settings.deadline_ms.unwrap_or(am.deadline_ms);
+            let (pct, avg) = deadline_violations(records, delta);
+            println!(
+                "deadline δ     : {:.1} s — {:.2}% violated (avg {:.1} ms over)",
+                delta / 1e3,
+                pct,
+                avg
+            );
+        }
+        Objective::LatencyMin => {
+            let cmax = settings.cmax.unwrap_or(am.cmax);
+            let (viol, used) = budget_metrics(records, cmax);
+            println!(
+                "budget C_max   : ${cmax:.4e} — {viol:.2}% constraints violated, {used:.1}% budget used"
+            );
+        }
+    }
+    println!(
+        "warm/cold      : {} warm, {} cold, {} mispredicted",
+        summary.cloud_actual_warm, summary.cloud_actual_cold, summary.warm_cold_mismatches
+    );
+}
+
+const HELP: &str = r#"skedge — dynamic task placement for edge-cloud serverless platforms
+(reproduction of Das et al., 2020; see DESIGN.md)
+
+USAGE:
+  skedge tables  --id <experiment> [--xla]     regenerate a paper table
+  skedge figures --id <fig3|fig4|fig5|fig6>    regenerate figure data (CSV)
+  skedge report  [--xla]                       run every experiment
+  skedge sim     --app fd --objective latency-min --set 1536,1664,2048
+                 [--alpha A] [--deadline MS] [--cmax $] [--n N] [--risk R]
+                 [--backend xla|native] [--generate] [--seed S]
+  skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
+                 [--backend xla|native]
+
+Experiments: table1 table2 fig3 fig4 table3 fig5 table4 fig6 table5
+             edgeonly baselines tidl configsel ablations | all
+
+Artifacts are read from ./artifacts (override: --artifacts DIR or
+$SKEDGE_ARTIFACTS). Run `make artifacts` first.
+"#;

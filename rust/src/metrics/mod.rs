@@ -1,0 +1,196 @@
+//! Per-task records and the aggregations behind every table in the paper's
+//! evaluation (Tables III, IV, V and Figs. 5, 6).
+
+use crate::predictor::Placement;
+use crate::util::stats;
+
+/// Everything recorded about one processed task.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub id: usize,
+    pub arrive_ms: f64,
+    pub placement: Placement,
+    pub predicted_e2e_ms: f64,
+    pub actual_e2e_ms: f64,
+    pub predicted_cost: f64,
+    pub actual_cost: f64,
+    /// cost cap applied at decision time (lat-min; ∞ for cost-min)
+    pub allowed_cost: f64,
+    /// engine found a constraint-satisfying configuration
+    pub feasible_found: bool,
+    /// cloud only: did the Predictor's CIL call warm, and was it warm?
+    pub warm_predicted: Option<bool>,
+    pub warm_actual: Option<bool>,
+    /// edge only: time spent waiting in the Executor FIFO
+    pub edge_wait_ms: f64,
+}
+
+impl TaskRecord {
+    pub fn is_edge(&self) -> bool {
+        self.placement == Placement::Edge
+    }
+
+    pub fn warm_cold_mismatch(&self) -> bool {
+        matches!((self.warm_predicted, self.warm_actual), (Some(p), Some(a)) if p != a)
+    }
+}
+
+/// Aggregated run metrics — one per simulation / live run.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub total_actual_cost: f64,
+    pub total_predicted_cost: f64,
+    pub avg_actual_e2e_ms: f64,
+    pub avg_predicted_e2e_ms: f64,
+    pub edge_count: usize,
+    pub cloud_count: usize,
+    pub warm_cold_mismatches: usize,
+    pub cloud_actual_warm: usize,
+    pub cloud_actual_cold: usize,
+}
+
+impl Summary {
+    pub fn from_records(records: &[TaskRecord]) -> Summary {
+        let n = records.len();
+        Summary {
+            n,
+            total_actual_cost: records.iter().map(|r| r.actual_cost).sum(),
+            total_predicted_cost: records.iter().map(|r| r.predicted_cost).sum(),
+            avg_actual_e2e_ms: stats::mean(
+                &records.iter().map(|r| r.actual_e2e_ms).collect::<Vec<_>>(),
+            ),
+            avg_predicted_e2e_ms: stats::mean(
+                &records.iter().map(|r| r.predicted_e2e_ms).collect::<Vec<_>>(),
+            ),
+            edge_count: records.iter().filter(|r| r.is_edge()).count(),
+            cloud_count: records.iter().filter(|r| !r.is_edge()).count(),
+            warm_cold_mismatches: records.iter().filter(|r| r.warm_cold_mismatch()).count(),
+            cloud_actual_warm: records
+                .iter()
+                .filter(|r| r.warm_actual == Some(true))
+                .count(),
+            cloud_actual_cold: records
+                .iter()
+                .filter(|r| r.warm_actual == Some(false))
+                .count(),
+        }
+    }
+
+    /// Table III "Cost Prediction Error %": |total actual − total predicted|
+    /// as a percentage of total actual.
+    pub fn cost_prediction_error_pct(&self) -> f64 {
+        stats::ape(self.total_actual_cost, self.total_predicted_cost)
+    }
+
+    /// Table IV "Latency Prediction Error %": APE of the average e2e latency.
+    pub fn latency_prediction_error_pct(&self) -> f64 {
+        stats::ape(self.avg_actual_e2e_ms, self.avg_predicted_e2e_ms)
+    }
+}
+
+/// Deadline metrics for Table III.
+pub fn deadline_violations(records: &[TaskRecord], deadline_ms: f64) -> (f64, f64) {
+    let violations: Vec<f64> = records
+        .iter()
+        .filter(|r| r.actual_e2e_ms > deadline_ms)
+        .map(|r| r.actual_e2e_ms - deadline_ms)
+        .collect();
+    let pct = violations.len() as f64 / records.len().max(1) as f64 * 100.0;
+    (pct, stats::mean(&violations))
+}
+
+/// Cost-constraint metrics for Table IV: share of tasks whose *actual* cost
+/// exceeded the cap applied at decision time, and % of total budget used.
+pub fn budget_metrics(records: &[TaskRecord], cmax: f64) -> (f64, f64) {
+    let n = records.len().max(1);
+    let violated = records
+        .iter()
+        .filter(|r| r.actual_cost > r.allowed_cost + 1e-15)
+        .count();
+    let total_cost: f64 = records.iter().map(|r| r.actual_cost).sum();
+    let budget = cmax * n as f64;
+    (violated as f64 / n as f64 * 100.0, total_cost / budget * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(
+        e2e_a: f64,
+        e2e_p: f64,
+        cost_a: f64,
+        cost_p: f64,
+        edge: bool,
+        allowed: f64,
+    ) -> TaskRecord {
+        TaskRecord {
+            id: 0,
+            arrive_ms: 0.0,
+            placement: if edge { Placement::Edge } else { Placement::Cloud(0) },
+            predicted_e2e_ms: e2e_p,
+            actual_e2e_ms: e2e_a,
+            predicted_cost: cost_p,
+            actual_cost: cost_a,
+            allowed_cost: allowed,
+            feasible_found: true,
+            warm_predicted: if edge { None } else { Some(true) },
+            warm_actual: if edge { None } else { Some(false) },
+            edge_wait_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn summary_totals() {
+        let rs = vec![
+            rec(1000.0, 900.0, 2e-6, 1.5e-6, false, f64::INFINITY),
+            rec(2000.0, 2100.0, 0.0, 0.0, true, f64::INFINITY),
+        ];
+        let s = Summary::from_records(&rs);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.edge_count, 1);
+        assert_eq!(s.cloud_count, 1);
+        assert!((s.total_actual_cost - 2e-6).abs() < 1e-18);
+        assert!((s.avg_actual_e2e_ms - 1500.0).abs() < 1e-9);
+        assert_eq!(s.warm_cold_mismatches, 1);
+    }
+
+    #[test]
+    fn cost_error_is_ape_of_totals() {
+        let rs = vec![rec(1.0, 1.0, 10e-6, 9e-6, false, f64::INFINITY)];
+        let s = Summary::from_records(&rs);
+        assert!((s.cost_prediction_error_pct() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_metrics() {
+        let rs = vec![
+            rec(900.0, 0.0, 0.0, 0.0, true, f64::INFINITY),
+            rec(1200.0, 0.0, 0.0, 0.0, true, f64::INFINITY),
+            rec(1100.0, 0.0, 0.0, 0.0, true, f64::INFINITY),
+        ];
+        let (pct, avg) = deadline_violations(&rs, 1000.0);
+        assert!((pct - 66.66666).abs() < 1e-3);
+        assert!((avg - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_metrics_count_allowed_cap() {
+        let rs = vec![
+            rec(1.0, 1.0, 5e-6, 5e-6, false, 4e-6), // actual over its cap
+            rec(1.0, 1.0, 3e-6, 3e-6, false, 4e-6),
+        ];
+        let (viol, used) = budget_metrics(&rs, 4e-6);
+        assert!((viol - 50.0).abs() < 1e-9);
+        assert!((used - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_records_safe() {
+        let s = Summary::from_records(&[]);
+        assert_eq!(s.n, 0);
+        let (pct, avg) = deadline_violations(&[], 100.0);
+        assert_eq!((pct, avg), (0.0, 0.0));
+    }
+}

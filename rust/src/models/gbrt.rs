@@ -1,0 +1,245 @@
+//! Native GBRT forest inference — the Rust mirror of the Pallas kernel
+//! (`python/compile/kernels/gbrt.py`) over the dense complete-binary-tree
+//! layout exported in `meta.json`.
+//!
+//! Evaluation is f32 throughout so that native and XLA predictions agree to
+//! float tolerance (parity-tested in `rust/tests/`).
+
+use crate::config::ForestParams;
+
+/// One packed internal node: feature index + threshold, interleaved so a
+/// descent touches one cache line per level instead of two arrays.
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    feat: u32,
+    thresh: f32,
+}
+
+/// Dense forest: packed `[n_trees, 2^D - 1]` nodes + `[n_trees, 2^D]`
+/// leaves. §Perf: nodes are interleaved (feat, thresh) and the depth-3
+/// common case is unrolled with slice patterns, which lets the compiler
+/// drop all bounds checks from the descent (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct Forest {
+    base: f32,
+    learning_rate: f32,
+    n_trees: usize,
+    depth: usize,
+    n_internal: usize,
+    nodes: Vec<Node>,
+    leaf: Vec<f32>,
+    /// per tree: does any node test the memory feature (feat != 0)?
+    uses_mem: Vec<bool>,
+}
+
+impl Forest {
+    pub fn from_params(p: &ForestParams) -> Self {
+        assert_eq!(p.feat.len(), p.n_trees * p.n_internal());
+        assert_eq!(p.thresh.len(), p.n_trees * p.n_internal());
+        assert_eq!(p.leaf.len(), p.n_trees * p.n_leaf());
+        let nodes: Vec<Node> = p
+            .feat
+            .iter()
+            .zip(&p.thresh)
+            .map(|(&feat, &thresh)| Node { feat, thresh })
+            .collect();
+        let uses_mem = nodes
+            .chunks_exact(p.n_internal())
+            .map(|tree| {
+                tree.iter()
+                    .any(|n| n.feat != 0 && n.thresh.is_finite())
+            })
+            .collect();
+        Forest {
+            base: p.base as f32,
+            learning_rate: p.learning_rate as f32,
+            n_trees: p.n_trees,
+            depth: p.depth,
+            n_internal: p.n_internal(),
+            nodes,
+            leaf: p.leaf.clone(),
+            uses_mem,
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Evaluate on a feature vector.
+    pub fn eval(&self, x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        if self.depth == 3 && x.len() == 2 {
+            // hot case: depth-3 trees over (size, mem) — unrolled, and the
+            // slice patterns prove the in-bounds invariants to the compiler
+            let (x0, x1) = (x[0], x[1]);
+            let sel = |n: &Node| if n.feat == 0 { x0 } else { x1 };
+            for (nodes, leaves) in self.nodes.chunks_exact(7).zip(self.leaf.chunks_exact(8)) {
+                let [n0, n1, n2, n3, n4, n5, n6] = nodes else { unreachable!() };
+                let b0 = (sel(n0) >= n0.thresh) as usize;
+                let l1 = [n1, n2][b0];
+                let b1 = (sel(l1) >= l1.thresh) as usize;
+                let l2 = [[n3, n4], [n5, n6]][b0][b1];
+                let b2 = (sel(l2) >= l2.thresh) as usize;
+                acc += leaves[4 * b0 + 2 * b1 + b2];
+            }
+            return self.base + self.learning_rate * acc;
+        }
+        let n_leaf = self.n_internal + 1;
+        for (nodes, leaves) in self
+            .nodes
+            .chunks_exact(self.n_internal)
+            .zip(self.leaf.chunks_exact(n_leaf))
+        {
+            let mut idx = 0usize;
+            for _ in 0..self.depth {
+                let n = &nodes[idx];
+                // branch-free descent, same rule as kernel: right iff x[f] >= t
+                idx = 2 * idx + 1 + (x[n.feat as usize] >= n.thresh) as usize;
+            }
+            acc += leaves[idx - self.n_internal];
+        }
+        self.base + self.learning_rate * acc
+    }
+
+    /// Two-feature fast path (size, memory) — the predictor hot loop.
+    #[inline]
+    pub fn eval2(&self, size: f32, mem: f32) -> f32 {
+        self.eval(&[size, mem])
+    }
+
+    /// Evaluate one input size against many memory configurations,
+    /// writing into `out` (len == mems.len()).
+    ///
+    /// §Perf: trees that never split on the memory feature contribute the
+    /// same leaf to every configuration, so they are descended once per
+    /// input and broadcast; only memory-sensitive trees run per config
+    /// (tree-outer, node rows hot across configs). In the trained FD/IR/
+    /// STT forests ~½ of the trees are size-only, which nearly halves the
+    /// per-input work (EXPERIMENTS.md §Perf).
+    pub fn eval_configs(&self, size: f32, mems: &[f32], out: &mut [f32]) {
+        assert_eq!(mems.len(), out.len());
+        if self.depth == 3 {
+            let mut shared = self.base;
+            out.fill(0.0);
+            for (t, (nodes, leaves)) in self
+                .nodes
+                .chunks_exact(7)
+                .zip(self.leaf.chunks_exact(8))
+                .enumerate()
+            {
+                let [n0, n1, n2, n3, n4, n5, n6] = nodes else { unreachable!() };
+                if !self.uses_mem[t] {
+                    // size-only tree: one descent, broadcast to all configs
+                    let b0 = (size >= n0.thresh) as usize;
+                    let l1 = [n1, n2][b0];
+                    let b1 = (size >= l1.thresh) as usize;
+                    let l2 = [[n3, n4], [n5, n6]][b0][b1];
+                    let b2 = (size >= l2.thresh) as usize;
+                    shared += self.learning_rate * leaves[4 * b0 + 2 * b1 + b2];
+                    continue;
+                }
+                for (o, &mem) in out.iter_mut().zip(mems) {
+                    let sel = |n: &Node| if n.feat == 0 { size } else { mem };
+                    let b0 = (sel(n0) >= n0.thresh) as usize;
+                    let l1 = [n1, n2][b0];
+                    let b1 = (sel(l1) >= l1.thresh) as usize;
+                    let l2 = [[n3, n4], [n5, n6]][b0][b1];
+                    let b2 = (sel(l2) >= l2.thresh) as usize;
+                    *o += self.learning_rate * leaves[4 * b0 + 2 * b1 + b2];
+                }
+            }
+            for o in out.iter_mut() {
+                *o += shared;
+            }
+        } else {
+            for (o, &mem) in out.iter_mut().zip(mems) {
+                *o = self.eval2(size, mem);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_forest() -> Forest {
+        // one depth-2 tree: split on x0 at 5, then on x1 at 3 / x0 at 8
+        Forest::from_params(&ForestParams {
+            base: 10.0,
+            learning_rate: 0.5,
+            n_trees: 1,
+            depth: 2,
+            feat: vec![0, 1, 0],
+            thresh: vec![5.0, 3.0, 8.0],
+            leaf: vec![1.0, 2.0, 3.0, 4.0],
+        })
+    }
+
+    #[test]
+    fn routes_to_all_leaves() {
+        let f = tiny_forest();
+        // x0<5, x1<3 -> leaf0 ; x0<5, x1>=3 -> leaf1
+        assert_eq!(f.eval(&[0.0, 0.0]), 10.0 + 0.5 * 1.0);
+        assert_eq!(f.eval(&[0.0, 3.0]), 10.0 + 0.5 * 2.0);
+        // x0>=5, x0<8 -> leaf2 ; x0>=8 -> leaf3
+        assert_eq!(f.eval(&[5.0, 0.0]), 10.0 + 0.5 * 3.0);
+        assert_eq!(f.eval(&[9.0, 0.0]), 10.0 + 0.5 * 4.0);
+    }
+
+    #[test]
+    fn tie_goes_right() {
+        let f = tiny_forest();
+        assert_eq!(f.eval(&[5.0, 0.0]), f.eval(&[6.0, 0.0]));
+    }
+
+    #[test]
+    fn inf_threshold_always_left() {
+        let f = Forest::from_params(&ForestParams {
+            base: 0.0,
+            learning_rate: 1.0,
+            n_trees: 1,
+            depth: 1,
+            feat: vec![0],
+            thresh: vec![f32::INFINITY],
+            leaf: vec![7.0, 9.0],
+        });
+        assert_eq!(f.eval(&[1e30]), 7.0);
+    }
+
+    #[test]
+    fn multiple_trees_sum() {
+        let p = ForestParams {
+            base: 1.0,
+            learning_rate: 0.1,
+            n_trees: 2,
+            depth: 1,
+            feat: vec![0, 0],
+            thresh: vec![0.0, 0.0],
+            leaf: vec![10.0, 20.0, 30.0, 40.0],
+        };
+        let f = Forest::from_params(&p);
+        // x >= 0:右 both trees: 20 + 40
+        assert_eq!(f.eval(&[0.5]), 1.0 + 0.1 * 60.0);
+        assert_eq!(f.eval(&[-0.5]), 1.0 + 0.1 * 40.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_mismatched_lengths() {
+        Forest::from_params(&ForestParams {
+            base: 0.0,
+            learning_rate: 1.0,
+            n_trees: 2,
+            depth: 2,
+            feat: vec![0; 5],
+            thresh: vec![0.0; 6],
+            leaf: vec![0.0; 8],
+        });
+    }
+}

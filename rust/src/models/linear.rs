@@ -1,0 +1,44 @@
+//! Linear model y = b0 + b1*x — the upld(k) and comp_e(k) estimators.
+
+/// Intercept + slope. Evaluated in f32 to match the XLA artifact's numerics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Linear {
+    pub b0: f64,
+    pub b1: f64,
+}
+
+impl Linear {
+    pub fn new(b0: f64, b1: f64) -> Self {
+        Linear { b0, b1 }
+    }
+
+    pub fn eval(&self, x: f64) -> f64 {
+        (self.b0 as f32 + self.b1 as f32 * x as f32) as f64
+    }
+
+    /// Exact f64 evaluation (used by tests comparing against training data).
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        self.b0 + self.b1 * x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluates_line() {
+        let l = Linear::new(120.0, 0.4);
+        assert!((l.eval_f64(1000.0) - 520.0).abs() < 1e-12);
+        assert!((l.eval(1000.0) - 520.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn f32_matches_f64_within_tolerance() {
+        let l = Linear::new(120.0, 4.0e-4);
+        for x in [1e3, 1e5, 1e6, 5e6] {
+            let rel = (l.eval(x) - l.eval_f64(x)).abs() / l.eval_f64(x);
+            assert!(rel < 1e-5);
+        }
+    }
+}

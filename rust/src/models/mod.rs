@@ -1,0 +1,125 @@
+//! Native (pure-Rust) mirrors of the trained performance models.
+//!
+//! The production hot path scores inputs through the AOT-compiled XLA
+//! artifact (`crate::runtime`); this module re-implements the same math from
+//! the parameters exported in `meta.json`. It serves three roles:
+//!  * fallback backend when artifacts are absent,
+//!  * the baseline the XLA path is benchmarked against,
+//!  * an independent implementation for parity tests (native vs XLA must
+//!    agree to float tolerance — this catches interchange bugs).
+
+pub mod gbrt;
+pub mod linear;
+
+use crate::config::{AppMeta, Meta};
+pub use gbrt::Forest;
+pub use linear::Linear;
+
+/// Raw model outputs for one input — the exact tuple the XLA artifact
+/// returns: upload time, per-config cloud compute, edge compute, per-config
+/// cloud cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RawPrediction {
+    pub upld_ms: f64,
+    pub comp_cloud_ms: Vec<f64>,
+    pub comp_edge_ms: f64,
+    pub cost_cloud: Vec<f64>,
+}
+
+/// Native scorer for one application.
+pub struct NativeModels {
+    pub upld: Linear,
+    pub edge_comp: Linear,
+    pub forest: Forest,
+    pub bytes_per_unit: f64,
+    mems: Vec<f64>,
+    mems_f32: Vec<f32>,
+    pricing: crate::config::Pricing,
+}
+
+impl NativeModels {
+    pub fn from_meta(meta: &Meta, app: &AppMeta) -> Self {
+        let m = &app.models;
+        NativeModels {
+            upld: Linear::new(m.theta.0, m.theta.1),
+            edge_comp: Linear::new(m.phi.0, m.phi.1),
+            forest: Forest::from_params(&m.forest),
+            bytes_per_unit: m.bytes_per_unit,
+            mems: meta.memory_configs_mb.clone(),
+            mems_f32: meta.memory_configs_mb.iter().map(|&m| m as f32).collect(),
+            pricing: meta.pricing,
+        }
+    }
+
+    /// Score one input size. Mirrors `python/compile/model.py::predict`
+    /// (f32 feature math, matching the XLA artifact's numerics).
+    pub fn predict(&self, size: f64) -> RawPrediction {
+        let upld = self.upld.eval(size * self.bytes_per_unit);
+        // tree-outer forest evaluation across all configs (§Perf)
+        let mut raw = vec![0f32; self.mems_f32.len()];
+        self.forest.eval_configs(size as f32, &self.mems_f32, &mut raw);
+        let mut comp_cloud = Vec::with_capacity(self.mems.len());
+        let mut cost_cloud = Vec::with_capacity(self.mems.len());
+        for (j, &mem) in self.mems.iter().enumerate() {
+            let c = (raw[j] as f64).max(1.0);
+            comp_cloud.push(c);
+            cost_cloud.push(self.pricing.cost(c, mem));
+        }
+        let comp_edge = self.edge_comp.eval(size).max(1.0);
+        RawPrediction { upld_ms: upld, comp_cloud_ms: comp_cloud, comp_edge_ms: comp_edge, cost_cloud }
+    }
+
+    /// Batch scoring (used by figure generation and benches).
+    pub fn predict_batch(&self, sizes: &[f64]) -> Vec<RawPrediction> {
+        sizes.iter().map(|&s| self.predict(s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+
+    fn meta() -> Meta {
+        Meta::load(&default_artifact_dir()).unwrap()
+    }
+
+    #[test]
+    fn predict_shapes_and_positivity() {
+        let meta = meta();
+        for app in ["ir", "fd", "stt"] {
+            let nm = NativeModels::from_meta(&meta, meta.app(app));
+            let p = nm.predict(2.5e6);
+            assert_eq!(p.comp_cloud_ms.len(), 19);
+            assert_eq!(p.cost_cloud.len(), 19);
+            assert!(p.upld_ms > 0.0 && p.comp_edge_ms > 0.0);
+            assert!(p.comp_cloud_ms.iter().all(|&c| c >= 1.0));
+        }
+    }
+
+    #[test]
+    fn cloud_comp_decreases_with_memory_broadly() {
+        let meta = meta();
+        let nm = NativeModels::from_meta(&meta, meta.app("fd"));
+        let p = nm.predict(2.5e6);
+        assert!(p.comp_cloud_ms[0] > p.comp_cloud_ms[18] * 1.5);
+    }
+
+    #[test]
+    fn cost_consistent_with_pricing() {
+        let meta = meta();
+        let nm = NativeModels::from_meta(&meta, meta.app("stt"));
+        let p = nm.predict(45_000.0);
+        for j in 0..19 {
+            let want = meta.pricing.cost(p.comp_cloud_ms[j], meta.memory_configs_mb[j]);
+            assert!((p.cost_cloud[j] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn upload_grows_with_size() {
+        let meta = meta();
+        let nm = NativeModels::from_meta(&meta, meta.app("ir"));
+        assert!(nm.predict(8e6).upld_ms > nm.predict(5e5).upld_ms);
+    }
+}

@@ -1,0 +1,181 @@
+//! Ground-truth container pool: what AWS actually does, as opposed to what
+//! the Predictor's CIL *believes* it does.
+//!
+//! Per cloud configuration λ_m the platform keeps a set of containers. When a
+//! function invocation arrives (after upload), an idle live container is
+//! reused — AWS empirically assigns the **most recently used** one (paper
+//! Sec. V-A) — producing a warm start; otherwise a new container is created
+//! (cold start). A container is reclaimed once it has sat idle for its
+//! sampled lifetime T_idl (~27 min, Wang et al.).
+
+/// One live container in the ground-truth pool.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: u64,
+    /// busy executing a function until this time (ms); f64::NEG_INFINITY if never used
+    pub busy_until: f64,
+    /// completion time of the most recent function
+    pub last_completion: f64,
+    /// sampled idle lifetime; the container dies at last_completion + tidl
+    pub tidl: f64,
+}
+
+impl Container {
+    pub fn expires_at(&self) -> f64 {
+        self.last_completion + self.tidl
+    }
+
+    pub fn is_idle(&self, now: f64) -> bool {
+        now >= self.busy_until
+    }
+
+    pub fn is_live(&self, now: f64) -> bool {
+        // busy containers never expire mid-execution
+        now < self.busy_until || now <= self.expires_at()
+    }
+}
+
+/// Outcome of an invocation against one configuration's pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartKind {
+    Warm,
+    Cold,
+}
+
+/// Container pool for a single λ_m configuration.
+#[derive(Debug, Default)]
+pub struct ConfigPool {
+    containers: Vec<Container>,
+    next_id: u64,
+    pub warm_count: u64,
+    pub cold_count: u64,
+}
+
+impl ConfigPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop containers whose idle lifetime has elapsed by `now`.
+    pub fn reap(&mut self, now: f64) {
+        self.containers.retain(|c| c.is_live(now));
+    }
+
+    /// Would an invocation at `now` be warm?
+    pub fn peek_warm(&self, now: f64) -> bool {
+        self.containers
+            .iter()
+            .any(|c| c.is_idle(now) && c.is_live(now))
+    }
+
+    /// Invoke a function at time `now` running for `busy_ms` (start + comp).
+    /// Returns (kind, container id). `tidl` is used only for a new container.
+    pub fn invoke(&mut self, now: f64, busy_ms: f64, tidl: f64) -> (StartKind, u64) {
+        self.reap(now);
+        // most-recently-used idle container
+        let candidate = self
+            .containers
+            .iter_mut()
+            .filter(|c| c.is_idle(now))
+            .max_by(|a, b| a.last_completion.partial_cmp(&b.last_completion).unwrap());
+        if let Some(c) = candidate {
+            c.busy_until = now + busy_ms;
+            c.last_completion = now + busy_ms;
+            self.warm_count += 1;
+            return (StartKind::Warm, c.id);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.containers.push(Container {
+            id,
+            busy_until: now + busy_ms,
+            last_completion: now + busy_ms,
+            tidl,
+        });
+        self.cold_count += 1;
+        (StartKind::Cold, id)
+    }
+
+    pub fn live_count(&self, now: f64) -> usize {
+        self.containers.iter().filter(|c| c.is_live(now)).count()
+    }
+
+    pub fn idle_count(&self, now: f64) -> usize {
+        self.containers
+            .iter()
+            .filter(|c| c.is_idle(now) && c.is_live(now))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_invocation_is_cold() {
+        let mut p = ConfigPool::new();
+        let (k, _) = p.invoke(0.0, 1000.0, 100_000.0);
+        assert_eq!(k, StartKind::Cold);
+        assert_eq!(p.cold_count, 1);
+    }
+
+    #[test]
+    fn reuse_after_completion_is_warm() {
+        let mut p = ConfigPool::new();
+        p.invoke(0.0, 1000.0, 100_000.0);
+        let (k, _) = p.invoke(1500.0, 500.0, 100_000.0);
+        assert_eq!(k, StartKind::Warm);
+        assert_eq!(p.warm_count, 1);
+        assert_eq!(p.live_count(1500.0), 1);
+    }
+
+    #[test]
+    fn busy_container_forces_cold() {
+        let mut p = ConfigPool::new();
+        p.invoke(0.0, 10_000.0, 100_000.0);
+        let (k, _) = p.invoke(5000.0, 500.0, 100_000.0); // first is still busy
+        assert_eq!(k, StartKind::Cold);
+        assert_eq!(p.live_count(5000.0), 2);
+    }
+
+    #[test]
+    fn container_expires_after_idle_lifetime() {
+        let mut p = ConfigPool::new();
+        p.invoke(0.0, 1000.0, 60_000.0); // completes at 1000, dies at 61_000
+        assert!(p.peek_warm(60_000.0));
+        assert!(!p.peek_warm(61_001.0));
+        let (k, _) = p.invoke(61_001.0, 500.0, 60_000.0);
+        assert_eq!(k, StartKind::Cold);
+    }
+
+    #[test]
+    fn mru_container_selected() {
+        let mut p = ConfigPool::new();
+        // two containers completing at different times
+        let (_, a) = p.invoke(0.0, 1000.0, 1e7);   // completes 1000
+        let (_, b) = p.invoke(500.0, 1000.0, 1e7); // completes 1500 (MRU)
+        assert_ne!(a, b);
+        let (k, id) = p.invoke(2000.0, 500.0, 1e7);
+        assert_eq!(k, StartKind::Warm);
+        assert_eq!(id, b, "most recently used container must be reused");
+    }
+
+    #[test]
+    fn reuse_extends_lifetime() {
+        let mut p = ConfigPool::new();
+        p.invoke(0.0, 1000.0, 60_000.0);
+        // reuse at 50_000 pushes expiry to 50_500 + 60_000
+        p.invoke(50_000.0, 500.0, 999.0);
+        assert!(p.peek_warm(100_000.0));
+    }
+
+    #[test]
+    fn counts_track_kinds() {
+        let mut p = ConfigPool::new();
+        p.invoke(0.0, 100.0, 1e6);
+        p.invoke(200.0, 100.0, 1e6);
+        p.invoke(250.0, 100.0, 1e6); // both busy? no: first idle at 200... second busy
+        assert_eq!(p.warm_count + p.cold_count, 3);
+    }
+}

@@ -1,0 +1,128 @@
+//! Cloud substrate: AWS Lambda across the 19 container configurations.
+//! Wraps one ground-truth `ConfigPool` per λ_m and assembles the full cloud
+//! pipeline timing (Fig. 1a): upload → start (warm/cold) → compute → store.
+
+use super::containers::{ConfigPool, StartKind};
+
+/// Timing of one cloud execution, all absolute times in virtual ms.
+#[derive(Debug, Clone, Copy)]
+pub struct CloudExecution {
+    pub kind: StartKind,
+    pub container_id: u64,
+    /// when the upload to S3 finished and the function was triggered
+    pub triggered_at: f64,
+    /// actual start latency used (warm or cold sample)
+    pub start_ms: f64,
+    pub comp_start: f64,
+    pub comp_end: f64,
+    /// when results are persisted in the output bucket
+    pub stored_at: f64,
+}
+
+/// The cloud side of the platform: one pool per configuration.
+pub struct CloudPlatform {
+    pools: Vec<ConfigPool>,
+}
+
+impl CloudPlatform {
+    pub fn new(n_configs: usize) -> Self {
+        CloudPlatform { pools: (0..n_configs).map(|_| ConfigPool::new()).collect() }
+    }
+
+    /// Execute the cloud pipeline for config index `j`.
+    ///
+    /// `arrive` is ingestion time on the edge device; upload occupies
+    /// [arrive, arrive+upld]. The container is selected at trigger time —
+    /// the same instant the Predictor cannot observe, which is what makes
+    /// warm/cold mispredictions possible.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute(
+        &mut self,
+        j: usize,
+        arrive: f64,
+        upld_ms: f64,
+        comp_ms: f64,
+        start_warm_ms: f64,
+        start_cold_ms: f64,
+        store_ms: f64,
+        tidl_ms: f64,
+    ) -> CloudExecution {
+        let triggered_at = arrive + upld_ms;
+        let pool = &mut self.pools[j];
+        // Probe what the start kind will be to pick the right busy window.
+        let warm = pool.peek_warm(triggered_at);
+        let start_ms = if warm { start_warm_ms } else { start_cold_ms };
+        let busy = start_ms + comp_ms;
+        let (kind, container_id) = pool.invoke(triggered_at, busy, tidl_ms);
+        debug_assert_eq!(kind == StartKind::Warm, warm);
+        let comp_start = triggered_at + start_ms;
+        let comp_end = comp_start + comp_ms;
+        CloudExecution {
+            kind,
+            container_id,
+            triggered_at,
+            start_ms,
+            comp_start,
+            comp_end,
+            stored_at: comp_end + store_ms,
+        }
+    }
+
+    pub fn pool(&self, j: usize) -> &ConfigPool {
+        &self.pools[j]
+    }
+
+    pub fn warm_total(&self) -> u64 {
+        self.pools.iter().map(|p| p.warm_count).sum()
+    }
+
+    pub fn cold_total(&self) -> u64 {
+        self.pools.iter().map(|p| p.cold_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_execution_cold_then_warm() {
+        let mut c = CloudPlatform::new(3);
+        let e1 = c.execute(1, 0.0, 500.0, 1000.0, 160.0, 1500.0, 550.0, 1e7);
+        assert_eq!(e1.kind, StartKind::Cold);
+        assert_eq!(e1.start_ms, 1500.0);
+        assert_eq!(e1.stored_at, 500.0 + 1500.0 + 1000.0 + 550.0);
+        // second arrives after the first completes -> warm on same config
+        let e2 = c.execute(1, e1.comp_end, 500.0, 1000.0, 160.0, 1500.0, 550.0, 1e7);
+        assert_eq!(e2.kind, StartKind::Warm);
+        assert_eq!(e2.start_ms, 160.0);
+    }
+
+    #[test]
+    fn configs_have_independent_pools() {
+        let mut c = CloudPlatform::new(2);
+        c.execute(0, 0.0, 10.0, 10.0, 1.0, 100.0, 1.0, 1e7);
+        let e = c.execute(1, 5000.0, 10.0, 10.0, 1.0, 100.0, 1.0, 1e7);
+        assert_eq!(e.kind, StartKind::Cold, "different config must cold start");
+    }
+
+    #[test]
+    fn concurrent_triggers_scale_out() {
+        let mut c = CloudPlatform::new(1);
+        let e1 = c.execute(0, 0.0, 100.0, 5000.0, 160.0, 1500.0, 500.0, 1e7);
+        // second triggered while first busy -> new container (cold)
+        let e2 = c.execute(0, 50.0, 100.0, 5000.0, 160.0, 1500.0, 500.0, 1e7);
+        assert_eq!(e1.kind, StartKind::Cold);
+        assert_eq!(e2.kind, StartKind::Cold);
+        assert_ne!(e1.container_id, e2.container_id);
+        assert_eq!(c.cold_total(), 2);
+    }
+
+    #[test]
+    fn e2e_latency_decomposition() {
+        let mut c = CloudPlatform::new(1);
+        let e = c.execute(0, 1000.0, 470.0, 1560.0, 163.0, 1500.0, 584.0, 1e7);
+        let e2e = e.stored_at - 1000.0;
+        assert!((e2e - (470.0 + 1500.0 + 1560.0 + 584.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,211 @@
+//! Ground-truth latency sampler: the Rust mirror of
+//! `python/compile/synthdata.py`, parameterized by the same values via
+//! `meta.json`. Used by the generative workload path (live mode, sweeps
+//! beyond the 600-input replay tables) and cross-checked against the
+//! Python-emitted eval CSVs by integration tests.
+
+use crate::config::{AppMeta, Meta};
+use crate::util::rng::Pcg32;
+
+/// All actual latency components for one input task (ms).
+#[derive(Debug, Clone)]
+pub struct TaskActuals {
+    pub size: f64,
+    pub bytes: f64,
+    pub upld: f64,
+    /// per memory-config compute time, one entry per config
+    pub comp: Vec<f64>,
+    pub start_w: f64,
+    pub start_c: f64,
+    pub store: f64,
+    pub edge_comp: f64,
+    pub iotup: f64,
+    pub edge_store: f64,
+}
+
+impl TaskActuals {
+    /// Warm cloud end-to-end latency for config index j: Eqn. (1).
+    pub fn cloud_e2e(&self, j: usize, cold: bool) -> f64 {
+        let start = if cold { self.start_c } else { self.start_w };
+        self.upld + start + self.comp[j] + self.store
+    }
+
+    /// Edge end-to-end latency excluding queue wait: Eqn. (2).
+    pub fn edge_e2e(&self) -> f64 {
+        self.edge_comp + self.iotup + self.edge_store
+    }
+}
+
+/// Generative sampler bound to one application's ground truth.
+pub struct GroundTruthSampler<'a> {
+    meta: &'a Meta,
+    app: &'a AppMeta,
+    rng: Pcg32,
+}
+
+impl<'a> GroundTruthSampler<'a> {
+    pub fn new(meta: &'a Meta, app_name: &str, seed: u64) -> Self {
+        GroundTruthSampler { meta, app: meta.app(app_name), rng: Pcg32::new(seed, 11) }
+    }
+
+    /// Draw an input size (pixels or bytes) from the app's distribution.
+    pub fn sample_size(&mut self) -> f64 {
+        let g = &self.app.ground_truth;
+        self.rng
+            .lognormal(g.size_log_mu, g.size_log_sigma)
+            .clamp(g.size_min, g.size_max)
+    }
+
+    /// Noise-free compute work at the 1-vCPU knee.
+    pub fn base_work_ms(&self, size: f64) -> f64 {
+        let g = &self.app.ground_truth;
+        g.comp_work_coeff * (size / g.comp_size_scale).powf(g.comp_work_exp)
+    }
+
+    /// Sample every latency component for a fresh input.
+    pub fn sample_task(&mut self) -> TaskActuals {
+        let size = self.sample_size();
+        self.sample_task_with_size(size)
+    }
+
+    pub fn sample_task_with_size(&mut self, size: f64) -> TaskActuals {
+        let g = &self.app.ground_truth;
+        let bytes = size * g.bytes_per_unit;
+        let upld = (g.upld_base_ms + g.upld_per_byte_ms * bytes)
+            * self.rng.lognormal(0.0, g.upld_noise_sigma);
+        let work = self.base_work_ms(size);
+        let comp: Vec<f64> = self
+            .meta
+            .memory_configs_mb
+            .iter()
+            .map(|&m| {
+                (work * self.meta.cpu_speed_factor(m)
+                    * self.rng.lognormal(0.0, g.comp_noise_sigma))
+                .max(1.0)
+            })
+            .collect();
+        let start_w = self.rng.normal_min(g.start_warm_mean, g.start_warm_sigma, 5.0);
+        let start_c = self.rng.normal_min(g.start_cold_mean, g.start_cold_sigma, 50.0);
+        let store = self.rng.quantized_normal(g.store_mean, g.store_sigma, 100.0);
+        let edge_comp = (g.edge_comp_base + g.edge_comp_slope * size)
+            * self.rng.lognormal(0.0, g.edge_comp_noise_sigma);
+        let iotup = if g.iotup_mean >= 0.0 {
+            self.rng.normal_min(g.iotup_mean, g.iotup_sigma, 0.0)
+        } else {
+            0.0
+        };
+        let edge_store =
+            self.rng.quantized_normal(g.edge_store_mean, g.edge_store_sigma, 100.0);
+        TaskActuals {
+            size,
+            bytes,
+            upld,
+            comp,
+            start_w,
+            start_c,
+            store,
+            edge_comp,
+            iotup,
+            edge_store,
+        }
+    }
+
+    /// Sample a fresh cold-start duration (per cold event, as the paper does).
+    pub fn sample_cold_start(&mut self) -> f64 {
+        let g = &self.app.ground_truth;
+        self.rng.normal_min(g.start_cold_mean, g.start_cold_sigma, 50.0)
+    }
+
+    /// Sample a container idle lifetime T_idl.
+    pub fn sample_tidl(&mut self) -> f64 {
+        self.rng
+            .normal_min(self.meta.tidl_mean_ms, self.meta.tidl_sigma_ms, 60_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+    use crate::util::stats::mean;
+
+    fn meta() -> Meta {
+        Meta::load(&default_artifact_dir()).unwrap()
+    }
+
+    #[test]
+    fn component_means_match_table1() {
+        let meta = meta();
+        for (app, want_w, want_c, want_store) in
+            [("ir", 162.0, 741.0, 549.0), ("fd", 163.0, 1500.0, 584.0), ("stt", 145.0, 1404.0, 533.0)]
+        {
+            let mut s = GroundTruthSampler::new(&meta, app, 1);
+            let tasks: Vec<TaskActuals> = (0..4000).map(|_| s.sample_task()).collect();
+            let w = mean(&tasks.iter().map(|t| t.start_w).collect::<Vec<_>>());
+            let c = mean(&tasks.iter().map(|t| t.start_c).collect::<Vec<_>>());
+            let st = mean(&tasks.iter().map(|t| t.store).collect::<Vec<_>>());
+            assert!((w - want_w).abs() / want_w < 0.05, "{app} warm {w}");
+            assert!((c - want_c).abs() / want_c < 0.05, "{app} cold {c}");
+            assert!((st - want_store).abs() / want_store < 0.10, "{app} store {st}");
+        }
+    }
+
+    #[test]
+    fn comp_monotone_decreasing_in_memory_on_average() {
+        let meta = meta();
+        let mut s = GroundTruthSampler::new(&meta, "fd", 2);
+        let tasks: Vec<TaskActuals> = (0..2000).map(|_| s.sample_task()).collect();
+        let n = meta.memory_configs_mb.len();
+        let means: Vec<f64> = (0..n)
+            .map(|j| mean(&tasks.iter().map(|t| t.comp[j]).collect::<Vec<_>>()))
+            .collect();
+        for j in 1..n {
+            assert!(means[j] < means[j - 1] * 1.02, "mean comp not decreasing at {j}");
+        }
+        assert!(means[0] > means[n - 1] * 2.0);
+    }
+
+    #[test]
+    fn matches_python_eval_csv_moments() {
+        // The python-generated replay table and the Rust generative path must
+        // agree in distribution (cross-language calibration check).
+        let meta = meta();
+        for app in ["ir", "fd", "stt"] {
+            let table = crate::util::csv::Table::load(&meta.eval_csv_path(app)).unwrap();
+            let mut s = GroundTruthSampler::new(&meta, app, 3);
+            let tasks: Vec<TaskActuals> = (0..6000).map(|_| s.sample_task()).collect();
+            for (csv_col, get) in [
+                ("upld", Box::new(|t: &TaskActuals| t.upld) as Box<dyn Fn(&TaskActuals) -> f64>),
+                ("edge_comp", Box::new(|t: &TaskActuals| t.edge_comp)),
+                ("comp_1536", Box::new(|t: &TaskActuals| t.comp[7])),
+            ] {
+                let csv_mean = mean(table.col(csv_col));
+                let gen_mean = mean(&tasks.iter().map(|t| get(t)).collect::<Vec<_>>());
+                let rel = (csv_mean - gen_mean).abs() / csv_mean;
+                assert!(rel < 0.12, "{app}.{csv_col}: csv {csv_mean} vs gen {gen_mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let meta = meta();
+        let mut a = GroundTruthSampler::new(&meta, "stt", 9);
+        let mut b = GroundTruthSampler::new(&meta, "stt", 9);
+        for _ in 0..50 {
+            let (x, y) = (a.sample_task(), b.sample_task());
+            assert_eq!(x.size, y.size);
+            assert_eq!(x.comp, y.comp);
+        }
+    }
+
+    #[test]
+    fn tidl_positive_and_near_27min(){
+        let meta = meta();
+        let mut s = GroundTruthSampler::new(&meta, "fd", 4);
+        let xs: Vec<f64> = (0..2000).map(|_| s.sample_tidl()).collect();
+        let m = mean(&xs);
+        assert!((m - 27.0 * 60e3).abs() < 60e3, "tidl mean {m}");
+        assert!(xs.iter().all(|&x| x >= 60_000.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! The AWS substrate simulator: everything the paper's framework runs
+//! against — cloud container pools with warm/cold dynamics (`lambda`,
+//! `containers`), the edge long-lived executor (`greengrass`), ground-truth
+//! latency distributions (`latency`) and the AWS billing model (`pricing`).
+
+pub mod containers;
+pub mod greengrass;
+pub mod lambda;
+pub mod latency;
+pub mod pricing;

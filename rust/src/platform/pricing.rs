@@ -1,0 +1,81 @@
+//! AWS Lambda pricing model (paper Sec. II-A):
+//! billed duration = execution time rounded **up** to the next 100 ms;
+//! price proportional to container memory at $1.667e-6 per GB-s, plus a
+//! flat $0.20 per 1M requests. Edge (Greengrass) executions cost $0 —
+//! the yearly device fee amortizes to zero per task.
+
+use crate::config::Pricing;
+
+impl Pricing {
+    /// Billed duration in seconds for an execution time in ms.
+    pub fn billed_seconds(&self, comp_ms: f64) -> f64 {
+        (comp_ms.max(1.0) / self.bill_quantum_ms).ceil() * (self.bill_quantum_ms / 1e3)
+    }
+
+    /// Dollar cost of one cloud function execution.
+    pub fn cost(&self, comp_ms: f64, mem_mb: f64) -> f64 {
+        self.price_per_gb_s * (mem_mb / 1024.0) * self.billed_seconds(comp_ms) + self.request_fee
+    }
+
+    /// Edge executions are free under the amortized Greengrass model.
+    pub fn edge_cost(&self) -> f64 {
+        0.0
+    }
+}
+
+/// The constants used throughout the paper (and baked into artifacts).
+pub fn aws_pricing() -> Pricing {
+    Pricing {
+        price_per_gb_s: 1.667e-6,
+        bill_quantum_ms: 100.0,
+        request_fee: 0.20 / 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_quantization_example() {
+        // "98 ms compute time would be rounded to 100ms, whereas a 101ms
+        //  compute time will be rounded to 200ms"
+        let p = aws_pricing();
+        assert!((p.billed_seconds(98.0) - 0.1).abs() < 1e-12);
+        assert!((p.billed_seconds(100.0) - 0.1).abs() < 1e-12);
+        assert!((p.billed_seconds(101.0) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_scales_with_memory() {
+        let p = aws_pricing();
+        let t = 1000.0;
+        let c1 = p.cost(t, 1024.0);
+        let c2 = p.cost(t, 2048.0);
+        assert!((c2 - p.request_fee - 2.0 * (c1 - p.request_fee)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gb_second_price_exact() {
+        let p = aws_pricing();
+        // 1 GB container for exactly 1 s
+        let c = p.cost(1000.0, 1024.0);
+        assert!((c - (1.667e-6 + 0.2e-6)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cost_monotone_in_time() {
+        let p = aws_pricing();
+        let mut prev = 0.0;
+        for ms in [1.0, 99.0, 100.0, 150.0, 1000.0, 10_000.0] {
+            let c = p.cost(ms, 1536.0);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn edge_is_free() {
+        assert_eq!(aws_pricing().edge_cost(), 0.0);
+    }
+}

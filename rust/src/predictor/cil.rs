@@ -1,0 +1,160 @@
+//! Container Information List (paper Sec. V-A): the Predictor's client-side
+//! *belief* about which cloud containers are warm.
+//!
+//! AWS exposes no API for container state, so the framework tracks, per
+//! configuration λ_m, the containers it believes exist: busy/idle status,
+//! completion time of the latest function, and estimated destruction time
+//! (last completion + T_idl). `updateCIL` mirrors the empirically observed
+//! AWS behaviour: an invocation reuses the most-recently-used idle container,
+//! otherwise creates one.
+//!
+//! The CIL is a belief, not ground truth — prediction noise in comp(k, m)
+//! shifts believed completion times, which is exactly how warm/cold
+//! mispredictions arise (measured in Table V).
+
+/// One believed container.
+#[derive(Debug, Clone, Copy)]
+pub struct CilEntry {
+    /// believed busy until (trigger + start + comp predictions)
+    pub busy_until: f64,
+    /// believed completion time of the latest function
+    pub last_completion: f64,
+}
+
+/// CIL over all configurations.
+#[derive(Debug, Clone)]
+pub struct Cil {
+    per_config: Vec<Vec<CilEntry>>,
+    /// assumed container idle lifetime (fixed 27 min; Sec. IV-A)
+    tidl_ms: f64,
+}
+
+impl Cil {
+    pub fn new(n_configs: usize, tidl_ms: f64) -> Self {
+        Cil { per_config: vec![Vec::new(); n_configs], tidl_ms }
+    }
+
+    pub fn tidl_ms(&self) -> f64 {
+        self.tidl_ms
+    }
+
+    /// Drop containers believed destroyed by `now`.
+    pub fn purge(&mut self, now: f64) {
+        let tidl = self.tidl_ms;
+        for list in &mut self.per_config {
+            list.retain(|c| now < c.busy_until || now <= c.last_completion + tidl);
+        }
+    }
+
+    /// Does the Predictor believe an idle container exists for config `j`?
+    /// (⇒ it predicts a warm start.)
+    pub fn predicts_warm(&self, j: usize, now: f64) -> bool {
+        self.per_config[j]
+            .iter()
+            .any(|c| now >= c.busy_until && now <= c.last_completion + self.tidl_ms)
+    }
+
+    /// Record the chosen execution: reuse the believed-MRU idle container or
+    /// add a new one. `trigger` is when the function fires (after upload),
+    /// `busy_ms` the predicted start+comp duration. Returns whether the CIL
+    /// modelled this as a warm start.
+    pub fn update(&mut self, j: usize, trigger: f64, busy_ms: f64) -> bool {
+        self.purge(trigger);
+        let tidl = self.tidl_ms;
+        let list = &mut self.per_config[j];
+        let cand = list
+            .iter_mut()
+            .filter(|c| trigger >= c.busy_until && trigger <= c.last_completion + tidl)
+            .max_by(|a, b| a.last_completion.partial_cmp(&b.last_completion).unwrap());
+        if let Some(c) = cand {
+            c.busy_until = trigger + busy_ms;
+            c.last_completion = trigger + busy_ms;
+            true
+        } else {
+            list.push(CilEntry { busy_until: trigger + busy_ms, last_completion: trigger + busy_ms });
+            false
+        }
+    }
+
+    /// Believed container count for a config (after purging at `now`).
+    pub fn believed_count(&self, j: usize, now: f64) -> usize {
+        self.per_config[j]
+            .iter()
+            .filter(|c| now < c.busy_until || now <= c.last_completion + self.tidl_ms)
+            .count()
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.per_config.iter().map(|l| l.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TIDL: f64 = 27.0 * 60e3;
+
+    #[test]
+    fn empty_cil_predicts_cold() {
+        let cil = Cil::new(3, TIDL);
+        assert!(!cil.predicts_warm(0, 0.0));
+    }
+
+    #[test]
+    fn after_completion_predicts_warm() {
+        let mut cil = Cil::new(3, TIDL);
+        let warm = cil.update(1, 0.0, 2000.0);
+        assert!(!warm, "first invocation is believed cold");
+        assert!(!cil.predicts_warm(1, 1000.0), "still busy");
+        assert!(cil.predicts_warm(1, 2000.0));
+        assert!(!cil.predicts_warm(0, 2000.0), "other config unaffected");
+    }
+
+    #[test]
+    fn belief_expires_after_tidl() {
+        let mut cil = Cil::new(1, TIDL);
+        cil.update(0, 0.0, 1000.0);
+        assert!(cil.predicts_warm(0, 1000.0 + TIDL));
+        assert!(!cil.predicts_warm(0, 1000.0 + TIDL + 1.0));
+    }
+
+    #[test]
+    fn purge_removes_dead_beliefs() {
+        let mut cil = Cil::new(1, TIDL);
+        cil.update(0, 0.0, 1000.0);
+        cil.purge(1000.0 + TIDL + 1.0);
+        assert_eq!(cil.believed_count(0, 1000.0 + TIDL + 1.0), 0);
+        assert_eq!(cil.total_entries(), 0);
+    }
+
+    #[test]
+    fn busy_belief_forces_new_container() {
+        let mut cil = Cil::new(1, TIDL);
+        cil.update(0, 0.0, 10_000.0);
+        let warm = cil.update(0, 5000.0, 1000.0); // believed busy
+        assert!(!warm);
+        assert_eq!(cil.believed_count(0, 5000.0), 2);
+    }
+
+    #[test]
+    fn mru_entry_reused() {
+        let mut cil = Cil::new(1, TIDL);
+        cil.update(0, 0.0, 1000.0);    // completes 1000
+        cil.update(0, 500.0, 1000.0);  // second container, completes 1500
+        // both idle at 2000; MRU (completes 1500) must be reused
+        let warm = cil.update(0, 2000.0, 100.0);
+        assert!(warm);
+        assert_eq!(cil.believed_count(0, 2000.0), 2);
+        // the non-MRU one still has last_completion 1000
+        assert!(cil.predicts_warm(0, 2000.0));
+    }
+
+    #[test]
+    fn reuse_extends_believed_lifetime() {
+        let mut cil = Cil::new(1, TIDL);
+        cil.update(0, 0.0, 1000.0);
+        cil.update(0, TIDL, 500.0); // reuse right at the edge
+        assert!(cil.predicts_warm(0, TIDL + 500.0 + TIDL - 1.0));
+    }
+}

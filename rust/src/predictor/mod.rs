@@ -1,0 +1,245 @@
+//! The Predictor (paper Sec. V-A): per input, predict end-to-end latency and
+//! cost for every cloud configuration and for the edge, deciding warm vs
+//! cold per configuration from the CIL.
+//!
+//! Exposes the paper's two methods — `predict` and `update_cil` — over a
+//! pluggable scoring backend: the AOT-compiled XLA artifact (production) or
+//! the pure-Rust mirror (fallback/baseline).
+
+pub mod cil;
+
+use anyhow::Result;
+
+use crate::config::{AppMeta, Meta, PredictorBackendKind};
+use crate::models::{NativeModels, RawPrediction};
+use crate::runtime::XlaEngine;
+use cil::Cil;
+
+/// Where a task can run: the edge Executor or cloud config index j.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Edge,
+    Cloud(usize),
+}
+
+/// Prediction for one cloud configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CloudPrediction {
+    /// predicted end-to-end latency, Eqn. (1), warm/cold chosen via CIL
+    pub e2e_ms: f64,
+    /// predicted execution cost (from predicted comp through AWS billing)
+    pub cost: f64,
+    /// whether the CIL predicts a warm start
+    pub warm: bool,
+    /// predicted components needed later for CIL update
+    pub upld_ms: f64,
+    pub start_ms: f64,
+    pub comp_ms: f64,
+}
+
+/// Full per-input prediction across Φ ∪ {λ_edge}.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub cloud: Vec<CloudPrediction>,
+    /// predicted edge latency excluding queue wait: comp_e + iotup + store
+    pub edge_e2e_ms: f64,
+    /// predicted edge compute alone (queue-wait accounting)
+    pub edge_comp_ms: f64,
+    /// relative 1σ dispersion of cloud e2e predictions (from train-time
+    /// MAPE; σ ≈ 1.2533·MAPE for normal errors) — the paper's future-work
+    /// "explicitly incorporate the high variance" extension
+    pub cloud_sigma_frac: f64,
+    /// relative 1σ dispersion of edge e2e predictions
+    pub edge_sigma_frac: f64,
+}
+
+/// Scoring backend abstraction.
+pub enum Backend {
+    Xla(XlaEngine),
+    Native(NativeModels),
+}
+
+impl Backend {
+    pub fn raw(&self, size: f64) -> Result<RawPrediction> {
+        match self {
+            Backend::Xla(e) => e.predict(size),
+            Backend::Native(n) => Ok(n.predict(size)),
+        }
+    }
+
+    pub fn raw_batch(&self, sizes: &[f64]) -> Result<Vec<RawPrediction>> {
+        match self {
+            Backend::Xla(e) => e.predict_batch(sizes),
+            Backend::Native(n) => Ok(n.predict_batch(sizes)),
+        }
+    }
+
+    pub fn kind(&self) -> PredictorBackendKind {
+        match self {
+            Backend::Xla(_) => PredictorBackendKind::Xla,
+            Backend::Native(_) => PredictorBackendKind::Native,
+        }
+    }
+}
+
+/// The Predictor: backend + CIL + scalar component means.
+pub struct Predictor {
+    backend: Backend,
+    pub cil: Cil,
+    start_warm_mean: f64,
+    start_cold_mean: f64,
+    store_mean: f64,
+    edge_overhead_ms: f64,
+    cloud_sigma_frac: f64,
+    edge_sigma_frac: f64,
+    pub mems: Vec<f64>,
+}
+
+impl Predictor {
+    pub fn new(meta: &Meta, app: &AppMeta, backend: Backend) -> Self {
+        let m = &app.models;
+        Predictor {
+            backend,
+            cil: Cil::new(meta.memory_configs_mb.len(), meta.tidl_mean_ms),
+            start_warm_mean: m.start_warm_mean,
+            start_cold_mean: m.start_cold_mean,
+            store_mean: m.store_mean,
+            edge_overhead_ms: m.edge_overhead_ms(),
+            // mean-absolute -> standard deviation under a normal error model
+            cloud_sigma_frac: app.mape_cloud_e2e / 100.0 * 1.2533,
+            edge_sigma_frac: app.mape_edge_e2e / 100.0 * 1.2533,
+            mems: meta.memory_configs_mb.clone(),
+        }
+    }
+
+    /// Construct with the backend selected by `kind` (loading artifacts for
+    /// the XLA backend).
+    pub fn with_backend_kind(
+        meta: &Meta,
+        app: &AppMeta,
+        kind: PredictorBackendKind,
+    ) -> Result<Self> {
+        let backend = match kind {
+            PredictorBackendKind::Xla => Backend::Xla(XlaEngine::load(meta, &app.name)?),
+            PredictorBackendKind::Native => Backend::Native(NativeModels::from_meta(meta, app)),
+        };
+        Ok(Self::new(meta, app, backend))
+    }
+
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
+    /// Predict latencies and costs for every configuration (paper `predict`).
+    /// `now` is ingestion time; warm/cold is assessed at the predicted
+    /// trigger time (now + predicted upload).
+    pub fn predict(&mut self, size: f64, now: f64) -> Result<Prediction> {
+        let raw = self.backend.raw(size)?;
+        Ok(self.assemble(&raw, now))
+    }
+
+    /// Assemble a `Prediction` from raw model outputs (shared with the
+    /// batched scoring path).
+    pub fn assemble(&self, raw: &RawPrediction, now: f64) -> Prediction {
+        let trigger = now + raw.upld_ms;
+        let cloud = (0..self.mems.len())
+            .map(|j| {
+                let warm = self.cil.predicts_warm(j, trigger);
+                let start = if warm { self.start_warm_mean } else { self.start_cold_mean };
+                let comp = raw.comp_cloud_ms[j];
+                CloudPrediction {
+                    e2e_ms: raw.upld_ms + start + comp + self.store_mean,
+                    cost: raw.cost_cloud[j],
+                    warm,
+                    upld_ms: raw.upld_ms,
+                    start_ms: start,
+                    comp_ms: comp,
+                }
+            })
+            .collect();
+        Prediction {
+            cloud,
+            edge_e2e_ms: raw.comp_edge_ms + self.edge_overhead_ms,
+            edge_comp_ms: raw.comp_edge_ms,
+            cloud_sigma_frac: self.cloud_sigma_frac,
+            edge_sigma_frac: self.edge_sigma_frac,
+        }
+    }
+
+    /// Record the engine's choice (paper `updateCIL`). Edge placements do
+    /// not touch cloud container state.
+    pub fn update_cil(&mut self, placement: Placement, pred: &Prediction, now: f64) {
+        if let Placement::Cloud(j) = placement {
+            let cp = &pred.cloud[j];
+            let trigger = now + cp.upld_ms;
+            self.cil.update(j, trigger, cp.start_ms + cp.comp_ms);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+
+    fn setup() -> (Meta, Predictor) {
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let app = meta.app("fd").clone();
+        let backend = Backend::Native(NativeModels::from_meta(&meta, &app));
+        let p = Predictor::new(&meta, &app, backend);
+        (meta, p)
+    }
+
+    #[test]
+    fn first_prediction_all_cold() {
+        let (_, mut p) = setup();
+        let pred = p.predict(2.5e6, 0.0).unwrap();
+        assert_eq!(pred.cloud.len(), 19);
+        assert!(pred.cloud.iter().all(|c| !c.warm));
+        // cold start mean baked into e2e
+        let c = &pred.cloud[7];
+        assert!((c.e2e_ms - (c.upld_ms + c.start_ms + c.comp_ms + p.store_mean)).abs() < 1e-9);
+        assert!(c.start_ms > 1000.0, "FD cold mean ~1500 ms");
+    }
+
+    #[test]
+    fn warm_after_update_cil() {
+        let (_, mut p) = setup();
+        let pred = p.predict(2.5e6, 0.0).unwrap();
+        p.update_cil(Placement::Cloud(7), &pred, 0.0);
+        // next input long after the first completes: warm on config 7 only
+        let later = pred.cloud[7].e2e_ms + 10_000.0;
+        let pred2 = p.predict(2.5e6, later).unwrap();
+        assert!(pred2.cloud[7].warm);
+        assert!(!pred2.cloud[6].warm);
+        assert!(pred2.cloud[7].start_ms < 400.0, "warm mean ~163 ms");
+        assert!(pred2.cloud[7].e2e_ms < pred.cloud[7].e2e_ms);
+    }
+
+    #[test]
+    fn busy_believed_container_predicts_cold() {
+        let (_, mut p) = setup();
+        let pred = p.predict(2.5e6, 0.0).unwrap();
+        p.update_cil(Placement::Cloud(3), &pred, 0.0);
+        // immediately after: the believed container is busy -> cold predicted
+        let pred2 = p.predict(2.5e6, 1.0).unwrap();
+        assert!(!pred2.cloud[3].warm);
+    }
+
+    #[test]
+    fn edge_placement_leaves_cil_untouched() {
+        let (_, mut p) = setup();
+        let pred = p.predict(2.5e6, 0.0).unwrap();
+        p.update_cil(Placement::Edge, &pred, 0.0);
+        assert_eq!(p.cil.total_entries(), 0);
+    }
+
+    #[test]
+    fn edge_prediction_includes_overhead() {
+        let (meta, mut p) = setup();
+        let pred = p.predict(2.5e6, 0.0).unwrap();
+        let m = &meta.app("fd").models;
+        assert!((pred.edge_e2e_ms - pred.edge_comp_ms - m.edge_overhead_ms()).abs() < 1e-9);
+        assert!(pred.edge_comp_ms > 1000.0, "FD edge compute is heavy");
+    }
+}

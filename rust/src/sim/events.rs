@@ -1,0 +1,145 @@
+//! Event queue for the discrete-event simulator: a min-heap on virtual time
+//! with a stable sequence tiebreak so runs are deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulator events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// task `id` ingested on the edge device
+    Arrival { id: usize },
+    /// task `id` finished its edge compute (Executor slot freed)
+    EdgeCompDone { id: usize },
+    /// task `id`'s cloud results persisted in S3
+    CloudStored { id: usize },
+    /// task `id`'s edge results persisted (IoT → S3)
+    EdgeStored { id: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    at_ms: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_ms == other.at_ms && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert to get earliest-first,
+        // tie-broken by insertion order.
+        other
+            .at_ms
+            .partial_cmp(&self.at_ms)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic future-event list.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    now_ms: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    /// Schedule `event` at absolute virtual time `at_ms` (must not precede
+    /// the current clock).
+    pub fn schedule(&mut self, at_ms: f64, event: Event) {
+        debug_assert!(at_ms >= self.now_ms, "cannot schedule into the past");
+        self.heap.push(Scheduled { at_ms, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|s| {
+            self.now_ms = s.at_ms;
+            (s.at_ms, s.event)
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30.0, Event::Arrival { id: 3 });
+        q.schedule(10.0, Event::Arrival { id: 1 });
+        q.schedule(20.0, Event::Arrival { id: 2 });
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|(_, e)| match e {
+            Event::Arrival { id } => id,
+            _ => unreachable!(),
+        })
+        .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_broken_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, Event::Arrival { id: 10 });
+        q.schedule(5.0, Event::EdgeCompDone { id: 11 });
+        q.schedule(5.0, Event::CloudStored { id: 12 });
+        assert_eq!(q.pop().unwrap().1, Event::Arrival { id: 10 });
+        assert_eq!(q.pop().unwrap().1, Event::EdgeCompDone { id: 11 });
+        assert_eq!(q.pop().unwrap().1, Event::CloudStored { id: 12 });
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule((i * 7 % 13) as f64, Event::Arrival { id: i });
+        }
+        let mut last = -1.0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.now_ms(), 12.0);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule(1.0, Event::Arrival { id: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! A [`Gen`] wraps the seeded PCG32 and offers primitive generators; [`check`]
+//! runs a property over many generated cases and, on failure, reports the
+//! case index and seed so the exact input can be replayed deterministically.
+//! No shrinking — cases are small enough to debug directly from the seed.
+
+use crate::util::rng::Pcg32;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg32::new(seed, 99) }
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.uniform_usize(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.uniform_usize(xs.len())]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    /// Positive lognormal-ish durations (ms).
+    pub fn duration_ms(&mut self, median: f64) -> f64 {
+        self.rng.lognormal(median.ln(), 0.6)
+    }
+}
+
+/// Run `prop` on `cases` generated inputs. Panics with the failing seed.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0xC0FFEE ^ name.len() as u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("uniform-in-range", 200, |g| {
+            let x = g.f64_range(2.0, 5.0);
+            if (2.0..5.0).contains(&x) { Ok(()) } else { Err(format!("{x} out of range")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn check_reports_failures() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..50 {
+            assert_eq!(a.f64_range(0.0, 1.0), b.f64_range(0.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn usize_range_inclusive_bounds() {
+        let mut g = Gen::new(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = g.usize_range(2, 5);
+            assert!((2..=5).contains(&v));
+            seen_lo |= v == 2;
+            seen_hi |= v == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny numeric-CSV reader for the `artifacts/*_eval.csv` replay tables.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A headerful, all-numeric CSV table held column-major.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub headers: Vec<String>,
+    pub columns: Vec<Vec<f64>>,
+    index: HashMap<String, usize>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = lines.next().context("empty csv")?;
+        let headers: Vec<String> = header_line.split(',').map(|s| s.trim().to_string()).collect();
+        let ncol = headers.len();
+        let mut columns = vec![Vec::new(); ncol];
+        for (lineno, line) in lines.enumerate() {
+            let mut n = 0;
+            for (j, cell) in line.split(',').enumerate() {
+                if j >= ncol {
+                    bail!("row {} has more than {} columns", lineno + 2, ncol);
+                }
+                let v: f64 = cell
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("row {} col {}: bad number `{}`", lineno + 2, j, cell))?;
+                columns[j].push(v);
+                n += 1;
+            }
+            if n != ncol {
+                bail!("row {} has {} columns, expected {}", lineno + 2, n, ncol);
+            }
+        }
+        let index = headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (h.clone(), i))
+            .collect();
+        Ok(Table { headers, columns, index })
+    }
+
+    pub fn load(path: &str) -> Result<Table> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Table::parse(&text)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.columns.first().map_or(0, |c| c.len())
+    }
+
+    pub fn col(&self, name: &str) -> &[f64] {
+        let i = *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("csv has no column `{name}`"));
+        &self.columns[i]
+    }
+
+    pub fn has_col(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str, row: usize) -> f64 {
+        self.col(name)[row]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_indexes() {
+        let t = Table::parse("a,b,c\n1,2,3\n4,5.5,-6e1\n").unwrap();
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.col("b"), &[2.0, 5.5]);
+        assert_eq!(t.get("c", 1), -60.0);
+        assert!(t.has_col("a") && !t.has_col("z"));
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+        assert!(Table::parse("a,b\n1,2,3\n").is_err());
+        assert!(Table::parse("a,b\n1,x\n").is_err());
+        assert!(Table::parse("").is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let t = Table::parse("a\n1\n\n2\n\n").unwrap();
+        assert_eq!(t.col("a"), &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Hand-rolled substrates: PRNG + distributions, statistics, JSON, CSV.
+//! (The offline crate registry lacks rand/serde; see Cargo.toml.)
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,208 @@
+//! Deterministic PRNG + distribution samplers.
+//!
+//! The offline registry has no `rand` crate, so we implement PCG32
+//! (O'Neill 2014) plus the samplers the simulator needs: uniform, normal
+//! (Box–Muller), lognormal, exponential (Poisson inter-arrival gaps), and a
+//! quantized normal for the S3-store component. All experiments are seeded,
+//! so every table/figure in EXPERIMENTS.md is bit-reproducible.
+
+/// PCG32: 64-bit state, 32-bit output, period 2^64 per stream.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// cached second Box–Muller variate
+    gauss_cache: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (stream << 1) | 1;
+        let mut rng = Pcg32 { state: 0, inc, gauss_cache: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Convenience constructor with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next u64 from two 32-bit draws.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn uniform_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // rejection-free for our small n; modulo bias is negligible vs 2^64
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal_std(&mut self) -> f64 {
+        if let Some(v) = self.gauss_cache.take() {
+            return v;
+        }
+        // avoid ln(0)
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_cache = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean/sigma.
+    pub fn normal(&mut self, mean: f64, sigma: f64) -> f64 {
+        mean + sigma * self.normal_std()
+    }
+
+    /// Normal clamped below at `lo`.
+    pub fn normal_min(&mut self, mean: f64, sigma: f64, lo: f64) -> f64 {
+        self.normal(mean, sigma).max(lo)
+    }
+
+    /// Lognormal: exp(N(mu, sigma)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda). Poisson-process gaps.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Normal rounded to multiples of `q` and clamped at 0 (S3 store model).
+    pub fn quantized_normal(&mut self, mean: f64, sigma: f64, q: f64) -> f64 {
+        ((self.normal(mean, sigma) / q).round() * q).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg32::new(42, 7);
+        let mut b = Pcg32::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg32::new(1, 0);
+        let mut b = Pcg32::new(1, 1);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_covers() {
+        let mut rng = Pcg32::seeded(3);
+        let mut lo = f64::MAX;
+        let mut hi: f64 = 0.0;
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            lo = lo.min(u);
+            hi = hi.max(u);
+        }
+        assert!(lo < 0.01 && hi > 0.99);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal(10.0, 3.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean {mean}");
+        assert!((var.sqrt() - 3.0).abs() < 0.05, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 100_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.lognormal(2.0, 0.5)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[n / 2];
+        assert!((median - 2.0f64.exp()).abs() / 2.0f64.exp() < 0.03);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg32::seeded(6);
+        let n = 100_000;
+        let mean = (0..n).map(|_| rng.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn quantized_normal_grid() {
+        let mut rng = Pcg32::seeded(7);
+        for _ in 0..1000 {
+            let v = rng.quantized_normal(550.0, 150.0, 100.0);
+            assert!(v >= 0.0);
+            assert!((v / 100.0 - (v / 100.0).round()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn uniform_usize_bounds() {
+        let mut rng = Pcg32::seeded(8);
+        for _ in 0..1000 {
+            assert!(rng.uniform_usize(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Arrival processes: Poisson (the paper's simulation protocol) and
+//! fixed-rate (the paper's live prototype ingests at a fixed rate).
+
+use crate::util::rng::Pcg32;
+
+/// Poisson process: exponential inter-arrival gaps at `rate_per_s`.
+pub struct PoissonArrivals {
+    rng: Pcg32,
+    rate_per_ms: f64,
+    t: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_per_s: f64, seed: u64) -> Self {
+        assert!(rate_per_s > 0.0);
+        PoissonArrivals { rng: Pcg32::new(seed, 23), rate_per_ms: rate_per_s / 1000.0, t: 0.0 }
+    }
+
+    /// Absolute time (ms) of the next arrival.
+    pub fn next_arrival_ms(&mut self) -> f64 {
+        self.t += self.rng.exponential(self.rate_per_ms);
+        self.t
+    }
+}
+
+/// Fixed-rate arrivals: one task every 1/rate seconds exactly.
+pub struct FixedArrivals {
+    gap_ms: f64,
+    t: f64,
+}
+
+impl FixedArrivals {
+    pub fn new(rate_per_s: f64) -> Self {
+        assert!(rate_per_s > 0.0);
+        FixedArrivals { gap_ms: 1000.0 / rate_per_s, t: 0.0 }
+    }
+
+    pub fn next_arrival_ms(&mut self) -> f64 {
+        self.t += self.gap_ms;
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut p = PoissonArrivals::new(4.0, 1);
+        let mut last = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            last = p.next_arrival_ms();
+        }
+        let rate = n as f64 / last * 1000.0;
+        assert!((rate - 4.0).abs() < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn poisson_gaps_exponential_cv() {
+        // coefficient of variation of exponential gaps is 1
+        let mut p = PoissonArrivals::new(1.0, 2);
+        let mut prev = 0.0;
+        let gaps: Vec<f64> = (0..20_000)
+            .map(|_| {
+                let t = p.next_arrival_ms();
+                let g = t - prev;
+                prev = t;
+                g
+            })
+            .collect();
+        let m = crate::util::stats::mean(&gaps);
+        let s = crate::util::stats::std_dev(&gaps);
+        assert!((s / m - 1.0).abs() < 0.05, "cv {}", s / m);
+    }
+
+    #[test]
+    fn fixed_rate_exact() {
+        let mut f = FixedArrivals::new(10.0);
+        assert_eq!(f.next_arrival_ms(), 100.0);
+        assert_eq!(f.next_arrival_ms(), 200.0);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = PoissonArrivals::new(4.0, 5);
+        let mut b = PoissonArrivals::new(4.0, 5);
+        for _ in 0..100 {
+            assert_eq!(a.next_arrival_ms(), b.next_arrival_ms());
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration tests across the full stack: XLA-vs-native parity at the
+//! *decision* level, experiment regeneration smoke, live+sim agreement,
+//! and the paper's headline claims in miniature.
+
+use skedge::config::{
+    default_artifact_dir, ExperimentSettings, Meta, Objective, PredictorBackendKind,
+};
+use skedge::experiments;
+use skedge::live::{self, LiveConfig};
+use skedge::metrics::budget_metrics;
+use skedge::sim;
+
+fn meta() -> Meta {
+    Meta::load(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn xla_and_native_backends_agree_on_decisions() {
+    let meta = meta();
+    for app in ["fd", "stt"] {
+        let set = experiments::best_latmin_set(app);
+        let base = ExperimentSettings::new(app, Objective::LatencyMin, &set).with_n_inputs(200);
+        let nat = sim::run(&meta, &base.clone().with_backend(PredictorBackendKind::Native)).unwrap();
+        let xla = sim::run(&meta, &base.clone().with_backend(PredictorBackendKind::Xla)).unwrap();
+        let differing = nat
+            .records
+            .iter()
+            .zip(&xla.records)
+            .filter(|(a, b)| a.placement != b.placement)
+            .count();
+        // f32-identical math on both sides: borderline flips must be rare
+        assert!(differing <= 4, "{app}: {differing}/200 placements differ");
+        let rel = (nat.summary.avg_actual_e2e_ms - xla.summary.avg_actual_e2e_ms).abs()
+            / nat.summary.avg_actual_e2e_ms;
+        assert!(rel < 0.05, "{app}: avg e2e diverges {rel}");
+    }
+}
+
+#[test]
+fn xla_costmin_runs_end_to_end() {
+    let meta = meta();
+    let set = experiments::best_costmin_set("ir");
+    let s = ExperimentSettings::new("ir", Objective::CostMin, &set)
+        .with_backend(PredictorBackendKind::Xla)
+        .with_n_inputs(150);
+    let o = sim::run(&meta, &s).unwrap();
+    assert_eq!(o.records.len(), 150);
+    assert!(o.summary.edge_count > 0, "IR should use the edge");
+}
+
+#[test]
+fn fast_experiments_render() {
+    let meta = meta();
+    for id in ["table1", "table2", "tidl"] {
+        let out = experiments::run_quiet(&meta, id).unwrap();
+        assert!(out.len() > 100, "{id} output too small");
+        assert!(out.starts_with("##"), "{id} missing heading");
+    }
+}
+
+#[test]
+fn live_and_sim_agree_statistically() {
+    // The live prototype and the event simulator implement the same system;
+    // on the same (small) workload their summaries must be close.
+    let meta = meta();
+    let set = experiments::best_latmin_set("stt");
+    let base = ExperimentSettings::new("stt", Objective::LatencyMin, &set).with_n_inputs(25);
+    let simo = sim::run(&meta, &base).unwrap();
+    let cfg = LiveConfig { settings: base, time_scale: 0.002, fixed_rate: false };
+    let liveo = live::run(&meta, &cfg).unwrap();
+    let rel = (simo.summary.avg_actual_e2e_ms - liveo.summary.avg_actual_e2e_ms).abs()
+        / simo.summary.avg_actual_e2e_ms;
+    // live adds real scheduling jitter scaled by 1/time_scale; stay loose
+    assert!(rel < 0.25, "sim {} vs live {}", simo.summary.avg_actual_e2e_ms,
+            liveo.summary.avg_actual_e2e_ms);
+}
+
+#[test]
+fn headline_claim_edge_only_vs_framework_fd() {
+    // Paper §VI-B: ~3 orders of magnitude latency reduction vs edge-only.
+    let meta = meta();
+    let out = experiments::run_quiet(&meta, "edgeonly").unwrap();
+    assert!(out.contains("order"), "report should state the claim context");
+}
+
+#[test]
+fn budget_is_respected_in_total_across_apps() {
+    // Paper: "the total cost of execution of the entire input workload was
+    // always under the total budget" (with the paper's α values).
+    let meta = meta();
+    for app in ["ir", "fd", "stt"] {
+        let set = experiments::best_latmin_set(app);
+        let o = sim::run(&meta, &ExperimentSettings::new(app, Objective::LatencyMin, &set))
+            .unwrap();
+        let (_, used) = budget_metrics(&o.records, meta.app(app).cmax);
+        assert!(used <= 102.0, "{app}: budget used {used}%");
+    }
+}
+
+#[test]
+fn results_are_deterministic_across_backends_reruns() {
+    let meta = meta();
+    let set = experiments::best_costmin_set("stt");
+    let s = ExperimentSettings::new("stt", Objective::CostMin, &set).with_n_inputs(120);
+    let a = sim::run(&meta, &s).unwrap();
+    let b = sim::run(&meta, &s).unwrap();
+    assert_eq!(a.summary.total_actual_cost, b.summary.total_actual_cost);
+    assert_eq!(a.peak_edge_queue, b.peak_edge_queue);
+}
+
+#[test]
+fn risk_factor_reduces_stt_deadline_violations() {
+    // The variance-aware extension (paper §VIII future work): a 1σ margin
+    // must cut the violation rate of the most violation-prone workload.
+    let meta = meta();
+    let set = experiments::best_costmin_set("stt");
+    let base = ExperimentSettings::new("stt", Objective::CostMin, &set);
+    let mean = sim::run(&meta, &base).unwrap();
+    let guarded = sim::run(&meta, &base.clone().with_risk_factor(1.0)).unwrap();
+    let d = meta.app("stt").deadline_ms;
+    let (v0, _) = skedge::metrics::deadline_violations(&mean.records, d);
+    let (v1, _) = skedge::metrics::deadline_violations(&guarded.records, d);
+    assert!(v1 < 0.6 * v0, "risk=1σ: violations {v0}% -> {v1}%");
+}

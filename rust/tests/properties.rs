@@ -1,0 +1,240 @@
+//! Property-based tests on coordinator invariants, via the in-repo testkit
+//! (proptest is unavailable offline). Each property runs over hundreds of
+//! seeded random cases; failures report the replayable seed.
+
+use skedge::config::Objective;
+use skedge::engine::DecisionEngine;
+use skedge::platform::containers::{ConfigPool, StartKind};
+use skedge::platform::greengrass::EdgeExecutor;
+use skedge::platform::pricing::aws_pricing;
+use skedge::predictor::cil::Cil;
+use skedge::predictor::{CloudPrediction, Placement, Prediction};
+use skedge::prop_assert;
+use skedge::sim::events::{Event, EventQueue};
+use skedge::testkit::{check, Gen};
+
+fn random_prediction(g: &mut Gen, n_cfg: usize) -> Prediction {
+    let cloud = (0..n_cfg)
+        .map(|_| {
+            let comp = g.duration_ms(1500.0);
+            CloudPrediction {
+                e2e_ms: g.duration_ms(2500.0),
+                cost: g.f64_range(1e-7, 2e-5),
+                warm: g.bool(),
+                upld_ms: g.duration_ms(400.0),
+                start_ms: g.duration_ms(200.0),
+                comp_ms: comp,
+            }
+        })
+        .collect();
+    Prediction {
+        cloud,
+        edge_e2e_ms: g.duration_ms(5000.0),
+        edge_comp_ms: g.duration_ms(4500.0),
+        cloud_sigma_frac: g.f64_range(0.0, 0.3),
+        edge_sigma_frac: g.f64_range(0.0, 0.2),
+    }
+}
+
+#[test]
+fn prop_latmin_surplus_never_negative() {
+    check("surplus-never-negative", 300, |g| {
+        let n_cfg = 19;
+        let idxs: Vec<usize> = (0..g.usize_range(1, 6)).map(|_| g.usize_range(0, 18)).collect();
+        let cmax = g.f64_range(1e-7, 1e-5);
+        let alpha = g.f64_range(0.0, 1.0);
+        let mut eng = DecisionEngine::new(Objective::LatencyMin, idxs, 0.0, cmax, alpha);
+        for _ in 0..g.usize_range(1, 60) {
+            let pred = random_prediction(g, n_cfg);
+            let d = eng.decide(&pred, g.f64_range(0.0, 1e5));
+            prop_assert!(eng.surplus >= -1e-12, "surplus {} < 0", eng.surplus);
+            prop_assert!(d.predicted_cost <= d.allowed_cost + 1e-15,
+                         "chosen cost {} exceeds allowance {}", d.predicted_cost, d.allowed_cost);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latmin_choice_is_fastest_feasible() {
+    check("latmin-fastest-feasible", 300, |g| {
+        let pred = random_prediction(g, 19);
+        let idxs: Vec<usize> = (0..19).collect();
+        let cmax = g.f64_range(1e-7, 1e-5);
+        let mut eng = DecisionEngine::new(Objective::LatencyMin, idxs, 0.0, cmax, 0.0);
+        let wait = g.f64_range(0.0, 1e4);
+        let d = eng.decide(&pred, wait);
+        // nothing feasible may be strictly faster than the chosen placement
+        for (j, c) in pred.cloud.iter().enumerate() {
+            if c.cost <= cmax {
+                prop_assert!(
+                    d.predicted_e2e_ms <= c.e2e_ms + 1e-9,
+                    "config {j} (e2e {}) beats the choice ({})", c.e2e_ms, d.predicted_e2e_ms
+                );
+            }
+        }
+        prop_assert!(d.predicted_e2e_ms <= wait + pred.edge_e2e_ms + 1e-9,
+                     "edge beats the choice");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_costmin_choice_is_cheapest_feasible() {
+    check("costmin-cheapest-feasible", 300, |g| {
+        let pred = random_prediction(g, 19);
+        let delta = g.f64_range(500.0, 20_000.0);
+        let idxs: Vec<usize> = (0..19).collect();
+        let mut eng = DecisionEngine::new(Objective::CostMin, idxs, delta, 0.0, 0.0);
+        let wait = g.f64_range(0.0, 5e3);
+        let d = eng.decide(&pred, wait);
+        if d.feasible_found {
+            prop_assert!(d.predicted_e2e_ms <= delta + 1e-9, "choice violates deadline");
+            for (j, c) in pred.cloud.iter().enumerate() {
+                if c.e2e_ms <= delta {
+                    prop_assert!(d.predicted_cost <= c.cost + 1e-15,
+                                 "config {j} is cheaper than the choice");
+                }
+            }
+        } else {
+            // infeasible → queued at the edge for free
+            prop_assert!(d.placement == Placement::Edge, "infeasible must queue at edge");
+            prop_assert!(d.predicted_cost == 0.0, "edge fallback must be free");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_executor_fifo_and_conservation() {
+    check("edge-fifo", 200, |g| {
+        let mut e = EdgeExecutor::new();
+        let mut now = 0.0;
+        let mut last_end = 0.0;
+        let mut busy_total = 0.0;
+        let mut first_start = f64::INFINITY;
+        for _ in 0..g.usize_range(1, 50) {
+            now += g.f64_range(0.0, 500.0);
+            let comp = g.duration_ms(300.0);
+            let (wait, start, end) = e.submit(now, comp, comp);
+            prop_assert!(wait >= 0.0, "negative wait");
+            prop_assert!((start - (now + wait)).abs() < 1e-9, "start != now+wait");
+            prop_assert!(end >= last_end, "FIFO completion order violated");
+            last_end = end;
+            busy_total += comp;
+            first_start = first_start.min(start);
+        }
+        // conservation: the executor can't finish earlier than total work
+        prop_assert!(last_end >= first_start + busy_total - 1e-6, "work conservation");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_container_pool_kind_consistency() {
+    check("pool-warm-cold", 200, |g| {
+        let mut pool = ConfigPool::new();
+        let mut now = 0.0;
+        let mut n = 0u64;
+        for _ in 0..g.usize_range(1, 60) {
+            now += g.f64_range(0.0, 60_000.0);
+            let warm_expected = pool.peek_warm(now);
+            let busy = g.duration_ms(1500.0);
+            let tidl = g.f64_range(30_000.0, 2e6);
+            let (kind, _) = pool.invoke(now, busy, tidl);
+            prop_assert!((kind == StartKind::Warm) == warm_expected,
+                         "peek_warm disagrees with invoke at {now}");
+            n += 1;
+            prop_assert!(pool.warm_count + pool.cold_count == n, "count conservation");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cil_belief_monotone_purge() {
+    check("cil-purge", 200, |g| {
+        let tidl = g.f64_range(10_000.0, 1e6);
+        let mut cil = Cil::new(4, tidl);
+        let mut now = 0.0;
+        for _ in 0..g.usize_range(1, 40) {
+            now += g.f64_range(0.0, 50_000.0);
+            let j = g.usize_range(0, 3);
+            cil.update(j, now, g.duration_ms(1000.0));
+        }
+        let total_before = cil.total_entries();
+        cil.purge(now);
+        prop_assert!(cil.total_entries() <= total_before, "purge grew the CIL");
+        // far future: every belief must expire
+        cil.purge(now + 1e9);
+        prop_assert!(cil.total_entries() == 0, "beliefs survived the heat death");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_billing_monotone() {
+    check("billing-monotone", 300, |g| {
+        let p = aws_pricing();
+        let t = g.f64_range(1.0, 50_000.0);
+        let m = *g.choose(&[640.0, 1024.0, 1536.0, 2048.0, 2944.0]);
+        let c = p.cost(t, m);
+        prop_assert!(c > 0.0, "non-positive cost");
+        prop_assert!(p.cost(t + g.f64_range(0.0, 1e4), m) >= c, "cost not monotone in time");
+        prop_assert!(p.cost(t, m + 128.0) > c - 1e-18, "cost not monotone in memory");
+        // billed time is always an exact multiple of 100 ms and >= comp
+        let b = p.billed_seconds(t) * 1000.0;
+        prop_assert!(b + 1e-9 >= t, "billed below execution time");
+        prop_assert!((b / 100.0 - (b / 100.0).round()).abs() < 1e-9, "billed off-grid");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_sorted() {
+    check("event-queue-sorted", 200, |g| {
+        let mut q = EventQueue::new();
+        let n = g.usize_range(1, 200);
+        for i in 0..n {
+            q.schedule(g.f64_range(0.0, 1e6), Event::Arrival { id: i });
+        }
+        let mut last = -1.0;
+        let mut count = 0;
+        while let Some((t, _)) = q.pop() {
+            prop_assert!(t >= last, "events out of order");
+            last = t;
+            count += 1;
+        }
+        prop_assert!(count == n, "lost events: {count} != {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forest_bounded_by_leaf_range() {
+    check("forest-bounded", 100, |g| {
+        use skedge::config::ForestParams;
+        use skedge::models::Forest;
+        let depth = g.usize_range(1, 4);
+        let n_trees = g.usize_range(1, 20);
+        let ni = (1usize << depth) - 1;
+        let nl = 1usize << depth;
+        let leaf: Vec<f32> = (0..n_trees * nl).map(|_| g.f64_range(-5.0, 5.0) as f32).collect();
+        let params = ForestParams {
+            base: 10.0,
+            learning_rate: 0.1,
+            n_trees,
+            depth,
+            feat: (0..n_trees * ni).map(|_| g.usize_range(0, 1) as u32).collect(),
+            thresh: (0..n_trees * ni).map(|_| g.f64_range(-3.0, 3.0) as f32).collect(),
+            leaf: leaf.clone(),
+        };
+        let f = Forest::from_params(&params);
+        let x = [g.f64_range(-10.0, 10.0) as f32, g.f64_range(-10.0, 10.0) as f32];
+        let y = f.eval(&x);
+        let lo = 10.0 + 0.1 * n_trees as f32 * leaf.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = 10.0 + 0.1 * n_trees as f32 * leaf.iter().cloned().fold(f32::MIN, f32::max);
+        prop_assert!(y >= lo - 1e-3 && y <= hi + 1e-3, "{y} outside [{lo}, {hi}]");
+        Ok(())
+    });
+}
