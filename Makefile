@@ -1,0 +1,15 @@
+# Repo entry points. `make artifacts` must run before any Rust target that
+# loads meta.json (sim, live, fleet, experiments, most tests).
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: artifacts test-python clean-artifacts
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
+
+test-python:
+	cd python && python3 -m pytest -q tests
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

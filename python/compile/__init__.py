@@ -1,0 +1,2 @@
+"""AOT compilation pipeline: synthetic ground truth, trained performance
+models, and the JAX/Pallas prediction graph lowered to HLO artifacts."""

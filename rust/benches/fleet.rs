@@ -1,0 +1,73 @@
+//! Fleet simulator throughput: device×tasks/s through the sharded
+//! predict→decide→merge pipeline at 1 / 10 / 100 / 1000 devices.
+//!
+//! Workload generation is excluded from the timed region (it is a one-time
+//! setup cost in real sweeps too). Writes the measured baseline to
+//! `BENCH_fleet.json` at the repo root so later performance PRs have a
+//! trajectory to beat. Run: `cargo bench --bench fleet`.
+
+use std::time::Instant;
+
+use skedge::benchkit::{black_box, section};
+use skedge::config::{default_artifact_dir, FleetSettings, Meta};
+use skedge::experiments::fleet_scaling::DEVICE_SWEEP;
+use skedge::fleet::{scenario, shard};
+
+const DURATION_MS: f64 = 10_000.0;
+const SHARDS: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load(&default_artifact_dir())?;
+    section(&format!(
+        "fleet throughput (diurnal ir/fd/stt mix, {:.0} virtual s, {SHARDS} shards)",
+        DURATION_MS / 1e3
+    ));
+
+    let mut rows = Vec::new();
+    for devices in DEVICE_SWEEP {
+        let fs = FleetSettings::new(devices)
+            .with_duration_ms(DURATION_MS)
+            .with_shards(SHARDS)
+            .with_seed(2020);
+        let inits = scenario::build_fleet(&meta, &fs)?;
+        let n_tasks: usize = inits.iter().map(|d| d.tasks.len()).sum();
+        let runs = if devices >= 1000 { 2 } else { 4 };
+        let mut per_run = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let inits = inits.clone();
+            let t0 = Instant::now();
+            black_box(shard::run_fleet(&meta, inits, SHARDS, fs.epoch_ms)?);
+            per_run.push(t0.elapsed().as_secs_f64());
+        }
+        per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // lower median: with 2 runs this takes the faster one (standard
+        // practice for wall-clock throughput baselines)
+        let secs = per_run[(per_run.len() - 1) / 2];
+        let tasks_per_s = n_tasks as f64 / secs.max(1e-9);
+        println!(
+            "{:>5} devices   {:>8} tasks   {:>10.3} s/run   {:>12.0} tasks/s",
+            devices, n_tasks, secs, tasks_per_s
+        );
+        rows.push((devices, n_tasks, tasks_per_s));
+    }
+
+    // record the baseline for future performance PRs
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"fleet\",\n");
+    json.push_str("  \"scenario\": \"diurnal ir:0.4,fd:0.4,stt:0.2\",\n");
+    json.push_str(&format!("  \"duration_virtual_ms\": {DURATION_MS},\n"));
+    json.push_str(&format!("  \"shards\": {SHARDS},\n"));
+    json.push_str("  \"unit\": \"tasks_per_second\",\n");
+    json.push_str("  \"results\": [\n");
+    for (i, (devices, tasks, tps)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"devices\": {devices}, \"tasks\": {tasks}, \"tasks_per_s\": {tps:.1}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = format!("{}/../BENCH_fleet.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&path, json)?;
+    println!("\nwrote {path}");
+    Ok(())
+}

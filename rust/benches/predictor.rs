@@ -8,7 +8,24 @@ use skedge::config::{default_artifact_dir, Meta};
 use skedge::models::NativeModels;
 use skedge::predictor::cil::Cil;
 use skedge::predictor::{Backend, Predictor};
-use skedge::runtime::XlaEngine;
+
+#[cfg(feature = "xla")]
+fn xla_benches(meta: &Meta, sizes: &[f64]) -> anyhow::Result<()> {
+    let engine = skedge::runtime::XlaEngine::load(meta, "fd")?;
+    bench("xla b1 predict (1 input, 19 configs)", || {
+        black_box(engine.predict(black_box(2.5e6)).unwrap());
+    });
+    bench("xla b64 predict_batch (64 inputs)", || {
+        black_box(engine.predict_batch(black_box(sizes)).unwrap());
+    });
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_benches(_meta: &Meta, _sizes: &[f64]) -> anyhow::Result<()> {
+    println!("(xla feature off — skipping PJRT benches)");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let meta = Meta::load(&default_artifact_dir())?;
@@ -19,14 +36,8 @@ fn main() -> anyhow::Result<()> {
     bench("native predict (1 input, 19 configs)", || {
         black_box(native.predict(black_box(2.5e6)));
     });
-    let engine = XlaEngine::load(&meta, "fd")?;
-    bench("xla b1 predict (1 input, 19 configs)", || {
-        black_box(engine.predict(black_box(2.5e6)).unwrap());
-    });
     let sizes: Vec<f64> = (0..64).map(|i| 1e6 + 3e4 * i as f64).collect();
-    bench("xla b64 predict_batch (64 inputs)", || {
-        black_box(engine.predict_batch(black_box(&sizes)).unwrap());
-    });
+    xla_benches(&meta, &sizes)?;
     bench("native predict_batch (64 inputs)", || {
         black_box(native.predict_batch(black_box(&sizes)));
     });

@@ -1,0 +1,225 @@
+//! Fleet-run settings: what a multi-device simulation needs beyond the
+//! per-device [`ExperimentSettings`] — device count, workload scenario,
+//! heterogeneity knobs, and the shard/epoch execution parameters.
+
+use anyhow::{bail, Result};
+
+use super::Objective;
+
+/// Fleet workload scenario (per-device arrival process shape).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetScenario {
+    /// homogeneous Poisson arrivals at each device's app rate
+    Poisson,
+    /// sinusoidally modulated rate, synchronized across the fleet
+    /// (rate(t) = base · (1 + amplitude · sin(2π t / period)))
+    Diurnal { period_ms: f64, amplitude: f64 },
+    /// baseline Poisson plus a synchronized burst of `size` tasks on every
+    /// device each `period_ms` (firmware-triggered fleet-wide events)
+    Burst { period_ms: f64, size: usize },
+    /// devices cycle on/off (with a per-device phase offset); arrivals are
+    /// dropped while a device is off
+    Churn { on_ms: f64, off_ms: f64 },
+}
+
+impl FleetScenario {
+    /// Parse a scenario name to its default parameterization.
+    pub fn parse(s: &str) -> Result<FleetScenario> {
+        match s {
+            "poisson" | "homogeneous" => Ok(FleetScenario::Poisson),
+            "diurnal" | "sine" => {
+                Ok(FleetScenario::Diurnal { period_ms: 30_000.0, amplitude: 0.8 })
+            }
+            "burst" => Ok(FleetScenario::Burst { period_ms: 10_000.0, size: 20 }),
+            "churn" => Ok(FleetScenario::Churn { on_ms: 10_000.0, off_ms: 5_000.0 }),
+            _ => bail!("unknown scenario `{s}` (poisson | diurnal | burst | churn)"),
+        }
+    }
+
+    /// Short human-readable label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            FleetScenario::Poisson => "poisson".to_string(),
+            FleetScenario::Diurnal { period_ms, amplitude } => {
+                format!("diurnal(period {:.0}s, amp {amplitude})", period_ms / 1000.0)
+            }
+            FleetScenario::Burst { period_ms, size } => {
+                format!("burst({size} every {:.0}s)", period_ms / 1000.0)
+            }
+            FleetScenario::Churn { on_ms, off_ms } => {
+                format!("churn({:.0}s on / {:.0}s off)", on_ms / 1000.0, off_ms / 1000.0)
+            }
+        }
+    }
+}
+
+/// Settings for one fleet simulation.
+#[derive(Debug, Clone)]
+pub struct FleetSettings {
+    /// number of edge devices
+    pub devices: usize,
+    pub scenario: FleetScenario,
+    /// virtual length of the arrival window (ms); executions may finish later
+    pub duration_ms: f64,
+    /// worker shard (thread) count — results are identical for any value
+    pub shards: usize,
+    /// epoch length for the shared-pool barrier merge (ms)
+    pub epoch_ms: f64,
+    pub seed: u64,
+    /// placement objective applied on every device
+    pub objective: Objective,
+    /// (app, weight) mix devices are drawn from
+    pub app_mix: Vec<(String, f64)>,
+    /// multiplier on every device's app arrival rate
+    pub rate_mult: f64,
+    /// lognormal σ of per-device edge compute speed (0 = homogeneous fleet)
+    pub compute_jitter_sigma: f64,
+    /// lognormal σ of per-device uplink speed
+    pub network_jitter_sigma: f64,
+}
+
+impl FleetSettings {
+    /// Defaults: the mixed ir/fd/stt diurnal scenario the fleet CLI runs.
+    pub fn new(devices: usize) -> Self {
+        FleetSettings {
+            devices,
+            scenario: FleetScenario::Diurnal { period_ms: 30_000.0, amplitude: 0.8 },
+            duration_ms: 30_000.0,
+            shards: 4,
+            epoch_ms: 5_000.0,
+            seed: 2020,
+            objective: Objective::LatencyMin,
+            app_mix: vec![
+                ("ir".to_string(), 0.4),
+                ("fd".to_string(), 0.4),
+                ("stt".to_string(), 0.2),
+            ],
+            rate_mult: 1.0,
+            compute_jitter_sigma: 0.15,
+            network_jitter_sigma: 0.25,
+        }
+    }
+
+    pub fn with_scenario(mut self, s: FleetScenario) -> Self {
+        self.scenario = s;
+        self
+    }
+
+    pub fn with_duration_ms(mut self, d: f64) -> Self {
+        self.duration_ms = d;
+        self
+    }
+
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
+    pub fn with_epoch_ms(mut self, e: f64) -> Self {
+        self.epoch_ms = e;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_objective(mut self, o: Objective) -> Self {
+        self.objective = o;
+        self
+    }
+
+    pub fn with_app_mix(mut self, mix: Vec<(String, f64)>) -> Self {
+        self.app_mix = mix;
+        self
+    }
+
+    pub fn with_rate_mult(mut self, m: f64) -> Self {
+        self.rate_mult = m;
+        self
+    }
+
+    pub fn with_jitter(mut self, compute_sigma: f64, network_sigma: f64) -> Self {
+        self.compute_jitter_sigma = compute_sigma;
+        self.network_jitter_sigma = network_sigma;
+        self
+    }
+
+    /// Parse an app mix like `"ir:0.4,fd:0.4,stt:0.2"`.
+    pub fn parse_app_mix(s: &str) -> Result<Vec<(String, f64)>> {
+        let mut mix = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((app, w)) = part.split_once(':') else {
+                bail!("bad app-mix entry `{part}` (want app:weight)");
+            };
+            let w: f64 = w
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad weight in app-mix entry `{part}`"))?;
+            if w < 0.0 {
+                bail!("negative weight in app-mix entry `{part}`");
+            }
+            mix.push((app.trim().to_string(), w));
+        }
+        if mix.is_empty() || mix.iter().all(|(_, w)| *w == 0.0) {
+            bail!("empty app mix");
+        }
+        Ok(mix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_parse_and_label() {
+        assert_eq!(FleetScenario::parse("poisson").unwrap(), FleetScenario::Poisson);
+        assert!(matches!(
+            FleetScenario::parse("diurnal").unwrap(),
+            FleetScenario::Diurnal { .. }
+        ));
+        assert!(matches!(FleetScenario::parse("burst").unwrap(), FleetScenario::Burst { .. }));
+        assert!(matches!(FleetScenario::parse("churn").unwrap(), FleetScenario::Churn { .. }));
+        assert!(FleetScenario::parse("nope").is_err());
+        assert!(FleetScenario::Poisson.label().contains("poisson"));
+    }
+
+    #[test]
+    fn app_mix_parses() {
+        let mix = FleetSettings::parse_app_mix("ir:0.4, fd:0.4,stt:0.2").unwrap();
+        assert_eq!(mix.len(), 3);
+        assert_eq!(mix[0], ("ir".to_string(), 0.4));
+        assert!(FleetSettings::parse_app_mix("ir").is_err());
+        assert!(FleetSettings::parse_app_mix("ir:x").is_err());
+        assert!(FleetSettings::parse_app_mix("").is_err());
+        assert!(FleetSettings::parse_app_mix("ir:0").is_err());
+    }
+
+    #[test]
+    fn defaults_are_the_acceptance_scenario() {
+        let fs = FleetSettings::new(1000);
+        assert_eq!(fs.devices, 1000);
+        assert!(matches!(fs.scenario, FleetScenario::Diurnal { .. }));
+        assert_eq!(fs.app_mix.len(), 3, "mixed ir/fd/stt by default");
+        assert!(fs.shards >= 1);
+    }
+
+    #[test]
+    fn builder_chain() {
+        let fs = FleetSettings::new(8)
+            .with_shards(2)
+            .with_seed(7)
+            .with_scenario(FleetScenario::Poisson)
+            .with_rate_mult(0.5);
+        assert_eq!(fs.shards, 2);
+        assert_eq!(fs.seed, 7);
+        assert_eq!(fs.scenario, FleetScenario::Poisson);
+        assert_eq!(fs.rate_mult, 0.5);
+    }
+}

@@ -6,8 +6,10 @@
 //! native mirror backend), ground-truth generative parameters (for the Rust
 //! workload generator) and per-app experiment constants.
 
+mod fleet;
 mod settings;
 
+pub use fleet::{FleetScenario, FleetSettings};
 pub use settings::{ExperimentSettings, Objective, PredictorBackendKind};
 
 use std::collections::BTreeMap;

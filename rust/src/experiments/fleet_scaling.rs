@@ -1,0 +1,72 @@
+//! Fleet scaling: how placement quality, warm-pool behaviour, and cost move
+//! as device count grows while the regional container pools stay shared.
+//!
+//! This is the experiment the paper could not run with one device: at small
+//! fleets every device's CIL tracks "its" containers well; at large fleets
+//! the pools are kept warm by *other* devices, so actual warm rates rise
+//! while per-device CIL beliefs drift — visible in the mismatch column.
+
+use anyhow::Result;
+
+use crate::config::{FleetSettings, Meta};
+use crate::fleet;
+
+use super::render;
+
+/// Device counts swept by the table.
+pub const DEVICE_SWEEP: [usize; 4] = [1, 10, 100, 1000];
+
+pub fn table(meta: &Meta) -> Result<String> {
+    let mut out = String::from(
+        "## Fleet scaling — shared regional pools under multi-device load \
+         (diurnal ir/fd/stt mix, 20 virtual s, seed 2020)\n\n",
+    );
+    let mut t = render::Table::new(&[
+        "devices", "tasks", "edge %", "p50 s", "p95 s", "p99 s", "viol %",
+        "total $", "warm %", "mismatch %", "max pool",
+    ]);
+    let mut csv = String::from(
+        "devices,tasks,edge_pct,p50_s,p95_s,p99_s,viol_pct,total_cost,\
+         warm_pct,mismatch_pct,max_pool\n",
+    );
+    for devices in DEVICE_SWEEP {
+        let fs = FleetSettings::new(devices).with_duration_ms(20_000.0).with_seed(2020);
+        let o = fleet::run(meta, &fs)?;
+        let s = &o.summary;
+        let cloud = s.cloud_count.max(1) as f64;
+        let edge_pct = s.edge_count as f64 / s.n_tasks.max(1) as f64 * 100.0;
+        let warm_pct = s.cloud_actual_warm as f64 / cloud * 100.0;
+        let mismatch_pct = s.warm_cold_mismatches as f64 / cloud * 100.0;
+        t.row(vec![
+            devices.to_string(),
+            s.n_tasks.to_string(),
+            render::f(edge_pct, 1),
+            render::f(s.latency.p50 / 1e3, 3),
+            render::f(s.latency.p95 / 1e3, 3),
+            render::f(s.latency.p99 / 1e3, 3),
+            render::f(s.deadline_violation_pct, 2),
+            format!("{:.6}", s.total_actual_cost),
+            render::f(warm_pct, 1),
+            render::f(mismatch_pct, 1),
+            s.max_pool_high_water.to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{:.2},{:.4},{:.4},{:.4},{:.3},{:.8},{:.2},{:.2},{}\n",
+            devices,
+            s.n_tasks,
+            edge_pct,
+            s.latency.p50 / 1e3,
+            s.latency.p95 / 1e3,
+            s.latency.p99 / 1e3,
+            s.deadline_violation_pct,
+            s.total_actual_cost,
+            warm_pct,
+            mismatch_pct,
+            s.max_pool_high_water,
+        ));
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+    super::write_result("fleet_scaling.csv", &csv)?;
+    Ok(out)
+}

@@ -8,6 +8,7 @@
 pub mod ablate;
 pub mod baselines;
 pub mod configsel;
+pub mod fleet_scaling;
 pub mod live_table;
 pub mod model_tables;
 pub mod placement_tables;
@@ -127,6 +128,7 @@ fn render_experiment(meta: &Meta, id: &str, xla: bool) -> Result<String> {
         "tidl" => tidl::probe(meta)?,
         "configsel" => configsel::discover(meta)?,
         "ablations" => ablate::all(meta, xla)?,
+        "fleet_scaling" => fleet_scaling::table(meta)?,
         _ => bail!("unknown experiment id `{id}`"),
     };
     Ok(out)
@@ -136,6 +138,7 @@ fn render_experiment(meta: &Meta, id: &str, xla: bool) -> Result<String> {
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "table2", "fig3", "fig4", "table3", "fig5", "table4", "fig6",
     "table5", "edgeonly", "baselines", "tidl", "configsel", "ablations",
+    "fleet_scaling",
 ];
 
 #[cfg(test)]

@@ -1,0 +1,351 @@
+//! Per-device state machine: the reusable stepper extracted from the
+//! single-device simulator's `place_and_execute`.
+//!
+//! A [`Device`] owns everything that is private to one edge device —
+//! Predictor + CIL, Decision Engine, edge Executor FIFO, and the device's
+//! ground-truth sampling stream — and exposes one operation, [`Device::ingest`]:
+//! take an arriving task, predict, decide, update the CIL, and either
+//! execute on the local edge queue (returning a finished [`TaskRecord`]) or
+//! emit a [`CloudRequest`] to be applied against the *shared* regional
+//! container pools at upload-trigger time.
+//!
+//! Splitting cloud execution out of the stepper is what makes the fleet
+//! simulator shardable: nothing in `ingest` reads shared state (the CIL is
+//! the device's private *belief* about the pools), so N devices can step in
+//! parallel while the coordinator applies their `CloudRequest`s to the
+//! shared [`CloudPlatform`] in one canonical order. The single-device
+//! simulator (`crate::sim::run`) drives the same stepper, which is what the
+//! fleet-equivalence tests pin down.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ExperimentSettings, Meta};
+use crate::engine::DecisionEngine;
+use crate::metrics::TaskRecord;
+use crate::platform::containers::StartKind;
+use crate::platform::greengrass::EdgeExecutor;
+use crate::platform::lambda::{CloudExecution, CloudPlatform};
+use crate::platform::latency::GroundTruthSampler;
+use crate::platform::pricing::aws_pricing;
+use crate::predictor::{Placement, Predictor};
+use crate::workload::Task;
+
+/// Static description of one edge device in a fleet.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    /// fleet-wide device index (also the canonical merge tiebreak)
+    pub id: usize,
+    /// application this device runs (ir | fd | stt)
+    pub app: String,
+    /// edge compute speed multiplier (1.0 = the paper's reference device)
+    pub compute_mult: f64,
+    /// uplink speed multiplier applied to upload components
+    pub network_mult: f64,
+    /// seed of the device's ground-truth sampling stream (T_idl draws)
+    pub gt_seed: u64,
+}
+
+impl DeviceProfile {
+    /// A reference device identical to the paper's single-device setup.
+    pub fn uniform(id: usize, app: &str, gt_seed: u64) -> Self {
+        DeviceProfile {
+            id,
+            app: app.to_string(),
+            compute_mult: 1.0,
+            network_mult: 1.0,
+            gt_seed,
+        }
+    }
+}
+
+/// Decision-time fields shared by both placement outcomes.
+#[derive(Debug, Clone, Copy)]
+struct DecisionFields {
+    predicted_e2e_ms: f64,
+    predicted_cost: f64,
+    allowed_cost: f64,
+    feasible_found: bool,
+}
+
+/// A finished edge execution plus the event times the caller may want to
+/// schedule (executor drain, result persistence).
+#[derive(Debug, Clone)]
+pub struct EdgeOutcome {
+    pub record: TaskRecord,
+    /// when the Executor finishes this task's compute (drain event)
+    pub comp_end_ms: f64,
+    /// when the results are persisted (IoT → S3)
+    pub stored_ms: f64,
+}
+
+/// A cloud placement waiting to be applied to the shared container pools.
+///
+/// Everything the platform needs is captured at decision time — including
+/// the device's T_idl draw, so the device stream stays self-contained and
+/// the request can be replayed against the pools in any merge schedule.
+#[derive(Debug, Clone)]
+pub struct CloudRequest {
+    pub device_id: usize,
+    /// per-device monotone sequence number (canonical merge tiebreak)
+    pub seq: u64,
+    /// task id within the device's workload
+    pub task_id: usize,
+    /// chosen cloud configuration index
+    pub j: usize,
+    pub arrive_ms: f64,
+    /// arrive + upload: the instant the function fires against the pool
+    pub trigger_ms: f64,
+    pub upld_ms: f64,
+    pub comp_ms: f64,
+    pub start_w_ms: f64,
+    pub start_c_ms: f64,
+    pub store_ms: f64,
+    pub tidl_ms: f64,
+    pub mem_mb: f64,
+    pub warm_predicted: bool,
+    fields: DecisionFields,
+}
+
+/// What one arrival produced: a finished edge record or a pending cloud
+/// request.
+#[derive(Debug, Clone)]
+pub enum Dispatch {
+    Edge(EdgeOutcome),
+    Cloud(CloudRequest),
+}
+
+/// One edge device's complete private state.
+pub struct Device<'a> {
+    pub profile: DeviceProfile,
+    pub predictor: Predictor,
+    pub engine: DecisionEngine,
+    pub edge: EdgeExecutor,
+    /// cold-start / T_idl sampling stream, private to this device
+    gt: GroundTruthSampler<'a>,
+    /// peak edge FIFO length observed on this device
+    pub peak_edge_queue: usize,
+    seq: u64,
+}
+
+impl<'a> Device<'a> {
+    /// Build a device from experiment settings, mirroring the construction
+    /// in the single-device simulator (same CIL belief override, same
+    /// engine constants, same T_idl stream layout).
+    pub fn new(
+        meta: &'a Meta,
+        settings: &ExperimentSettings,
+        profile: DeviceProfile,
+    ) -> Result<Device<'a>> {
+        let app = meta.app(&profile.app).clone();
+        let mut predictor = Predictor::with_backend_kind(meta, &app, settings.backend)?;
+        if let Some(tidl) = settings.tidl_belief_ms {
+            predictor.cil =
+                crate::predictor::cil::Cil::new(meta.memory_configs_mb.len(), tidl);
+        }
+        let config_idxs: Vec<usize> = settings
+            .config_set
+            .iter()
+            .map(|&mem| {
+                meta.config_index(mem).ok_or_else(|| {
+                    anyhow!("{mem} MB is not one of the {} configurations",
+                            meta.memory_configs_mb.len())
+                })
+            })
+            .collect::<Result<_>>()?;
+        let engine = DecisionEngine::new(
+            settings.objective,
+            config_idxs,
+            settings.deadline_ms.unwrap_or(app.deadline_ms),
+            settings.cmax.unwrap_or(app.cmax),
+            settings.alpha.unwrap_or(app.alpha),
+        )
+        .with_risk_factor(settings.risk_factor);
+        let gt = GroundTruthSampler::new(meta, &profile.app, profile.gt_seed);
+        Ok(Device {
+            profile,
+            predictor,
+            engine,
+            edge: EdgeExecutor::new(),
+            gt,
+            peak_edge_queue: 0,
+            seq: 0,
+        })
+    }
+
+    /// Handle one arrival: predict → decide → updateCIL → dispatch.
+    ///
+    /// Edge placements execute immediately on the device's private FIFO and
+    /// return a complete record; cloud placements return a [`CloudRequest`]
+    /// the caller must apply to the shared pools (see [`execute_cloud`] /
+    /// [`complete_cloud`]).
+    pub fn ingest(&mut self, task: &Task, now: f64) -> Result<Dispatch> {
+        let a = &task.actuals;
+        let pred = self.predictor.predict(a.size, now)?;
+        let decision = self.engine.decide(&pred, self.edge.predicted_wait(now));
+        self.predictor.update_cil(decision.placement, &pred, now);
+        let fields = DecisionFields {
+            predicted_e2e_ms: decision.predicted_e2e_ms,
+            predicted_cost: decision.predicted_cost,
+            allowed_cost: decision.allowed_cost,
+            feasible_found: decision.feasible_found,
+        };
+
+        match decision.placement {
+            Placement::Edge => {
+                let (wait, _start, comp_end) =
+                    self.edge.submit(now, a.edge_comp, pred.edge_comp_ms);
+                self.peak_edge_queue = self.peak_edge_queue.max(self.edge.queue_len());
+                let stored = comp_end + a.iotup + a.edge_store;
+                Ok(Dispatch::Edge(EdgeOutcome {
+                    record: TaskRecord {
+                        id: task.id,
+                        arrive_ms: now,
+                        placement: decision.placement,
+                        predicted_e2e_ms: fields.predicted_e2e_ms,
+                        actual_e2e_ms: stored - now,
+                        predicted_cost: fields.predicted_cost,
+                        actual_cost: 0.0,
+                        allowed_cost: fields.allowed_cost,
+                        feasible_found: fields.feasible_found,
+                        warm_predicted: None,
+                        warm_actual: None,
+                        edge_wait_ms: wait,
+                    },
+                    comp_end_ms: comp_end,
+                    stored_ms: stored,
+                }))
+            }
+            Placement::Cloud(j) => {
+                let tidl = self.gt.sample_tidl();
+                let seq = self.seq;
+                self.seq += 1;
+                Ok(Dispatch::Cloud(CloudRequest {
+                    device_id: self.profile.id,
+                    seq,
+                    task_id: task.id,
+                    j,
+                    arrive_ms: now,
+                    trigger_ms: now + a.upld,
+                    upld_ms: a.upld,
+                    comp_ms: a.comp[j],
+                    start_w_ms: a.start_w,
+                    start_c_ms: a.start_c,
+                    store_ms: a.store,
+                    tidl_ms: tidl,
+                    mem_mb: self.predictor.mems[j],
+                    warm_predicted: pred.cloud[j].warm,
+                    fields,
+                }))
+            }
+        }
+    }
+}
+
+/// Apply a pending cloud request to the (shared) platform pools.
+pub fn execute_cloud(req: &CloudRequest, cloud: &mut CloudPlatform) -> CloudExecution {
+    cloud.execute(
+        req.j,
+        req.arrive_ms,
+        req.upld_ms,
+        req.comp_ms,
+        req.start_w_ms,
+        req.start_c_ms,
+        req.store_ms,
+        req.tidl_ms,
+    )
+}
+
+/// Assemble the task record for an applied cloud request. The actual billed
+/// cost comes from the actual compute duration through AWS pricing.
+pub fn complete_cloud(req: &CloudRequest, exec: &CloudExecution) -> TaskRecord {
+    TaskRecord {
+        id: req.task_id,
+        arrive_ms: req.arrive_ms,
+        placement: Placement::Cloud(req.j),
+        predicted_e2e_ms: req.fields.predicted_e2e_ms,
+        actual_e2e_ms: exec.stored_at - req.arrive_ms,
+        predicted_cost: req.fields.predicted_cost,
+        actual_cost: aws_pricing().cost(req.comp_ms, req.mem_mb),
+        allowed_cost: req.fields.allowed_cost,
+        feasible_found: req.fields.feasible_found,
+        warm_predicted: Some(req.warm_predicted),
+        warm_actual: Some(exec.kind == StartKind::Warm),
+        edge_wait_ms: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_artifact_dir, Objective};
+    use crate::workload::build_workload;
+
+    fn meta() -> Meta {
+        Meta::load(&default_artifact_dir()).unwrap()
+    }
+
+    #[test]
+    fn ingest_dispatches_both_ways() {
+        // FD latency-min sends heavy inputs to the cloud and (with a tiny
+        // budget) light ones to the edge; both dispatch arms must fire over
+        // a replay prefix.
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0]);
+        let tasks = build_workload(&meta, "fd", 100, true, s.seed).unwrap();
+        let mut dev = Device::new(
+            &meta,
+            &s,
+            DeviceProfile::uniform(0, "fd", s.seed ^ crate::fleet::scenario::TIDL_SALT),
+        )
+        .unwrap();
+        let mut edge = 0usize;
+        let mut cloud = 0usize;
+        for t in &tasks {
+            match dev.ingest(t, t.arrive_ms).unwrap() {
+                Dispatch::Edge(e) => {
+                    edge += 1;
+                    assert!(e.record.actual_e2e_ms > 0.0);
+                    assert!(e.stored_ms >= e.comp_end_ms);
+                }
+                Dispatch::Cloud(req) => {
+                    cloud += 1;
+                    assert!(req.trigger_ms > req.arrive_ms);
+                    assert!(req.tidl_ms >= 60_000.0);
+                    assert_eq!(req.seq as usize, cloud - 1, "seq counts cloud requests");
+                }
+            }
+        }
+        assert_eq!(edge + cloud, 100);
+        assert!(cloud > 0, "FD latency-min must use the cloud");
+    }
+
+    #[test]
+    fn cloud_request_roundtrip_matches_platform_math() {
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0]);
+        let tasks = build_workload(&meta, "fd", 20, true, s.seed).unwrap();
+        let mut dev =
+            Device::new(&meta, &s, DeviceProfile::uniform(0, "fd", 99)).unwrap();
+        let mut pools = CloudPlatform::new(meta.memory_configs_mb.len());
+        for t in &tasks {
+            if let Dispatch::Cloud(req) = dev.ingest(t, t.arrive_ms).unwrap() {
+                let exec = execute_cloud(&req, &mut pools);
+                let rec = complete_cloud(&req, &exec);
+                // e2e decomposition: upld + start + comp + store
+                let want = req.upld_ms + exec.start_ms + req.comp_ms + req.store_ms;
+                assert!((rec.actual_e2e_ms - want).abs() < 1e-9);
+                assert!(rec.actual_cost > 0.0);
+                assert_eq!(rec.id, t.id);
+            }
+        }
+        assert!(pools.cold_total() >= 1);
+    }
+
+    #[test]
+    fn profile_multipliers_are_plain_data() {
+        let p = DeviceProfile::uniform(3, "ir", 42);
+        assert_eq!(p.id, 3);
+        assert_eq!(p.compute_mult, 1.0);
+        assert_eq!(p.network_mult, 1.0);
+    }
+}

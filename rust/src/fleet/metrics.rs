@@ -1,0 +1,247 @@
+//! Fleet-level aggregation: per-device and fleet-wide latency percentiles,
+//! deadline-violation rates, pool-pressure high-water marks, aggregate cost,
+//! and a record-level fingerprint that pins down determinism across runs
+//! and shard counts.
+
+use crate::metrics::TaskRecord;
+use crate::predictor::Placement;
+use crate::util::stats;
+
+/// p50 / p95 / p99 of a latency distribution (ms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyPercentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Compute tail percentiles with a single sort (the fleet produces
+/// hundreds of thousands of samples; three independent sorts would triple
+/// the aggregation cost).
+pub fn latency_percentiles(xs: &[f64]) -> LatencyPercentiles {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    LatencyPercentiles {
+        p50: stats::percentile_sorted(&v, 50.0),
+        p95: stats::percentile_sorted(&v, 95.0),
+        p99: stats::percentile_sorted(&v, 99.0),
+    }
+}
+
+/// One device's aggregated outcome.
+#[derive(Debug, Clone)]
+pub struct DeviceSummary {
+    pub device: usize,
+    pub app: String,
+    pub n: usize,
+    pub edge_count: usize,
+    pub cloud_count: usize,
+    pub latency: LatencyPercentiles,
+    pub deadline_violation_pct: f64,
+    pub actual_cost: f64,
+}
+
+impl DeviceSummary {
+    pub fn from_records(
+        device: usize,
+        app: &str,
+        deadline_ms: f64,
+        records: &[TaskRecord],
+    ) -> DeviceSummary {
+        let e2e: Vec<f64> = records.iter().map(|r| r.actual_e2e_ms).collect();
+        let (viol_pct, _) = crate::metrics::deadline_violations(records, deadline_ms);
+        DeviceSummary {
+            device,
+            app: app.to_string(),
+            n: records.len(),
+            edge_count: records.iter().filter(|r| r.is_edge()).count(),
+            cloud_count: records.iter().filter(|r| !r.is_edge()).count(),
+            latency: latency_percentiles(&e2e),
+            deadline_violation_pct: viol_pct,
+            actual_cost: records.iter().map(|r| r.actual_cost).sum(),
+        }
+    }
+}
+
+/// Fleet-wide aggregated outcome — one per fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub n_devices: usize,
+    pub n_tasks: usize,
+    pub edge_count: usize,
+    pub cloud_count: usize,
+    pub avg_e2e_ms: f64,
+    pub latency: LatencyPercentiles,
+    /// share of tasks exceeding their *own device's* deadline (%; devices
+    /// run different apps with different δ)
+    pub deadline_violation_pct: f64,
+    pub total_actual_cost: f64,
+    pub total_predicted_cost: f64,
+    pub cloud_actual_warm: usize,
+    pub cloud_actual_cold: usize,
+    pub warm_cold_mismatches: usize,
+    /// per-configuration peak live container count in the shared pools
+    pub pool_high_water: Vec<usize>,
+    pub max_pool_high_water: usize,
+    /// deepest edge FIFO observed on any device
+    pub peak_edge_queue: usize,
+    /// order-sensitive digest of every record (placement, latency, cost,
+    /// warm/cold); equal fingerprints ⇒ bit-identical fleet outcomes
+    pub fingerprint: u64,
+}
+
+impl FleetSummary {
+    /// Aggregate per-device record vectors (canonical device order).
+    /// `deadlines[d]` is device d's effective deadline δ.
+    pub fn build(
+        records: &[Vec<TaskRecord>],
+        deadlines: &[f64],
+        pool_high_water: Vec<usize>,
+        peak_edge_queue: usize,
+    ) -> FleetSummary {
+        assert_eq!(records.len(), deadlines.len());
+        let mut e2e = Vec::new();
+        let mut edge_count = 0;
+        let mut cloud_count = 0;
+        let mut violations = 0usize;
+        let mut total_actual_cost = 0.0;
+        let mut total_predicted_cost = 0.0;
+        let mut warm = 0;
+        let mut cold = 0;
+        let mut mismatches = 0;
+        let mut h = FNV_OFFSET;
+        for (recs, &deadline) in records.iter().zip(deadlines) {
+            for r in recs {
+                e2e.push(r.actual_e2e_ms);
+                if r.is_edge() {
+                    edge_count += 1;
+                } else {
+                    cloud_count += 1;
+                }
+                if r.actual_e2e_ms > deadline {
+                    violations += 1;
+                }
+                total_actual_cost += r.actual_cost;
+                total_predicted_cost += r.predicted_cost;
+                match r.warm_actual {
+                    Some(true) => warm += 1,
+                    Some(false) => cold += 1,
+                    None => {}
+                }
+                if r.warm_cold_mismatch() {
+                    mismatches += 1;
+                }
+                h = fold_record(h, r);
+            }
+        }
+        let n_tasks = e2e.len();
+        FleetSummary {
+            n_devices: records.len(),
+            n_tasks,
+            edge_count,
+            cloud_count,
+            avg_e2e_ms: stats::mean(&e2e),
+            latency: latency_percentiles(&e2e),
+            deadline_violation_pct: violations as f64 / n_tasks.max(1) as f64 * 100.0,
+            total_actual_cost,
+            total_predicted_cost,
+            cloud_actual_warm: warm,
+            cloud_actual_cold: cold,
+            warm_cold_mismatches: mismatches,
+            max_pool_high_water: pool_high_water.iter().copied().max().unwrap_or(0),
+            pool_high_water,
+            peak_edge_queue,
+            fingerprint: h,
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+fn fold_record(h: u64, r: &TaskRecord) -> u64 {
+    let place = match r.placement {
+        Placement::Edge => 0u64,
+        Placement::Cloud(j) => 1 + j as u64,
+    };
+    let warm = match r.warm_actual {
+        None => 0u64,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    let mut h = mix(h, place);
+    h = mix(h, r.actual_e2e_ms.to_bits());
+    h = mix(h, r.actual_cost.to_bits());
+    mix(h, warm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(e2e: f64, cost: f64, edge: bool, warm: Option<bool>) -> TaskRecord {
+        TaskRecord {
+            id: 0,
+            arrive_ms: 0.0,
+            placement: if edge { Placement::Edge } else { Placement::Cloud(2) },
+            predicted_e2e_ms: e2e,
+            actual_e2e_ms: e2e,
+            predicted_cost: cost,
+            actual_cost: cost,
+            allowed_cost: f64::INFINITY,
+            feasible_found: true,
+            warm_predicted: warm,
+            warm_actual: warm,
+            edge_wait_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn percentiles_ordered_and_exact_on_known_data() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = latency_percentiles(&xs);
+        assert!((p.p50 - 50.5).abs() < 1e-9);
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
+        assert!((p.p99 - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_summary_totals() {
+        let dev0 = vec![rec(1000.0, 0.0, true, None), rec(3000.0, 2e-6, false, Some(true))];
+        let dev1 = vec![rec(9000.0, 3e-6, false, Some(false))];
+        let s = FleetSummary::build(&[dev0, dev1], &[4000.0, 4000.0], vec![0, 3, 1], 5);
+        assert_eq!(s.n_devices, 2);
+        assert_eq!(s.n_tasks, 3);
+        assert_eq!(s.edge_count, 1);
+        assert_eq!(s.cloud_count, 2);
+        assert_eq!(s.cloud_actual_warm, 1);
+        assert_eq!(s.cloud_actual_cold, 1);
+        assert!((s.deadline_violation_pct - 100.0 / 3.0).abs() < 1e-9);
+        assert!((s.total_actual_cost - 5e-6).abs() < 1e-18);
+        assert_eq!(s.max_pool_high_water, 3);
+        assert_eq!(s.peak_edge_queue, 5);
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_value_sensitive() {
+        let a = vec![rec(1000.0, 1e-6, false, Some(true)), rec(2000.0, 2e-6, false, Some(false))];
+        let b = vec![rec(2000.0, 2e-6, false, Some(false)), rec(1000.0, 1e-6, false, Some(true))];
+        let sa = FleetSummary::build(&[a.clone()], &[1e9], vec![], 0);
+        let sb = FleetSummary::build(&[b], &[1e9], vec![], 0);
+        let sa2 = FleetSummary::build(&[a], &[1e9], vec![], 0);
+        assert_ne!(sa.fingerprint, sb.fingerprint, "order must matter");
+        assert_eq!(sa.fingerprint, sa2.fingerprint, "same records, same digest");
+    }
+
+    #[test]
+    fn empty_fleet_is_safe() {
+        let s = FleetSummary::build(&[], &[], vec![], 0);
+        assert_eq!(s.n_tasks, 0);
+        assert_eq!(s.deadline_violation_pct, 0.0);
+        assert_eq!(s.max_pool_high_water, 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Fleet-scale multi-device simulation: N heterogeneous edge devices — each
+//! with its own Predictor + CIL, Decision Engine, edge Executor, workload
+//! stream, and device profile — contending for *shared* regional
+//! [`CloudPlatform`](crate::platform::lambda::CloudPlatform) container
+//! pools.
+//!
+//! The paper evaluates one smart device feeding one Lambda region; this
+//! subsystem asks the same placement question at fleet scale: what happens
+//! to placement quality, warm-pool hit rates, and cost when a thousand
+//! devices share the same pools? One device's cloud placements warm
+//! containers that other devices' CILs know nothing about, so warm/cold
+//! misprediction becomes a fleet-level phenomenon rather than a per-device
+//! modelling error.
+//!
+//! Layout:
+//!  * [`device`] — the per-device state machine (refactored out of
+//!    `sim::place_and_execute`; the single-device simulator drives the
+//!    same stepper),
+//!  * [`scenario`] — workload generators: homogeneous Poisson, diurnal
+//!    sine, synchronized bursts, device churn — all seeded PCG32 streams,
+//!  * [`shard`] — devices partitioned across `std::thread` shards with
+//!    per-shard event queues and a deterministic epoch-barrier merge for
+//!    the shared pools (results are identical for any thread count),
+//!  * [`metrics`] — per-device and fleet-wide summaries: p50/p95/p99
+//!    latency, deadline-violation rate, pool-concurrency high-water marks,
+//!    aggregate cost, and a determinism fingerprint.
+
+pub mod device;
+pub mod metrics;
+pub mod scenario;
+pub mod shard;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentSettings, FleetSettings, Meta};
+use crate::metrics::TaskRecord;
+
+pub use device::{CloudRequest, Device, DeviceProfile, Dispatch};
+pub use metrics::{DeviceSummary, FleetSummary, LatencyPercentiles};
+pub use scenario::DeviceInit;
+
+/// Result of one fleet run.
+pub struct FleetOutcome {
+    /// per-device task records, devices in canonical order
+    pub records: Vec<Vec<TaskRecord>>,
+    pub device_summaries: Vec<DeviceSummary>,
+    pub summary: FleetSummary,
+    /// virtual time at which the last event fired
+    pub sim_end_ms: f64,
+}
+
+/// Build the fleet described by `fs` and run it to completion.
+pub fn run(meta: &Meta, fs: &FleetSettings) -> Result<FleetOutcome> {
+    let inits = scenario::build_fleet(meta, fs)?;
+    shard::run_fleet(meta, inits, fs.shards, fs.epoch_ms)
+}
+
+/// Run a 1-device fleet mirroring `sim::run(meta, settings)` through the
+/// sharded runner — the equivalence harness the fleet tests pin down.
+pub fn run_sim_equivalent(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+    n_shards: usize,
+) -> Result<FleetOutcome> {
+    let init = scenario::mirror_sim(meta, settings)?;
+    shard::run_fleet(meta, vec![init], n_shards, 5_000.0)
+}

@@ -1,0 +1,368 @@
+//! Fleet workload construction: heterogeneous device profiles plus
+//! per-device task streams for each [`FleetScenario`].
+//!
+//! Everything is derived from the fleet seed through fixed PCG32 stream
+//! ids, with one decorrelated sub-seed per device (splitmix64 of the fleet
+//! seed and the device index). Because every stream is per-device, the
+//! generated fleet is identical no matter how devices are later partitioned
+//! across shards — which is what makes the shard-count invariance tests
+//! possible.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ExperimentSettings, FleetScenario, FleetSettings, Meta, Objective};
+use crate::platform::latency::GroundTruthSampler;
+use crate::util::rng::Pcg32;
+use crate::workload::{arrivals::PoissonArrivals, build_workload, Task};
+
+use super::device::DeviceProfile;
+
+/// PCG stream id for fleet-level profile draws (app mix, speed jitter).
+const PROFILE_STREAM: u64 = 77;
+/// PCG stream id for diurnal thinning accept/reject draws.
+const THINNING_STREAM: u64 = 29;
+/// PCG stream id for churn phase offsets.
+const CHURN_STREAM: u64 = 31;
+/// XOR'd into a device's sub-seed for its actuals sampling stream.
+const ACTUALS_SALT: u64 = 0xACC;
+/// XOR'd into a device's sub-seed for its T_idl stream — the same salt the
+/// single-device simulator applies to its run seed, so a mirrored 1-device
+/// fleet reproduces `sim::run` draws exactly.
+pub const TIDL_SALT: u64 = 0x51D6E;
+
+/// Everything needed to instantiate and drive one device.
+#[derive(Debug, Clone)]
+pub struct DeviceInit {
+    pub settings: ExperimentSettings,
+    pub profile: DeviceProfile,
+    pub tasks: Vec<Task>,
+}
+
+/// Decorrelated per-device sub-seed (splitmix64 finalizer over the fleet
+/// seed plus a golden-ratio device stride).
+pub fn device_seed(fleet_seed: u64, device: usize) -> u64 {
+    let mut z = fleet_seed.wrapping_add((device as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Draw the fleet's device profiles from the settings' app mix and
+/// heterogeneity knobs (one sequential pass — canonical device order).
+pub fn build_profiles(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceProfile>> {
+    if fs.devices == 0 {
+        bail!("fleet needs at least one device");
+    }
+    for (app, w) in &fs.app_mix {
+        if !meta.apps.contains_key(app) {
+            bail!("unknown app `{app}` in fleet mix");
+        }
+        if *w < 0.0 {
+            bail!("negative weight for app `{app}`");
+        }
+    }
+    let total: f64 = fs.app_mix.iter().map(|(_, w)| w).sum();
+    if total <= 0.0 {
+        bail!("fleet app mix has zero total weight");
+    }
+    let mut rng = Pcg32::new(fs.seed, PROFILE_STREAM);
+    let mut profiles = Vec::with_capacity(fs.devices);
+    for id in 0..fs.devices {
+        let mut pick = rng.uniform() * total;
+        let mut app = fs.app_mix[fs.app_mix.len() - 1].0.clone();
+        for (a, w) in &fs.app_mix {
+            if pick < *w {
+                app = a.clone();
+                break;
+            }
+            pick -= w;
+        }
+        let compute_mult = rng.lognormal(0.0, fs.compute_jitter_sigma);
+        let network_mult = rng.lognormal(0.0, fs.network_jitter_sigma);
+        profiles.push(DeviceProfile {
+            id,
+            app,
+            compute_mult,
+            network_mult,
+            gt_seed: device_seed(fs.seed, id) ^ TIDL_SALT,
+        });
+    }
+    Ok(profiles)
+}
+
+/// Arrival times (ms) for one device under the fleet scenario.
+pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64) -> Vec<f64> {
+    let rate = rate_per_s * fs.rate_mult;
+    if fs.duration_ms <= 0.0 {
+        return Vec::new();
+    }
+    match fs.scenario {
+        FleetScenario::Poisson => poisson_times(rate, fs.duration_ms, dseed),
+        FleetScenario::Diurnal { period_ms, amplitude } => {
+            if rate <= 0.0 {
+                return Vec::new();
+            }
+            // Lewis–Shedler thinning of a homogeneous process at the peak
+            // rate; the sine phase is shared fleet-wide (synchronized
+            // daily cycle) so load crests hit the regional pools together.
+            let amp = amplitude.clamp(0.0, 1.0);
+            let rate_max = rate * (1.0 + amp);
+            let mut src = PoissonArrivals::new(rate_max, dseed);
+            let mut accept = Pcg32::new(dseed, THINNING_STREAM);
+            let mut out = Vec::new();
+            loop {
+                let t = src.next_arrival_ms();
+                if t >= fs.duration_ms {
+                    break;
+                }
+                let r = rate
+                    * (1.0 + amp * (2.0 * std::f64::consts::PI * t / period_ms.max(1.0)).sin());
+                if accept.uniform() * rate_max < r {
+                    out.push(t);
+                }
+            }
+            out
+        }
+        FleetScenario::Burst { period_ms, size } => {
+            // the synchronized spikes are rate-independent: rate 0 isolates
+            // pure-burst load
+            let mut out = poisson_times(rate, fs.duration_ms, dseed);
+            let period = period_ms.max(1.0);
+            let mut k = 1.0f64;
+            while k * period < fs.duration_ms {
+                for _ in 0..size {
+                    out.push(k * period);
+                }
+                k += 1.0;
+            }
+            out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            out
+        }
+        FleetScenario::Churn { on_ms, off_ms } => {
+            let cycle = (on_ms + off_ms).max(1.0);
+            let mut rng = Pcg32::new(dseed, CHURN_STREAM);
+            let offset = rng.uniform_range(0.0, cycle);
+            poisson_times(rate, fs.duration_ms, dseed)
+                .into_iter()
+                .filter(|t| (t + offset) % cycle < on_ms)
+                .collect()
+        }
+    }
+}
+
+fn poisson_times(rate_per_s: f64, duration_ms: f64, seed: u64) -> Vec<f64> {
+    if rate_per_s <= 0.0 {
+        return Vec::new();
+    }
+    let mut arr = PoissonArrivals::new(rate_per_s, seed);
+    let mut out = Vec::new();
+    loop {
+        let t = arr.next_arrival_ms();
+        if t >= duration_ms {
+            return out;
+        }
+        out.push(t);
+    }
+}
+
+/// Build the full fleet: profiles, per-device settings, and task streams
+/// with ground-truth actuals scaled by each device's speed multipliers.
+pub fn build_fleet(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceInit>> {
+    let profiles = build_profiles(meta, fs)?;
+    let mut inits = Vec::with_capacity(profiles.len());
+    for profile in profiles {
+        let app = meta.app(&profile.app);
+        let dseed = device_seed(fs.seed, profile.id);
+        let times = arrival_times(fs, app.arrival_rate_per_s, dseed);
+        let mut sampler = GroundTruthSampler::new(meta, &profile.app, dseed ^ ACTUALS_SALT);
+        let mut tasks = Vec::with_capacity(times.len());
+        for (id, t) in times.into_iter().enumerate() {
+            let mut actuals = sampler.sample_task();
+            // device heterogeneity: slower/faster local CPU and uplink
+            actuals.edge_comp *= profile.compute_mult;
+            actuals.upld *= profile.network_mult;
+            if actuals.iotup > 0.0 {
+                actuals.iotup *= profile.network_mult;
+            }
+            tasks.push(Task { id, arrive_ms: t, actuals });
+        }
+        let set = match fs.objective {
+            Objective::CostMin => crate::experiments::best_costmin_set(&profile.app),
+            Objective::LatencyMin => crate::experiments::best_latmin_set(&profile.app),
+        };
+        let settings = ExperimentSettings::new(&profile.app, fs.objective, &set)
+            .with_seed(dseed);
+        inits.push(DeviceInit { settings, profile, tasks });
+    }
+    Ok(inits)
+}
+
+/// A 1-device fleet that mirrors `sim::run(meta, settings)` exactly: same
+/// replay workload, same arrival stream, same T_idl stream. The
+/// fleet-equivalence tests run this through the sharded runner and compare
+/// records bit-for-bit with the single-device simulator.
+pub fn mirror_sim(meta: &Meta, settings: &ExperimentSettings) -> Result<DeviceInit> {
+    let app = meta.app(&settings.app);
+    let n = settings.n_inputs.unwrap_or(app.n_eval);
+    let tasks = build_workload(meta, &settings.app, n, settings.replay, settings.seed)?;
+    Ok(DeviceInit {
+        settings: settings.clone(),
+        profile: DeviceProfile::uniform(0, &settings.app, settings.seed ^ TIDL_SALT),
+        tasks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifact_dir;
+
+    fn meta() -> Meta {
+        Meta::load(&default_artifact_dir()).unwrap()
+    }
+
+    #[test]
+    fn profiles_deterministic_and_mixed() {
+        let meta = meta();
+        let fs = FleetSettings::new(200).with_seed(5);
+        let a = build_profiles(&meta, &fs).unwrap();
+        let b = build_profiles(&meta, &fs).unwrap();
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.app, y.app);
+            assert_eq!(x.compute_mult, y.compute_mult);
+            assert_eq!(x.gt_seed, y.gt_seed);
+        }
+        // all three apps appear in a 200-device draw at 0.4/0.4/0.2
+        for app in ["ir", "fd", "stt"] {
+            assert!(a.iter().any(|p| p.app == app), "{app} missing from mix");
+        }
+        // ids are canonical
+        for (i, p) in a.iter().enumerate() {
+            assert_eq!(p.id, i);
+        }
+    }
+
+    #[test]
+    fn unknown_app_in_mix_rejected() {
+        let meta = meta();
+        let fs = FleetSettings::new(4).with_app_mix(vec![("nope".to_string(), 1.0)]);
+        assert!(build_profiles(&meta, &fs).is_err());
+    }
+
+    #[test]
+    fn poisson_arrivals_bounded_and_sorted() {
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Poisson)
+            .with_duration_ms(20_000.0);
+        let times = arrival_times(&fs, 4.0, 99);
+        assert!(!times.is_empty());
+        assert!(times.iter().all(|&t| (0.0..20_000.0).contains(&t)));
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        // ~80 expected at 4/s over 20 s
+        assert!((30..160).contains(&times.len()), "{} arrivals", times.len());
+    }
+
+    #[test]
+    fn diurnal_modulates_rate_over_the_period() {
+        // with amplitude 1 the rate at the trough is 0: the half-period
+        // around the trough must be much quieter than the crest.
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Diurnal { period_ms: 40_000.0, amplitude: 1.0 })
+            .with_duration_ms(40_000.0);
+        let times = arrival_times(&fs, 8.0, 123);
+        let crest = times.iter().filter(|&&t| t < 20_000.0).count();
+        let trough = times.len() - crest;
+        assert!(
+            crest > 2 * trough,
+            "crest {crest} should dominate trough {trough}"
+        );
+    }
+
+    #[test]
+    fn burst_scenario_has_synchronized_spikes() {
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Burst { period_ms: 5_000.0, size: 10 })
+            .with_duration_ms(16_000.0);
+        let times = arrival_times(&fs, 1.0, 7);
+        for k in 1..=3 {
+            let at = (k as f64) * 5_000.0;
+            let spike = times.iter().filter(|&&t| t == at).count();
+            assert!(spike >= 10, "burst at {at} ms has {spike} arrivals");
+        }
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn burst_spikes_survive_zero_base_rate() {
+        // --rate-mult 0 isolates pure synchronized-burst load
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Burst { period_ms: 5_000.0, size: 7 })
+            .with_duration_ms(12_000.0)
+            .with_rate_mult(0.0);
+        let times = arrival_times(&fs, 4.0, 5);
+        assert_eq!(times.len(), 14, "two bursts of 7, no Poisson baseline");
+        assert!(times.iter().all(|&t| t == 5_000.0 || t == 10_000.0));
+    }
+
+    #[test]
+    fn churn_drops_off_windows() {
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Churn { on_ms: 5_000.0, off_ms: 5_000.0 })
+            .with_duration_ms(60_000.0);
+        let on = arrival_times(&fs, 4.0, 11);
+        let always = arrival_times(
+            &FleetSettings::new(1)
+                .with_scenario(FleetScenario::Poisson)
+                .with_duration_ms(60_000.0),
+            4.0,
+            11,
+        );
+        // 50% duty cycle drops roughly half the arrivals
+        assert!(on.len() < always.len());
+        assert!(on.len() * 3 > always.len(), "churn kept too few arrivals");
+    }
+
+    #[test]
+    fn build_fleet_scales_actuals_by_profile() {
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(3)
+            .with_duration_ms(5_000.0)
+            .with_jitter(0.5, 0.5); // large jitter so multipliers differ from 1
+        let inits = build_fleet(&meta, &fs).unwrap();
+        assert_eq!(inits.len(), 6);
+        for init in &inits {
+            assert_eq!(init.settings.app, init.profile.app);
+            for t in &init.tasks {
+                assert!(t.actuals.edge_comp > 0.0);
+                assert!(t.actuals.upld > 0.0);
+            }
+        }
+        // determinism end to end
+        let again = build_fleet(&meta, &fs).unwrap();
+        for (a, b) in inits.iter().zip(&again) {
+            assert_eq!(a.tasks.len(), b.tasks.len());
+            for (x, y) in a.tasks.iter().zip(&b.tasks) {
+                assert_eq!(x.arrive_ms, y.arrive_ms);
+                assert_eq!(x.actuals.edge_comp, y.actuals.edge_comp);
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_sim_is_the_paper_device() {
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::CostMin, &[1280.0, 1408.0, 1664.0])
+            .with_n_inputs(50);
+        let init = mirror_sim(&meta, &s).unwrap();
+        assert_eq!(init.tasks.len(), 50);
+        assert_eq!(init.profile.compute_mult, 1.0);
+        assert_eq!(init.profile.gt_seed, s.seed ^ TIDL_SALT);
+        let direct = build_workload(&meta, "fd", 50, true, s.seed).unwrap();
+        for (a, b) in init.tasks.iter().zip(&direct) {
+            assert_eq!(a.arrive_ms, b.arrive_ms);
+            assert_eq!(a.actuals.size, b.actuals.size);
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! Sharded fleet execution: devices partitioned across worker threads with
+//! per-shard event queues, synchronized by a deterministic epoch-barrier
+//! merge of the shared regional container pools.
+//!
+//! ## Why this is deterministic for any shard count
+//!
+//! Within an epoch `[t, t+Δ)` every device steps only *private* state
+//! (predictor + CIL, decision engine, edge FIFO, its own T_idl stream) — a
+//! cloud placement is emitted as a [`CloudRequest`] instead of touching the
+//! pools. At the barrier the coordinator applies all requests triggering
+//! before the epoch end to the shared [`CloudPlatform`] in one canonical
+//! order: `(trigger time, device id, per-device sequence)`. Requests
+//! triggering later stay pending. Since a future arrival can never trigger
+//! before the epoch end (`trigger = arrive + upload ≥ arrive`), the merge
+//! horizon is safe, and the outcome is a pure function of the fleet seed —
+//! the partition of devices onto threads never enters the math.
+//!
+//! The same property is what lets one device's placements warm containers
+//! that other devices' CILs know nothing about: warm-pool hit rates and
+//! CIL misprediction rates become fleet-level phenomena, which is the whole
+//! point of the subsystem.
+
+use std::cmp::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::Meta;
+use crate::metrics::TaskRecord;
+use crate::platform::lambda::CloudPlatform;
+use crate::sim::events::{Event, EventQueue};
+
+use super::device::{self, CloudRequest, Device, Dispatch};
+use super::metrics::{DeviceSummary, FleetSummary};
+use super::scenario::DeviceInit;
+use super::FleetOutcome;
+
+/// One device plus its run state inside a shard.
+struct DeviceRun<'a> {
+    device: Device<'a>,
+    tasks: Vec<crate::workload::Task>,
+    queue: EventQueue,
+    arrivals_left: usize,
+}
+
+impl<'a> DeviceRun<'a> {
+    /// Step this device's event queue up to (exclusive) `epoch_end`.
+    fn step_until(&mut self, epoch_end: f64, out: &mut EpochOutput) -> Result<()> {
+        while let Some((t, _)) = self.queue.peek() {
+            if t >= epoch_end {
+                break;
+            }
+            let (now, ev) = self.queue.pop().expect("peeked event present");
+            out.last_event_ms = out.last_event_ms.max(now);
+            match ev {
+                Event::Arrival { id } => {
+                    self.arrivals_left -= 1;
+                    match self.device.ingest(&self.tasks[id], now)? {
+                        Dispatch::Edge(e) => {
+                            self.queue.schedule(e.comp_end_ms, Event::EdgeCompDone { id });
+                            self.queue.schedule(e.stored_ms, Event::EdgeStored { id });
+                            out.edge_records.push((self.device.profile.id, e.record));
+                        }
+                        Dispatch::Cloud(req) => out.requests.push(req),
+                    }
+                }
+                Event::EdgeCompDone { .. } => self.device.edge.drain_one(),
+                // cloud triggers are merged centrally, never queued here;
+                // stored events only mark completion times
+                Event::CloudTrigger { .. }
+                | Event::CloudStored { .. }
+                | Event::EdgeStored { .. } => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What one shard reports back at an epoch barrier.
+struct EpochOutput {
+    edge_records: Vec<(usize, TaskRecord)>,
+    requests: Vec<CloudRequest>,
+    arrivals_left: usize,
+    events_left: usize,
+    peak_edge_queue: usize,
+    last_event_ms: f64,
+}
+
+impl EpochOutput {
+    fn new() -> Self {
+        EpochOutput {
+            edge_records: Vec::new(),
+            requests: Vec::new(),
+            arrivals_left: 0,
+            events_left: 0,
+            peak_edge_queue: 0,
+            last_event_ms: 0.0,
+        }
+    }
+}
+
+/// Worker body: build this shard's devices, then serve epoch commands until
+/// the command channel closes. Errors are reported through the result
+/// channel; the worker never panics on expected failure modes.
+fn worker_loop(
+    meta: &Meta,
+    inits: Vec<DeviceInit>,
+    commands: Receiver<f64>,
+    results: Sender<Result<EpochOutput, String>>,
+) {
+    let mut runs: Vec<DeviceRun> = Vec::with_capacity(inits.len());
+    for init in inits {
+        let dev_id = init.profile.id;
+        match Device::new(meta, &init.settings, init.profile) {
+            Ok(device) => {
+                let mut queue = EventQueue::new();
+                for t in &init.tasks {
+                    queue.schedule(t.arrive_ms, Event::Arrival { id: t.id });
+                }
+                let arrivals_left = init.tasks.len();
+                runs.push(DeviceRun { device, tasks: init.tasks, queue, arrivals_left });
+            }
+            Err(e) => {
+                let _ = results.send(Err(format!("building device {dev_id}: {e:#}")));
+                return;
+            }
+        }
+    }
+    while let Ok(epoch_end) = commands.recv() {
+        let mut out = EpochOutput::new();
+        for run in &mut runs {
+            if let Err(e) = run.step_until(epoch_end, &mut out) {
+                let _ = results
+                    .send(Err(format!("device {}: {e:#}", run.device.profile.id)));
+                return;
+            }
+        }
+        out.arrivals_left = runs.iter().map(|r| r.arrivals_left).sum();
+        out.events_left = runs.iter().map(|r| r.queue.len()).sum();
+        out.peak_edge_queue =
+            runs.iter().map(|r| r.device.peak_edge_queue).max().unwrap_or(0);
+        if results.send(Ok(out)).is_err() {
+            return; // coordinator gone
+        }
+    }
+}
+
+/// One barrier round: command every shard to step to `epoch_end`, then
+/// collect edge records and pending cloud requests from all of them.
+/// Returns (arrivals still queued, total events still queued).
+#[allow(clippy::too_many_arguments)]
+fn barrier(
+    cmd_txs: &[Sender<f64>],
+    res_rx: &Receiver<Result<EpochOutput, String>>,
+    epoch_end: f64,
+    records: &mut [Vec<Option<TaskRecord>>],
+    pending: &mut Vec<CloudRequest>,
+    peak_edge_queue: &mut usize,
+    sim_end: &mut f64,
+) -> Result<(usize, usize)> {
+    for tx in cmd_txs {
+        if tx.send(epoch_end).is_err() {
+            // the worker died before this epoch — surface its own report
+            // (e.g. a device build error) instead of the generic message
+            while let Ok(res) = res_rx.try_recv() {
+                if let Err(msg) = res {
+                    bail!("fleet shard failed: {msg}");
+                }
+            }
+            bail!("a fleet shard exited before the epoch barrier");
+        }
+    }
+    let mut arrivals_left = 0;
+    let mut events_left = 0;
+    for _ in 0..cmd_txs.len() {
+        let out = res_rx
+            .recv()
+            .map_err(|_| anyhow!("a fleet shard exited before the epoch barrier"))?
+            .map_err(|msg| anyhow!("fleet shard failed: {msg}"))?;
+        for (dev, rec) in out.edge_records {
+            let slot = rec.id;
+            records[dev][slot] = Some(rec);
+        }
+        pending.extend(out.requests);
+        arrivals_left += out.arrivals_left;
+        events_left += out.events_left;
+        *peak_edge_queue = (*peak_edge_queue).max(out.peak_edge_queue);
+        *sim_end = sim_end.max(out.last_event_ms);
+    }
+    Ok((arrivals_left, events_left))
+}
+
+/// Apply every pending request triggering before `horizon` to the shared
+/// pools, in canonical order. Later requests stay pending (still sorted).
+fn merge_ready(
+    pending: &mut Vec<CloudRequest>,
+    horizon: f64,
+    cloud: &mut CloudPlatform,
+    records: &mut [Vec<Option<TaskRecord>>],
+    pool_high_water: &mut [usize],
+    sim_end: &mut f64,
+) {
+    pending.sort_by(|a, b| {
+        a.trigger_ms
+            .partial_cmp(&b.trigger_ms)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| a.device_id.cmp(&b.device_id))
+            .then_with(|| a.seq.cmp(&b.seq))
+    });
+    let mut deferred = Vec::new();
+    for req in pending.drain(..) {
+        if req.trigger_ms >= horizon {
+            deferred.push(req);
+            continue;
+        }
+        let exec = device::execute_cloud(&req, cloud);
+        pool_high_water[req.j] =
+            pool_high_water[req.j].max(cloud.pool(req.j).live_count(req.trigger_ms));
+        *sim_end = sim_end.max(exec.stored_at);
+        records[req.device_id][req.task_id] = Some(device::complete_cloud(&req, &exec));
+    }
+    *pending = deferred;
+}
+
+/// Run a fleet to completion across `n_shards` worker threads.
+pub fn run_fleet(
+    meta: &Meta,
+    inits: Vec<DeviceInit>,
+    n_shards: usize,
+    epoch_ms: f64,
+) -> Result<FleetOutcome> {
+    if inits.is_empty() {
+        bail!("fleet needs at least one device");
+    }
+    for (i, init) in inits.iter().enumerate() {
+        if init.profile.id != i {
+            bail!("device profiles must be numbered 0..n in order (got {} at {i})",
+                  init.profile.id);
+        }
+    }
+    let n_devices = inits.len();
+    let n_shards = n_shards.clamp(1, n_devices);
+    let epoch_ms = if epoch_ms > 0.0 { epoch_ms } else { 5_000.0 };
+
+    // coordinator-side per-device bookkeeping
+    let apps: Vec<String> = inits.iter().map(|d| d.profile.app.clone()).collect();
+    let deadlines: Vec<f64> = inits
+        .iter()
+        .map(|d| d.settings.deadline_ms.unwrap_or(meta.app(&d.profile.app).deadline_ms))
+        .collect();
+    let mut records: Vec<Vec<Option<TaskRecord>>> =
+        inits.iter().map(|d| vec![None; d.tasks.len()]).collect();
+
+    // partition devices round-robin (any partition yields identical results)
+    let mut parts: Vec<Vec<DeviceInit>> = (0..n_shards).map(|_| Vec::new()).collect();
+    for (i, init) in inits.into_iter().enumerate() {
+        parts[i % n_shards].push(init);
+    }
+
+    let mut cloud = CloudPlatform::new(meta.memory_configs_mb.len());
+    let mut pool_high_water = vec![0usize; meta.memory_configs_mb.len()];
+    let mut pending: Vec<CloudRequest> = Vec::new();
+    let mut sim_end = 0.0f64;
+    let mut peak_edge_queue = 0usize;
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut cmd_txs = Vec::with_capacity(n_shards);
+        let (res_tx, res_rx) =
+            std::sync::mpsc::channel::<Result<EpochOutput, String>>();
+        for part in parts {
+            let (tx, rx) = std::sync::mpsc::channel::<f64>();
+            cmd_txs.push(tx);
+            let res_tx = res_tx.clone();
+            scope.spawn(move || worker_loop(meta, part, rx, res_tx));
+        }
+        drop(res_tx);
+
+        let mut epoch_end = epoch_ms;
+        loop {
+            let (arrivals_left, events_left) = barrier(
+                &cmd_txs, &res_rx, epoch_end, &mut records, &mut pending,
+                &mut peak_edge_queue, &mut sim_end,
+            )?;
+            merge_ready(
+                &mut pending, epoch_end, &mut cloud, &mut records,
+                &mut pool_high_water, &mut sim_end,
+            );
+            if arrivals_left == 0 {
+                // no arrival can emit further cloud requests; drain the
+                // remaining edge events in one unbounded pass and flush
+                if events_left > 0 {
+                    barrier(
+                        &cmd_txs, &res_rx, f64::INFINITY, &mut records, &mut pending,
+                        &mut peak_edge_queue, &mut sim_end,
+                    )?;
+                }
+                merge_ready(
+                    &mut pending, f64::INFINITY, &mut cloud, &mut records,
+                    &mut pool_high_water, &mut sim_end,
+                );
+                break;
+            }
+            epoch_end += epoch_ms;
+        }
+        drop(cmd_txs); // workers observe the closed channel and exit
+        Ok(())
+    })?;
+
+    let mut final_records: Vec<Vec<TaskRecord>> = Vec::with_capacity(n_devices);
+    for (dev, recs) in records.into_iter().enumerate() {
+        let v: Result<Vec<TaskRecord>> = recs
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.ok_or_else(|| anyhow!("device {dev} task {i} never produced a record"))
+            })
+            .collect();
+        final_records.push(v?);
+    }
+
+    let device_summaries: Vec<DeviceSummary> = final_records
+        .iter()
+        .enumerate()
+        .map(|(d, recs)| DeviceSummary::from_records(d, &apps[d], deadlines[d], recs))
+        .collect();
+    let summary =
+        FleetSummary::build(&final_records, &deadlines, pool_high_water, peak_edge_queue);
+    Ok(FleetOutcome {
+        records: final_records,
+        device_summaries,
+        summary,
+        sim_end_ms: sim_end,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_artifact_dir, FleetScenario, FleetSettings};
+    use crate::fleet::scenario::build_fleet;
+
+    fn meta() -> Meta {
+        Meta::load(&default_artifact_dir()).unwrap()
+    }
+
+    #[test]
+    fn shard_counts_do_not_change_the_outcome() {
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(17)
+            .with_duration_ms(6_000.0)
+            .with_scenario(FleetScenario::Poisson);
+        let base = run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), 1, 2_000.0).unwrap();
+        for shards in [2, 3, 6] {
+            let other =
+                run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), shards, 2_000.0).unwrap();
+            assert_eq!(base.summary.fingerprint, other.summary.fingerprint,
+                       "{shards} shards diverged");
+            assert_eq!(base.summary.n_tasks, other.summary.n_tasks);
+            assert_eq!(base.sim_end_ms, other.sim_end_ms);
+        }
+    }
+
+    #[test]
+    fn epoch_length_does_not_change_the_outcome() {
+        let meta = meta();
+        let fs = FleetSettings::new(4).with_seed(23).with_duration_ms(6_000.0);
+        let a = run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), 2, 500.0).unwrap();
+        let b = run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), 2, 6_000.0).unwrap();
+        assert_eq!(a.summary.fingerprint, b.summary.fingerprint);
+    }
+
+    #[test]
+    fn every_task_gets_exactly_one_record() {
+        let meta = meta();
+        let fs = FleetSettings::new(5).with_seed(2).with_duration_ms(5_000.0);
+        let inits = build_fleet(&meta, &fs).unwrap();
+        let expected: Vec<usize> = inits.iter().map(|d| d.tasks.len()).collect();
+        let out = run_fleet(&meta, inits, 2, 1_000.0).unwrap();
+        for (d, recs) in out.records.iter().enumerate() {
+            assert_eq!(recs.len(), expected[d]);
+            for (i, r) in recs.iter().enumerate() {
+                assert_eq!(r.id, i);
+                assert!(r.actual_e2e_ms > 0.0);
+            }
+        }
+        assert_eq!(out.summary.n_tasks, expected.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn misnumbered_profiles_rejected() {
+        let meta = meta();
+        let fs = FleetSettings::new(2).with_duration_ms(1_000.0);
+        let mut inits = build_fleet(&meta, &fs).unwrap();
+        inits.swap(0, 1);
+        assert!(run_fleet(&meta, inits, 1, 1_000.0).is_err());
+    }
+}

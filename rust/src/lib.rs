@@ -12,12 +12,16 @@
 //!  * **L1** — the Pallas GBRT forest-evaluation kernel
 //!    (`python/compile/kernels/gbrt.py`).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! Beyond the paper's single-device protocol, [`fleet`] scales the same
+//! question to thousands of devices sharing regional container pools.
+//!
+//! See the top-level README.md for the crate layout and how to run each
+//! subsystem.
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod fleet;
 pub mod live;
 pub mod testkit;
 pub mod engine;

@@ -20,16 +20,18 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{ExperimentSettings, Meta};
 use crate::engine::DecisionEngine;
+use crate::fleet::metrics::{latency_percentiles, LatencyPercentiles};
 use crate::metrics::{Summary, TaskRecord};
 use crate::platform::containers::StartKind;
 use crate::platform::lambda::CloudPlatform;
 use crate::platform::latency::GroundTruthSampler;
 use crate::platform::pricing::aws_pricing;
 use crate::predictor::{Placement, Predictor};
+use crate::util::panic_message;
 use crate::workload::build_workload;
 
 /// Live-run parameters.
@@ -46,6 +48,8 @@ pub struct LiveConfig {
 pub struct LiveOutcome {
     pub records: Vec<TaskRecord>,
     pub summary: Summary,
+    /// actual e2e latency tail (virtual ms), via the fleet percentile helper
+    pub latency: LatencyPercentiles,
     pub wall_seconds: f64,
 }
 
@@ -190,7 +194,7 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
                         dispatched: Instant::now(),
                         base,
                     })
-                    .expect("edge worker alive");
+                    .map_err(|_| anyhow!("edge worker exited before the run finished"))?;
             }
             Placement::Cloud(j) => {
                 let job = CloudJob {
@@ -247,19 +251,25 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
 
     drop(edge_tx);
     for h in cloud_handles {
-        h.join().expect("cloud worker panicked");
+        h.join()
+            .map_err(|e| anyhow!("cloud worker panicked: {}", panic_message(&*e)))?;
     }
-    edge_handle.join().expect("edge worker panicked");
+    edge_handle
+        .join()
+        .map_err(|e| anyhow!("edge worker panicked: {}", panic_message(&*e)))?;
 
     let records: Vec<TaskRecord> = Arc::try_unwrap(records)
-        .expect("all workers joined")
+        .map_err(|_| anyhow!("a worker still holds the record table after join"))?
         .into_inner()
-        .unwrap()
+        .map_err(|_| anyhow!("record table poisoned by a worker panic"))?
         .into_iter()
-        .map(|r| r.expect("every task recorded"))
-        .collect();
+        .enumerate()
+        .map(|(id, r)| r.ok_or_else(|| anyhow!("task {id} was never recorded")))
+        .collect::<Result<_>>()?;
     let summary = Summary::from_records(&records);
-    Ok(LiveOutcome { records, summary, wall_seconds: t0.elapsed().as_secs_f64() })
+    let e2e: Vec<f64> = records.iter().map(|r| r.actual_e2e_ms).collect();
+    let latency = latency_percentiles(&e2e);
+    Ok(LiveOutcome { records, summary, latency, wall_seconds: t0.elapsed().as_secs_f64() })
 }
 
 #[cfg(test)]
@@ -282,6 +292,9 @@ mod tests {
         let out = run(&meta, &cfg).unwrap();
         assert_eq!(out.records.len(), 40);
         assert!(out.summary.avg_actual_e2e_ms > 0.0);
+        // tail summary comes from the shared fleet percentile helper
+        assert!(out.latency.p50 > 0.0);
+        assert!(out.latency.p50 <= out.latency.p95 && out.latency.p95 <= out.latency.p99);
         // live latency should be in the same ballpark as predicted
         let err = out.summary.latency_prediction_error_pct();
         assert!(err < 60.0, "latency prediction error {err}%");

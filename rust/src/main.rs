@@ -7,6 +7,9 @@
 //!   sim     --app <ir|fd|stt> --objective <cost-min|latency-min>
 //!           --set 1536,1664,2048 [--alpha A] [--deadline MS] [--cmax $]
 //!           [--n N] [--seed S] [--backend xla|native] [--generate]
+//!   fleet   --devices 1000 [--scenario poisson|diurnal|burst|churn]
+//!           [--duration-s 30] [--shards 4] [--apps ir:0.4,fd:0.4,stt:0.2]
+//!           [--objective O] [--seed S] [--rate-mult M] [--epoch-ms E]
 //!   live    --app <ir|fd|stt> [--set ...] [--n N] [--scale 0.05]
 //!           [--runs R] [--backend xla|native]
 //!   report                       # run every experiment in order
@@ -19,9 +22,11 @@ use anyhow::{bail, Result};
 
 use skedge::cli::Args;
 use skedge::config::{
-    default_artifact_dir, ExperimentSettings, Meta, Objective, PredictorBackendKind,
+    default_artifact_dir, ExperimentSettings, FleetScenario, FleetSettings, Meta, Objective,
+    PredictorBackendKind,
 };
 use skedge::experiments;
+use skedge::fleet;
 use skedge::live::{self, LiveConfig};
 use skedge::metrics::{budget_metrics, deadline_violations};
 use skedge::sim;
@@ -61,6 +66,17 @@ fn main() -> Result<()> {
             print_run_summary(&meta, &settings, &o.summary, &o.records);
             Ok(())
         }
+        "fleet" => {
+            let meta = Meta::load(&artifact_dir)?;
+            let fs = fleet_settings_from_args(&args)?;
+            // time only the sharded run, not single-threaded workload
+            // generation, so the printed tasks/s reflects threading
+            let inits = fleet::scenario::build_fleet(&meta, &fs)?;
+            let t0 = std::time::Instant::now();
+            let o = fleet::shard::run_fleet(&meta, inits, fs.shards, fs.epoch_ms)?;
+            print_fleet_summary(&fs, &o, t0.elapsed().as_secs_f64());
+            Ok(())
+        }
         "live" => {
             let meta = Meta::load(&artifact_dir)?;
             let mut settings = settings_from_args(&meta, &args)?;
@@ -75,12 +91,114 @@ fn main() -> Result<()> {
                 };
                 let o = live::run(&meta, &cfg)?;
                 println!("-- live run {} ({:.1}s wall) --", r + 1, o.wall_seconds);
+                println!(
+                    "latency tail   : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s",
+                    o.latency.p50 / 1e3,
+                    o.latency.p95 / 1e3,
+                    o.latency.p99 / 1e3
+                );
                 print_run_summary(&meta, &settings, &o.summary, &o.records);
             }
             Ok(())
         }
         other => bail!("unknown subcommand `{other}` (try `skedge help`)"),
     }
+}
+
+fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
+    let devices = args.usize("devices")?.unwrap_or(100);
+    let mut fs = FleetSettings::new(devices);
+    if let Some(name) = args.get("scenario") {
+        fs.scenario = FleetScenario::parse(name)?;
+    }
+    // scenario parameter overrides (apply to whichever scenario is active)
+    if let Some(p) = args.f64("period-s")? {
+        match &mut fs.scenario {
+            FleetScenario::Diurnal { period_ms, .. } => *period_ms = p * 1000.0,
+            FleetScenario::Burst { period_ms, .. } => *period_ms = p * 1000.0,
+            _ => bail!("--period-s only applies to diurnal/burst scenarios"),
+        }
+    }
+    if let Some(a) = args.f64("amplitude")? {
+        match &mut fs.scenario {
+            FleetScenario::Diurnal { amplitude, .. } => *amplitude = a,
+            _ => bail!("--amplitude only applies to the diurnal scenario"),
+        }
+    }
+    if let Some(n) = args.usize("burst-size")? {
+        match &mut fs.scenario {
+            FleetScenario::Burst { size, .. } => *size = n,
+            _ => bail!("--burst-size only applies to the burst scenario"),
+        }
+    }
+    if let Some(d) = args.f64("duration-s")? {
+        fs.duration_ms = d * 1000.0;
+    }
+    if let Some(n) = args.usize("shards")? {
+        fs.shards = n;
+    }
+    if let Some(e) = args.f64("epoch-ms")? {
+        fs.epoch_ms = e;
+    }
+    fs.seed = args.u64_or("seed", fs.seed)?;
+    if let Some(mix) = args.get("apps") {
+        fs.app_mix = FleetSettings::parse_app_mix(mix)?;
+    }
+    if let Some(o) = args.get("objective") {
+        fs.objective = Objective::parse(o)?;
+    }
+    if let Some(m) = args.f64("rate-mult")? {
+        fs.rate_mult = m;
+    }
+    Ok(fs)
+}
+
+fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64) {
+    let s = &o.summary;
+    let mut app_counts: std::collections::BTreeMap<&str, usize> = Default::default();
+    for d in &o.device_summaries {
+        *app_counts.entry(d.app.as_str()).or_default() += 1;
+    }
+    let mix = app_counts
+        .iter()
+        .map(|(a, n)| format!("{a} {n}"))
+        .collect::<Vec<_>>()
+        .join(" / ");
+    println!("fleet          : {} devices ({mix}), scenario {}", s.n_devices, fs.scenario.label());
+    println!(
+        "tasks          : {} ({} edge, {} cloud) over {:.0} virtual s",
+        s.n_tasks,
+        s.edge_count,
+        s.cloud_count,
+        o.sim_end_ms / 1e3
+    );
+    println!(
+        "latency        : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s  (mean {:.3} s)",
+        s.latency.p50 / 1e3,
+        s.latency.p95 / 1e3,
+        s.latency.p99 / 1e3,
+        s.avg_e2e_ms / 1e3
+    );
+    println!("deadlines      : {:.2}% violated", s.deadline_violation_pct);
+    println!(
+        "cost           : ${:.8} actual (${:.8} predicted)",
+        s.total_actual_cost, s.total_predicted_cost
+    );
+    println!(
+        "warm/cold      : {} warm, {} cold, {} CIL mispredictions",
+        s.cloud_actual_warm, s.cloud_actual_cold, s.warm_cold_mismatches
+    );
+    println!(
+        "pool pressure  : max {} live containers in one pool, peak edge queue {}",
+        s.max_pool_high_water, s.peak_edge_queue
+    );
+    println!(
+        "throughput     : {:.0} tasks/s wall ({} shards, {:.1} s)",
+        s.n_tasks as f64 / wall_s.max(1e-9),
+        fs.shards,
+        wall_s
+    );
+    println!("fingerprint    : {:016x}", s.fingerprint);
 }
 
 fn settings_from_args(meta: &Meta, args: &Args) -> Result<ExperimentSettings> {
@@ -165,11 +283,16 @@ USAGE:
   skedge sim     --app fd --objective latency-min --set 1536,1664,2048
                  [--alpha A] [--deadline MS] [--cmax $] [--n N] [--risk R]
                  [--backend xla|native] [--generate] [--seed S]
+  skedge fleet   --devices 1000 [--scenario poisson|diurnal|burst|churn]
+                 [--duration-s 30] [--shards 4] [--epoch-ms 5000]
+                 [--apps ir:0.4,fd:0.4,stt:0.2] [--objective latency-min]
+                 [--seed S] [--rate-mult M] [--period-s P] [--amplitude A]
+                 [--burst-size N]
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
                  [--backend xla|native]
 
 Experiments: table1 table2 fig3 fig4 table3 fig5 table4 fig6 table5
-             edgeonly baselines tidl configsel ablations | all
+             edgeonly baselines tidl configsel ablations fleet_scaling | all
 
 Artifacts are read from ./artifacts (override: --artifacts DIR or
 $SKEDGE_ARTIFACTS). Run `make artifacts` first.

@@ -5,13 +5,22 @@
 //! with `HloModuleProto::from_text_file`, compiled once per process with the
 //! PJRT CPU client, and cached as loaded executables. Python is never
 //! involved at runtime.
+//!
+//! The `xla` crate (PJRT bindings) is an optional dependency: offline
+//! environments build without the `xla` cargo feature and get a stub
+//! [`XlaEngine`] whose `load` returns an error, leaving the native mirror
+//! backend as the scoring path. All call sites compile either way.
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
+
+#[cfg(feature = "xla")]
+use anyhow::Context;
 
 use crate::config::Meta;
 use crate::models::RawPrediction;
 
 /// Convert the `xla` crate's error type (no std::error impl) to anyhow.
+#[cfg(feature = "xla")]
 macro_rules! xerr {
     ($e:expr, $what:expr) => {
         $e.map_err(|err| anyhow!("xla {}: {err:?}", $what))
@@ -19,12 +28,63 @@ macro_rules! xerr {
 }
 
 /// A compiled predictor executable for one (app, batch-size) pair.
+#[cfg(feature = "xla")]
 pub struct CompiledPredictor {
     exe: xla::PjRtLoadedExecutable,
     pub batch: usize,
     pub n_cfg: usize,
 }
 
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::*;
+
+    fn unavailable() -> anyhow::Error {
+        anyhow!(
+            "skedge was built without the `xla` cargo feature; rebuild with \
+             `--features xla` or use the native predictor backend"
+        )
+    }
+
+    /// Stub of the PJRT executable wrapper (built without the `xla` feature).
+    pub struct CompiledPredictor {
+        pub batch: usize,
+        pub n_cfg: usize,
+    }
+
+    impl CompiledPredictor {
+        pub fn run(&self, _sizes: &[f32], _n_valid: usize) -> Result<Vec<RawPrediction>> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub of the PJRT engine (built without the `xla` feature). `load`
+    /// always errors, so no instance can exist at runtime.
+    pub struct XlaEngine {
+        pub b1: CompiledPredictor,
+        pub b64: Option<CompiledPredictor>,
+        pub app: String,
+    }
+
+    impl XlaEngine {
+        pub fn load(_meta: &Meta, _app: &str) -> Result<XlaEngine> {
+            Err(unavailable())
+        }
+
+        pub fn predict(&self, _size: f64) -> Result<RawPrediction> {
+            Err(unavailable())
+        }
+
+        pub fn predict_batch(&self, _sizes: &[f64]) -> Result<Vec<RawPrediction>> {
+            Err(unavailable())
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{CompiledPredictor, XlaEngine};
+
+#[cfg(feature = "xla")]
 impl CompiledPredictor {
     /// Execute on a padded batch of sizes; returns per-input raw predictions
     /// for the first `n_valid` entries.
@@ -54,6 +114,7 @@ impl CompiledPredictor {
 }
 
 /// The runtime engine: PJRT client + per-app compiled executables.
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     _client: xla::PjRtClient,
     /// request-path executable (batch 1)
@@ -63,6 +124,7 @@ pub struct XlaEngine {
     pub app: String,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Load and compile both batch variants for an app.
     pub fn load(meta: &Meta, app: &str) -> Result<XlaEngine> {
@@ -119,7 +181,7 @@ impl XlaEngine {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
     use crate::config::default_artifact_dir;

@@ -11,6 +11,10 @@ pub enum Event {
     Arrival { id: usize },
     /// task `id` finished its edge compute (Executor slot freed)
     EdgeCompDone { id: usize },
+    /// task `id`'s upload finished; the cloud function fires against the
+    /// container pool at this instant (pool state is sampled at trigger
+    /// time, which is what makes warm/cold mispredictions possible)
+    CloudTrigger { id: usize },
     /// task `id`'s cloud results persisted in S3
     CloudStored { id: usize },
     /// task `id`'s edge results persisted (IoT → S3)
@@ -81,6 +85,11 @@ impl EventQueue {
         })
     }
 
+    /// Earliest scheduled event without popping it (epoch-bounded stepping).
+    pub fn peek(&self) -> Option<(f64, Event)> {
+        self.heap.peek().map(|s| (s.at_ms, s.event))
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -141,5 +150,17 @@ mod tests {
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek(), None);
+        q.schedule(7.0, Event::CloudTrigger { id: 3 });
+        q.schedule(2.0, Event::Arrival { id: 1 });
+        assert_eq!(q.peek(), Some((2.0, Event::Arrival { id: 1 })));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((2.0, Event::Arrival { id: 1 })));
+        assert_eq!(q.peek(), Some((7.0, Event::CloudTrigger { id: 3 })));
     }
 }

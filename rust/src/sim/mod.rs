@@ -8,19 +8,22 @@
 //! executes it with the *actual* component latencies from the replay table —
 //! exactly the paper's protocol ("we then simulate execution using the
 //! actual end-to-end latency and actual costs from the measured data").
+//!
+//! The per-arrival logic lives in [`crate::fleet::device::Device`] — the
+//! same stepper the fleet-scale simulator drives for every device — so a
+//! 1-device fleet reproduces this runner bit-for-bit (pinned by the
+//! fleet-equivalence tests). Cloud invocations are applied to the container
+//! pools at upload-trigger time (`Event::CloudTrigger`), matching the
+//! fleet's canonical merge order.
 
 pub mod events;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{ExperimentSettings, Meta};
-use crate::engine::DecisionEngine;
+use crate::fleet::device::{self, CloudRequest, Device, DeviceProfile, Dispatch};
 use crate::metrics::{Summary, TaskRecord};
-use crate::platform::containers::StartKind;
-use crate::platform::greengrass::EdgeExecutor;
 use crate::platform::lambda::CloudPlatform;
-use crate::platform::latency::GroundTruthSampler;
-use crate::predictor::{Placement, Predictor};
 use crate::workload::{build_workload, Task};
 use events::{Event, EventQueue};
 
@@ -48,33 +51,17 @@ pub fn run_with_tidl_belief(
 pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
     let app = meta.app(&settings.app).clone();
     let n = settings.n_inputs.unwrap_or(app.n_eval);
-    let tasks = build_workload(meta, &settings.app, n, settings.replay, settings.seed)?;
+    let tasks: Vec<Task> = build_workload(meta, &settings.app, n, settings.replay, settings.seed)?;
 
-    let mut predictor = Predictor::with_backend_kind(meta, &app, settings.backend)?;
-    if let Some(tidl) = settings.tidl_belief_ms {
-        predictor.cil = crate::predictor::cil::Cil::new(meta.memory_configs_mb.len(), tidl);
-    }
-    let config_idxs: Vec<usize> = settings
-        .config_set
-        .iter()
-        .map(|&mem| {
-            meta.config_index(mem)
-                .unwrap_or_else(|| panic!("{mem} MB is not one of the 19 configurations"))
-        })
-        .collect();
-    let mut engine = DecisionEngine::new(
-        settings.objective,
-        config_idxs,
-        settings.deadline_ms.unwrap_or(app.deadline_ms),
-        settings.cmax.unwrap_or(app.cmax),
-        settings.alpha.unwrap_or(app.alpha),
-    )
-    .with_risk_factor(settings.risk_factor);
-
+    // the paper's single reference device; its T_idl stream is disjoint
+    // from the workload streams (same salt the fleet mirror uses)
+    let profile = DeviceProfile::uniform(
+        0,
+        &settings.app,
+        settings.seed ^ crate::fleet::scenario::TIDL_SALT,
+    );
+    let mut dev = Device::new(meta, settings, profile)?;
     let mut cloud = CloudPlatform::new(meta.memory_configs_mb.len());
-    let mut edge = EdgeExecutor::new();
-    // cold-start / T_idl sampling stream, disjoint from workload streams
-    let mut gt = GroundTruthSampler::new(meta, &settings.app, settings.seed ^ 0x51D6E);
 
     let mut q = EventQueue::new();
     for t in &tasks {
@@ -82,100 +69,49 @@ pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
     }
 
     let mut records: Vec<Option<TaskRecord>> = vec![None; tasks.len()];
-    let mut peak_edge_queue = 0usize;
+    let mut in_flight: Vec<Option<CloudRequest>> = vec![None; tasks.len()];
     let mut sim_end = 0.0f64;
 
     while let Some((now, ev)) = q.pop() {
         sim_end = now;
         match ev {
-            Event::Arrival { id } => {
-                let task = &tasks[id];
-                let rec = place_and_execute(
-                    task, now, &mut predictor, &mut engine, &mut cloud, &mut edge, &mut gt,
-                    &mut q,
-                )?;
-                peak_edge_queue = peak_edge_queue.max(edge.queue_len());
-                records[id] = Some(rec);
+            Event::Arrival { id } => match dev.ingest(&tasks[id], now)? {
+                Dispatch::Edge(e) => {
+                    q.schedule(e.comp_end_ms, Event::EdgeCompDone { id });
+                    q.schedule(e.stored_ms, Event::EdgeStored { id });
+                    records[id] = Some(e.record);
+                }
+                Dispatch::Cloud(req) => {
+                    q.schedule(req.trigger_ms, Event::CloudTrigger { id });
+                    in_flight[id] = Some(req);
+                }
+            },
+            Event::CloudTrigger { id } => {
+                let req = in_flight[id]
+                    .take()
+                    .ok_or_else(|| anyhow!("task {id} triggered without a pending request"))?;
+                let exec = device::execute_cloud(&req, &mut cloud);
+                q.schedule(exec.stored_at, Event::CloudStored { id });
+                records[id] = Some(device::complete_cloud(&req, &exec));
             }
-            Event::EdgeCompDone { .. } => edge.drain_one(),
+            Event::EdgeCompDone { .. } => dev.edge.drain_one(),
             Event::CloudStored { .. } | Event::EdgeStored { .. } => {}
         }
     }
 
-    let records: Vec<TaskRecord> = records.into_iter().map(|r| r.unwrap()).collect();
+    let records: Vec<TaskRecord> = records
+        .into_iter()
+        .enumerate()
+        .map(|(id, r)| r.ok_or_else(|| anyhow!("task {id} never produced a record")))
+        .collect::<Result<_>>()?;
     let summary = Summary::from_records(&records);
-    Ok(SimOutcome { records, summary, sim_end_ms: sim_end, settings: settings.clone(), peak_edge_queue })
-}
-
-/// Handle one arrival: predict → decide → updateCIL → ground-truth execute.
-#[allow(clippy::too_many_arguments)]
-fn place_and_execute(
-    task: &Task,
-    now: f64,
-    predictor: &mut Predictor,
-    engine: &mut DecisionEngine,
-    cloud: &mut CloudPlatform,
-    edge: &mut EdgeExecutor,
-    gt: &mut GroundTruthSampler,
-    q: &mut EventQueue,
-) -> Result<TaskRecord> {
-    let a = &task.actuals;
-    let pred = predictor.predict(a.size, now)?;
-    let decision = engine.decide(&pred, edge.predicted_wait(now));
-    predictor.update_cil(decision.placement, &pred, now);
-
-    let rec = match decision.placement {
-        Placement::Edge => {
-            let (wait, _start, comp_end) = edge.submit(now, a.edge_comp, pred.edge_comp_ms);
-            q.schedule(comp_end, Event::EdgeCompDone { id: task.id });
-            let stored = comp_end + a.iotup + a.edge_store;
-            q.schedule(stored, Event::EdgeStored { id: task.id });
-            TaskRecord {
-                id: task.id,
-                arrive_ms: now,
-                placement: decision.placement,
-                predicted_e2e_ms: decision.predicted_e2e_ms,
-                actual_e2e_ms: stored - now,
-                predicted_cost: decision.predicted_cost,
-                actual_cost: 0.0,
-                allowed_cost: decision.allowed_cost,
-                feasible_found: decision.feasible_found,
-                warm_predicted: None,
-                warm_actual: None,
-                edge_wait_ms: wait,
-            }
-        }
-        Placement::Cloud(j) => {
-            let tidl = gt.sample_tidl();
-            let exec = cloud.execute(
-                j, now, a.upld, a.comp[j], a.start_w, a.start_c, a.store, tidl,
-            );
-            q.schedule(exec.stored_at, Event::CloudStored { id: task.id });
-            let mem = predictor.mems[j];
-            let actual_cost = cloudcost(predictor, a.comp[j], mem);
-            TaskRecord {
-                id: task.id,
-                arrive_ms: now,
-                placement: decision.placement,
-                predicted_e2e_ms: decision.predicted_e2e_ms,
-                actual_e2e_ms: exec.stored_at - now,
-                predicted_cost: decision.predicted_cost,
-                actual_cost,
-                allowed_cost: decision.allowed_cost,
-                feasible_found: decision.feasible_found,
-                warm_predicted: Some(pred.cloud[j].warm),
-                warm_actual: Some(exec.kind == StartKind::Warm),
-                edge_wait_ms: 0.0,
-            }
-        }
-    };
-    Ok(rec)
-}
-
-fn cloudcost(predictor: &Predictor, comp_ms: f64, mem_mb: f64) -> f64 {
-    // actual billed cost from the actual compute duration
-    let _ = predictor;
-    crate::platform::pricing::aws_pricing().cost(comp_ms, mem_mb)
+    Ok(SimOutcome {
+        records,
+        summary,
+        sim_end_ms: sim_end,
+        settings: settings.clone(),
+        peak_edge_queue: dev.peak_edge_queue,
+    })
 }
 
 #[cfg(test)]
@@ -287,5 +223,12 @@ mod tests {
             assert!(r.actual_e2e_ms > 0.0);
             assert!(r.predicted_e2e_ms > 0.0);
         }
+    }
+
+    #[test]
+    fn bad_config_set_is_an_error_not_a_panic() {
+        let meta = meta();
+        let s = base_settings("fd", Objective::LatencyMin, &[1234.0]);
+        assert!(run(&meta, &s).is_err(), "1234 MB is not one of the 19 configs");
     }
 }

@@ -5,3 +5,16 @@ pub mod csv;
 pub mod json;
 pub mod rng;
 pub mod stats;
+
+/// Extract a human-readable message from a `std::thread` panic payload, so
+/// worker panics can be propagated as `Err` instead of crashing the
+/// coordinating thread.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

@@ -19,11 +19,17 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile, p in [0, 100]. NaN-free input required.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice — callers taking several
+/// percentiles of one large sample sort once and reuse it.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -127,6 +133,16 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_sorted_agrees_with_unsorted() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&xs, p), percentile_sorted(&v, p));
+        }
     }
 
     #[test]

@@ -2,9 +2,9 @@
 //! *decision* level, experiment regeneration smoke, live+sim agreement,
 //! and the paper's headline claims in miniature.
 
-use skedge::config::{
-    default_artifact_dir, ExperimentSettings, Meta, Objective, PredictorBackendKind,
-};
+use skedge::config::{default_artifact_dir, ExperimentSettings, Meta, Objective};
+#[cfg(feature = "xla")]
+use skedge::config::PredictorBackendKind;
 use skedge::experiments;
 use skedge::live::{self, LiveConfig};
 use skedge::metrics::budget_metrics;
@@ -15,6 +15,7 @@ fn meta() -> Meta {
 }
 
 #[test]
+#[cfg(feature = "xla")]
 fn xla_and_native_backends_agree_on_decisions() {
     let meta = meta();
     for app in ["fd", "stt"] {
@@ -37,6 +38,7 @@ fn xla_and_native_backends_agree_on_decisions() {
 }
 
 #[test]
+#[cfg(feature = "xla")]
 fn xla_costmin_runs_end_to_end() {
     let meta = meta();
     let set = experiments::best_costmin_set("ir");

@@ -1,0 +1,124 @@
+//! Fleet correctness: the two invariants the subsystem is built on.
+//!
+//!  1. **Sim equivalence** — a 1-device fleet with the same seed reproduces
+//!     `sim::run` records exactly (placement, actual_e2e_ms, cost), so the
+//!     fleet runner is a strict generalization of the paper's protocol.
+//!  2. **Shard invariance** — fleet results are bit-identical across 1, 2,
+//!     and 4 shard threads: the epoch-barrier merge makes threading a pure
+//!     performance knob, never a semantics knob.
+
+use skedge::config::{
+    default_artifact_dir, ExperimentSettings, FleetScenario, FleetSettings, Meta, Objective,
+};
+use skedge::fleet;
+use skedge::sim;
+
+fn meta() -> Meta {
+    Meta::load(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn one_device_fleet_reproduces_sim_run_exactly() {
+    let meta = meta();
+    for (app, objective, set) in [
+        ("fd", Objective::CostMin, vec![1280.0, 1408.0, 1664.0]),
+        ("stt", Objective::LatencyMin, vec![1152.0, 1280.0, 1664.0]),
+    ] {
+        let s = ExperimentSettings::new(app, objective, &set).with_n_inputs(200);
+        let simo = sim::run(&meta, &s).unwrap();
+        for shards in [1usize, 2] {
+            let fo = fleet::run_sim_equivalent(&meta, &s, shards).unwrap();
+            assert_eq!(fo.records.len(), 1);
+            let recs = &fo.records[0];
+            assert_eq!(recs.len(), simo.records.len(), "{app}");
+            for (f, r) in recs.iter().zip(&simo.records) {
+                assert_eq!(f.id, r.id);
+                assert_eq!(f.placement, r.placement, "{app} task {}", r.id);
+                assert_eq!(f.actual_e2e_ms, r.actual_e2e_ms, "{app} task {}", r.id);
+                assert_eq!(f.actual_cost, r.actual_cost, "{app} task {}", r.id);
+                assert_eq!(f.predicted_e2e_ms, r.predicted_e2e_ms);
+                assert_eq!(f.warm_actual, r.warm_actual, "{app} task {}", r.id);
+                assert_eq!(f.edge_wait_ms, r.edge_wait_ms);
+            }
+            assert_eq!(fo.summary.peak_edge_queue, simo.peak_edge_queue, "{app}");
+            assert_eq!(fo.sim_end_ms, simo.sim_end_ms, "{app}");
+        }
+    }
+}
+
+#[test]
+fn fleet_is_bit_identical_across_1_2_4_shards() {
+    let meta = meta();
+    let fs = FleetSettings::new(12).with_seed(4242).with_duration_ms(8_000.0);
+    let base = fleet::run(&meta, &fs.clone().with_shards(1)).unwrap();
+    for shards in [2usize, 4] {
+        let other = fleet::run(&meta, &fs.clone().with_shards(shards)).unwrap();
+        assert_eq!(base.records.len(), other.records.len());
+        for (da, db) in base.records.iter().zip(&other.records) {
+            assert_eq!(da.len(), db.len());
+            for (a, b) in da.iter().zip(db) {
+                assert_eq!(a.placement, b.placement);
+                assert_eq!(a.actual_e2e_ms, b.actual_e2e_ms);
+                assert_eq!(a.actual_cost, b.actual_cost);
+                assert_eq!(a.warm_actual, b.warm_actual);
+            }
+        }
+        assert_eq!(base.summary.fingerprint, other.summary.fingerprint);
+        assert_eq!(base.summary.pool_high_water, other.summary.pool_high_water);
+        assert_eq!(base.sim_end_ms, other.sim_end_ms);
+    }
+}
+
+#[test]
+fn fleet_run_is_reproducible_across_invocations() {
+    let meta = meta();
+    let fs = FleetSettings::new(10).with_seed(9).with_duration_ms(6_000.0);
+    let a = fleet::run(&meta, &fs).unwrap();
+    let b = fleet::run(&meta, &fs).unwrap();
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint);
+    assert_eq!(a.summary.total_actual_cost, b.summary.total_actual_cost);
+}
+
+#[test]
+fn shared_pools_see_cross_device_concurrency() {
+    // 8 FD devices under latency-min push most tasks to the cloud; with
+    // arrivals overlapping fleet-wide, some pool must hold several live
+    // containers at once — impossible in the single-device protocol at
+    // these rates without queueing them behind one device's decisions.
+    let meta = meta();
+    let fs = FleetSettings::new(8)
+        .with_seed(31)
+        .with_duration_ms(12_000.0)
+        .with_scenario(FleetScenario::Poisson)
+        .with_app_mix(vec![("fd".to_string(), 1.0)])
+        .with_jitter(0.0, 0.0);
+    let o = fleet::run(&meta, &fs).unwrap();
+    assert!(o.summary.cloud_count > 50, "cloud tasks: {}", o.summary.cloud_count);
+    assert!(
+        o.summary.max_pool_high_water >= 2,
+        "shared pool never held 2+ live containers (max {})",
+        o.summary.max_pool_high_water
+    );
+    assert!(o.summary.cloud_actual_warm > 0, "no warm start ever happened");
+    // every device produced work and a summary
+    assert_eq!(o.device_summaries.len(), 8);
+    assert!(o.device_summaries.iter().all(|d| d.n > 0));
+}
+
+#[test]
+fn mixed_diurnal_default_completes_and_aggregates() {
+    // miniature of the acceptance scenario (`fleet --devices 1000` defaults)
+    let meta = meta();
+    let fs = FleetSettings::new(40).with_duration_ms(10_000.0);
+    let o = fleet::run(&meta, &fs).unwrap();
+    let s = &o.summary;
+    assert_eq!(s.n_devices, 40);
+    assert_eq!(s.n_tasks, s.edge_count + s.cloud_count);
+    assert!(s.n_tasks > 100, "diurnal mix should generate real load");
+    assert!(s.latency.p50 <= s.latency.p95 && s.latency.p95 <= s.latency.p99);
+    assert!((0.0..=100.0).contains(&s.deadline_violation_pct));
+    // mixed fleet: more than one app present
+    let apps: std::collections::BTreeSet<&str> =
+        o.device_summaries.iter().map(|d| d.app.as_str()).collect();
+    assert!(apps.len() >= 2, "expected a mixed fleet, got {apps:?}");
+}
