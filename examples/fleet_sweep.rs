@@ -8,7 +8,9 @@
 //!
 //! Run: `make artifacts && cargo run --release --example fleet_sweep`
 
-use skedge::config::{default_artifact_dir, FleetScenario, FleetSettings, Meta};
+use skedge::config::{
+    default_artifact_dir, CilMode, FleetScenario, FleetSettings, Meta, TopologySpec,
+};
 use skedge::fleet;
 
 fn main() -> anyhow::Result<()> {
@@ -58,6 +60,37 @@ fn main() -> anyhow::Result<()> {
             s.deadline_violation_pct,
             s.max_pool_high_water,
             s.fingerprint,
+        );
+    }
+
+    println!("\n== region topology sweep (64 devices, tz-phased diurnal, 15 virtual s) ==");
+    let variants: Vec<(&str, Option<TopologySpec>)> = vec![
+        ("1 region / private", None),
+        ("triad / private", Some(TopologySpec::parse("triad")?)),
+        (
+            "triad / hub",
+            Some(TopologySpec::parse("triad")?.with_cil_mode(CilMode::Hub)),
+        ),
+    ];
+    for (label, topology) in variants {
+        let mut fs = FleetSettings::new(64)
+            .with_duration_ms(15_000.0)
+            .with_scenario(FleetScenario::DiurnalTz {
+                period_ms: 30_000.0,
+                amplitude: 0.8,
+                groups: 3,
+            });
+        fs.topology = topology;
+        let o = fleet::run(&meta, &fs)?;
+        let s = &o.summary;
+        let cloud = s.cloud_count.max(1) as f64;
+        println!(
+            "{:<20} p95 {:>7.3} s  warm {:>5.1}%  mispredicted {:>5.1}%  hub updates {:>6}",
+            label,
+            s.latency.p95 / 1e3,
+            s.cloud_actual_warm as f64 / cloud * 100.0,
+            s.warm_cold_mismatches as f64 / cloud * 100.0,
+            o.hub_updates.iter().sum::<u64>(),
         );
     }
 

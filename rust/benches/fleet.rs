@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..runs {
             let inits = inits.clone();
             let t0 = Instant::now();
-            black_box(shard::run_fleet(&meta, inits, SHARDS, fs.epoch_ms)?);
+            black_box(shard::run_fleet(&meta, inits, &fs)?);
             per_run.push(t0.elapsed().as_secs_f64());
         }
         per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -1,0 +1,85 @@
+//! Region subsystem throughput: tasks/s through the routed
+//! predict→decide→merge pipeline as the topology grows, and the cost of
+//! hub-CIL snapshot broadcast vs private CILs.
+//!
+//! Workload generation is excluded from the timed region (a one-time setup
+//! cost in real sweeps too). Writes the measured baseline to
+//! `BENCH_region.json` at the repo root so later performance PRs have a
+//! trajectory to beat. Run: `cargo bench --bench region`.
+
+use std::time::Instant;
+
+use skedge::benchkit::{black_box, section};
+use skedge::config::{default_artifact_dir, CilMode, FleetSettings, Meta, TopologySpec};
+use skedge::fleet::{scenario, shard};
+
+const DEVICES: usize = 200;
+const DURATION_MS: f64 = 10_000.0;
+const SHARDS: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load(&default_artifact_dir())?;
+    section(&format!(
+        "region throughput ({DEVICES} devices, diurnal ir/fd/stt mix, \
+         {:.0} virtual s, {SHARDS} shards)",
+        DURATION_MS / 1e3
+    ));
+
+    let variants: Vec<(&str, Option<TopologySpec>)> = vec![
+        ("1 region / private", None),
+        (
+            "3 regions / private",
+            Some(TopologySpec::parse("triad")?.with_cil_mode(CilMode::Private)),
+        ),
+        (
+            "3 regions / hub",
+            Some(TopologySpec::parse("triad")?.with_cil_mode(CilMode::Hub)),
+        ),
+    ];
+
+    let mut rows = Vec::new();
+    for (label, topology) in variants {
+        let mut fs = FleetSettings::new(DEVICES)
+            .with_duration_ms(DURATION_MS)
+            .with_shards(SHARDS)
+            .with_seed(2020);
+        fs.topology = topology;
+        let inits = scenario::build_fleet(&meta, &fs)?;
+        let n_tasks: usize = inits.iter().map(|d| d.tasks.len()).sum();
+        let runs = 3;
+        let mut per_run = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let inits = inits.clone();
+            let t0 = Instant::now();
+            black_box(shard::run_fleet(&meta, inits, &fs)?);
+            per_run.push(t0.elapsed().as_secs_f64());
+        }
+        per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let secs = per_run[(per_run.len() - 1) / 2];
+        let tasks_per_s = n_tasks as f64 / secs.max(1e-9);
+        println!(
+            "{label:<22} {n_tasks:>8} tasks   {secs:>10.3} s/run   {tasks_per_s:>12.0} tasks/s"
+        );
+        rows.push((label, n_tasks, tasks_per_s));
+    }
+
+    // record the baseline for future performance PRs
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"region\",\n");
+    json.push_str(&format!("  \"devices\": {DEVICES},\n"));
+    json.push_str(&format!("  \"duration_virtual_ms\": {DURATION_MS},\n"));
+    json.push_str(&format!("  \"shards\": {SHARDS},\n"));
+    json.push_str("  \"unit\": \"tasks_per_second\",\n");
+    json.push_str("  \"results\": [\n");
+    for (i, (label, tasks, tps)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"variant\": \"{label}\", \"tasks\": {tasks}, \"tasks_per_s\": {tps:.1}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = format!("{}/../BENCH_region.json", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&path, json)?;
+    println!("\nwrote {path}");
+    Ok(())
+}

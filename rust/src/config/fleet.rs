@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Result};
 
-use super::Objective;
+use super::{Objective, TopologySpec};
 
 /// Fleet workload scenario (per-device arrival process shape).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -20,6 +20,13 @@ pub enum FleetScenario {
     /// devices cycle on/off (with a per-device phase offset); arrivals are
     /// dropped while a device is off
     Churn { on_ms: f64, off_ms: f64 },
+    /// diurnal sine with per-group phase offsets: keyed to each region's
+    /// time-zone offset when a topology is present, else devices are spread
+    /// over `groups` equally-spaced phases (rolling global load)
+    DiurnalTz { period_ms: f64, amplitude: f64, groups: usize },
+    /// flash crowd: base Poisson rate ramping linearly to `peak_mult`× over
+    /// `ramp_ms` starting at `at_ms`, then holding (viral-event load)
+    FlashCrowd { at_ms: f64, ramp_ms: f64, peak_mult: f64 },
 }
 
 impl FleetScenario {
@@ -32,7 +39,19 @@ impl FleetScenario {
             }
             "burst" => Ok(FleetScenario::Burst { period_ms: 10_000.0, size: 20 }),
             "churn" => Ok(FleetScenario::Churn { on_ms: 10_000.0, off_ms: 5_000.0 }),
-            _ => bail!("unknown scenario `{s}` (poisson | diurnal | burst | churn)"),
+            "diurnal-tz" | "tz" => Ok(FleetScenario::DiurnalTz {
+                period_ms: 30_000.0,
+                amplitude: 0.8,
+                groups: 3,
+            }),
+            "flash" | "flash-crowd" => Ok(FleetScenario::FlashCrowd {
+                at_ms: 10_000.0,
+                ramp_ms: 5_000.0,
+                peak_mult: 4.0,
+            }),
+            _ => bail!(
+                "unknown scenario `{s}` (poisson | diurnal | diurnal-tz | burst | churn | flash)"
+            ),
         }
     }
 
@@ -48,6 +67,19 @@ impl FleetScenario {
             }
             FleetScenario::Churn { on_ms, off_ms } => {
                 format!("churn({:.0}s on / {:.0}s off)", on_ms / 1000.0, off_ms / 1000.0)
+            }
+            FleetScenario::DiurnalTz { period_ms, amplitude, groups } => {
+                format!(
+                    "diurnal-tz(period {:.0}s, amp {amplitude}, {groups} zones)",
+                    period_ms / 1000.0
+                )
+            }
+            FleetScenario::FlashCrowd { at_ms, ramp_ms, peak_mult } => {
+                format!(
+                    "flash({peak_mult}x over {:.0}s at {:.0}s)",
+                    ramp_ms / 1000.0,
+                    at_ms / 1000.0
+                )
             }
         }
     }
@@ -76,6 +108,9 @@ pub struct FleetSettings {
     pub compute_jitter_sigma: f64,
     /// lognormal σ of per-device uplink speed
     pub network_jitter_sigma: f64,
+    /// multi-region cloud topology; None = the paper's single implicit
+    /// region (zero routing latency, reference pricing, private CILs)
+    pub topology: Option<TopologySpec>,
 }
 
 impl FleetSettings {
@@ -97,7 +132,13 @@ impl FleetSettings {
             rate_mult: 1.0,
             compute_jitter_sigma: 0.15,
             network_jitter_sigma: 0.25,
+            topology: None,
         }
+    }
+
+    pub fn with_topology(mut self, t: TopologySpec) -> Self {
+        self.topology = Some(t);
+        self
     }
 
     pub fn with_scenario(mut self, s: FleetScenario) -> Self {
@@ -186,8 +227,26 @@ mod tests {
         ));
         assert!(matches!(FleetScenario::parse("burst").unwrap(), FleetScenario::Burst { .. }));
         assert!(matches!(FleetScenario::parse("churn").unwrap(), FleetScenario::Churn { .. }));
+        assert!(matches!(
+            FleetScenario::parse("diurnal-tz").unwrap(),
+            FleetScenario::DiurnalTz { .. }
+        ));
+        assert!(matches!(
+            FleetScenario::parse("flash").unwrap(),
+            FleetScenario::FlashCrowd { .. }
+        ));
         assert!(FleetScenario::parse("nope").is_err());
         assert!(FleetScenario::Poisson.label().contains("poisson"));
+        assert!(FleetScenario::parse("tz").unwrap().label().contains("zones"));
+        assert!(FleetScenario::parse("flash-crowd").unwrap().label().contains("flash"));
+    }
+
+    #[test]
+    fn topology_builder_attaches() {
+        let fs = FleetSettings::new(4)
+            .with_topology(crate::config::TopologySpec::parse("duo").unwrap());
+        assert_eq!(fs.topology.as_ref().unwrap().n_regions(), 2);
+        assert!(FleetSettings::new(4).topology.is_none(), "default is single-region");
     }
 
     #[test]

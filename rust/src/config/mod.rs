@@ -7,9 +7,11 @@
 //! workload generator) and per-app experiment constants.
 
 mod fleet;
+mod region;
 mod settings;
 
 pub use fleet::{FleetScenario, FleetSettings};
+pub use region::{CilMode, MobilityEvent, RegionSettings, TopologySpec};
 pub use settings::{ExperimentSettings, Objective, PredictorBackendKind};
 
 use std::collections::BTreeMap;

@@ -1,0 +1,285 @@
+//! Multi-region topology settings: several independent cloud regions, each
+//! with its own routing latency, pricing profile, and time-zone offset, plus
+//! the CIL-sharing mode and scenario-driven device mobility.
+//!
+//! A fleet without a [`TopologySpec`] runs the single implicit region the
+//! paper evaluates (zero routing latency, reference pricing) — that path is
+//! pinned bit-identical to the pre-region fleet by `rust/tests/region.rs`.
+
+use anyhow::{bail, Result};
+
+/// How devices track warm-container state for each regional pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CilMode {
+    /// every device keeps its own per-region CIL — the paper's client-side
+    /// belief, blind to other devices' placements (fallback / ablation)
+    Private,
+    /// a per-region hub aggregates all routed devices' invocation beliefs;
+    /// devices refresh from the hub at every epoch barrier and overlay only
+    /// their own within-epoch placements
+    Hub,
+}
+
+impl CilMode {
+    pub fn parse(s: &str) -> Result<CilMode> {
+        match s {
+            "private" | "per-device" => Ok(CilMode::Private),
+            "hub" | "shared" => Ok(CilMode::Hub),
+            _ => bail!("unknown CIL mode `{s}` (private | hub)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CilMode::Private => "private",
+            CilMode::Hub => "hub",
+        }
+    }
+}
+
+/// One cloud region's static profile.
+#[derive(Debug, Clone)]
+pub struct RegionSettings {
+    pub name: String,
+    /// one-way routing latency from devices homed in this region (ms)
+    pub routing_ms: f64,
+    /// execution price multiplier vs the reference region
+    pub price_mult: f64,
+    /// local-time phase offset applied by tz-keyed scenarios (ms)
+    pub tz_offset_ms: f64,
+    /// weight for the initial device-home assignment draw
+    pub weight: f64,
+}
+
+impl RegionSettings {
+    pub fn new(name: &str, routing_ms: f64) -> Self {
+        RegionSettings {
+            name: name.to_string(),
+            routing_ms,
+            price_mult: 1.0,
+            tz_offset_ms: 0.0,
+            weight: 1.0,
+        }
+    }
+
+    pub fn with_price_mult(mut self, m: f64) -> Self {
+        self.price_mult = m;
+        self
+    }
+
+    pub fn with_tz_offset_ms(mut self, o: f64) -> Self {
+        self.tz_offset_ms = o;
+        self
+    }
+
+    pub fn with_weight(mut self, w: f64) -> Self {
+        self.weight = w;
+        self
+    }
+}
+
+/// A scenario-driven region reassignment: `device` re-homes to `to_region`
+/// at virtual time `at_ms`. Applied by the device itself at the first
+/// decision at or after `at_ms`, so mobility is shard- and epoch-invariant.
+#[derive(Debug, Clone, Copy)]
+pub struct MobilityEvent {
+    pub at_ms: f64,
+    pub device: usize,
+    pub to_region: usize,
+}
+
+/// Full multi-region topology for one fleet run.
+#[derive(Debug, Clone)]
+pub struct TopologySpec {
+    pub regions: Vec<RegionSettings>,
+    /// extra one-way latency for reaching a non-home region (ms)
+    pub cross_penalty_ms: f64,
+    /// lognormal σ of per-(device, region) routing-latency jitter
+    pub routing_jitter_sigma: f64,
+    pub cil_mode: CilMode,
+    /// explicit per-device mobility events (tests / trace replay)
+    pub moves: Vec<MobilityEvent>,
+    /// fraction of devices that migrate home → (home+1) mod R ...
+    pub mobility_fraction: f64,
+    /// ... at this virtual time (ms)
+    pub mobility_at_ms: f64,
+}
+
+impl TopologySpec {
+    pub fn new(regions: Vec<RegionSettings>) -> Self {
+        TopologySpec {
+            regions,
+            cross_penalty_ms: 60.0,
+            routing_jitter_sigma: 0.0,
+            cil_mode: CilMode::Private,
+            moves: Vec::new(),
+            mobility_fraction: 0.0,
+            mobility_at_ms: 0.0,
+        }
+    }
+
+    pub fn with_cil_mode(mut self, m: CilMode) -> Self {
+        self.cil_mode = m;
+        self
+    }
+
+    pub fn with_cross_penalty_ms(mut self, p: f64) -> Self {
+        self.cross_penalty_ms = p;
+        self
+    }
+
+    pub fn with_routing_jitter(mut self, sigma: f64) -> Self {
+        self.routing_jitter_sigma = sigma;
+        self
+    }
+
+    pub fn with_mobility(mut self, fraction: f64, at_ms: f64) -> Self {
+        self.mobility_fraction = fraction;
+        self.mobility_at_ms = at_ms;
+        self
+    }
+
+    pub fn with_moves(mut self, moves: Vec<MobilityEvent>) -> Self {
+        self.moves = moves;
+        self
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Validate invariants the runtime relies on.
+    pub fn validate(&self) -> Result<()> {
+        if self.regions.is_empty() {
+            bail!("topology needs at least one region");
+        }
+        for r in &self.regions {
+            if r.routing_ms < 0.0 || r.price_mult <= 0.0 || r.weight < 0.0 {
+                bail!("region `{}`: routing/price/weight out of range", r.name);
+            }
+        }
+        if self.regions.iter().map(|r| r.weight).sum::<f64>() <= 0.0 {
+            bail!("topology region weights sum to zero");
+        }
+        if !(0.0..=1.0).contains(&self.mobility_fraction) {
+            bail!("mobility fraction must be in [0, 1]");
+        }
+        for m in &self.moves {
+            if m.to_region >= self.regions.len() {
+                bail!("mobility event targets unknown region {}", m.to_region);
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a topology spec. Presets `duo` and `triad`, or a custom list of
+    /// `name:rtt_ms[:price_mult[:tz_offset_s[:weight]]]` entries separated
+    /// by commas, e.g. `us-east:8,eu-west:42:1.05:-10,ap-south:75:0.92:10`.
+    pub fn parse(s: &str) -> Result<TopologySpec> {
+        match s {
+            "duo" => {
+                return Ok(TopologySpec::new(vec![
+                    RegionSettings::new("us-east", 8.0),
+                    RegionSettings::new("eu-west", 42.0).with_price_mult(1.05),
+                ]));
+            }
+            "triad" => {
+                return Ok(TopologySpec::new(vec![
+                    RegionSettings::new("us-east", 8.0),
+                    RegionSettings::new("eu-west", 42.0)
+                        .with_price_mult(1.05)
+                        .with_tz_offset_ms(-10_000.0),
+                    RegionSettings::new("ap-south", 75.0)
+                        .with_price_mult(0.92)
+                        .with_tz_offset_ms(10_000.0),
+                ]));
+            }
+            _ => {}
+        }
+        let mut regions = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 2 || fields.len() > 5 {
+                bail!("bad region `{part}` (want name:rtt[:price[:tz_s[:weight]]])");
+            }
+            let num = |i: usize, what: &str| -> Result<f64> {
+                fields[i]
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad {what} in region `{part}`"))
+            };
+            let mut r = RegionSettings::new(fields[0].trim(), num(1, "rtt")?);
+            if fields.len() > 2 {
+                r.price_mult = num(2, "price multiplier")?;
+            }
+            if fields.len() > 3 {
+                r.tz_offset_ms = num(3, "tz offset")? * 1000.0;
+            }
+            if fields.len() > 4 {
+                r.weight = num(4, "weight")?;
+            }
+            regions.push(r);
+        }
+        if regions.is_empty() {
+            bail!("empty topology spec");
+        }
+        let t = TopologySpec::new(regions);
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse() {
+        let duo = TopologySpec::parse("duo").unwrap();
+        assert_eq!(duo.n_regions(), 2);
+        assert_eq!(duo.regions[0].name, "us-east");
+        let triad = TopologySpec::parse("triad").unwrap();
+        assert_eq!(triad.n_regions(), 3);
+        assert!(triad.regions[2].price_mult < 1.0);
+        assert!(triad.validate().is_ok());
+    }
+
+    #[test]
+    fn custom_spec_parses_positionally() {
+        let t = TopologySpec::parse("a:5, b:40:1.1, c:80:0.9:-10:2.5").unwrap();
+        assert_eq!(t.n_regions(), 3);
+        assert_eq!(t.regions[0].routing_ms, 5.0);
+        assert_eq!(t.regions[1].price_mult, 1.1);
+        assert_eq!(t.regions[2].tz_offset_ms, -10_000.0);
+        assert_eq!(t.regions[2].weight, 2.5);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(TopologySpec::parse("").is_err());
+        assert!(TopologySpec::parse("lonely").is_err());
+        assert!(TopologySpec::parse("a:x").is_err());
+        assert!(TopologySpec::parse("a:5:-1").is_err(), "negative price mult");
+    }
+
+    #[test]
+    fn validate_catches_bad_moves_and_fractions() {
+        let mut t = TopologySpec::parse("duo").unwrap();
+        t.moves.push(MobilityEvent { at_ms: 100.0, device: 0, to_region: 7 });
+        assert!(t.validate().is_err());
+        let t = TopologySpec::parse("duo").unwrap().with_mobility(1.5, 0.0);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn cil_mode_parse() {
+        assert_eq!(CilMode::parse("hub").unwrap(), CilMode::Hub);
+        assert_eq!(CilMode::parse("private").unwrap(), CilMode::Private);
+        assert!(CilMode::parse("gossip").is_err());
+        assert_eq!(CilMode::Hub.label(), "hub");
+    }
+}

@@ -78,6 +78,44 @@ impl DecisionEngine {
     }
 }
 
+/// Expand memory-config candidates into flattened (region, config) indices,
+/// region-major: flat = region · n_configs + config. The engine then scores
+/// routed cloud candidates exactly like plain ones — `Prediction.cloud` is
+/// laid out with the same flattening. For one region this is the identity,
+/// which is what keeps single-region runs bit-identical to the paper's
+/// protocol.
+pub fn flatten_region_candidates(
+    config_idxs: &[usize],
+    n_regions: usize,
+    n_configs: usize,
+) -> Vec<usize> {
+    let mut flat = Vec::with_capacity(n_regions * config_idxs.len());
+    for r in 0..n_regions {
+        for &j in config_idxs {
+            flat.push(r * n_configs + j);
+        }
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flattening_one_region_is_identity() {
+        assert_eq!(flatten_region_candidates(&[2, 5, 7], 1, 19), vec![2, 5, 7]);
+    }
+
+    #[test]
+    fn flattening_is_region_major() {
+        assert_eq!(
+            flatten_region_candidates(&[1, 3], 3, 4),
+            vec![1, 3, 5, 7, 9, 11]
+        );
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod test_support {
     use crate::predictor::{CloudPrediction, Prediction};

@@ -2,32 +2,39 @@
 //! single-device simulator's `place_and_execute`.
 //!
 //! A [`Device`] owns everything that is private to one edge device —
-//! Predictor + CIL, Decision Engine, edge Executor FIFO, and the device's
-//! ground-truth sampling stream — and exposes one operation, [`Device::ingest`]:
-//! take an arriving task, predict, decide, update the CIL, and either
-//! execute on the local edge queue (returning a finished [`TaskRecord`]) or
-//! emit a [`CloudRequest`] to be applied against the *shared* regional
-//! container pools at upload-trigger time.
+//! Predictor, Decision Engine, edge Executor FIFO, the device's
+//! ground-truth sampling stream, and a [`DeviceRouter`] holding its
+//! region routing row and per-region working CILs — and exposes one
+//! operation, [`Device::ingest`]: take an arriving task, predict over every
+//! (region, memory-config) candidate, decide, update the working CIL, and
+//! either execute on the local edge queue (returning a finished
+//! [`TaskRecord`]) or emit a [`CloudRequest`] to be applied against the
+//! chosen region's *shared* container pools at upload-trigger time.
 //!
 //! Splitting cloud execution out of the stepper is what makes the fleet
-//! simulator shardable: nothing in `ingest` reads shared state (the CIL is
-//! the device's private *belief* about the pools), so N devices can step in
-//! parallel while the coordinator applies their `CloudRequest`s to the
-//! shared [`CloudPlatform`] in one canonical order. The single-device
-//! simulator (`crate::sim::run`) drives the same stepper, which is what the
+//! simulator shardable: nothing in `ingest` reads live shared state (the
+//! working CILs are the device's frozen-per-epoch *belief* about the
+//! pools), so N devices can step in parallel while the coordinator applies
+//! their `CloudRequest`s to the per-region [`CloudPlatform`]s in one
+//! canonical order. The single-device simulator (`crate::sim::run`) drives
+//! the same stepper with the implicit single region, which is what the
 //! fleet-equivalence tests pin down.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{ExperimentSettings, Meta};
-use crate::engine::DecisionEngine;
+use crate::config::{ExperimentSettings, Meta, PredictorBackendKind};
+use crate::engine::{flatten_region_candidates, DecisionEngine};
 use crate::metrics::TaskRecord;
+use crate::models::{NativeModels, RawPrediction};
 use crate::platform::containers::StartKind;
 use crate::platform::greengrass::EdgeExecutor;
 use crate::platform::lambda::{CloudExecution, CloudPlatform};
 use crate::platform::latency::GroundTruthSampler;
 use crate::platform::pricing::aws_pricing;
 use crate::predictor::{Placement, Predictor};
+use crate::region::DeviceRouter;
 use crate::workload::Task;
 
 /// Static description of one edge device in a fleet.
@@ -78,11 +85,13 @@ pub struct EdgeOutcome {
     pub stored_ms: f64,
 }
 
-/// A cloud placement waiting to be applied to the shared container pools.
+/// A cloud placement waiting to be applied to the chosen region's shared
+/// container pools.
 ///
 /// Everything the platform needs is captured at decision time — including
-/// the device's T_idl draw, so the device stream stays self-contained and
-/// the request can be replayed against the pools in any merge schedule.
+/// the device's T_idl draw and its routing latency to the region — so the
+/// device stream stays self-contained and the request can be replayed
+/// against the pools in any merge schedule.
 #[derive(Debug, Clone)]
 pub struct CloudRequest {
     pub device_id: usize,
@@ -90,19 +99,33 @@ pub struct CloudRequest {
     pub seq: u64,
     /// task id within the device's workload
     pub task_id: usize,
-    /// chosen cloud configuration index
+    /// chosen region index
+    pub region: usize,
+    /// chosen cloud configuration index within the region
     pub j: usize,
+    /// flattened (region, config) index — what the record's placement holds
+    pub flat: usize,
     pub arrive_ms: f64,
-    /// arrive + upload: the instant the function fires against the pool
+    /// arrive + upload + routing: the instant the function fires against
+    /// the region's pool
     pub trigger_ms: f64,
     pub upld_ms: f64,
+    /// one-way routing latency to the chosen region at decision time
+    pub routing_ms: f64,
     pub comp_ms: f64,
     pub start_w_ms: f64,
     pub start_c_ms: f64,
     pub store_ms: f64,
     pub tidl_ms: f64,
     pub mem_mb: f64,
+    /// region execution-price multiplier applied to the billed cost
+    pub price_mult: f64,
     pub warm_predicted: bool,
+    /// predicted trigger time — when the belief says the function fires
+    /// (hub-CIL absorption replays beliefs in decision order with this)
+    pub pred_trigger_ms: f64,
+    /// predicted start+compute busy window behind the belief
+    pub pred_busy_ms: f64,
     fields: DecisionFields,
 }
 
@@ -117,9 +140,14 @@ pub enum Dispatch {
 /// One edge device's complete private state.
 pub struct Device<'a> {
     pub profile: DeviceProfile,
+    /// raw scoring + component means; NOTE: its embedded `cil` is NOT used
+    /// on the device path — container beliefs live per region in `router`
+    /// (the predictor-owned CIL serves the standalone `Predictor` API,
+    /// e.g. live mode)
     pub predictor: Predictor,
     pub engine: DecisionEngine,
     pub edge: EdgeExecutor,
+    pub router: DeviceRouter,
     /// cold-start / T_idl sampling stream, private to this device
     gt: GroundTruthSampler<'a>,
     /// peak edge FIFO length observed on this device
@@ -129,19 +157,35 @@ pub struct Device<'a> {
 
 impl<'a> Device<'a> {
     /// Build a device from experiment settings, mirroring the construction
-    /// in the single-device simulator (same CIL belief override, same
-    /// engine constants, same T_idl stream layout).
+    /// in the single-device simulator: implicit single region, private CIL
+    /// (same belief override, same engine constants, same T_idl stream
+    /// layout).
     pub fn new(
         meta: &'a Meta,
         settings: &ExperimentSettings,
         profile: DeviceProfile,
     ) -> Result<Device<'a>> {
+        let tidl = settings.tidl_belief_ms.unwrap_or(meta.tidl_mean_ms);
+        let router = DeviceRouter::single(meta.memory_configs_mb.len(), tidl);
+        Self::build(meta, settings, profile, None, router)
+    }
+
+    /// Build a device with an explicit router (fleet path) and, optionally,
+    /// a fleet-shared immutable model instance for its app.
+    pub fn build(
+        meta: &'a Meta,
+        settings: &ExperimentSettings,
+        profile: DeviceProfile,
+        shared_models: Option<Arc<NativeModels>>,
+        router: DeviceRouter,
+    ) -> Result<Device<'a>> {
         let app = meta.app(&profile.app).clone();
-        let mut predictor = Predictor::with_backend_kind(meta, &app, settings.backend)?;
-        if let Some(tidl) = settings.tidl_belief_ms {
-            predictor.cil =
-                crate::predictor::cil::Cil::new(meta.memory_configs_mb.len(), tidl);
-        }
+        let predictor = match shared_models {
+            Some(m) if settings.backend == PredictorBackendKind::Native => {
+                Predictor::from_shared(meta, &app, m)
+            }
+            _ => Predictor::with_backend_kind(meta, &app, settings.backend)?,
+        };
         let config_idxs: Vec<usize> = settings
             .config_set
             .iter()
@@ -152,9 +196,14 @@ impl<'a> Device<'a> {
                 })
             })
             .collect::<Result<_>>()?;
+        let flat_idxs = flatten_region_candidates(
+            &config_idxs,
+            router.n_regions(),
+            meta.memory_configs_mb.len(),
+        );
         let engine = DecisionEngine::new(
             settings.objective,
-            config_idxs,
+            flat_idxs,
             settings.deadline_ms.unwrap_or(app.deadline_ms),
             settings.cmax.unwrap_or(app.cmax),
             settings.alpha.unwrap_or(app.alpha),
@@ -166,6 +215,7 @@ impl<'a> Device<'a> {
             predictor,
             engine,
             edge: EdgeExecutor::new(),
+            router,
             gt,
             peak_edge_queue: 0,
             seq: 0,
@@ -176,13 +226,23 @@ impl<'a> Device<'a> {
     ///
     /// Edge placements execute immediately on the device's private FIFO and
     /// return a complete record; cloud placements return a [`CloudRequest`]
-    /// the caller must apply to the shared pools (see [`execute_cloud`] /
-    /// [`complete_cloud`]).
+    /// the caller must apply to the chosen region's shared pools (see
+    /// [`execute_cloud`] / [`complete_cloud`]).
     pub fn ingest(&mut self, task: &Task, now: f64) -> Result<Dispatch> {
+        let raw = self.predictor.raw(task.actuals.size)?;
+        self.ingest_raw(task, now, &raw)
+    }
+
+    /// [`Device::ingest`] with the raw model outputs already scored — the
+    /// fleet's epoch-batched scoring path (b64 artifact) feeds this. Raw
+    /// predictions depend only on input size, so batching is outcome-
+    /// preserving by construction.
+    pub fn ingest_raw(&mut self, task: &Task, now: f64, raw: &RawPrediction) -> Result<Dispatch> {
         let a = &task.actuals;
-        let pred = self.predictor.predict(a.size, now)?;
+        self.router.apply_moves(now);
+        let pred = self.router.assemble(&self.predictor, raw, now);
         let decision = self.engine.decide(&pred, self.edge.predicted_wait(now));
-        self.predictor.update_cil(decision.placement, &pred, now);
+        self.router.note_placement(decision.placement, &pred, now);
         let fields = DecisionFields {
             predicted_e2e_ms: decision.predicted_e2e_ms,
             predicted_cost: decision.predicted_cost,
@@ -215,7 +275,10 @@ impl<'a> Device<'a> {
                     stored_ms: stored,
                 }))
             }
-            Placement::Cloud(j) => {
+            Placement::Cloud(flat) => {
+                let (region, j) = self.router.split(flat);
+                let cp = &pred.cloud[flat];
+                let routing = self.router.routing_ms(region);
                 let tidl = self.gt.sample_tidl();
                 let seq = self.seq;
                 self.seq += 1;
@@ -223,17 +286,23 @@ impl<'a> Device<'a> {
                     device_id: self.profile.id,
                     seq,
                     task_id: task.id,
+                    region,
                     j,
+                    flat,
                     arrive_ms: now,
-                    trigger_ms: now + a.upld,
+                    trigger_ms: now + a.upld + routing,
                     upld_ms: a.upld,
+                    routing_ms: routing,
                     comp_ms: a.comp[j],
                     start_w_ms: a.start_w,
                     start_c_ms: a.start_c,
                     store_ms: a.store,
                     tidl_ms: tidl,
                     mem_mb: self.predictor.mems[j],
-                    warm_predicted: pred.cloud[j].warm,
+                    price_mult: self.router.price_mult(region),
+                    warm_predicted: cp.warm,
+                    pred_trigger_ms: now + cp.upld_ms,
+                    pred_busy_ms: cp.start_ms + cp.comp_ms,
                     fields,
                 }))
             }
@@ -241,12 +310,14 @@ impl<'a> Device<'a> {
     }
 }
 
-/// Apply a pending cloud request to the (shared) platform pools.
+/// Apply a pending cloud request to its region's (shared) platform pools.
+/// Routing latency rides with the upload leg, so the container fires at
+/// `arrive + upld + routing` — exactly the request's trigger.
 pub fn execute_cloud(req: &CloudRequest, cloud: &mut CloudPlatform) -> CloudExecution {
     cloud.execute(
         req.j,
         req.arrive_ms,
-        req.upld_ms,
+        req.upld_ms + req.routing_ms,
         req.comp_ms,
         req.start_w_ms,
         req.start_c_ms,
@@ -256,16 +327,17 @@ pub fn execute_cloud(req: &CloudRequest, cloud: &mut CloudPlatform) -> CloudExec
 }
 
 /// Assemble the task record for an applied cloud request. The actual billed
-/// cost comes from the actual compute duration through AWS pricing.
+/// cost comes from the actual compute duration through AWS pricing, scaled
+/// by the chosen region's price multiplier.
 pub fn complete_cloud(req: &CloudRequest, exec: &CloudExecution) -> TaskRecord {
     TaskRecord {
         id: req.task_id,
         arrive_ms: req.arrive_ms,
-        placement: Placement::Cloud(req.j),
+        placement: Placement::Cloud(req.flat),
         predicted_e2e_ms: req.fields.predicted_e2e_ms,
         actual_e2e_ms: exec.stored_at - req.arrive_ms,
         predicted_cost: req.fields.predicted_cost,
-        actual_cost: aws_pricing().cost(req.comp_ms, req.mem_mb),
+        actual_cost: aws_pricing().cost(req.comp_ms, req.mem_mb) * req.price_mult,
         allowed_cost: req.fields.allowed_cost,
         feasible_found: req.fields.feasible_found,
         warm_predicted: Some(req.warm_predicted),
@@ -312,6 +384,11 @@ mod tests {
                     assert!(req.trigger_ms > req.arrive_ms);
                     assert!(req.tidl_ms >= 60_000.0);
                     assert_eq!(req.seq as usize, cloud - 1, "seq counts cloud requests");
+                    assert_eq!(req.region, 0, "implicit single region");
+                    assert_eq!(req.flat, req.j, "flat index is the config in 1 region");
+                    assert_eq!(req.routing_ms, 0.0);
+                    assert_eq!(req.price_mult, 1.0);
+                    assert!(req.pred_busy_ms > 0.0);
                 }
             }
         }
@@ -331,14 +408,46 @@ mod tests {
             if let Dispatch::Cloud(req) = dev.ingest(t, t.arrive_ms).unwrap() {
                 let exec = execute_cloud(&req, &mut pools);
                 let rec = complete_cloud(&req, &exec);
-                // e2e decomposition: upld + start + comp + store
-                let want = req.upld_ms + exec.start_ms + req.comp_ms + req.store_ms;
+                // e2e decomposition: upld + routing + start + comp + store
+                let want = req.upld_ms + req.routing_ms + exec.start_ms + req.comp_ms
+                    + req.store_ms;
                 assert!((rec.actual_e2e_ms - want).abs() < 1e-9);
                 assert!(rec.actual_cost > 0.0);
                 assert_eq!(rec.id, t.id);
             }
         }
         assert!(pools.cold_total() >= 1);
+    }
+
+    #[test]
+    fn ingest_raw_matches_per_task_scoring() {
+        // the epoch-batched path must be outcome-identical to per-task
+        // scoring: raw predictions are pure functions of input size
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0]);
+        let tasks = build_workload(&meta, "fd", 40, true, s.seed).unwrap();
+        let mut a = Device::new(&meta, &s, DeviceProfile::uniform(0, "fd", 7)).unwrap();
+        let mut b = Device::new(&meta, &s, DeviceProfile::uniform(0, "fd", 7)).unwrap();
+        let raws = b
+            .predictor
+            .backend()
+            .raw_batch(&tasks.iter().map(|t| t.actuals.size).collect::<Vec<_>>())
+            .unwrap();
+        for (t, raw) in tasks.iter().zip(&raws) {
+            let da = a.ingest(t, t.arrive_ms).unwrap();
+            let db = b.ingest_raw(t, t.arrive_ms, raw).unwrap();
+            match (da, db) {
+                (Dispatch::Edge(x), Dispatch::Edge(y)) => {
+                    assert_eq!(x.record.actual_e2e_ms, y.record.actual_e2e_ms);
+                }
+                (Dispatch::Cloud(x), Dispatch::Cloud(y)) => {
+                    assert_eq!(x.flat, y.flat);
+                    assert_eq!(x.trigger_ms, y.trigger_ms);
+                    assert_eq!(x.tidl_ms, y.tidl_ms);
+                }
+                _ => panic!("batched and per-task scoring diverged on placement"),
+            }
+        }
     }
 
     #[test]

@@ -63,6 +63,20 @@ impl DeviceSummary {
     }
 }
 
+/// Per-region slice of a fleet run: how much cloud traffic a region's
+/// pools absorbed and how well warm prediction tracked them.
+#[derive(Debug, Clone)]
+pub struct RegionBreakdown {
+    pub region: usize,
+    pub name: String,
+    pub cloud_count: usize,
+    pub warm: usize,
+    pub cold: usize,
+    pub mismatches: usize,
+    /// peak live containers in any one of this region's pools
+    pub max_pool_high_water: usize,
+}
+
 /// Fleet-wide aggregated outcome — one per fleet run.
 #[derive(Debug, Clone)]
 pub struct FleetSummary {
@@ -85,21 +99,50 @@ pub struct FleetSummary {
     pub max_pool_high_water: usize,
     /// deepest edge FIFO observed on any device
     pub peak_edge_queue: usize,
+    /// per-region traffic/warm-prediction slices (one entry for the
+    /// implicit single region when no topology is configured)
+    pub regions: Vec<RegionBreakdown>,
     /// order-sensitive digest of every record (placement, latency, cost,
     /// warm/cold); equal fingerprints ⇒ bit-identical fleet outcomes
     pub fingerprint: u64,
 }
 
 impl FleetSummary {
-    /// Aggregate per-device record vectors (canonical device order).
-    /// `deadlines[d]` is device d's effective deadline δ.
+    /// Aggregate per-device record vectors (canonical device order) for a
+    /// single implicit region. `deadlines[d]` is device d's effective
+    /// deadline δ.
     pub fn build(
         records: &[Vec<TaskRecord>],
         deadlines: &[f64],
         pool_high_water: Vec<usize>,
         peak_edge_queue: usize,
     ) -> FleetSummary {
+        Self::build_with_regions(
+            records,
+            deadlines,
+            pool_high_water,
+            peak_edge_queue,
+            &["local".to_string()],
+            0,
+        )
+    }
+
+    /// Aggregate with a region layout: `pool_high_water` is the
+    /// region-major concatenation of per-config marks, and cloud placements
+    /// carry flattened (region · n_configs + config) indices.
+    pub fn build_with_regions(
+        records: &[Vec<TaskRecord>],
+        deadlines: &[f64],
+        pool_high_water: Vec<usize>,
+        peak_edge_queue: usize,
+        region_names: &[String],
+        n_configs: usize,
+    ) -> FleetSummary {
         assert_eq!(records.len(), deadlines.len());
+        let n_regions = region_names.len().max(1);
+        let region_of = |flat: usize| {
+            if n_configs == 0 { 0 } else { (flat / n_configs).min(n_regions - 1) }
+        };
         let mut e2e = Vec::new();
         let mut edge_count = 0;
         let mut cloud_count = 0;
@@ -109,6 +152,17 @@ impl FleetSummary {
         let mut warm = 0;
         let mut cold = 0;
         let mut mismatches = 0;
+        let mut regions: Vec<RegionBreakdown> = (0..n_regions)
+            .map(|r| RegionBreakdown {
+                region: r,
+                name: region_names.get(r).cloned().unwrap_or_default(),
+                cloud_count: 0,
+                warm: 0,
+                cold: 0,
+                mismatches: 0,
+                max_pool_high_water: 0,
+            })
+            .collect();
         let mut h = FNV_OFFSET;
         for (recs, &deadline) in records.iter().zip(deadlines) {
             for r in recs {
@@ -117,6 +171,18 @@ impl FleetSummary {
                     edge_count += 1;
                 } else {
                     cloud_count += 1;
+                }
+                if let Placement::Cloud(flat) = r.placement {
+                    let br = &mut regions[region_of(flat)];
+                    br.cloud_count += 1;
+                    match r.warm_actual {
+                        Some(true) => br.warm += 1,
+                        Some(false) => br.cold += 1,
+                        None => {}
+                    }
+                    if r.warm_cold_mismatch() {
+                        br.mismatches += 1;
+                    }
                 }
                 if r.actual_e2e_ms > deadline {
                     violations += 1;
@@ -132,6 +198,21 @@ impl FleetSummary {
                     mismatches += 1;
                 }
                 h = fold_record(h, r);
+            }
+        }
+        // slice the region-major pool marks back into per-region peaks
+        let chunk = if pool_high_water.is_empty() {
+            0
+        } else {
+            pool_high_water.len() / n_regions
+        };
+        if chunk > 0 {
+            for (r, br) in regions.iter_mut().enumerate() {
+                br.max_pool_high_water = pool_high_water[r * chunk..(r + 1) * chunk]
+                    .iter()
+                    .copied()
+                    .max()
+                    .unwrap_or(0);
             }
         }
         let n_tasks = e2e.len();
@@ -151,6 +232,7 @@ impl FleetSummary {
             max_pool_high_water: pool_high_water.iter().copied().max().unwrap_or(0),
             pool_high_water,
             peak_edge_queue,
+            regions,
             fingerprint: h,
         }
     }
@@ -224,6 +306,41 @@ mod tests {
         assert!((s.total_actual_cost - 5e-6).abs() < 1e-18);
         assert_eq!(s.max_pool_high_water, 3);
         assert_eq!(s.peak_edge_queue, 5);
+    }
+
+    #[test]
+    fn region_breakdown_splits_flattened_placements() {
+        let mk = |flat: usize, warm: bool| TaskRecord {
+            placement: Placement::Cloud(flat),
+            warm_predicted: Some(true),
+            warm_actual: Some(warm),
+            ..rec(1000.0, 1e-6, false, Some(warm))
+        };
+        // n_configs = 3: flat 2 → region 0, flat 4 → region 1
+        let recs = vec![mk(2, true), mk(4, false), mk(4, true)];
+        let names = vec!["near".to_string(), "far".to_string()];
+        let s = FleetSummary::build_with_regions(
+            &[recs], &[1e9], vec![5, 0, 1, 2, 9, 0], 0, &names, 3,
+        );
+        assert_eq!(s.regions.len(), 2);
+        assert_eq!(s.regions[0].cloud_count, 1);
+        assert_eq!(s.regions[1].cloud_count, 2);
+        assert_eq!(s.regions[1].warm, 1);
+        assert_eq!(s.regions[1].cold, 1);
+        assert_eq!(s.regions[1].mismatches, 1, "predicted warm, was cold");
+        assert_eq!(s.regions[0].max_pool_high_water, 5);
+        assert_eq!(s.regions[1].max_pool_high_water, 9);
+        assert_eq!(s.regions[1].name, "far");
+        assert_eq!(s.max_pool_high_water, 9);
+    }
+
+    #[test]
+    fn single_region_build_keeps_one_breakdown() {
+        let dev = vec![rec(1000.0, 1e-6, false, Some(true))];
+        let s = FleetSummary::build(&[dev], &[1e9], vec![1, 2], 0);
+        assert_eq!(s.regions.len(), 1);
+        assert_eq!(s.regions[0].cloud_count, 1);
+        assert_eq!(s.regions[0].max_pool_high_water, 2);
     }
 
     #[test]

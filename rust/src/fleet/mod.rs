@@ -20,7 +20,9 @@
 //!    sine, synchronized bursts, device churn — all seeded PCG32 streams,
 //!  * [`shard`] — devices partitioned across `std::thread` shards with
 //!    per-shard event queues and a deterministic epoch-barrier merge for
-//!    the shared pools (results are identical for any thread count),
+//!    the shared per-region pools (results are identical for any thread
+//!    count), plus epoch-batched predictor scoring and hub-CIL snapshot
+//!    broadcast (see [`crate::region`]),
 //!  * [`metrics`] — per-device and fleet-wide summaries: p50/p95/p99
 //!    latency, deadline-violation rate, pool-concurrency high-water marks,
 //!    aggregate cost, and a determinism fingerprint.
@@ -36,8 +38,8 @@ use crate::config::{ExperimentSettings, FleetSettings, Meta};
 use crate::metrics::TaskRecord;
 
 pub use device::{CloudRequest, Device, DeviceProfile, Dispatch};
-pub use metrics::{DeviceSummary, FleetSummary, LatencyPercentiles};
-pub use scenario::DeviceInit;
+pub use metrics::{DeviceSummary, FleetSummary, LatencyPercentiles, RegionBreakdown};
+pub use scenario::{DeviceInit, DeviceRegionInit};
 
 /// Result of one fleet run.
 pub struct FleetOutcome {
@@ -45,6 +47,9 @@ pub struct FleetOutcome {
     pub records: Vec<Vec<TaskRecord>>,
     pub device_summaries: Vec<DeviceSummary>,
     pub summary: FleetSummary,
+    /// per-region belief updates absorbed by the hub CILs (all zero in
+    /// private-CIL mode)
+    pub hub_updates: Vec<u64>,
     /// virtual time at which the last event fired
     pub sim_end_ms: f64,
 }
@@ -52,7 +57,7 @@ pub struct FleetOutcome {
 /// Build the fleet described by `fs` and run it to completion.
 pub fn run(meta: &Meta, fs: &FleetSettings) -> Result<FleetOutcome> {
     let inits = scenario::build_fleet(meta, fs)?;
-    shard::run_fleet(meta, inits, fs.shards, fs.epoch_ms)
+    shard::run_fleet(meta, inits, fs)
 }
 
 /// Run a 1-device fleet mirroring `sim::run(meta, settings)` through the
@@ -63,5 +68,6 @@ pub fn run_sim_equivalent(
     n_shards: usize,
 ) -> Result<FleetOutcome> {
     let init = scenario::mirror_sim(meta, settings)?;
-    shard::run_fleet(meta, vec![init], n_shards, 5_000.0)
+    let fs = FleetSettings::new(1).with_shards(n_shards).with_epoch_ms(5_000.0);
+    shard::run_fleet(meta, vec![init], &fs)
 }

@@ -23,6 +23,12 @@ const PROFILE_STREAM: u64 = 77;
 const THINNING_STREAM: u64 = 29;
 /// PCG stream id for churn phase offsets.
 const CHURN_STREAM: u64 = 31;
+/// PCG stream id for the fleet-level region-home assignment draw.
+const REGION_STREAM: u64 = 37;
+/// PCG stream id for per-(device, region) routing-latency jitter.
+const ROUTING_STREAM: u64 = 41;
+/// PCG stream id for the mobility-fraction selection draw.
+const MOBILITY_STREAM: u64 = 43;
 /// XOR'd into a device's sub-seed for its actuals sampling stream.
 const ACTUALS_SALT: u64 = 0xACC;
 /// XOR'd into a device's sub-seed for its T_idl stream — the same salt the
@@ -30,11 +36,29 @@ const ACTUALS_SALT: u64 = 0xACC;
 /// fleet reproduces `sim::run` draws exactly.
 pub const TIDL_SALT: u64 = 0x51D6E;
 
+/// Per-device region placement: home region, fixed per-region routing
+/// jitter factors, and scheduled (at_ms, to_region) mobility events.
+#[derive(Debug, Clone)]
+pub struct DeviceRegionInit {
+    pub home: usize,
+    pub jitter: Vec<f64>,
+    pub moves: Vec<(f64, usize)>,
+}
+
+impl DeviceRegionInit {
+    /// The implicit single-region placement (`sim::run` mirror, topology-
+    /// less fleets).
+    pub fn trivial() -> Self {
+        DeviceRegionInit { home: 0, jitter: vec![1.0], moves: Vec::new() }
+    }
+}
+
 /// Everything needed to instantiate and drive one device.
 #[derive(Debug, Clone)]
 pub struct DeviceInit {
     pub settings: ExperimentSettings,
     pub profile: DeviceProfile,
+    pub region: DeviceRegionInit,
     pub tasks: Vec<Task>,
 }
 
@@ -90,8 +114,10 @@ pub fn build_profiles(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceProfi
     Ok(profiles)
 }
 
-/// Arrival times (ms) for one device under the fleet scenario.
-pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64) -> Vec<f64> {
+/// Arrival times (ms) for one device under the fleet scenario. `phase_ms`
+/// shifts time-varying rate profiles (tz-keyed diurnal groups); 0 for
+/// scenarios without a phase.
+pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64, phase_ms: f64) -> Vec<f64> {
     let rate = rate_per_s * fs.rate_mult;
     if fs.duration_ms <= 0.0 {
         return Vec::new();
@@ -99,14 +125,22 @@ pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64) -> Vec<f64
     match fs.scenario {
         FleetScenario::Poisson => poisson_times(rate, fs.duration_ms, dseed),
         FleetScenario::Diurnal { period_ms, amplitude } => {
+            // synchronized fleet-wide daily cycle: load crests hit the
+            // regional pools together
+            sine_thinned_times(fs, rate, amplitude, period_ms, 0.0, dseed)
+        }
+        FleetScenario::DiurnalTz { period_ms, amplitude, .. } => {
+            // the same cycle, phase-shifted per time zone: load rolls
+            // around the topology instead of cresting everywhere at once
+            sine_thinned_times(fs, rate, amplitude, period_ms, phase_ms, dseed)
+        }
+        FleetScenario::FlashCrowd { at_ms, ramp_ms, peak_mult } => {
             if rate <= 0.0 {
                 return Vec::new();
             }
-            // Lewis–Shedler thinning of a homogeneous process at the peak
-            // rate; the sine phase is shared fleet-wide (synchronized
-            // daily cycle) so load crests hit the regional pools together.
-            let amp = amplitude.clamp(0.0, 1.0);
-            let rate_max = rate * (1.0 + amp);
+            // thinning against the post-ramp peak rate
+            let peak = peak_mult.max(1.0);
+            let rate_max = rate * peak;
             let mut src = PoissonArrivals::new(rate_max, dseed);
             let mut accept = Pcg32::new(dseed, THINNING_STREAM);
             let mut out = Vec::new();
@@ -115,8 +149,8 @@ pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64) -> Vec<f64
                 if t >= fs.duration_ms {
                     break;
                 }
-                let r = rate
-                    * (1.0 + amp * (2.0 * std::f64::consts::PI * t / period_ms.max(1.0)).sin());
+                let ramp = ((t - at_ms) / ramp_ms.max(1.0)).clamp(0.0, 1.0);
+                let r = rate * (1.0 + (peak - 1.0) * ramp);
                 if accept.uniform() * rate_max < r {
                     out.push(t);
                 }
@@ -150,6 +184,41 @@ pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64) -> Vec<f64
     }
 }
 
+/// Lewis–Shedler thinning of a homogeneous process at the peak rate
+/// against a (possibly phase-shifted) sine profile:
+/// rate(t) = base · (1 + amp · sin(2π (t + phase) / period)).
+fn sine_thinned_times(
+    fs: &FleetSettings,
+    rate: f64,
+    amplitude: f64,
+    period_ms: f64,
+    phase_ms: f64,
+    dseed: u64,
+) -> Vec<f64> {
+    if rate <= 0.0 {
+        return Vec::new();
+    }
+    let amp = amplitude.clamp(0.0, 1.0);
+    let rate_max = rate * (1.0 + amp);
+    let mut src = PoissonArrivals::new(rate_max, dseed);
+    let mut accept = Pcg32::new(dseed, THINNING_STREAM);
+    let mut out = Vec::new();
+    loop {
+        let t = src.next_arrival_ms();
+        if t >= fs.duration_ms {
+            break;
+        }
+        let r = rate
+            * (1.0
+                + amp
+                    * (2.0 * std::f64::consts::PI * (t + phase_ms) / period_ms.max(1.0)).sin());
+        if accept.uniform() * rate_max < r {
+            out.push(t);
+        }
+    }
+    out
+}
+
 fn poisson_times(rate_per_s: f64, duration_ms: f64, seed: u64) -> Vec<f64> {
     if rate_per_s <= 0.0 {
         return Vec::new();
@@ -165,15 +234,91 @@ fn poisson_times(rate_per_s: f64, duration_ms: f64, seed: u64) -> Vec<f64> {
     }
 }
 
-/// Build the full fleet: profiles, per-device settings, and task streams
-/// with ground-truth actuals scaled by each device's speed multipliers.
+/// Draw every device's home region from the topology's region weights
+/// (one sequential pass — canonical device order). Topology-less fleets
+/// home everyone in the implicit region 0.
+pub fn assign_regions(fs: &FleetSettings, n_devices: usize) -> Vec<usize> {
+    let Some(topo) = &fs.topology else {
+        return vec![0; n_devices];
+    };
+    let total: f64 = topo.regions.iter().map(|r| r.weight).sum();
+    let mut rng = Pcg32::new(fs.seed, REGION_STREAM);
+    (0..n_devices)
+        .map(|_| {
+            let mut pick = rng.uniform() * total;
+            let mut home = topo.regions.len() - 1;
+            for (r, spec) in topo.regions.iter().enumerate() {
+                if pick < spec.weight {
+                    home = r;
+                    break;
+                }
+                pick -= spec.weight;
+            }
+            home
+        })
+        .collect()
+}
+
+/// Per-device region placement: home, fixed routing-jitter row, and
+/// mobility events (explicit spec moves plus the fraction-draw migration).
+fn build_region_init(fs: &FleetSettings, id: usize, home: usize) -> DeviceRegionInit {
+    let Some(topo) = &fs.topology else {
+        return DeviceRegionInit::trivial();
+    };
+    let dseed = device_seed(fs.seed, id);
+    let n = topo.regions.len();
+    let mut jrng = Pcg32::new(dseed, ROUTING_STREAM);
+    let jitter: Vec<f64> = (0..n)
+        .map(|_| jrng.lognormal(0.0, topo.routing_jitter_sigma))
+        .collect();
+    let mut moves: Vec<(f64, usize)> = topo
+        .moves
+        .iter()
+        .filter(|m| m.device == id)
+        .map(|m| (m.at_ms, m.to_region))
+        .collect();
+    if topo.mobility_fraction > 0.0 && n > 1 {
+        let mut mrng = Pcg32::new(dseed, MOBILITY_STREAM);
+        if mrng.uniform() < topo.mobility_fraction {
+            moves.push((topo.mobility_at_ms, (home + 1) % n));
+        }
+    }
+    DeviceRegionInit { home, jitter, moves }
+}
+
+/// The sine-phase offset a device's arrival stream uses under tz-keyed
+/// scenarios: its region's time-zone offset when a topology is present,
+/// else an equal spread over `groups` phases by device index.
+fn device_phase_ms(fs: &FleetSettings, id: usize, home: usize) -> f64 {
+    match fs.scenario {
+        FleetScenario::DiurnalTz { period_ms, groups, .. } => match &fs.topology {
+            Some(topo) => topo.regions[home].tz_offset_ms,
+            None => {
+                let g = groups.max(1);
+                (id % g) as f64 / g as f64 * period_ms
+            }
+        },
+        _ => 0.0,
+    }
+}
+
+/// Build the full fleet: profiles, per-device settings, region placement,
+/// and task streams with ground-truth actuals scaled by each device's
+/// speed multipliers.
 pub fn build_fleet(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceInit>> {
+    if let Some(topo) = &fs.topology {
+        topo.validate()?;
+    }
     let profiles = build_profiles(meta, fs)?;
+    let homes = assign_regions(fs, profiles.len());
     let mut inits = Vec::with_capacity(profiles.len());
     for profile in profiles {
         let app = meta.app(&profile.app);
         let dseed = device_seed(fs.seed, profile.id);
-        let times = arrival_times(fs, app.arrival_rate_per_s, dseed);
+        let home = homes[profile.id];
+        let phase = device_phase_ms(fs, profile.id, home);
+        let region = build_region_init(fs, profile.id, home);
+        let times = arrival_times(fs, app.arrival_rate_per_s, dseed, phase);
         let mut sampler = GroundTruthSampler::new(meta, &profile.app, dseed ^ ACTUALS_SALT);
         let mut tasks = Vec::with_capacity(times.len());
         for (id, t) in times.into_iter().enumerate() {
@@ -192,7 +337,7 @@ pub fn build_fleet(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceInit>> {
         };
         let settings = ExperimentSettings::new(&profile.app, fs.objective, &set)
             .with_seed(dseed);
-        inits.push(DeviceInit { settings, profile, tasks });
+        inits.push(DeviceInit { settings, profile, region, tasks });
     }
     Ok(inits)
 }
@@ -208,6 +353,7 @@ pub fn mirror_sim(meta: &Meta, settings: &ExperimentSettings) -> Result<DeviceIn
     Ok(DeviceInit {
         settings: settings.clone(),
         profile: DeviceProfile::uniform(0, &settings.app, settings.seed ^ TIDL_SALT),
+        region: DeviceRegionInit::trivial(),
         tasks,
     })
 }
@@ -255,7 +401,7 @@ mod tests {
         let fs = FleetSettings::new(1)
             .with_scenario(FleetScenario::Poisson)
             .with_duration_ms(20_000.0);
-        let times = arrival_times(&fs, 4.0, 99);
+        let times = arrival_times(&fs, 4.0, 99, 0.0);
         assert!(!times.is_empty());
         assert!(times.iter().all(|&t| (0.0..20_000.0).contains(&t)));
         assert!(times.windows(2).all(|w| w[0] <= w[1]));
@@ -270,7 +416,7 @@ mod tests {
         let fs = FleetSettings::new(1)
             .with_scenario(FleetScenario::Diurnal { period_ms: 40_000.0, amplitude: 1.0 })
             .with_duration_ms(40_000.0);
-        let times = arrival_times(&fs, 8.0, 123);
+        let times = arrival_times(&fs, 8.0, 123, 0.0);
         let crest = times.iter().filter(|&&t| t < 20_000.0).count();
         let trough = times.len() - crest;
         assert!(
@@ -284,7 +430,7 @@ mod tests {
         let fs = FleetSettings::new(1)
             .with_scenario(FleetScenario::Burst { period_ms: 5_000.0, size: 10 })
             .with_duration_ms(16_000.0);
-        let times = arrival_times(&fs, 1.0, 7);
+        let times = arrival_times(&fs, 1.0, 7, 0.0);
         for k in 1..=3 {
             let at = (k as f64) * 5_000.0;
             let spike = times.iter().filter(|&&t| t == at).count();
@@ -300,7 +446,7 @@ mod tests {
             .with_scenario(FleetScenario::Burst { period_ms: 5_000.0, size: 7 })
             .with_duration_ms(12_000.0)
             .with_rate_mult(0.0);
-        let times = arrival_times(&fs, 4.0, 5);
+        let times = arrival_times(&fs, 4.0, 5, 0.0);
         assert_eq!(times.len(), 14, "two bursts of 7, no Poisson baseline");
         assert!(times.iter().all(|&t| t == 5_000.0 || t == 10_000.0));
     }
@@ -310,13 +456,14 @@ mod tests {
         let fs = FleetSettings::new(1)
             .with_scenario(FleetScenario::Churn { on_ms: 5_000.0, off_ms: 5_000.0 })
             .with_duration_ms(60_000.0);
-        let on = arrival_times(&fs, 4.0, 11);
+        let on = arrival_times(&fs, 4.0, 11, 0.0);
         let always = arrival_times(
             &FleetSettings::new(1)
                 .with_scenario(FleetScenario::Poisson)
                 .with_duration_ms(60_000.0),
             4.0,
             11,
+            0.0,
         );
         // 50% duty cycle drops roughly half the arrivals
         assert!(on.len() < always.len());
@@ -347,6 +494,104 @@ mod tests {
                 assert_eq!(x.arrive_ms, y.arrive_ms);
                 assert_eq!(x.actuals.edge_comp, y.actuals.edge_comp);
             }
+        }
+    }
+
+    #[test]
+    fn diurnal_tz_phase_moves_the_crest() {
+        // amplitude 1: the half-period around the crest dominates; a
+        // half-period phase shift must move the crest to the other half
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::DiurnalTz {
+                period_ms: 40_000.0,
+                amplitude: 1.0,
+                groups: 2,
+            })
+            .with_duration_ms(40_000.0);
+        let in_phase = arrival_times(&fs, 8.0, 123, 0.0);
+        let shifted = arrival_times(&fs, 8.0, 123, 20_000.0);
+        let first_half = |ts: &[f64]| ts.iter().filter(|&&t| t < 20_000.0).count();
+        let a = first_half(&in_phase);
+        let b = first_half(&shifted);
+        assert!(a * 2 > in_phase.len(), "unshifted crest in the first half");
+        assert!(b * 2 < shifted.len(), "shifted crest in the second half");
+    }
+
+    #[test]
+    fn diurnal_tz_zero_phase_matches_plain_diurnal() {
+        let tz = FleetSettings::new(1)
+            .with_scenario(FleetScenario::DiurnalTz {
+                period_ms: 30_000.0,
+                amplitude: 0.8,
+                groups: 3,
+            })
+            .with_duration_ms(30_000.0);
+        let plain = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Diurnal { period_ms: 30_000.0, amplitude: 0.8 })
+            .with_duration_ms(30_000.0);
+        assert_eq!(
+            arrival_times(&tz, 6.0, 9, 0.0),
+            arrival_times(&plain, 6.0, 9, 0.0),
+            "phase 0 tz-diurnal is the synchronized diurnal"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_ramps_the_rate() {
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::FlashCrowd {
+                at_ms: 10_000.0,
+                ramp_ms: 5_000.0,
+                peak_mult: 4.0,
+            })
+            .with_duration_ms(20_000.0);
+        let times = arrival_times(&fs, 8.0, 55, 0.0);
+        // per-ms arrival rate before the ramp vs after it completes
+        let before = times.iter().filter(|&&t| t < 10_000.0).count() as f64 / 10_000.0;
+        let after = times.iter().filter(|&&t| t >= 15_000.0).count() as f64 / 5_000.0;
+        assert!(
+            after > 2.0 * before,
+            "flash crowd should multiply the rate (before {before:.4}/ms, after {after:.4}/ms)"
+        );
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn region_assignment_and_mobility_are_deterministic() {
+        use crate::config::{CilMode, TopologySpec};
+        let meta = meta();
+        let topo = TopologySpec::parse("duo")
+            .unwrap()
+            .with_cil_mode(CilMode::Hub)
+            .with_routing_jitter(0.1)
+            .with_mobility(1.0, 4_000.0);
+        let fs = FleetSettings::new(20)
+            .with_seed(8)
+            .with_duration_ms(5_000.0)
+            .with_topology(topo);
+        let a = build_fleet(&meta, &fs).unwrap();
+        let b = build_fleet(&meta, &fs).unwrap();
+        let mut homes = std::collections::BTreeSet::new();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.region.home, y.region.home);
+            assert_eq!(x.region.jitter, y.region.jitter);
+            assert_eq!(x.region.moves, y.region.moves);
+            assert_eq!(x.region.jitter.len(), 2, "one jitter factor per region");
+            assert_eq!(x.region.moves.len(), 1, "fraction 1.0 moves every device");
+            assert_eq!(x.region.moves[0], (4_000.0, (x.region.home + 1) % 2));
+            homes.insert(x.region.home);
+        }
+        assert_eq!(homes.len(), 2, "both regions get devices at weight 1:1");
+    }
+
+    #[test]
+    fn topology_free_fleet_has_trivial_region_init() {
+        let meta = meta();
+        let fs = FleetSettings::new(3).with_duration_ms(2_000.0);
+        for init in build_fleet(&meta, &fs).unwrap() {
+            assert_eq!(init.region.home, 0);
+            assert_eq!(init.region.jitter, vec![1.0]);
+            assert!(init.region.moves.is_empty());
         }
     }
 

@@ -5,29 +5,45 @@
 //! ## Why this is deterministic for any shard count
 //!
 //! Within an epoch `[t, t+Δ)` every device steps only *private* state
-//! (predictor + CIL, decision engine, edge FIFO, its own T_idl stream) — a
-//! cloud placement is emitted as a [`CloudRequest`] instead of touching the
-//! pools. At the barrier the coordinator applies all requests triggering
-//! before the epoch end to the shared [`CloudPlatform`] in one canonical
-//! order: `(trigger time, device id, per-device sequence)`. Requests
-//! triggering later stay pending. Since a future arrival can never trigger
-//! before the epoch end (`trigger = arrive + upload ≥ arrive`), the merge
-//! horizon is safe, and the outcome is a pure function of the fleet seed —
-//! the partition of devices onto threads never enters the math.
+//! (predictor, working CILs, decision engine, edge FIFO, routing row, its
+//! own T_idl stream) — a cloud placement is emitted as a [`CloudRequest`]
+//! instead of touching the pools. At the barrier the coordinator applies
+//! all requests triggering before the epoch end to the chosen region's
+//! [`CloudPlatform`](crate::platform::lambda::CloudPlatform) in one
+//! canonical order: `(trigger time, device id, per-device sequence)`.
+//! Requests triggering later stay pending. Since a future arrival can
+//! never trigger before the epoch end (`trigger = arrive + upload +
+//! routing ≥ arrive`), the merge horizon is safe, and the outcome is a
+//! pure function of the fleet seed — the partition of devices onto threads
+//! never enters the math. This argument is per-region, so it extends to
+//! any region count unchanged.
 //!
-//! The same property is what lets one device's placements warm containers
-//! that other devices' CILs know nothing about: warm-pool hit rates and
-//! CIL misprediction rates become fleet-level phenomena, which is the whole
-//! point of the subsystem.
+//! ## Hub-CIL epochs
+//!
+//! In hub mode the coordinator additionally absorbs every new request's
+//! *belief* (predicted trigger + busy window) into the region's
+//! [`RegionalCilHub`](crate::region::RegionalCilHub), in the canonical
+//! order the beliefs were formed: `(decision time, device id, sequence)`.
+//! The updated hubs are broadcast as snapshots with the next epoch
+//! command; devices overlay only their own within-epoch placements. Hub
+//! state is therefore also a pure function of the fleet seed — but unlike
+//! the pool merge, prediction quality now depends on the epoch length,
+//! which is precisely the hub's sync-latency semantics (a 1-device fleet
+//! sees its own updates immediately either way and stays bit-identical to
+//! `sim::run`).
 
 use std::cmp::Ordering;
+use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::Meta;
+use crate::config::{CilMode, FleetSettings, Meta, PredictorBackendKind};
 use crate::metrics::TaskRecord;
-use crate::platform::lambda::CloudPlatform;
+use crate::models::{NativeModels, RawPrediction};
+use crate::predictor::cil::Cil;
+use crate::region::{DeviceRouter, RegionTopology, ResolvedTopology};
 use crate::sim::events::{Event, EventQueue};
 
 use super::device::{self, CloudRequest, Device, Dispatch};
@@ -35,12 +51,29 @@ use super::metrics::{DeviceSummary, FleetSummary};
 use super::scenario::DeviceInit;
 use super::FleetOutcome;
 
+/// One barrier command: step to `epoch_end`, optionally adopting fresh
+/// hub-CIL snapshots first (hub mode only).
+struct EpochCmd {
+    epoch_end: f64,
+    hub: Option<Arc<Vec<Cil>>>,
+}
+
+/// Per-app immutable model instances shared by every device (fleet
+/// construction is O(apps), not O(devices × model size)).
+type ModelBank = BTreeMap<String, Arc<NativeModels>>;
+
 /// One device plus its run state inside a shard.
 struct DeviceRun<'a> {
     device: Device<'a>,
     tasks: Vec<crate::workload::Task>,
     queue: EventQueue,
     arrivals_left: usize,
+    /// epoch-batched raw predictions, indexed by task id
+    raw_cache: Vec<Option<RawPrediction>>,
+    /// next task not yet batch-scored (tasks are arrival-sorted)
+    next_unscored: usize,
+    /// whether this device scores through the shared batched path
+    batched: bool,
 }
 
 impl<'a> DeviceRun<'a> {
@@ -55,7 +88,11 @@ impl<'a> DeviceRun<'a> {
             match ev {
                 Event::Arrival { id } => {
                     self.arrivals_left -= 1;
-                    match self.device.ingest(&self.tasks[id], now)? {
+                    let dispatch = match self.raw_cache[id].take() {
+                        Some(raw) => self.device.ingest_raw(&self.tasks[id], now, &raw)?,
+                        None => self.device.ingest(&self.tasks[id], now)?,
+                    };
+                    match dispatch {
                         Dispatch::Edge(e) => {
                             self.queue.schedule(e.comp_end_ms, Event::EdgeCompDone { id });
                             self.queue.schedule(e.stored_ms, Event::EdgeStored { id });
@@ -99,37 +136,112 @@ impl EpochOutput {
     }
 }
 
+/// Batch-score this epoch's arrivals across all of a shard's devices,
+/// grouped per app, through the shared native models' bulk call. Today the
+/// bank is native-only (XLA devices fall back to per-task scoring at
+/// ingest), so this amortizes grouping/dispatch rather than vectorizing
+/// the math; routing the group through the XLA b64 artifact is the
+/// ROADMAP follow-on this structure exists for. Raw predictions are pure
+/// functions of input size, so the path is outcome-identical to per-task
+/// scoring (pinned by `ingest_raw_matches_per_task_scoring`).
+fn score_epoch(runs: &mut [DeviceRun], bank: &ModelBank, epoch_end: f64) {
+    let mut groups: BTreeMap<String, (Vec<f64>, Vec<(usize, usize)>)> = BTreeMap::new();
+    for (ri, run) in runs.iter_mut().enumerate() {
+        if !run.batched || run.next_unscored >= run.tasks.len() {
+            continue;
+        }
+        let entry = groups.entry(run.device.profile.app.clone()).or_default();
+        while run.next_unscored < run.tasks.len()
+            && run.tasks[run.next_unscored].arrive_ms < epoch_end
+        {
+            let t = &run.tasks[run.next_unscored];
+            entry.0.push(t.actuals.size);
+            entry.1.push((ri, t.id));
+            run.next_unscored += 1;
+        }
+    }
+    for (app, (sizes, slots)) in groups {
+        let Some(models) = bank.get(&app) else { continue };
+        let raws = models.predict_batch(&sizes);
+        for (raw, (ri, tid)) in raws.into_iter().zip(slots) {
+            runs[ri].raw_cache[tid] = Some(raw);
+        }
+    }
+}
+
+/// Instantiate one device's run state: router from its region init, the
+/// app's shared model instance when available, and the arrival queue.
+fn build_run<'a>(
+    meta: &'a Meta,
+    topo: &Arc<ResolvedTopology>,
+    mode: CilMode,
+    bank: &ModelBank,
+    init: DeviceInit,
+) -> Result<DeviceRun<'a>> {
+    let tidl = init.settings.tidl_belief_ms.unwrap_or(meta.tidl_mean_ms);
+    let router = DeviceRouter::new(
+        topo.clone(),
+        mode,
+        init.region.home,
+        init.region.jitter,
+        init.region.moves,
+        tidl,
+    )?;
+    let shared = (init.settings.backend == PredictorBackendKind::Native)
+        .then(|| bank.get(&init.profile.app).cloned())
+        .flatten();
+    let batched = shared.is_some();
+    let device = Device::build(meta, &init.settings, init.profile, shared, router)?;
+    let mut queue = EventQueue::new();
+    for t in &init.tasks {
+        queue.schedule(t.arrive_ms, Event::Arrival { id: t.id });
+    }
+    let arrivals_left = init.tasks.len();
+    let raw_cache = vec![None; init.tasks.len()];
+    Ok(DeviceRun {
+        device,
+        tasks: init.tasks,
+        queue,
+        arrivals_left,
+        raw_cache,
+        next_unscored: 0,
+        batched,
+    })
+}
+
 /// Worker body: build this shard's devices, then serve epoch commands until
 /// the command channel closes. Errors are reported through the result
 /// channel; the worker never panics on expected failure modes.
 fn worker_loop(
     meta: &Meta,
+    topo: Arc<ResolvedTopology>,
+    mode: CilMode,
+    bank: Arc<ModelBank>,
     inits: Vec<DeviceInit>,
-    commands: Receiver<f64>,
+    commands: Receiver<EpochCmd>,
     results: Sender<Result<EpochOutput, String>>,
 ) {
     let mut runs: Vec<DeviceRun> = Vec::with_capacity(inits.len());
     for init in inits {
         let dev_id = init.profile.id;
-        match Device::new(meta, &init.settings, init.profile) {
-            Ok(device) => {
-                let mut queue = EventQueue::new();
-                for t in &init.tasks {
-                    queue.schedule(t.arrive_ms, Event::Arrival { id: t.id });
-                }
-                let arrivals_left = init.tasks.len();
-                runs.push(DeviceRun { device, tasks: init.tasks, queue, arrivals_left });
-            }
+        match build_run(meta, &topo, mode, &bank, init) {
+            Ok(run) => runs.push(run),
             Err(e) => {
                 let _ = results.send(Err(format!("building device {dev_id}: {e:#}")));
                 return;
             }
         }
     }
-    while let Ok(epoch_end) = commands.recv() {
+    while let Ok(cmd) = commands.recv() {
+        if let Some(hub) = &cmd.hub {
+            for run in &mut runs {
+                run.device.router.refresh_from_hub(hub);
+            }
+        }
+        score_epoch(&mut runs, &bank, cmd.epoch_end);
         let mut out = EpochOutput::new();
         for run in &mut runs {
-            if let Err(e) = run.step_until(epoch_end, &mut out) {
+            if let Err(e) = run.step_until(cmd.epoch_end, &mut out) {
                 let _ = results
                     .send(Err(format!("device {}: {e:#}", run.device.profile.id)));
                 return;
@@ -146,20 +258,22 @@ fn worker_loop(
 }
 
 /// One barrier round: command every shard to step to `epoch_end`, then
-/// collect edge records and pending cloud requests from all of them.
-/// Returns (arrivals still queued, total events still queued).
+/// collect edge records and this epoch's fresh cloud requests from all of
+/// them. Returns (arrivals still queued, total events still queued).
 #[allow(clippy::too_many_arguments)]
 fn barrier(
-    cmd_txs: &[Sender<f64>],
+    cmd_txs: &[Sender<EpochCmd>],
     res_rx: &Receiver<Result<EpochOutput, String>>,
     epoch_end: f64,
+    hub: Option<Arc<Vec<Cil>>>,
     records: &mut [Vec<Option<TaskRecord>>],
-    pending: &mut Vec<CloudRequest>,
+    fresh: &mut Vec<CloudRequest>,
     peak_edge_queue: &mut usize,
     sim_end: &mut f64,
 ) -> Result<(usize, usize)> {
     for tx in cmd_txs {
-        if tx.send(epoch_end).is_err() {
+        let cmd = EpochCmd { epoch_end, hub: hub.clone() };
+        if tx.send(cmd).is_err() {
             // the worker died before this epoch — surface its own report
             // (e.g. a device build error) instead of the generic message
             while let Ok(res) = res_rx.try_recv() {
@@ -181,7 +295,7 @@ fn barrier(
             let slot = rec.id;
             records[dev][slot] = Some(rec);
         }
-        pending.extend(out.requests);
+        fresh.extend(out.requests);
         arrivals_left += out.arrivals_left;
         events_left += out.events_left;
         *peak_edge_queue = (*peak_edge_queue).max(out.peak_edge_queue);
@@ -190,14 +304,31 @@ fn barrier(
     Ok((arrivals_left, events_left))
 }
 
-/// Apply every pending request triggering before `horizon` to the shared
-/// pools, in canonical order. Later requests stay pending (still sorted).
+/// Absorb this epoch's fresh placements into the per-region hub CILs, in
+/// the canonical order the beliefs were formed (decision time, device,
+/// sequence) — independent of sharding.
+fn absorb_into_hubs(fresh: &mut [CloudRequest], topo: &mut RegionTopology) {
+    fresh.sort_by(|a, b| {
+        a.arrive_ms
+            .partial_cmp(&b.arrive_ms)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| a.device_id.cmp(&b.device_id))
+            .then_with(|| a.seq.cmp(&b.seq))
+    });
+    for req in fresh {
+        topo.regions[req.region]
+            .hub
+            .absorb(req.j, req.pred_trigger_ms, req.pred_busy_ms);
+    }
+}
+
+/// Apply every pending request triggering before `horizon` to its region's
+/// shared pools, in canonical order. Later requests stay pending.
 fn merge_ready(
     pending: &mut Vec<CloudRequest>,
     horizon: f64,
-    cloud: &mut CloudPlatform,
+    topo: &mut RegionTopology,
     records: &mut [Vec<Option<TaskRecord>>],
-    pool_high_water: &mut [usize],
     sim_end: &mut f64,
 ) {
     pending.sort_by(|a, b| {
@@ -213,22 +344,19 @@ fn merge_ready(
             deferred.push(req);
             continue;
         }
-        let exec = device::execute_cloud(&req, cloud);
-        pool_high_water[req.j] =
-            pool_high_water[req.j].max(cloud.pool(req.j).live_count(req.trigger_ms));
+        let region = &mut topo.regions[req.region];
+        let exec = device::execute_cloud(&req, &mut region.cloud);
+        region.pool_high_water[req.j] = region.pool_high_water[req.j]
+            .max(region.cloud.pool(req.j).live_count(req.trigger_ms));
         *sim_end = sim_end.max(exec.stored_at);
         records[req.device_id][req.task_id] = Some(device::complete_cloud(&req, &exec));
     }
     *pending = deferred;
 }
 
-/// Run a fleet to completion across `n_shards` worker threads.
-pub fn run_fleet(
-    meta: &Meta,
-    inits: Vec<DeviceInit>,
-    n_shards: usize,
-    epoch_ms: f64,
-) -> Result<FleetOutcome> {
+/// Run a fleet to completion across `fs.shards` worker threads against the
+/// fleet's (possibly multi-region) topology.
+pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Result<FleetOutcome> {
     if inits.is_empty() {
         bail!("fleet needs at least one device");
     }
@@ -239,8 +367,24 @@ pub fn run_fleet(
         }
     }
     let n_devices = inits.len();
-    let n_shards = n_shards.clamp(1, n_devices);
-    let epoch_ms = if epoch_ms > 0.0 { epoch_ms } else { 5_000.0 };
+    let n_shards = fs.shards.clamp(1, n_devices);
+    let epoch_ms = if fs.epoch_ms > 0.0 { fs.epoch_ms } else { 5_000.0 };
+    let n_configs = meta.memory_configs_mb.len();
+    let resolved = Arc::new(ResolvedTopology::from_settings(fs, n_configs)?);
+    let mode = fs.topology.as_ref().map(|t| t.cil_mode).unwrap_or(CilMode::Private);
+    let mut topo = RegionTopology::new(&resolved, meta);
+
+    // one immutable model instance per app, shared by all native-backend
+    // devices across every shard
+    let mut bank: ModelBank = BTreeMap::new();
+    for init in &inits {
+        if init.settings.backend == PredictorBackendKind::Native {
+            bank.entry(init.profile.app.clone()).or_insert_with(|| {
+                Arc::new(NativeModels::from_meta(meta, meta.app(&init.profile.app)))
+            });
+        }
+    }
+    let bank = Arc::new(bank);
 
     // coordinator-side per-device bookkeeping
     let apps: Vec<String> = inits.iter().map(|d| d.profile.app.clone()).collect();
@@ -257,8 +401,6 @@ pub fn run_fleet(
         parts[i % n_shards].push(init);
     }
 
-    let mut cloud = CloudPlatform::new(meta.memory_configs_mb.len());
-    let mut pool_high_water = vec![0usize; meta.memory_configs_mb.len()];
     let mut pending: Vec<CloudRequest> = Vec::new();
     let mut sim_end = 0.0f64;
     let mut peak_edge_queue = 0usize;
@@ -268,35 +410,44 @@ pub fn run_fleet(
         let (res_tx, res_rx) =
             std::sync::mpsc::channel::<Result<EpochOutput, String>>();
         for part in parts {
-            let (tx, rx) = std::sync::mpsc::channel::<f64>();
+            let (tx, rx) = std::sync::mpsc::channel::<EpochCmd>();
             cmd_txs.push(tx);
             let res_tx = res_tx.clone();
-            scope.spawn(move || worker_loop(meta, part, rx, res_tx));
+            let topo = resolved.clone();
+            let bank = bank.clone();
+            scope.spawn(move || worker_loop(meta, topo, mode, bank, part, rx, res_tx));
         }
         drop(res_tx);
 
+        let snapshots = |topo: &RegionTopology| -> Option<Arc<Vec<Cil>>> {
+            (mode == CilMode::Hub).then(|| Arc::new(topo.hub_snapshots()))
+        };
+
         let mut epoch_end = epoch_ms;
         loop {
+            let mut fresh = Vec::new();
             let (arrivals_left, events_left) = barrier(
-                &cmd_txs, &res_rx, epoch_end, &mut records, &mut pending,
-                &mut peak_edge_queue, &mut sim_end,
+                &cmd_txs, &res_rx, epoch_end, snapshots(&topo), &mut records,
+                &mut fresh, &mut peak_edge_queue, &mut sim_end,
             )?;
-            merge_ready(
-                &mut pending, epoch_end, &mut cloud, &mut records,
-                &mut pool_high_water, &mut sim_end,
-            );
+            if mode == CilMode::Hub {
+                absorb_into_hubs(&mut fresh, &mut topo);
+            }
+            pending.extend(fresh);
+            merge_ready(&mut pending, epoch_end, &mut topo, &mut records, &mut sim_end);
             if arrivals_left == 0 {
                 // no arrival can emit further cloud requests; drain the
                 // remaining edge events in one unbounded pass and flush
                 if events_left > 0 {
+                    let mut fresh = Vec::new();
                     barrier(
-                        &cmd_txs, &res_rx, f64::INFINITY, &mut records, &mut pending,
-                        &mut peak_edge_queue, &mut sim_end,
+                        &cmd_txs, &res_rx, f64::INFINITY, snapshots(&topo), &mut records,
+                        &mut fresh, &mut peak_edge_queue, &mut sim_end,
                     )?;
+                    pending.extend(fresh);
                 }
                 merge_ready(
-                    &mut pending, f64::INFINITY, &mut cloud, &mut records,
-                    &mut pool_high_water, &mut sim_end,
+                    &mut pending, f64::INFINITY, &mut topo, &mut records, &mut sim_end,
                 );
                 break;
             }
@@ -323,12 +474,20 @@ pub fn run_fleet(
         .enumerate()
         .map(|(d, recs)| DeviceSummary::from_records(d, &apps[d], deadlines[d], recs))
         .collect();
-    let summary =
-        FleetSummary::build(&final_records, &deadlines, pool_high_water, peak_edge_queue);
+    let summary = FleetSummary::build_with_regions(
+        &final_records,
+        &deadlines,
+        topo.flat_pool_high_water(),
+        peak_edge_queue,
+        &topo.names(),
+        n_configs,
+    );
+    let hub_updates = topo.regions.iter().map(|r| r.hub.updates_absorbed).collect();
     Ok(FleetOutcome {
         records: final_records,
         device_summaries,
         summary,
+        hub_updates,
         sim_end_ms: sim_end,
     })
 }
@@ -336,11 +495,15 @@ pub fn run_fleet(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{default_artifact_dir, FleetScenario, FleetSettings};
+    use crate::config::{default_artifact_dir, FleetScenario};
     use crate::fleet::scenario::build_fleet;
 
     fn meta() -> Meta {
         Meta::load(&default_artifact_dir()).unwrap()
+    }
+
+    fn run(meta: &Meta, fs: &FleetSettings) -> FleetOutcome {
+        run_fleet(meta, build_fleet(meta, fs).unwrap(), fs).unwrap()
     }
 
     #[test]
@@ -349,11 +512,11 @@ mod tests {
         let fs = FleetSettings::new(6)
             .with_seed(17)
             .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
             .with_scenario(FleetScenario::Poisson);
-        let base = run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), 1, 2_000.0).unwrap();
+        let base = run(&meta, &fs.clone().with_shards(1));
         for shards in [2, 3, 6] {
-            let other =
-                run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), shards, 2_000.0).unwrap();
+            let other = run(&meta, &fs.clone().with_shards(shards));
             assert_eq!(base.summary.fingerprint, other.summary.fingerprint,
                        "{shards} shards diverged");
             assert_eq!(base.summary.n_tasks, other.summary.n_tasks);
@@ -363,20 +526,26 @@ mod tests {
 
     #[test]
     fn epoch_length_does_not_change_the_outcome() {
+        // private-CIL mode only: in hub mode the epoch is the CIL sync
+        // latency, a semantic knob by design
         let meta = meta();
-        let fs = FleetSettings::new(4).with_seed(23).with_duration_ms(6_000.0);
-        let a = run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), 2, 500.0).unwrap();
-        let b = run_fleet(&meta, build_fleet(&meta, &fs).unwrap(), 2, 6_000.0).unwrap();
+        let fs = FleetSettings::new(4).with_seed(23).with_duration_ms(6_000.0).with_shards(2);
+        let a = run(&meta, &fs.clone().with_epoch_ms(500.0));
+        let b = run(&meta, &fs.clone().with_epoch_ms(6_000.0));
         assert_eq!(a.summary.fingerprint, b.summary.fingerprint);
     }
 
     #[test]
     fn every_task_gets_exactly_one_record() {
         let meta = meta();
-        let fs = FleetSettings::new(5).with_seed(2).with_duration_ms(5_000.0);
+        let fs = FleetSettings::new(5)
+            .with_seed(2)
+            .with_duration_ms(5_000.0)
+            .with_shards(2)
+            .with_epoch_ms(1_000.0);
         let inits = build_fleet(&meta, &fs).unwrap();
         let expected: Vec<usize> = inits.iter().map(|d| d.tasks.len()).collect();
-        let out = run_fleet(&meta, inits, 2, 1_000.0).unwrap();
+        let out = run_fleet(&meta, inits, &fs).unwrap();
         for (d, recs) in out.records.iter().enumerate() {
             assert_eq!(recs.len(), expected[d]);
             for (i, r) in recs.iter().enumerate() {
@@ -393,6 +562,16 @@ mod tests {
         let fs = FleetSettings::new(2).with_duration_ms(1_000.0);
         let mut inits = build_fleet(&meta, &fs).unwrap();
         inits.swap(0, 1);
-        assert!(run_fleet(&meta, inits, 1, 1_000.0).is_err());
+        assert!(run_fleet(&meta, inits, &fs).is_err());
+    }
+
+    #[test]
+    fn single_region_summary_has_one_breakdown() {
+        let meta = meta();
+        let fs = FleetSettings::new(3).with_seed(6).with_duration_ms(4_000.0);
+        let out = run(&meta, &fs);
+        assert_eq!(out.summary.regions.len(), 1);
+        assert_eq!(out.summary.regions[0].cloud_count, out.summary.cloud_count);
+        assert_eq!(out.hub_updates, vec![0], "private mode never feeds the hub");
     }
 }

@@ -13,7 +13,9 @@
 //!    (`python/compile/kernels/gbrt.py`).
 //!
 //! Beyond the paper's single-device protocol, [`fleet`] scales the same
-//! question to thousands of devices sharing regional container pools.
+//! question to thousands of devices sharing regional container pools, and
+//! [`region`] spans them across a multi-region cloud topology with routed
+//! placement and fleet-aware (hub-CIL) warm prediction.
 //!
 //! See the top-level README.md for the crate layout and how to run each
 //! subsystem.
@@ -28,6 +30,7 @@ pub mod engine;
 pub mod experiments;
 pub mod metrics;
 pub mod predictor;
+pub mod region;
 pub mod runtime;
 pub mod sim;
 pub mod models;

@@ -7,9 +7,13 @@
 //!   sim     --app <ir|fd|stt> --objective <cost-min|latency-min>
 //!           --set 1536,1664,2048 [--alpha A] [--deadline MS] [--cmax $]
 //!           [--n N] [--seed S] [--backend xla|native] [--generate]
-//!   fleet   --devices 1000 [--scenario poisson|diurnal|burst|churn]
+//!   fleet   --devices 1000 [--scenario poisson|diurnal|diurnal-tz|burst|
+//!                           churn|flash]
 //!           [--duration-s 30] [--shards 4] [--apps ir:0.4,fd:0.4,stt:0.2]
 //!           [--objective O] [--seed S] [--rate-mult M] [--epoch-ms E]
+//!           [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
+//!           [--cil private|hub] [--cross-ms 60] [--route-jitter S]
+//!           [--move-frac F] [--move-at-s T]
 //!   live    --app <ir|fd|stt> [--set ...] [--n N] [--scale 0.05]
 //!           [--runs R] [--backend xla|native]
 //!   report                       # run every experiment in order
@@ -22,8 +26,8 @@ use anyhow::{bail, Result};
 
 use skedge::cli::Args;
 use skedge::config::{
-    default_artifact_dir, ExperimentSettings, FleetScenario, FleetSettings, Meta, Objective,
-    PredictorBackendKind,
+    default_artifact_dir, CilMode, ExperimentSettings, FleetScenario, FleetSettings, Meta,
+    Objective, PredictorBackendKind, TopologySpec,
 };
 use skedge::experiments;
 use skedge::fleet;
@@ -73,7 +77,7 @@ fn main() -> Result<()> {
             // generation, so the printed tasks/s reflects threading
             let inits = fleet::scenario::build_fleet(&meta, &fs)?;
             let t0 = std::time::Instant::now();
-            let o = fleet::shard::run_fleet(&meta, inits, fs.shards, fs.epoch_ms)?;
+            let o = fleet::shard::run_fleet(&meta, inits, &fs)?;
             print_fleet_summary(&fs, &o, t0.elapsed().as_secs_f64());
             Ok(())
         }
@@ -114,15 +118,17 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
     // scenario parameter overrides (apply to whichever scenario is active)
     if let Some(p) = args.f64("period-s")? {
         match &mut fs.scenario {
-            FleetScenario::Diurnal { period_ms, .. } => *period_ms = p * 1000.0,
-            FleetScenario::Burst { period_ms, .. } => *period_ms = p * 1000.0,
-            _ => bail!("--period-s only applies to diurnal/burst scenarios"),
+            FleetScenario::Diurnal { period_ms, .. }
+            | FleetScenario::DiurnalTz { period_ms, .. }
+            | FleetScenario::Burst { period_ms, .. } => *period_ms = p * 1000.0,
+            _ => bail!("--period-s only applies to diurnal/diurnal-tz/burst scenarios"),
         }
     }
     if let Some(a) = args.f64("amplitude")? {
         match &mut fs.scenario {
-            FleetScenario::Diurnal { amplitude, .. } => *amplitude = a,
-            _ => bail!("--amplitude only applies to the diurnal scenario"),
+            FleetScenario::Diurnal { amplitude, .. }
+            | FleetScenario::DiurnalTz { amplitude, .. } => *amplitude = a,
+            _ => bail!("--amplitude only applies to diurnal scenarios"),
         }
     }
     if let Some(n) = args.usize("burst-size")? {
@@ -150,6 +156,33 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
     if let Some(m) = args.f64("rate-mult")? {
         fs.rate_mult = m;
     }
+    if let Some(spec) = args.get("topology") {
+        let mut topo = TopologySpec::parse(spec)?;
+        if let Some(mode) = args.get("cil") {
+            topo.cil_mode = CilMode::parse(mode)?;
+        }
+        if let Some(p) = args.f64("cross-ms")? {
+            topo.cross_penalty_ms = p;
+        }
+        if let Some(s) = args.f64("route-jitter")? {
+            topo.routing_jitter_sigma = s;
+        }
+        match (args.f64("move-frac")?, args.f64("move-at-s")?) {
+            (Some(f), at) => {
+                let at = at.unwrap_or(fs.duration_ms / 2.0 / 1000.0);
+                topo = topo.with_mobility(f, at * 1000.0);
+            }
+            (None, Some(_)) => bail!("--move-at-s requires --move-frac"),
+            (None, None) => {}
+        }
+        topo.validate()?;
+        fs.topology = Some(topo);
+    } else if ["cil", "cross-ms", "route-jitter", "move-frac", "move-at-s"]
+        .iter()
+        .any(|k| args.get(k).is_some())
+    {
+        bail!("--cil/--cross-ms/--route-jitter/--move-frac/--move-at-s require --topology");
+    }
     Ok(fs)
 }
 
@@ -165,6 +198,13 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
         .collect::<Vec<_>>()
         .join(" / ");
     println!("fleet          : {} devices ({mix}), scenario {}", s.n_devices, fs.scenario.label());
+    if let Some(topo) = &fs.topology {
+        println!(
+            "topology       : {} regions, {} CIL",
+            topo.n_regions(),
+            topo.cil_mode.label()
+        );
+    }
     println!(
         "tasks          : {} ({} edge, {} cloud) over {:.0} virtual s",
         s.n_tasks,
@@ -192,6 +232,20 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
         "pool pressure  : max {} live containers in one pool, peak edge queue {}",
         s.max_pool_high_water, s.peak_edge_queue
     );
+    if s.regions.len() > 1 {
+        for (br, &hub) in s.regions.iter().zip(&o.hub_updates) {
+            let cloud = br.cloud_count.max(1) as f64;
+            println!(
+                "  region {:<10}: {:>6} cloud tasks, {:>5.1}% warm, {:>5.1}% mispredicted, pool max {}, {} hub updates",
+                br.name,
+                br.cloud_count,
+                br.warm as f64 / cloud * 100.0,
+                br.mismatches as f64 / cloud * 100.0,
+                br.max_pool_high_water,
+                hub,
+            );
+        }
+    }
     println!(
         "throughput     : {:.0} tasks/s wall ({} shards, {:.1} s)",
         s.n_tasks as f64 / wall_s.max(1e-9),
@@ -283,16 +337,21 @@ USAGE:
   skedge sim     --app fd --objective latency-min --set 1536,1664,2048
                  [--alpha A] [--deadline MS] [--cmax $] [--n N] [--risk R]
                  [--backend xla|native] [--generate] [--seed S]
-  skedge fleet   --devices 1000 [--scenario poisson|diurnal|burst|churn]
+  skedge fleet   --devices 1000
+                 [--scenario poisson|diurnal|diurnal-tz|burst|churn|flash]
                  [--duration-s 30] [--shards 4] [--epoch-ms 5000]
                  [--apps ir:0.4,fd:0.4,stt:0.2] [--objective latency-min]
                  [--seed S] [--rate-mult M] [--period-s P] [--amplitude A]
                  [--burst-size N]
+                 [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
+                 [--cil private|hub] [--cross-ms 60] [--route-jitter S]
+                 [--move-frac F] [--move-at-s T]
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
                  [--backend xla|native]
 
 Experiments: table1 table2 fig3 fig4 table3 fig5 table4 fig6 table5
-             edgeonly baselines tidl configsel ablations fleet_scaling | all
+             edgeonly baselines tidl configsel ablations fleet_scaling
+             region_routing | all
 
 Artifacts are read from ./artifacts (override: --artifacts DIR or
 $SKEDGE_ARTIFACTS). Run `make artifacts` first.

@@ -38,6 +38,12 @@ impl Cil {
         self.tidl_ms
     }
 
+    /// Re-interpret the tracked containers under a different believed idle
+    /// lifetime (hub snapshots adopt the receiving device's T_idl belief).
+    pub fn set_tidl_ms(&mut self, tidl_ms: f64) {
+        self.tidl_ms = tidl_ms;
+    }
+
     /// Drop containers believed destroyed by `now`.
     pub fn purge(&mut self, now: f64) {
         let tidl = self.tidl_ms;

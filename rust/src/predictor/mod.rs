@@ -8,6 +8,8 @@
 
 pub mod cil;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::{AppMeta, Meta, PredictorBackendKind};
@@ -57,6 +59,10 @@ pub struct Prediction {
 pub enum Backend {
     Xla(XlaEngine),
     Native(NativeModels),
+    /// fleet path: one immutable trained-model instance shared by every
+    /// device running the same app (construction is O(apps), not
+    /// O(devices × model size))
+    SharedNative(Arc<NativeModels>),
 }
 
 impl Backend {
@@ -64,6 +70,7 @@ impl Backend {
         match self {
             Backend::Xla(e) => e.predict(size),
             Backend::Native(n) => Ok(n.predict(size)),
+            Backend::SharedNative(n) => Ok(n.predict(size)),
         }
     }
 
@@ -71,13 +78,14 @@ impl Backend {
         match self {
             Backend::Xla(e) => e.predict_batch(sizes),
             Backend::Native(n) => Ok(n.predict_batch(sizes)),
+            Backend::SharedNative(n) => Ok(n.predict_batch(sizes)),
         }
     }
 
     pub fn kind(&self) -> PredictorBackendKind {
         match self {
             Backend::Xla(_) => PredictorBackendKind::Xla,
-            Backend::Native(_) => PredictorBackendKind::Native,
+            Backend::Native(_) | Backend::SharedNative(_) => PredictorBackendKind::Native,
         }
     }
 }
@@ -126,8 +134,34 @@ impl Predictor {
         Ok(Self::new(meta, app, backend))
     }
 
+    /// Construct over a fleet-shared immutable model instance.
+    pub fn from_shared(meta: &Meta, app: &AppMeta, models: Arc<NativeModels>) -> Self {
+        Self::new(meta, app, Backend::SharedNative(models))
+    }
+
     pub fn backend(&self) -> &Backend {
         &self.backend
+    }
+
+    /// Raw (CIL-independent) model outputs for one input size.
+    pub fn raw(&self, size: f64) -> Result<RawPrediction> {
+        self.backend.raw(size)
+    }
+
+    /// Scalar cloud component means: (start_warm, start_cold, store) — what
+    /// region-aware assembly needs beyond the raw model outputs.
+    pub fn cloud_means(&self) -> (f64, f64, f64) {
+        (self.start_warm_mean, self.start_cold_mean, self.store_mean)
+    }
+
+    /// Relative 1σ dispersions: (cloud, edge).
+    pub fn sigma_fracs(&self) -> (f64, f64) {
+        (self.cloud_sigma_frac, self.edge_sigma_frac)
+    }
+
+    /// Fixed edge overhead added to predicted edge compute (Eqn. 2).
+    pub fn edge_overhead(&self) -> f64 {
+        self.edge_overhead_ms
     }
 
     /// Predict latencies and costs for every configuration (paper `predict`).

@@ -1,0 +1,99 @@
+//! The regional CIL hub: one shared warm-belief per region, aggregated from
+//! every device routed there.
+//!
+//! The paper's CIL is a *client-side* belief — AWS exposes no container
+//! state API, so each device can only track its own invocations. At fleet
+//! scale that belief goes badly wrong: pools are kept warm by *other*
+//! devices, so private CILs systematically predict cold starts that are
+//! actually warm (`tables --id fleet_scaling` makes this visible). The hub
+//! fixes exactly that failure mode with exactly the information the fleet
+//! legitimately has: every routed device's invocation record.
+//!
+//! ## Determinism
+//!
+//! The hub lives on the fleet coordinator. At every epoch barrier it
+//! absorbs the epoch's cloud placements in canonical
+//! `(decision time, device id, device seq)` order — the order the beliefs
+//! were formed, independent of sharding — and a snapshot is broadcast to
+//! all shards for the next epoch. A device predicts from
+//! `snapshot ∪ its own within-epoch placements`, so for a one-device fleet
+//! the hub view degenerates to exactly the private CIL and reproduces
+//! `sim::run` bit-for-bit, while multi-device fleets see each other's
+//! container warming with at most one epoch of staleness (the hub's
+//! sync-latency knob).
+
+use crate::predictor::cil::Cil;
+
+/// Shared warm-belief for one region's pools.
+pub struct RegionalCilHub {
+    cil: Cil,
+    /// belief updates absorbed from routed devices (observability)
+    pub updates_absorbed: u64,
+}
+
+impl RegionalCilHub {
+    pub fn new(n_configs: usize, tidl_ms: f64) -> Self {
+        RegionalCilHub { cil: Cil::new(n_configs, tidl_ms), updates_absorbed: 0 }
+    }
+
+    /// Absorb one device's placement belief: config `j` triggered at the
+    /// *predicted* trigger time, busy for the *predicted* start+compute.
+    /// Returns whether the hub modelled it as a warm start.
+    pub fn absorb(&mut self, j: usize, pred_trigger_ms: f64, pred_busy_ms: f64) -> bool {
+        self.updates_absorbed += 1;
+        self.cil.update(j, pred_trigger_ms, pred_busy_ms)
+    }
+
+    /// Clone the hub state — the epoch broadcast payload devices overlay
+    /// their own placements onto.
+    pub fn snapshot(&self) -> Cil {
+        self.cil.clone()
+    }
+
+    /// Does the hub believe an idle container exists for config `j`?
+    pub fn predicts_warm(&self, j: usize, now: f64) -> bool {
+        self.cil.predicts_warm(j, now)
+    }
+
+    pub fn believed_count(&self, j: usize, now: f64) -> usize {
+        self.cil.believed_count(j, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TIDL: f64 = 27.0 * 60e3;
+
+    #[test]
+    fn absorbs_and_predicts_like_a_cil() {
+        let mut hub = RegionalCilHub::new(3, TIDL);
+        assert!(!hub.predicts_warm(1, 0.0));
+        let warm = hub.absorb(1, 100.0, 2000.0);
+        assert!(!warm, "first invocation believed cold");
+        assert!(hub.predicts_warm(1, 2200.0));
+        assert!(!hub.predicts_warm(0, 2200.0));
+        assert_eq!(hub.updates_absorbed, 1);
+    }
+
+    #[test]
+    fn snapshot_is_independent_of_later_updates() {
+        let mut hub = RegionalCilHub::new(1, TIDL);
+        hub.absorb(0, 0.0, 1000.0);
+        let snap = hub.snapshot();
+        hub.absorb(0, 5000.0, 1000.0);
+        assert_eq!(snap.believed_count(0, 2000.0), 1);
+        assert_eq!(hub.believed_count(0, 6000.0), 2);
+    }
+
+    #[test]
+    fn cross_device_evidence_turns_cold_into_warm() {
+        // device A invokes; device B, which never placed anything, still
+        // sees a warm pool through the hub — the whole point.
+        let mut hub = RegionalCilHub::new(1, TIDL);
+        hub.absorb(0, 0.0, 1500.0);
+        let b_view = hub.snapshot();
+        assert!(b_view.predicts_warm(0, 2000.0));
+    }
+}

@@ -1,0 +1,190 @@
+//! Multi-region cloud topology: several independent regional container
+//! pools, routed placement, and fleet-aware warm prediction.
+//!
+//! The paper models one edge device against one Lambda region; the fleet
+//! subsystem (PR 1) scaled the device side but kept a single shared pool
+//! and per-device container beliefs. This subsystem adds the cloud side of
+//! that scale-up:
+//!
+//!  * [`ResolvedTopology`] — the static region layout one fleet run uses:
+//!    region profiles (routing latency, price multiplier, tz offset), the
+//!    cross-region penalty, and jitter parameters. A fleet without an
+//!    explicit [`TopologySpec`](crate::config::TopologySpec) resolves to a
+//!    single implicit region with zero routing latency and reference
+//!    pricing — pinned bit-identical to the pre-region fleet.
+//!  * [`RegionTopology`] — the coordinator-owned runtime state: one
+//!    ground-truth [`CloudPlatform`] pool set, one [`RegionalCilHub`], and
+//!    per-config high-water marks per region. Pool merges stay in the
+//!    canonical `(trigger, device, seq)` order *per region*, so the
+//!    epoch-barrier determinism argument from `fleet::shard` carries over
+//!    unchanged to any region count.
+//!  * [`RegionalCilHub`] (in [`hub`]) — per-region aggregation of every
+//!    routed device's invocation beliefs. Devices refresh from hub
+//!    snapshots at epoch barriers and overlay only their own within-epoch
+//!    placements, so warm-probability prediction reflects the pool's state
+//!    as warmed by the *whole fleet* instead of one device's private view.
+//!  * [`DeviceRouter`] (in [`router`]) — per-device private routing state:
+//!    the device's routing-latency row over all regions, per-region working
+//!    CILs, and scenario-driven mobility (re-homing mid-run with hub
+//!    handoff).
+//!
+//! The decision engine sees regions through candidate flattening
+//! (`engine::flatten_region_candidates`): each task is scored over
+//! (region, memory-config) pairs, so routed placement needs no engine
+//! changes and single-region behaviour is exactly the paper's.
+
+pub mod hub;
+pub mod router;
+
+pub use hub::RegionalCilHub;
+pub use router::DeviceRouter;
+
+use crate::config::{FleetSettings, Meta, RegionSettings};
+use crate::platform::lambda::CloudPlatform;
+use crate::predictor::cil::Cil;
+
+/// The static region layout one fleet run executes against.
+#[derive(Debug, Clone)]
+pub struct ResolvedTopology {
+    pub regions: Vec<RegionSettings>,
+    pub cross_penalty_ms: f64,
+    pub routing_jitter_sigma: f64,
+    /// number of memory configurations per region (flattening stride)
+    pub n_configs: usize,
+}
+
+impl ResolvedTopology {
+    /// Resolve a fleet's topology: the explicit spec, or the single
+    /// implicit region the paper evaluates.
+    pub fn from_settings(fs: &FleetSettings, n_configs: usize) -> anyhow::Result<Self> {
+        match &fs.topology {
+            Some(spec) => {
+                spec.validate()?;
+                Ok(ResolvedTopology {
+                    regions: spec.regions.clone(),
+                    cross_penalty_ms: spec.cross_penalty_ms,
+                    routing_jitter_sigma: spec.routing_jitter_sigma,
+                    n_configs,
+                })
+            }
+            None => Ok(Self::single(n_configs)),
+        }
+    }
+
+    /// The implicit single-region topology (zero routing, reference price).
+    pub fn single(n_configs: usize) -> Self {
+        ResolvedTopology {
+            regions: vec![RegionSettings::new("local", 0.0)],
+            cross_penalty_ms: 0.0,
+            routing_jitter_sigma: 0.0,
+            n_configs,
+        }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Base one-way routing latency from a device homed in `home` to
+    /// region `r` (before per-device jitter).
+    pub fn base_routing_ms(&self, home: usize, r: usize) -> f64 {
+        self.regions[r].routing_ms
+            + if r == home { 0.0 } else { self.cross_penalty_ms }
+    }
+
+    /// Split a flattened (region, config) index.
+    pub fn split(&self, flat: usize) -> (usize, usize) {
+        (flat / self.n_configs, flat % self.n_configs)
+    }
+}
+
+/// One region's runtime state, owned by the fleet coordinator.
+pub struct RegionRuntime {
+    pub spec: RegionSettings,
+    /// ground-truth container pools (one per memory config)
+    pub cloud: CloudPlatform,
+    /// aggregated warm-belief over every device routed here
+    pub hub: RegionalCilHub,
+    /// per-config peak live container count
+    pub pool_high_water: Vec<usize>,
+}
+
+/// All regions' runtime state for one fleet run.
+pub struct RegionTopology {
+    pub regions: Vec<RegionRuntime>,
+}
+
+impl RegionTopology {
+    pub fn new(resolved: &ResolvedTopology, meta: &Meta) -> Self {
+        let regions = resolved
+            .regions
+            .iter()
+            .map(|spec| RegionRuntime {
+                spec: spec.clone(),
+                cloud: CloudPlatform::new(resolved.n_configs),
+                hub: RegionalCilHub::new(resolved.n_configs, meta.tidl_mean_ms),
+                pool_high_water: vec![0usize; resolved.n_configs],
+            })
+            .collect();
+        RegionTopology { regions }
+    }
+
+    /// Clone every region's hub CIL — the per-epoch broadcast payload.
+    pub fn hub_snapshots(&self) -> Vec<Cil> {
+        self.regions.iter().map(|r| r.hub.snapshot()).collect()
+    }
+
+    /// Region-major concatenation of per-config pool high-water marks (for
+    /// one region this is exactly the pre-region fleet layout).
+    pub fn flat_pool_high_water(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for r in &self.regions {
+            out.extend_from_slice(&r.pool_high_water);
+        }
+        out
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.regions.iter().map(|r| r.spec.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologySpec;
+
+    #[test]
+    fn implicit_topology_is_one_free_region() {
+        let t = ResolvedTopology::single(19);
+        assert_eq!(t.n_regions(), 1);
+        assert_eq!(t.base_routing_ms(0, 0), 0.0);
+        assert_eq!(t.regions[0].price_mult, 1.0);
+        assert_eq!(t.split(7), (0, 7));
+    }
+
+    #[test]
+    fn cross_region_penalty_applies_off_home() {
+        let fs = crate::config::FleetSettings::new(1)
+            .with_topology(TopologySpec::parse("a:5,b:40").unwrap());
+        let t = ResolvedTopology::from_settings(&fs, 19).unwrap();
+        assert_eq!(t.base_routing_ms(0, 0), 5.0);
+        assert_eq!(t.base_routing_ms(0, 1), 40.0 + t.cross_penalty_ms);
+        assert_eq!(t.base_routing_ms(1, 1), 40.0);
+    }
+
+    #[test]
+    fn flat_split_is_region_major() {
+        let t = ResolvedTopology {
+            regions: vec![
+                RegionSettings::new("a", 0.0),
+                RegionSettings::new("b", 10.0),
+            ],
+            cross_penalty_ms: 0.0,
+            routing_jitter_sigma: 0.0,
+            n_configs: 19,
+        };
+        assert_eq!(t.split(3), (0, 3));
+        assert_eq!(t.split(19 + 4), (1, 4));
+    }
+}

@@ -1,0 +1,315 @@
+//! Per-device routing state: the device's routing-latency row over every
+//! region, its per-region working CILs, and scenario-driven mobility.
+//!
+//! Everything in here is *private* to one device, which is what keeps the
+//! fleet's shard determinism intact: a device predicts and re-homes using
+//! only its own row, its own working CILs (hub snapshots are frozen per
+//! epoch), and virtual time — never live shared state.
+//!
+//! Cloud candidates are flattened region-major (`flat = region · C + cfg`,
+//! see `engine::flatten_region_candidates`); the router assembles the
+//! matching flattened [`Prediction`] so the decision engine scores routed
+//! placement without modification. With the implicit single region the
+//! assembled prediction is bit-identical to `Predictor::assemble`, which is
+//! how `sim::run` keeps reproducing the paper's protocol exactly.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::CilMode;
+use crate::models::RawPrediction;
+use crate::predictor::cil::Cil;
+use crate::predictor::{CloudPrediction, Placement, Prediction, Predictor};
+
+use super::ResolvedTopology;
+
+/// One device's region-aware private state.
+pub struct DeviceRouter {
+    topo: Arc<ResolvedTopology>,
+    mode: CilMode,
+    home: usize,
+    /// fixed per-(device, region) routing jitter factors
+    jitter: Vec<f64>,
+    /// current one-way routing latency to each region (ms)
+    routing_ms: Vec<f64>,
+    /// per-region working CIL: private beliefs, or the latest hub snapshot
+    /// overlaid with this device's own within-epoch placements
+    cils: Vec<Cil>,
+    /// pending (at_ms, to_region) mobility events, sorted by time
+    moves: Vec<(f64, usize)>,
+    next_move: usize,
+    /// region re-homings applied so far
+    pub moves_applied: usize,
+    /// this device's believed container idle lifetime (ablation override
+    /// survives hub snapshot adoption)
+    tidl_belief_ms: f64,
+}
+
+impl DeviceRouter {
+    /// The implicit single-region router `sim::run` and topology-less
+    /// fleets use: zero routing latency, reference pricing, private CIL.
+    pub fn single(n_configs: usize, tidl_belief_ms: f64) -> Self {
+        let topo = Arc::new(ResolvedTopology::single(n_configs));
+        Self::new(topo, CilMode::Private, 0, vec![1.0], Vec::new(), tidl_belief_ms)
+            .expect("trivial router construction cannot fail")
+    }
+
+    /// Build a router for one device of a (possibly multi-region) fleet.
+    /// `jitter` must hold one factor per region; `moves` are (at_ms,
+    /// to_region) events in any order.
+    pub fn new(
+        topo: Arc<ResolvedTopology>,
+        mode: CilMode,
+        home: usize,
+        jitter: Vec<f64>,
+        mut moves: Vec<(f64, usize)>,
+        tidl_belief_ms: f64,
+    ) -> Result<Self> {
+        let n = topo.n_regions();
+        if home >= n {
+            bail!("home region {home} out of range ({n} regions)");
+        }
+        if jitter.len() != n {
+            bail!("routing jitter row has {} entries for {n} regions", jitter.len());
+        }
+        if let Some(&(_, to)) = moves.iter().find(|&&(_, to)| to >= n) {
+            bail!("mobility event targets unknown region {to}");
+        }
+        moves.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let cils = (0..n).map(|_| Cil::new(topo.n_configs, tidl_belief_ms)).collect();
+        let mut router = DeviceRouter {
+            topo,
+            mode,
+            home,
+            jitter,
+            routing_ms: vec![0.0; n],
+            cils,
+            moves,
+            next_move: 0,
+            moves_applied: 0,
+            tidl_belief_ms,
+        };
+        router.recompute_routing();
+        Ok(router)
+    }
+
+    fn recompute_routing(&mut self) {
+        for r in 0..self.topo.n_regions() {
+            self.routing_ms[r] = self.topo.base_routing_ms(self.home, r) * self.jitter[r];
+        }
+    }
+
+    /// Apply every mobility event due at or before `now`. Called at each
+    /// decision, so re-homing lands at exact virtual times regardless of
+    /// shard count or epoch length.
+    pub fn apply_moves(&mut self, now: f64) {
+        let mut moved = false;
+        while self.next_move < self.moves.len() && self.moves[self.next_move].0 <= now {
+            self.home = self.moves[self.next_move].1;
+            self.next_move += 1;
+            self.moves_applied += 1;
+            moved = true;
+        }
+        if moved {
+            self.recompute_routing();
+        }
+    }
+
+    /// Hub mode: replace every working CIL with the latest per-region hub
+    /// snapshots (this device's own placements from the closing epoch are
+    /// already folded into the hub, in canonical order). The adopted
+    /// snapshots are re-interpreted under this device's own T_idl belief,
+    /// so the `tidl_belief_ms` ablation override survives hub refreshes.
+    pub fn refresh_from_hub(&mut self, snapshots: &[Cil]) {
+        debug_assert_eq!(snapshots.len(), self.cils.len());
+        if self.mode == CilMode::Hub {
+            self.cils.clone_from_slice(snapshots);
+            for cil in &mut self.cils {
+                cil.set_tidl_ms(self.tidl_belief_ms);
+            }
+        }
+    }
+
+    /// Assemble the flattened (region-major) prediction for one input.
+    pub fn assemble(&self, p: &Predictor, raw: &RawPrediction, now: f64) -> Prediction {
+        let (start_warm, start_cold, store) = p.cloud_means();
+        let (cloud_sigma_frac, edge_sigma_frac) = p.sigma_fracs();
+        let n_cfg = self.topo.n_configs;
+        let mut cloud = Vec::with_capacity(self.topo.n_regions() * n_cfg);
+        for (r, spec) in self.topo.regions.iter().enumerate() {
+            // time-to-trigger for this region: predicted upload + routing
+            let lead = raw.upld_ms + self.routing_ms[r];
+            let trigger = now + lead;
+            for j in 0..n_cfg {
+                let warm = self.cils[r].predicts_warm(j, trigger);
+                let start = if warm { start_warm } else { start_cold };
+                let comp = raw.comp_cloud_ms[j];
+                cloud.push(CloudPrediction {
+                    e2e_ms: lead + start + comp + store,
+                    cost: raw.cost_cloud[j] * spec.price_mult,
+                    warm,
+                    upld_ms: lead,
+                    start_ms: start,
+                    comp_ms: comp,
+                });
+            }
+        }
+        Prediction {
+            cloud,
+            edge_e2e_ms: raw.comp_edge_ms + p.edge_overhead(),
+            edge_comp_ms: raw.comp_edge_ms,
+            cloud_sigma_frac,
+            edge_sigma_frac,
+        }
+    }
+
+    /// Record the engine's choice in the working CIL (paper `updateCIL`,
+    /// region-routed). Edge placements leave container beliefs untouched.
+    pub fn note_placement(&mut self, placement: Placement, pred: &Prediction, now: f64) {
+        if let Placement::Cloud(flat) = placement {
+            let (r, j) = self.topo.split(flat);
+            let cp = &pred.cloud[flat];
+            self.cils[r].update(j, now + cp.upld_ms, cp.start_ms + cp.comp_ms);
+        }
+    }
+
+    pub fn split(&self, flat: usize) -> (usize, usize) {
+        self.topo.split(flat)
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.topo.n_regions()
+    }
+
+    pub fn n_configs(&self) -> usize {
+        self.topo.n_configs
+    }
+
+    pub fn home(&self) -> usize {
+        self.home
+    }
+
+    pub fn routing_ms(&self, r: usize) -> f64 {
+        self.routing_ms[r]
+    }
+
+    pub fn price_mult(&self, r: usize) -> f64 {
+        self.topo.regions[r].price_mult
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RegionSettings, TopologySpec};
+
+    const TIDL: f64 = 27.0 * 60e3;
+
+    fn two_region_topo() -> Arc<ResolvedTopology> {
+        let spec = TopologySpec::new(vec![
+            RegionSettings::new("near", 10.0),
+            RegionSettings::new("far", 50.0).with_price_mult(1.2),
+        ])
+        .with_cross_penalty_ms(40.0);
+        Arc::new(ResolvedTopology {
+            regions: spec.regions.clone(),
+            cross_penalty_ms: spec.cross_penalty_ms,
+            routing_jitter_sigma: 0.0,
+            n_configs: 3,
+        })
+    }
+
+    #[test]
+    fn trivial_router_has_zero_routing() {
+        let r = DeviceRouter::single(19, TIDL);
+        assert_eq!(r.n_regions(), 1);
+        assert_eq!(r.routing_ms(0), 0.0);
+        assert_eq!(r.price_mult(0), 1.0);
+    }
+
+    #[test]
+    fn routing_row_reflects_home_and_jitter() {
+        let topo = two_region_topo();
+        let r = DeviceRouter::new(
+            topo, CilMode::Private, 0, vec![1.0, 2.0], Vec::new(), TIDL,
+        )
+        .unwrap();
+        assert_eq!(r.routing_ms(0), 10.0);
+        assert_eq!(r.routing_ms(1), (50.0 + 40.0) * 2.0);
+    }
+
+    #[test]
+    fn mobility_rehomes_at_exact_time() {
+        let topo = two_region_topo();
+        let mut r = DeviceRouter::new(
+            topo, CilMode::Private, 0, vec![1.0, 1.0], vec![(5_000.0, 1)], TIDL,
+        )
+        .unwrap();
+        r.apply_moves(4_999.0);
+        assert_eq!(r.home(), 0);
+        r.apply_moves(5_000.0);
+        assert_eq!(r.home(), 1);
+        assert_eq!(r.moves_applied, 1);
+        // after the move, the old home carries the cross penalty
+        assert_eq!(r.routing_ms(0), 10.0 + 40.0);
+        assert_eq!(r.routing_ms(1), 50.0);
+    }
+
+    #[test]
+    fn bad_construction_rejected() {
+        let topo = two_region_topo();
+        assert!(DeviceRouter::new(
+            topo.clone(), CilMode::Private, 5, vec![1.0, 1.0], Vec::new(), TIDL
+        )
+        .is_err());
+        assert!(DeviceRouter::new(
+            topo.clone(), CilMode::Private, 0, vec![1.0], Vec::new(), TIDL
+        )
+        .is_err());
+        assert!(DeviceRouter::new(
+            topo, CilMode::Private, 0, vec![1.0, 1.0], vec![(1.0, 9)], TIDL
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hub_refresh_only_applies_in_hub_mode() {
+        let topo = two_region_topo();
+        let mut warmed = Cil::new(3, TIDL);
+        warmed.update(0, 0.0, 1000.0);
+        let snaps = vec![warmed, Cil::new(3, TIDL)];
+
+        let mut private = DeviceRouter::new(
+            topo.clone(), CilMode::Private, 0, vec![1.0, 1.0], Vec::new(), TIDL,
+        )
+        .unwrap();
+        private.refresh_from_hub(&snaps);
+        assert_eq!(private.cils[0].total_entries(), 0, "private mode ignores the hub");
+
+        let mut hub = DeviceRouter::new(
+            topo, CilMode::Hub, 0, vec![1.0, 1.0], Vec::new(), TIDL,
+        )
+        .unwrap();
+        hub.refresh_from_hub(&snaps);
+        assert_eq!(hub.cils[0].total_entries(), 1, "hub mode adopts the snapshot");
+    }
+
+    #[test]
+    fn hub_refresh_preserves_tidl_belief_override() {
+        // the ablation override (settings.tidl_belief_ms) must survive
+        // snapshot adoption: the hub tracks with the calibrated T_idl, the
+        // device re-interprets entries under its own belief
+        let topo = two_region_topo();
+        let own_belief = 5_000.0;
+        let mut r = DeviceRouter::new(
+            topo, CilMode::Hub, 0, vec![1.0, 1.0], Vec::new(), own_belief,
+        )
+        .unwrap();
+        let snaps = vec![Cil::new(3, TIDL), Cil::new(3, TIDL)];
+        r.refresh_from_hub(&snaps);
+        for cil in &r.cils {
+            assert_eq!(cil.tidl_ms(), own_belief);
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Region subsystem correctness: the invariants the multi-region topology
+//! is built on.
+//!
+//!  1. **Degeneration** — a single-region topology with zero routing
+//!     latency and reference pricing is bit-identical to the topology-less
+//!     fleet, and a 1-device/1-region fleet reproduces `sim::run` exactly
+//!     in *both* CIL modes (a lone device's hub view is its private view).
+//!  2. **Shard invariance with regions** — per-region epoch-barrier merge
+//!     and hub-snapshot broadcast keep fleet results bit-identical across
+//!     shard counts for ≥2 regions, with and without the hub.
+//!  3. **Mobility determinism** — scenario-driven re-homing applies at
+//!     exact virtual times, so it changes outcomes without breaking shard
+//!     invariance, and hub handoff needs no special casing.
+//!  4. **Hub value** — the hub CIL strictly reduces fleet-level warm/cold
+//!     misprediction vs private CILs on a shared multi-region pool.
+
+use skedge::config::{
+    default_artifact_dir, CilMode, ExperimentSettings, FleetScenario, FleetSettings, Meta,
+    Objective, RegionSettings, TopologySpec,
+};
+use skedge::fleet::{self, scenario, shard};
+use skedge::sim;
+
+fn meta() -> Meta {
+    Meta::load(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+/// A topology that must be observationally identical to "no topology".
+fn degenerate_topology(cil: CilMode) -> TopologySpec {
+    TopologySpec::new(vec![RegionSettings::new("solo", 0.0)])
+        .with_cross_penalty_ms(0.0)
+        .with_cil_mode(cil)
+}
+
+#[test]
+fn single_region_topology_is_bit_identical_to_plain_fleet() {
+    let meta = meta();
+    let plain = FleetSettings::new(8).with_seed(11).with_duration_ms(8_000.0);
+    let topo = plain
+        .clone()
+        .with_topology(degenerate_topology(CilMode::Private));
+    let a = fleet::run(&meta, &plain).unwrap();
+    let b = fleet::run(&meta, &topo).unwrap();
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint);
+    assert_eq!(a.summary.pool_high_water, b.summary.pool_high_water);
+    assert_eq!(a.sim_end_ms, b.sim_end_ms);
+    for (da, db) in a.records.iter().zip(&b.records) {
+        for (x, y) in da.iter().zip(db) {
+            assert_eq!(x.placement, y.placement);
+            assert_eq!(x.actual_e2e_ms, y.actual_e2e_ms);
+            assert_eq!(x.actual_cost, y.actual_cost);
+            assert_eq!(x.warm_actual, y.warm_actual);
+        }
+    }
+}
+
+#[test]
+fn one_device_one_region_reproduces_sim_run_in_both_cil_modes() {
+    // a lone device's hub is fed exclusively by its own placements, in its
+    // own decision order — so hub mode must also degenerate to `sim::run`
+    let meta = meta();
+    let s = ExperimentSettings::new("fd", Objective::CostMin, &[1280.0, 1408.0, 1664.0])
+        .with_n_inputs(150);
+    let simo = sim::run(&meta, &s).unwrap();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let init = scenario::mirror_sim(&meta, &s).unwrap();
+        let fs = FleetSettings::new(1)
+            .with_shards(2)
+            .with_epoch_ms(3_000.0)
+            .with_topology(degenerate_topology(cil));
+        let fo = shard::run_fleet(&meta, vec![init], &fs).unwrap();
+        assert_eq!(fo.records.len(), 1);
+        let recs = &fo.records[0];
+        assert_eq!(recs.len(), simo.records.len());
+        for (f, r) in recs.iter().zip(&simo.records) {
+            assert_eq!(f.placement, r.placement, "{cil:?} task {}", r.id);
+            assert_eq!(f.actual_e2e_ms, r.actual_e2e_ms, "{cil:?} task {}", r.id);
+            assert_eq!(f.actual_cost, r.actual_cost, "{cil:?} task {}", r.id);
+            assert_eq!(f.predicted_e2e_ms, r.predicted_e2e_ms, "{cil:?} task {}", r.id);
+            assert_eq!(f.warm_actual, r.warm_actual, "{cil:?} task {}", r.id);
+            assert_eq!(f.warm_predicted, r.warm_predicted, "{cil:?} task {}", r.id);
+        }
+        assert_eq!(fo.sim_end_ms, simo.sim_end_ms);
+    }
+}
+
+#[test]
+fn routing_latency_shows_up_in_cloud_latency() {
+    // same seed, same tasks; the only change is 200 ms of routing to the
+    // single region — the cloud latency distribution must shift up
+    let meta = meta();
+    let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0])
+        .with_n_inputs(150);
+    let run_with_rtt = |rtt: f64| {
+        let init = scenario::mirror_sim(&meta, &s).unwrap();
+        let fs = FleetSettings::new(1).with_shards(1).with_topology(
+            TopologySpec::new(vec![RegionSettings::new("far", rtt)])
+                .with_cross_penalty_ms(0.0),
+        );
+        shard::run_fleet(&meta, vec![init], &fs).unwrap()
+    };
+    let near = run_with_rtt(0.0);
+    let far = run_with_rtt(200.0);
+    let mean_cloud = |o: &fleet::FleetOutcome| {
+        let xs: Vec<f64> = o.records[0]
+            .iter()
+            .filter(|r| !r.is_edge())
+            .map(|r| r.actual_e2e_ms)
+            .collect();
+        assert!(!xs.is_empty(), "latency-min FD must use the cloud");
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    assert!(
+        mean_cloud(&far) > mean_cloud(&near) + 100.0,
+        "routing latency must lengthen cloud executions ({} vs {})",
+        mean_cloud(&far),
+        mean_cloud(&near)
+    );
+}
+
+#[test]
+fn region_price_multiplier_scales_costs_exactly() {
+    // cost-min placements are invariant under a uniform cloud price scale
+    // (the argmin is preserved), so the billed total must scale exactly
+    let meta = meta();
+    let s = ExperimentSettings::new("fd", Objective::CostMin, &[1280.0, 1408.0, 1664.0])
+        .with_n_inputs(150);
+    let run_with_price = |price: f64| {
+        let init = scenario::mirror_sim(&meta, &s).unwrap();
+        let fs = FleetSettings::new(1).with_topology(
+            TopologySpec::new(vec![
+                RegionSettings::new("r", 0.0).with_price_mult(price)
+            ])
+            .with_cross_penalty_ms(0.0),
+        );
+        shard::run_fleet(&meta, vec![init], &fs).unwrap()
+    };
+    let base = run_with_price(1.0);
+    let doubled = run_with_price(2.0);
+    assert_ne!(base.summary.fingerprint, doubled.summary.fingerprint);
+    for (x, y) in base.records[0].iter().zip(&doubled.records[0]) {
+        assert_eq!(x.placement, y.placement, "price scale must not move tasks");
+        assert!((y.actual_cost - 2.0 * x.actual_cost).abs() < 1e-15);
+    }
+}
+
+#[test]
+fn multi_region_fleet_is_shard_invariant_in_both_cil_modes() {
+    let meta = meta();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let fs = FleetSettings::new(10)
+            .with_seed(33)
+            .with_duration_ms(8_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_app_mix(vec![("fd".to_string(), 1.0)])
+            .with_topology(
+                TopologySpec::parse("duo")
+                    .unwrap()
+                    .with_routing_jitter(0.1)
+                    .with_cil_mode(cil),
+            );
+        let base = fleet::run(&meta, &fs.clone().with_shards(1)).unwrap();
+        assert_eq!(base.summary.regions.len(), 2);
+        assert!(
+            base.summary.regions.iter().all(|r| r.cloud_count > 0),
+            "{cil:?}: both regions should serve traffic"
+        );
+        for shards in [2usize, 4] {
+            let other = fleet::run(&meta, &fs.clone().with_shards(shards)).unwrap();
+            assert_eq!(
+                base.summary.fingerprint, other.summary.fingerprint,
+                "{cil:?} with {shards} shards diverged"
+            );
+            assert_eq!(base.summary.pool_high_water, other.summary.pool_high_water);
+            assert_eq!(base.hub_updates, other.hub_updates);
+            assert_eq!(base.sim_end_ms, other.sim_end_ms);
+        }
+    }
+}
+
+#[test]
+fn mobility_changes_outcomes_but_not_determinism() {
+    let meta = meta();
+    let mk = |fraction: f64| {
+        FleetSettings::new(8)
+            .with_seed(77)
+            .with_duration_ms(9_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_app_mix(vec![("fd".to_string(), 1.0)])
+            .with_topology(
+                TopologySpec::parse("duo")
+                    .unwrap()
+                    .with_cil_mode(CilMode::Hub)
+                    .with_mobility(fraction, 3_000.0),
+            )
+    };
+    let pinned = fleet::run(&meta, &mk(0.0)).unwrap();
+    let moved = fleet::run(&meta, &mk(1.0)).unwrap();
+    assert_ne!(
+        pinned.summary.fingerprint, moved.summary.fingerprint,
+        "re-homing every device mid-run must change placements"
+    );
+    // the CIL-hub handoff keeps the migrated fleet deterministic
+    let a = fleet::run(&meta, &mk(1.0).with_shards(1)).unwrap();
+    let b = fleet::run(&meta, &mk(1.0).with_shards(3)).unwrap();
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint);
+    assert_eq!(a.hub_updates, b.hub_updates);
+    let c = fleet::run(&meta, &mk(1.0)).unwrap();
+    assert_eq!(moved.summary.fingerprint, c.summary.fingerprint, "reproducible");
+}
+
+#[test]
+fn hub_cil_reduces_fleet_level_misprediction() {
+    // 60 devices share two regional pools: private CILs are blind to the
+    // containers other devices keep warm, the hub is not
+    let meta = meta();
+    let mk = |cil: CilMode| {
+        FleetSettings::new(60)
+            .with_seed(2020)
+            .with_duration_ms(12_000.0)
+            .with_epoch_ms(1_000.0)
+            .with_rate_mult(0.5)
+            .with_scenario(FleetScenario::Poisson)
+            .with_app_mix(vec![("fd".to_string(), 1.0)])
+            .with_topology(TopologySpec::parse("duo").unwrap().with_cil_mode(cil))
+    };
+    let private = fleet::run(&meta, &mk(CilMode::Private)).unwrap();
+    let hub = fleet::run(&meta, &mk(CilMode::Hub)).unwrap();
+    assert_eq!(private.hub_updates.iter().sum::<u64>(), 0);
+    assert!(hub.hub_updates.iter().sum::<u64>() > 0);
+    assert!(
+        private.summary.warm_cold_mismatches > 0,
+        "private CILs must mispredict under shared pools"
+    );
+    assert!(
+        hub.summary.warm_cold_mismatches < private.summary.warm_cold_mismatches,
+        "hub CIL should reduce mispredictions ({} vs {})",
+        hub.summary.warm_cold_mismatches,
+        private.summary.warm_cold_mismatches
+    );
+}
