@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
             black_box(shard::run_fleet(&meta, inits, &fs)?);
             per_run.push(t0.elapsed().as_secs_f64());
         }
-        per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_run.sort_by(f64::total_cmp);
         // lower median: with 2 runs this takes the faster one (standard
         // practice for wall-clock throughput baselines)
         let secs = per_run[(per_run.len() - 1) / 2];

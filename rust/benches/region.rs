@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
             black_box(shard::run_fleet(&meta, inits, &fs)?);
             per_run.push(t0.elapsed().as_secs_f64());
         }
-        per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_run.sort_by(f64::total_cmp);
         let secs = per_run[(per_run.len() - 1) / 2];
         let tasks_per_s = n_tasks as f64 / secs.max(1e-9);
         println!(

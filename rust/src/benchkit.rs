@@ -47,7 +47,7 @@ pub fn bench_n<F: FnMut()>(name: &str, iters: u64, runs: usize, mut f: F) -> Ben
         }
         per_run.push(t0.elapsed().as_nanos() as f64 / iters as f64);
     }
-    per_run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    per_run.sort_by(f64::total_cmp);
     let ns = per_run[per_run.len() / 2];
     let r = BenchResult {
         name: name.to_string(),

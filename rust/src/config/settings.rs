@@ -23,8 +23,9 @@ impl Objective {
     }
 }
 
-/// Which backend the Predictor scores inputs with.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which backend the Predictor scores inputs with. Ordered so it can key
+/// the fleet's per-(app, kind) shared-backend bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum PredictorBackendKind {
     /// AOT-compiled HLO via PJRT (the production hot path)
     Xla,

@@ -35,7 +35,7 @@ pub fn edge_only(meta: &Meta) -> Result<String> {
         let fw = o.summary.avg_actual_e2e_ms / 1000.0;
         let avg = mean(&e2e);
         let mut sorted = e2e.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         t.row(vec![
             app.to_uppercase(),
             render::f(avg, 2),

@@ -136,7 +136,7 @@ pub fn fig_pred_vs_actual(meta: &Meta, cloud: bool) -> Result<String> {
             };
             series.push(vec![r.size, actual, predicted]);
         }
-        series.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+        series.sort_by(|a, b| a[0].total_cmp(&b[0]));
         let m = mape(
             &series.iter().map(|r| r[1]).collect::<Vec<_>>(),
             &series.iter().map(|r| r[2]).collect::<Vec<_>>(),

@@ -50,7 +50,7 @@ pub fn table3(meta: &Meta, xla: bool) -> Result<String> {
             ));
         }
         // the paper lists sets in increasing order of total actual cost
-        rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        rows.sort_by(|a, b| a.0.total_cmp(&b.0));
         for (_, r) in rows {
             t.row(r);
         }
@@ -96,7 +96,7 @@ pub fn table4(meta: &Meta, xla: bool) -> Result<String> {
                 ],
             ));
         }
-        rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        rows.sort_by(|a, b| a.0.total_cmp(&b.0));
         for (_, r) in rows {
             t.row(r);
         }

@@ -24,16 +24,16 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{ExperimentSettings, Meta, PredictorBackendKind};
+use crate::config::{ExperimentSettings, Meta};
 use crate::engine::{flatten_region_candidates, DecisionEngine};
 use crate::metrics::TaskRecord;
-use crate::models::{NativeModels, RawPrediction};
+use crate::models::RawPrediction;
 use crate::platform::containers::StartKind;
 use crate::platform::greengrass::EdgeExecutor;
 use crate::platform::lambda::{CloudExecution, CloudPlatform};
 use crate::platform::latency::GroundTruthSampler;
 use crate::platform::pricing::aws_pricing;
-use crate::predictor::{Placement, Predictor};
+use crate::predictor::{Backend, Placement, Predictor};
 use crate::region::DeviceRouter;
 use crate::workload::Task;
 
@@ -171,20 +171,20 @@ impl<'a> Device<'a> {
     }
 
     /// Build a device with an explicit router (fleet path) and, optionally,
-    /// a fleet-shared immutable model instance for its app.
+    /// a fleet-shared immutable backend instance for its app. The caller is
+    /// responsible for only sharing a backend whose kind matches the
+    /// device's settings (see the fleet model bank in `fleet::shard`).
     pub fn build(
         meta: &'a Meta,
         settings: &ExperimentSettings,
         profile: DeviceProfile,
-        shared_models: Option<Arc<NativeModels>>,
+        shared_backend: Option<Arc<Backend>>,
         router: DeviceRouter,
     ) -> Result<Device<'a>> {
         let app = meta.app(&profile.app).clone();
-        let predictor = match shared_models {
-            Some(m) if settings.backend == PredictorBackendKind::Native => {
-                Predictor::from_shared(meta, &app, m)
-            }
-            _ => Predictor::with_backend_kind(meta, &app, settings.backend)?,
+        let predictor = match shared_backend {
+            Some(b) => Predictor::from_shared(meta, &app, b),
+            None => Predictor::with_backend_kind(meta, &app, settings.backend)?,
         };
         let config_idxs: Vec<usize> = settings
             .config_set

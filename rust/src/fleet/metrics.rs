@@ -20,7 +20,7 @@ pub struct LatencyPercentiles {
 /// the aggregation cost).
 pub fn latency_percentiles(xs: &[f64]) -> LatencyPercentiles {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     LatencyPercentiles {
         p50: stats::percentile_sorted(&v, 50.0),
         p95: stats::percentile_sorted(&v, 95.0),

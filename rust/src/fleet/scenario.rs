@@ -169,7 +169,7 @@ pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64, phase_ms: 
                 }
                 k += 1.0;
             }
-            out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            out.sort_by(f64::total_cmp);
             out
         }
         FleetScenario::Churn { on_ms, off_ms } => {

@@ -32,18 +32,19 @@
 //! sees its own updates immediately either way and stays bit-identical to
 //! `sim::run`).
 
-use std::cmp::Ordering;
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{CilMode, FleetSettings, Meta, PredictorBackendKind};
 use crate::metrics::TaskRecord;
 use crate::models::{NativeModels, RawPrediction};
 use crate::predictor::cil::Cil;
+use crate::predictor::Backend;
 use crate::region::{DeviceRouter, RegionTopology, ResolvedTopology};
+use crate::runtime::XlaEngine;
 use crate::sim::events::{Event, EventQueue};
 
 use super::device::{self, CloudRequest, Device, Dispatch};
@@ -58,9 +59,46 @@ struct EpochCmd {
     hub: Option<Arc<Vec<Cil>>>,
 }
 
-/// Per-app immutable model instances shared by every device (fleet
-/// construction is O(apps), not O(devices × model size)).
-type ModelBank = BTreeMap<String, Arc<NativeModels>>;
+/// Immutable scoring backends shared by every device requesting the same
+/// (app, backend kind) — fleet construction is O(apps × kinds), not
+/// O(devices × model/engine size). Holding full [`Backend`]s — not just
+/// native model structs — is what lets the epoch-bulk scorer route grouped
+/// arrivals through [`Backend::raw_batch`], so XLA fleets hit the b64
+/// artifact (one compiled engine per app, chunked batch execution) and
+/// native fleets the shared mirror.
+///
+/// NOTE: sharing one `Arc<Backend>` across shard threads requires
+/// `Backend: Send + Sync`. The native mirror and the vendored offline XLA
+/// stub are plain data, so this holds today; repointing the `xla`
+/// dependency at real PJRT bindings commits to a `Sync` executable with
+/// concurrent `execute` calls — if the real bindings don't provide that,
+/// build per-shard engines (or serialize `execute`) before sharing.
+type ModelBank = BTreeMap<(String, PredictorBackendKind), Arc<Backend>>;
+
+/// Build the shared-backend bank from the fleet's device settings: one
+/// entry per distinct (app, backend kind) pair, so heterogeneous fleets
+/// keep full sharing for every kind in play.
+fn build_bank(meta: &Meta, inits: &[DeviceInit]) -> Result<ModelBank> {
+    let mut bank: ModelBank = BTreeMap::new();
+    for init in inits {
+        let app = &init.profile.app;
+        let kind = init.settings.backend;
+        if bank.contains_key(&(app.clone(), kind)) {
+            continue;
+        }
+        let backend = match kind {
+            PredictorBackendKind::Native => {
+                Backend::Native(NativeModels::from_meta(meta, meta.app(app)))
+            }
+            PredictorBackendKind::Xla => Backend::Xla(
+                XlaEngine::load(meta, app)
+                    .with_context(|| format!("loading the XLA engine for app `{app}`"))?,
+            ),
+        };
+        bank.insert((app.clone(), kind), Arc::new(backend));
+    }
+    Ok(bank)
+}
 
 /// One device plus its run state inside a shard.
 struct DeviceRun<'a> {
@@ -137,20 +175,27 @@ impl EpochOutput {
 }
 
 /// Batch-score this epoch's arrivals across all of a shard's devices,
-/// grouped per app, through the shared native models' bulk call. Today the
-/// bank is native-only (XLA devices fall back to per-task scoring at
-/// ingest), so this amortizes grouping/dispatch rather than vectorizing
-/// the math; routing the group through the XLA b64 artifact is the
-/// ROADMAP follow-on this structure exists for. Raw predictions are pure
-/// functions of input size, so the path is outcome-identical to per-task
-/// scoring (pinned by `ingest_raw_matches_per_task_scoring`).
-fn score_epoch(runs: &mut [DeviceRun], bank: &ModelBank, epoch_end: f64) {
-    let mut groups: BTreeMap<String, (Vec<f64>, Vec<(usize, usize)>)> = BTreeMap::new();
+/// grouped per app, through the shared backend's [`Backend::raw_batch`].
+/// For native banks this amortizes grouping/dispatch over the shared
+/// mirror; for XLA banks the group is chunked through the compiled b64
+/// artifact (falling back to b1 inside the engine when no bulk artifact
+/// was built). Raw predictions are pure functions of input size, so the
+/// path is outcome-identical to per-task scoring (pinned by
+/// `ingest_raw_matches_per_task_scoring` and the batched-fleet tests).
+fn score_epoch(runs: &mut [DeviceRun], bank: &ModelBank, epoch_end: f64) -> Result<()> {
+    type Group = (Vec<f64>, Vec<(usize, usize)>);
+    let mut groups: BTreeMap<(String, PredictorBackendKind), Group> = BTreeMap::new();
     for (ri, run) in runs.iter_mut().enumerate() {
         if !run.batched || run.next_unscored >= run.tasks.len() {
             continue;
         }
-        let entry = groups.entry(run.device.profile.app.clone()).or_default();
+        // a batched run's shared backend came from the bank, so its kind
+        // recovers the bank key exactly
+        let key = (
+            run.device.profile.app.clone(),
+            run.device.predictor.backend().kind(),
+        );
+        let entry = groups.entry(key).or_default();
         while run.next_unscored < run.tasks.len()
             && run.tasks[run.next_unscored].arrive_ms < epoch_end
         {
@@ -160,13 +205,16 @@ fn score_epoch(runs: &mut [DeviceRun], bank: &ModelBank, epoch_end: f64) {
             run.next_unscored += 1;
         }
     }
-    for (app, (sizes, slots)) in groups {
-        let Some(models) = bank.get(&app) else { continue };
-        let raws = models.predict_batch(&sizes);
+    for (key, (sizes, slots)) in groups {
+        let Some(backend) = bank.get(&key) else { continue };
+        let raws = backend.raw_batch(&sizes).with_context(|| {
+            format!("bulk-scoring {} arrivals for app `{}`", sizes.len(), key.0)
+        })?;
         for (raw, (ri, tid)) in raws.into_iter().zip(slots) {
             runs[ri].raw_cache[tid] = Some(raw);
         }
     }
+    Ok(())
 }
 
 /// Instantiate one device's run state: router from its region init, the
@@ -187,9 +235,9 @@ fn build_run<'a>(
         init.region.moves,
         tidl,
     )?;
-    let shared = (init.settings.backend == PredictorBackendKind::Native)
-        .then(|| bank.get(&init.profile.app).cloned())
-        .flatten();
+    let shared = bank
+        .get(&(init.profile.app.clone(), init.settings.backend))
+        .cloned();
     let batched = shared.is_some();
     let device = Device::build(meta, &init.settings, init.profile, shared, router)?;
     let mut queue = EventQueue::new();
@@ -238,7 +286,10 @@ fn worker_loop(
                 run.device.router.refresh_from_hub(hub);
             }
         }
-        score_epoch(&mut runs, &bank, cmd.epoch_end);
+        if let Err(e) = score_epoch(&mut runs, &bank, cmd.epoch_end) {
+            let _ = results.send(Err(format!("epoch bulk scoring: {e:#}")));
+            return;
+        }
         let mut out = EpochOutput::new();
         for run in &mut runs {
             if let Err(e) = run.step_until(cmd.epoch_end, &mut out) {
@@ -306,12 +357,13 @@ fn barrier(
 
 /// Absorb this epoch's fresh placements into the per-region hub CILs, in
 /// the canonical order the beliefs were formed (decision time, device,
-/// sequence) — independent of sharding.
+/// sequence) — independent of sharding. `total_cmp` plus the full
+/// (device, seq) tuple makes the order total even on pathological float
+/// inputs: it can never fall back to incomparable-as-equal semantics.
 fn absorb_into_hubs(fresh: &mut [CloudRequest], topo: &mut RegionTopology) {
     fresh.sort_by(|a, b| {
         a.arrive_ms
-            .partial_cmp(&b.arrive_ms)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&b.arrive_ms)
             .then_with(|| a.device_id.cmp(&b.device_id))
             .then_with(|| a.seq.cmp(&b.seq))
     });
@@ -333,8 +385,7 @@ fn merge_ready(
 ) {
     pending.sort_by(|a, b| {
         a.trigger_ms
-            .partial_cmp(&b.trigger_ms)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&b.trigger_ms)
             .then_with(|| a.device_id.cmp(&b.device_id))
             .then_with(|| a.seq.cmp(&b.seq))
     });
@@ -374,17 +425,9 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
     let mode = fs.topology.as_ref().map(|t| t.cil_mode).unwrap_or(CilMode::Private);
     let mut topo = RegionTopology::new(&resolved, meta);
 
-    // one immutable model instance per app, shared by all native-backend
-    // devices across every shard
-    let mut bank: ModelBank = BTreeMap::new();
-    for init in &inits {
-        if init.settings.backend == PredictorBackendKind::Native {
-            bank.entry(init.profile.app.clone()).or_insert_with(|| {
-                Arc::new(NativeModels::from_meta(meta, meta.app(&init.profile.app)))
-            });
-        }
-    }
-    let bank = Arc::new(bank);
+    // one immutable backend instance per app (native mirror or compiled
+    // XLA engine), shared by matching-kind devices across every shard
+    let bank = Arc::new(build_bank(meta, &inits)?);
 
     // coordinator-side per-device bookkeeping
     let apps: Vec<String> = inits.iter().map(|d| d.profile.app.clone()).collect();

@@ -77,7 +77,7 @@ impl ConfigPool {
             .containers
             .iter_mut()
             .filter(|c| c.is_idle(now))
-            .max_by(|a, b| a.last_completion.partial_cmp(&b.last_completion).unwrap());
+            .max_by(|a, b| a.last_completion.total_cmp(&b.last_completion));
         if let Some(c) = candidate {
             c.busy_until = now + busy_ms;
             c.last_completion = now + busy_ms;

@@ -71,7 +71,7 @@ impl Cil {
         let cand = list
             .iter_mut()
             .filter(|c| trigger >= c.busy_until && trigger <= c.last_completion + tidl)
-            .max_by(|a, b| a.last_completion.partial_cmp(&b.last_completion).unwrap());
+            .max_by(|a, b| a.last_completion.total_cmp(&b.last_completion));
         if let Some(c) = cand {
             c.busy_until = trigger + busy_ms;
             c.last_completion = trigger + busy_ms;

@@ -7,6 +7,7 @@
 //! the pure-Rust mirror (fallback/baseline).
 
 pub mod cil;
+pub mod score;
 
 use std::sync::Arc;
 
@@ -16,6 +17,7 @@ use crate::config::{AppMeta, Meta, PredictorBackendKind};
 use crate::models::{NativeModels, RawPrediction};
 use crate::runtime::XlaEngine;
 use cil::Cil;
+pub use score::{RegionRow, ScoringCtx};
 
 /// Where a task can run: the edge Executor or cloud config index j.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,10 +61,12 @@ pub struct Prediction {
 pub enum Backend {
     Xla(XlaEngine),
     Native(NativeModels),
-    /// fleet path: one immutable trained-model instance shared by every
-    /// device running the same app (construction is O(apps), not
-    /// O(devices × model size))
-    SharedNative(Arc<NativeModels>),
+    /// fleet path: one immutable backend instance (native mirror or a
+    /// loaded XLA engine) shared by every device running the same app —
+    /// construction is O(apps), not O(devices × model/engine size), and
+    /// the fleet's bulk scorer batches through the shared instance's
+    /// `raw_batch` (the XLA b64 artifact when present)
+    Shared(Arc<Backend>),
 }
 
 impl Backend {
@@ -70,7 +74,7 @@ impl Backend {
         match self {
             Backend::Xla(e) => e.predict(size),
             Backend::Native(n) => Ok(n.predict(size)),
-            Backend::SharedNative(n) => Ok(n.predict(size)),
+            Backend::Shared(b) => b.raw(size),
         }
     }
 
@@ -78,28 +82,24 @@ impl Backend {
         match self {
             Backend::Xla(e) => e.predict_batch(sizes),
             Backend::Native(n) => Ok(n.predict_batch(sizes)),
-            Backend::SharedNative(n) => Ok(n.predict_batch(sizes)),
+            Backend::Shared(b) => b.raw_batch(sizes),
         }
     }
 
     pub fn kind(&self) -> PredictorBackendKind {
         match self {
             Backend::Xla(_) => PredictorBackendKind::Xla,
-            Backend::Native(_) | Backend::SharedNative(_) => PredictorBackendKind::Native,
+            Backend::Native(_) => PredictorBackendKind::Native,
+            Backend::Shared(b) => b.kind(),
         }
     }
 }
 
-/// The Predictor: backend + CIL + scalar component means.
+/// The Predictor: backend + CIL + the Eqn.-1 scoring context.
 pub struct Predictor {
     backend: Backend,
     pub cil: Cil,
-    start_warm_mean: f64,
-    start_cold_mean: f64,
-    store_mean: f64,
-    edge_overhead_ms: f64,
-    cloud_sigma_frac: f64,
-    edge_sigma_frac: f64,
+    ctx: ScoringCtx,
     pub mems: Vec<f64>,
 }
 
@@ -109,13 +109,15 @@ impl Predictor {
         Predictor {
             backend,
             cil: Cil::new(meta.memory_configs_mb.len(), meta.tidl_mean_ms),
-            start_warm_mean: m.start_warm_mean,
-            start_cold_mean: m.start_cold_mean,
-            store_mean: m.store_mean,
-            edge_overhead_ms: m.edge_overhead_ms(),
-            // mean-absolute -> standard deviation under a normal error model
-            cloud_sigma_frac: app.mape_cloud_e2e / 100.0 * 1.2533,
-            edge_sigma_frac: app.mape_edge_e2e / 100.0 * 1.2533,
+            ctx: ScoringCtx {
+                start_warm_mean: m.start_warm_mean,
+                start_cold_mean: m.start_cold_mean,
+                store_mean: m.store_mean,
+                edge_overhead_ms: m.edge_overhead_ms(),
+                // mean-absolute -> standard deviation under a normal error model
+                cloud_sigma_frac: app.mape_cloud_e2e / 100.0 * 1.2533,
+                edge_sigma_frac: app.mape_edge_e2e / 100.0 * 1.2533,
+            },
             mems: meta.memory_configs_mb.clone(),
         }
     }
@@ -134,9 +136,9 @@ impl Predictor {
         Ok(Self::new(meta, app, backend))
     }
 
-    /// Construct over a fleet-shared immutable model instance.
-    pub fn from_shared(meta: &Meta, app: &AppMeta, models: Arc<NativeModels>) -> Self {
-        Self::new(meta, app, Backend::SharedNative(models))
+    /// Construct over a fleet-shared immutable backend instance.
+    pub fn from_shared(meta: &Meta, app: &AppMeta, backend: Arc<Backend>) -> Self {
+        Self::new(meta, app, Backend::Shared(backend))
     }
 
     pub fn backend(&self) -> &Backend {
@@ -148,20 +150,10 @@ impl Predictor {
         self.backend.raw(size)
     }
 
-    /// Scalar cloud component means: (start_warm, start_cold, store) — what
-    /// region-aware assembly needs beyond the raw model outputs.
-    pub fn cloud_means(&self) -> (f64, f64, f64) {
-        (self.start_warm_mean, self.start_cold_mean, self.store_mean)
-    }
-
-    /// Relative 1σ dispersions: (cloud, edge).
-    pub fn sigma_fracs(&self) -> (f64, f64) {
-        (self.cloud_sigma_frac, self.edge_sigma_frac)
-    }
-
-    /// Fixed edge overhead added to predicted edge compute (Eqn. 2).
-    pub fn edge_overhead(&self) -> f64 {
-        self.edge_overhead_ms
+    /// The Eqn.-1 scoring context (component means, edge overhead, sigma
+    /// fractions) — what any assembly path needs beyond raw model outputs.
+    pub fn scoring_ctx(&self) -> &ScoringCtx {
+        &self.ctx
     }
 
     /// Predict latencies and costs for every configuration (paper `predict`).
@@ -172,32 +164,11 @@ impl Predictor {
         Ok(self.assemble(&raw, now))
     }
 
-    /// Assemble a `Prediction` from raw model outputs (shared with the
-    /// batched scoring path).
+    /// Assemble a `Prediction` from raw model outputs through the shared
+    /// Eqn.-1 core ([`ScoringCtx::assemble_one`]) against this predictor's
+    /// own CIL — the live-mode / standalone-Predictor path.
     pub fn assemble(&self, raw: &RawPrediction, now: f64) -> Prediction {
-        let trigger = now + raw.upld_ms;
-        let cloud = (0..self.mems.len())
-            .map(|j| {
-                let warm = self.cil.predicts_warm(j, trigger);
-                let start = if warm { self.start_warm_mean } else { self.start_cold_mean };
-                let comp = raw.comp_cloud_ms[j];
-                CloudPrediction {
-                    e2e_ms: raw.upld_ms + start + comp + self.store_mean,
-                    cost: raw.cost_cloud[j],
-                    warm,
-                    upld_ms: raw.upld_ms,
-                    start_ms: start,
-                    comp_ms: comp,
-                }
-            })
-            .collect();
-        Prediction {
-            cloud,
-            edge_e2e_ms: raw.comp_edge_ms + self.edge_overhead_ms,
-            edge_comp_ms: raw.comp_edge_ms,
-            cloud_sigma_frac: self.cloud_sigma_frac,
-            edge_sigma_frac: self.edge_sigma_frac,
-        }
+        self.ctx.assemble_one(&self.cil, raw, now)
     }
 
     /// Record the engine's choice (paper `updateCIL`). Edge placements do
@@ -232,7 +203,7 @@ mod tests {
         assert!(pred.cloud.iter().all(|c| !c.warm));
         // cold start mean baked into e2e
         let c = &pred.cloud[7];
-        assert!((c.e2e_ms - (c.upld_ms + c.start_ms + c.comp_ms + p.store_mean)).abs() < 1e-9);
+        assert!((c.e2e_ms - (c.upld_ms + c.start_ms + c.comp_ms + p.ctx.store_mean)).abs() < 1e-9);
         assert!(c.start_ms > 1000.0, "FD cold mean ~1500 ms");
     }
 

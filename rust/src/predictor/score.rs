@@ -1,0 +1,296 @@
+//! The one Eqn.-1 scoring core.
+//!
+//! Every prediction-serving path in the system — `sim::run` and the fleet
+//! devices (through [`DeviceRouter::assemble`](crate::region::DeviceRouter)),
+//! `live::run` (through [`Predictor::predict`](super::Predictor)), and the
+//! fleet's epoch-batched bulk scorer — assembles per-candidate end-to-end
+//! predictions from the same raw model outputs with the same arithmetic:
+//!
+//! ```text
+//! e2e(r, j) = upld + routing(r) + start(warm?) + comp(j) + store      (Eqn. 1)
+//! cost(r, j) = cost(j) · price_mult(r)
+//! ```
+//!
+//! with warm/cold assessed per (region, config) from a CIL at the predicted
+//! trigger time `now + upld + routing(r)`. Before this module the formula
+//! lived in two bodies (`Predictor::assemble` and `DeviceRouter::assemble`)
+//! plus a partial third in the fleet bulk path; any silent divergence
+//! between them corrupts the paper's <6% latency-prediction-error claim,
+//! so the bodies were deleted and every caller now funnels through
+//! [`ScoringCtx`].
+//!
+//! The single-region case is *defined* as the region-general loop over one
+//! row with zero routing latency and unit pricing. `x + 0.0` and `x · 1.0`
+//! are bitwise identities for the finite non-negative components involved,
+//! so `assemble_one` is bit-identical to the historical single-region body
+//! — pinned by the oracle tests below and by the fleet/sim/live
+//! equivalence suites.
+
+use crate::models::RawPrediction;
+
+use super::cil::Cil;
+use super::{CloudPrediction, Prediction};
+
+/// The scalar model state Eqn.-1 assembly needs beyond the raw per-input
+/// model outputs: cloud component means, the fixed edge overhead (Eqn. 2),
+/// and the train-time dispersion fractions the risk-aware engine consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoringCtx {
+    pub start_warm_mean: f64,
+    pub start_cold_mean: f64,
+    pub store_mean: f64,
+    pub edge_overhead_ms: f64,
+    pub cloud_sigma_frac: f64,
+    pub edge_sigma_frac: f64,
+}
+
+/// One region's view at assembly time: the device's current one-way routing
+/// latency, the region's execution-price multiplier, and the CIL whose
+/// beliefs decide warm vs cold for this region's pools.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionRow<'a> {
+    pub routing_ms: f64,
+    pub price_mult: f64,
+    pub cil: &'a Cil,
+}
+
+impl ScoringCtx {
+    /// Single-region Eqn.-1 assembly: the paper's protocol, scored against
+    /// one CIL with zero routing latency and reference pricing.
+    pub fn assemble_one(&self, cil: &Cil, raw: &RawPrediction, now: f64) -> Prediction {
+        self.assemble_regions(
+            std::iter::once(RegionRow { routing_ms: 0.0, price_mult: 1.0, cil }),
+            raw,
+            now,
+        )
+    }
+
+    /// Region-general Eqn.-1 assembly over flattened (region, config)
+    /// candidates, region-major (`flat = region · C + config`, matching
+    /// `engine::flatten_region_candidates`). Routing latency rides with the
+    /// upload leg, so each region's warm/cold belief is assessed at its own
+    /// predicted trigger time.
+    pub fn assemble_regions<'a>(
+        &self,
+        rows: impl IntoIterator<Item = RegionRow<'a>>,
+        raw: &RawPrediction,
+        now: f64,
+    ) -> Prediction {
+        let n_cfg = raw.comp_cloud_ms.len();
+        let rows = rows.into_iter();
+        // every caller's iterator (once / zip-map) has an exact lower bound
+        let mut cloud = Vec::with_capacity(rows.size_hint().0.max(1) * n_cfg);
+        for row in rows {
+            // time-to-trigger for this region: predicted upload + routing
+            let lead = raw.upld_ms + row.routing_ms;
+            let trigger = now + lead;
+            for j in 0..n_cfg {
+                let warm = row.cil.predicts_warm(j, trigger);
+                let start = if warm { self.start_warm_mean } else { self.start_cold_mean };
+                let comp = raw.comp_cloud_ms[j];
+                cloud.push(CloudPrediction {
+                    e2e_ms: lead + start + comp + self.store_mean,
+                    cost: raw.cost_cloud[j] * row.price_mult,
+                    warm,
+                    upld_ms: lead,
+                    start_ms: start,
+                    comp_ms: comp,
+                });
+            }
+        }
+        Prediction {
+            cloud,
+            edge_e2e_ms: raw.comp_edge_ms + self.edge_overhead_ms,
+            edge_comp_ms: raw.comp_edge_ms,
+            cloud_sigma_frac: self.cloud_sigma_frac,
+            edge_sigma_frac: self.edge_sigma_frac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TIDL: f64 = 27.0 * 60e3;
+
+    fn ctx() -> ScoringCtx {
+        ScoringCtx {
+            start_warm_mean: 163.4,
+            start_cold_mean: 1501.7,
+            store_mean: 551.2,
+            edge_overhead_ms: 612.9,
+            cloud_sigma_frac: 0.15,
+            edge_sigma_frac: 0.05,
+        }
+    }
+
+    fn raw(n_cfg: usize) -> RawPrediction {
+        RawPrediction {
+            upld_ms: 431.25,
+            comp_cloud_ms: (0..n_cfg).map(|j| 3000.0 / (1.0 + j as f64 * 0.37)).collect(),
+            comp_edge_ms: 8123.5,
+            cost_cloud: (0..n_cfg).map(|j| 1e-6 * (1.0 + j as f64)).collect(),
+        }
+    }
+
+    /// The pre-refactor `Predictor::assemble` body, kept verbatim as the
+    /// bitwise oracle for the single-region core.
+    fn old_predictor_assemble(
+        c: &ScoringCtx,
+        cil: &Cil,
+        raw: &RawPrediction,
+        now: f64,
+    ) -> Prediction {
+        let trigger = now + raw.upld_ms;
+        let cloud = (0..raw.comp_cloud_ms.len())
+            .map(|j| {
+                let warm = cil.predicts_warm(j, trigger);
+                let start = if warm { c.start_warm_mean } else { c.start_cold_mean };
+                let comp = raw.comp_cloud_ms[j];
+                CloudPrediction {
+                    e2e_ms: raw.upld_ms + start + comp + c.store_mean,
+                    cost: raw.cost_cloud[j],
+                    warm,
+                    upld_ms: raw.upld_ms,
+                    start_ms: start,
+                    comp_ms: comp,
+                }
+            })
+            .collect();
+        Prediction {
+            cloud,
+            edge_e2e_ms: raw.comp_edge_ms + c.edge_overhead_ms,
+            edge_comp_ms: raw.comp_edge_ms,
+            cloud_sigma_frac: c.cloud_sigma_frac,
+            edge_sigma_frac: c.edge_sigma_frac,
+        }
+    }
+
+    /// The pre-refactor `DeviceRouter::assemble` body, kept verbatim as the
+    /// bitwise oracle for the region-general core.
+    fn old_router_assemble(
+        c: &ScoringCtx,
+        routing_ms: &[f64],
+        price_mult: &[f64],
+        cils: &[Cil],
+        raw: &RawPrediction,
+        now: f64,
+    ) -> Prediction {
+        let n_cfg = raw.comp_cloud_ms.len();
+        let mut cloud = Vec::with_capacity(routing_ms.len() * n_cfg);
+        for r in 0..routing_ms.len() {
+            let lead = raw.upld_ms + routing_ms[r];
+            let trigger = now + lead;
+            for j in 0..n_cfg {
+                let warm = cils[r].predicts_warm(j, trigger);
+                let start = if warm { c.start_warm_mean } else { c.start_cold_mean };
+                let comp = raw.comp_cloud_ms[j];
+                cloud.push(CloudPrediction {
+                    e2e_ms: lead + start + comp + c.store_mean,
+                    cost: raw.cost_cloud[j] * price_mult[r],
+                    warm,
+                    upld_ms: lead,
+                    start_ms: start,
+                    comp_ms: comp,
+                });
+            }
+        }
+        Prediction {
+            cloud,
+            edge_e2e_ms: raw.comp_edge_ms + c.edge_overhead_ms,
+            edge_comp_ms: raw.comp_edge_ms,
+            cloud_sigma_frac: c.cloud_sigma_frac,
+            edge_sigma_frac: c.edge_sigma_frac,
+        }
+    }
+
+    fn assert_bitwise_eq(a: &Prediction, b: &Prediction) {
+        assert_eq!(a.cloud.len(), b.cloud.len());
+        for (x, y) in a.cloud.iter().zip(&b.cloud) {
+            assert_eq!(x.e2e_ms.to_bits(), y.e2e_ms.to_bits());
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+            assert_eq!(x.warm, y.warm);
+            assert_eq!(x.upld_ms.to_bits(), y.upld_ms.to_bits());
+            assert_eq!(x.start_ms.to_bits(), y.start_ms.to_bits());
+            assert_eq!(x.comp_ms.to_bits(), y.comp_ms.to_bits());
+        }
+        assert_eq!(a.edge_e2e_ms.to_bits(), b.edge_e2e_ms.to_bits());
+        assert_eq!(a.edge_comp_ms.to_bits(), b.edge_comp_ms.to_bits());
+        assert_eq!(a.cloud_sigma_frac.to_bits(), b.cloud_sigma_frac.to_bits());
+        assert_eq!(a.edge_sigma_frac.to_bits(), b.edge_sigma_frac.to_bits());
+    }
+
+    /// A CIL with a mix of busy, idle, and expired beliefs across configs.
+    fn warmed_cil(n_cfg: usize, salt: f64) -> Cil {
+        let mut cil = Cil::new(n_cfg, TIDL);
+        for j in (0..n_cfg).step_by(2) {
+            cil.update(j, 100.0 + salt + j as f64 * 13.0, 900.0 + j as f64 * 7.0);
+        }
+        cil.update(1, 5_000.0 + salt, 20_000.0); // still busy at t ~ 9 000
+        cil
+    }
+
+    #[test]
+    fn single_region_core_matches_old_predictor_assemble_bitwise() {
+        let c = ctx();
+        let raw = raw(19);
+        for now in [0.0, 1_234.5, 9_000.25, 2e6] {
+            let cil = warmed_cil(19, now * 0.1);
+            let new = c.assemble_one(&cil, &raw, now);
+            let old = old_predictor_assemble(&c, &cil, &raw, now);
+            assert_bitwise_eq(&new, &old);
+        }
+    }
+
+    #[test]
+    fn region_core_matches_old_router_assemble_bitwise() {
+        let c = ctx();
+        let raw = raw(7);
+        let routing = [0.0, 62.5, 190.0];
+        let price = [1.0, 1.2, 0.85];
+        let cils: Vec<Cil> = (0..3).map(|r| warmed_cil(7, r as f64 * 31.0)).collect();
+        for now in [0.0, 777.125, 44_000.5] {
+            let rows = (0..3).map(|r| RegionRow {
+                routing_ms: routing[r],
+                price_mult: price[r],
+                cil: &cils[r],
+            });
+            let new = c.assemble_regions(rows, &raw, now);
+            let old = old_router_assemble(&c, &routing, &price, &cils, &raw, now);
+            assert_eq!(new.cloud.len(), 3 * 7);
+            assert_bitwise_eq(&new, &old);
+        }
+    }
+
+    #[test]
+    fn one_zero_routing_unit_price_row_is_assemble_one() {
+        let c = ctx();
+        let raw = raw(19);
+        let cil = warmed_cil(19, 3.0);
+        let via_regions = c.assemble_regions(
+            std::iter::once(RegionRow { routing_ms: 0.0, price_mult: 1.0, cil: &cil }),
+            &raw,
+            2_500.0,
+        );
+        let direct = c.assemble_one(&cil, &raw, 2_500.0);
+        assert_bitwise_eq(&via_regions, &direct);
+    }
+
+    #[test]
+    fn routing_latency_shifts_trigger_and_e2e() {
+        let c = ctx();
+        let raw = raw(3);
+        let mut cil = Cil::new(3, TIDL);
+        cil.update(0, 0.0, 1000.0); // idle (warm) from t = 1000
+        let near = RegionRow { routing_ms: 0.0, price_mult: 1.0, cil: &cil };
+        let far = RegionRow { routing_ms: 400.0, price_mult: 2.0, cil: &cil };
+        let p = c.assemble_regions([near, far], &raw, 600.0);
+        // near trigger 600 + 431.25 ≈ 1031 → warm; e2e carries no routing
+        assert!(p.cloud[0].warm);
+        // far region pays its routing in the upload leg and doubles cost
+        assert_eq!(p.cloud[3].upld_ms, raw.upld_ms + 400.0);
+        assert!(p.cloud[3].e2e_ms > p.cloud[0].e2e_ms);
+        assert_eq!(p.cloud[3].cost, p.cloud[0].cost * 2.0);
+    }
+}

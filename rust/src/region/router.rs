@@ -20,7 +20,7 @@ use anyhow::{bail, Result};
 use crate::config::CilMode;
 use crate::models::RawPrediction;
 use crate::predictor::cil::Cil;
-use crate::predictor::{CloudPrediction, Placement, Prediction, Predictor};
+use crate::predictor::{Placement, Prediction, Predictor, RegionRow};
 
 use super::ResolvedTopology;
 
@@ -76,7 +76,7 @@ impl DeviceRouter {
         if let Some(&(_, to)) = moves.iter().find(|&&(_, to)| to >= n) {
             bail!("mobility event targets unknown region {to}");
         }
-        moves.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        moves.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let cils = (0..n).map(|_| Cil::new(topo.n_configs, tidl_belief_ms)).collect();
         let mut router = DeviceRouter {
             topo,
@@ -131,37 +131,25 @@ impl DeviceRouter {
         }
     }
 
-    /// Assemble the flattened (region-major) prediction for one input.
+    /// Assemble the flattened (region-major) prediction for one input
+    /// through the shared Eqn.-1 core
+    /// ([`ScoringCtx::assemble_regions`](crate::predictor::ScoringCtx::assemble_regions)):
+    /// one [`RegionRow`] per region, pairing the device's current routing
+    /// latency and the region's price multiplier with that region's working
+    /// CIL. No second Eqn.-1 body lives here.
     pub fn assemble(&self, p: &Predictor, raw: &RawPrediction, now: f64) -> Prediction {
-        let (start_warm, start_cold, store) = p.cloud_means();
-        let (cloud_sigma_frac, edge_sigma_frac) = p.sigma_fracs();
-        let n_cfg = self.topo.n_configs;
-        let mut cloud = Vec::with_capacity(self.topo.n_regions() * n_cfg);
-        for (r, spec) in self.topo.regions.iter().enumerate() {
-            // time-to-trigger for this region: predicted upload + routing
-            let lead = raw.upld_ms + self.routing_ms[r];
-            let trigger = now + lead;
-            for j in 0..n_cfg {
-                let warm = self.cils[r].predicts_warm(j, trigger);
-                let start = if warm { start_warm } else { start_cold };
-                let comp = raw.comp_cloud_ms[j];
-                cloud.push(CloudPrediction {
-                    e2e_ms: lead + start + comp + store,
-                    cost: raw.cost_cloud[j] * spec.price_mult,
-                    warm,
-                    upld_ms: lead,
-                    start_ms: start,
-                    comp_ms: comp,
-                });
-            }
-        }
-        Prediction {
-            cloud,
-            edge_e2e_ms: raw.comp_edge_ms + p.edge_overhead(),
-            edge_comp_ms: raw.comp_edge_ms,
-            cloud_sigma_frac,
-            edge_sigma_frac,
-        }
+        let rows = self
+            .topo
+            .regions
+            .iter()
+            .zip(&self.routing_ms)
+            .zip(&self.cils)
+            .map(|((spec, &routing_ms), cil)| RegionRow {
+                routing_ms,
+                price_mult: spec.price_mult,
+                cil,
+            });
+        p.scoring_ctx().assemble_regions(rows, raw, now)
     }
 
     /// Record the engine's choice in the working CIL (paper `updateCIL`,

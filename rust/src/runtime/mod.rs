@@ -9,7 +9,11 @@
 //! The `xla` crate (PJRT bindings) is an optional dependency: offline
 //! environments build without the `xla` cargo feature and get a stub
 //! [`XlaEngine`] whose `load` returns an error, leaving the native mirror
-//! backend as the scoring path. All call sites compile either way.
+//! backend as the scoring path. All call sites compile either way. With the
+//! feature enabled, the dependency resolves to the vendored offline API
+//! stub (`rust/vendor/xla-stub`) by default, which compile-checks this
+//! module's real request/bulk paths and still errors at `load`; repoint
+//! the dependency at real PJRT bindings to serve from the artifact.
 
 use anyhow::{anyhow, Result};
 

@@ -38,11 +38,12 @@ impl Eq for Scheduled {}
 impl Ord for Scheduled {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap: invert to get earliest-first,
-        // tie-broken by insertion order.
+        // tie-broken by insertion order. `total_cmp` keeps the order total
+        // (and the heap invariant intact) even on pathological float input
+        // — incomparable-as-equal semantics can never reorder events.
         other
             .at_ms
-            .partial_cmp(&self.at_ms)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.at_ms)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }

@@ -1,0 +1,125 @@
+//! Offline compile-check stub of the `xla` PJRT bindings.
+//!
+//! This crate exists so that `cargo build --features xla` works in
+//! environments with no network access and no PJRT toolchain: it mirrors
+//! exactly the API surface `skedge::runtime` consumes (client construction,
+//! HLO-text loading, compilation, execution, literal unpacking) with every
+//! entry point returning an "unavailable offline" error at runtime.
+//! Building the feature therefore type-checks the production XLA request
+//! path and the fleet's b64 bulk-scoring path without linking PJRT.
+//!
+//! To run against real PJRT bindings, repoint the `xla` dependency in
+//! `rust/Cargo.toml` at the real crate and rebuild; nothing in
+//! `skedge::runtime` changes. One constraint to check when repointing:
+//! the fleet's shared-backend bank (`skedge::fleet::shard`) holds one
+//! engine per (app, kind) in an `Arc` shared across shard threads, so the
+//! real client/executable types must be `Send + Sync` with concurrent
+//! `execute` support — the stub's empty structs satisfy this trivially
+//! and hide the requirement.
+
+/// The bindings' error type: carries a message, surfaced through `Debug`
+/// (the caller formats errors with `{err:?}`).
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    let msg = "stub xla bindings (offline build): PJRT is not linked; use the \
+               native predictor backend or link the real `xla` crate";
+    Err(Error(msg.to_string()))
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Unpack a 4-tuple literal into its elements.
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        unavailable()
+    }
+
+    /// Copy the literal's elements to a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO *text* artifact from disk.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute on the device with the given arguments.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub). Construction always fails, so no executable can
+/// ever exist at runtime in an offline build.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_offline() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_vec::<f32>().is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[Literal]).is_err());
+        let msg = format!("{:?}", Error("boom".into()));
+        assert_eq!(msg, "boom");
+    }
+}
