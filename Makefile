@@ -3,10 +3,17 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts
+.PHONY: artifacts test-python clean-artifacts verify
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
+
+# Tier-1 verification: release build + the full test suite, which already
+# includes the cross-path invariant suites under rust/tests/ (fleet shard
+# determinism, region topology, one-scoring-core pins, live parity +
+# closed-loop feedback). Assumes `make artifacts` has run.
+verify:
+	cd rust && cargo build --release && cargo test -q
 
 test-python:
 	cd python && python3 -m pytest -q tests

@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{Objective, TopologySpec};
+use super::{FeedbackMode, Objective, TopologySpec};
 
 /// Fleet workload scenario (per-device arrival process shape).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,6 +27,11 @@ pub enum FleetScenario {
     /// flash crowd: base Poisson rate ramping linearly to `peak_mult`× over
     /// `ramp_ms` starting at `at_ms`, then holding (viral-event load)
     FlashCrowd { at_ms: f64, ramp_ms: f64, peak_mult: f64 },
+    /// per-device arrival-rate drift: each device draws a lognormal(0, σ)
+    /// end-of-run multiplier from its own seed stream and its rate ramps
+    /// linearly from base to base·multiplier over the run (long-horizon
+    /// usage shifts — some devices heat up while others cool down)
+    Drift { sigma: f64 },
 }
 
 impl FleetScenario {
@@ -49,8 +54,10 @@ impl FleetScenario {
                 ramp_ms: 5_000.0,
                 peak_mult: 4.0,
             }),
+            "drift" | "rate-drift" => Ok(FleetScenario::Drift { sigma: 0.4 }),
             _ => bail!(
-                "unknown scenario `{s}` (poisson | diurnal | diurnal-tz | burst | churn | flash)"
+                "unknown scenario `{s}` (poisson | diurnal | diurnal-tz | burst | churn | \
+                 flash | drift)"
             ),
         }
     }
@@ -81,6 +88,7 @@ impl FleetScenario {
                     at_ms / 1000.0
                 )
             }
+            FleetScenario::Drift { sigma } => format!("drift(sigma {sigma})"),
         }
     }
 }
@@ -111,6 +119,11 @@ pub struct FleetSettings {
     /// multi-region cloud topology; None = the paper's single implicit
     /// region (zero routing latency, reference pricing, private CILs)
     pub topology: Option<TopologySpec>,
+    /// closed-loop warm/cold feedback: realized outcomes are shipped back
+    /// to the issuing devices (and the regional hubs in hub-CIL mode) at
+    /// each epoch barrier. Off = pure predicted-outcome CILs, pinned
+    /// bit-identical to the pre-feedback fleet.
+    pub feedback: FeedbackMode,
 }
 
 impl FleetSettings {
@@ -133,7 +146,13 @@ impl FleetSettings {
             compute_jitter_sigma: 0.15,
             network_jitter_sigma: 0.25,
             topology: None,
+            feedback: FeedbackMode::Off,
         }
+    }
+
+    pub fn with_feedback(mut self, f: FeedbackMode) -> Self {
+        self.feedback = f;
+        self
     }
 
     pub fn with_topology(mut self, t: TopologySpec) -> Self {
@@ -235,6 +254,11 @@ mod tests {
             FleetScenario::parse("flash").unwrap(),
             FleetScenario::FlashCrowd { .. }
         ));
+        assert!(matches!(
+            FleetScenario::parse("drift").unwrap(),
+            FleetScenario::Drift { .. }
+        ));
+        assert!(FleetScenario::parse("drift").unwrap().label().contains("drift"));
         assert!(FleetScenario::parse("nope").is_err());
         assert!(FleetScenario::Poisson.label().contains("poisson"));
         assert!(FleetScenario::parse("tz").unwrap().label().contains("zones"));
@@ -267,6 +291,7 @@ mod tests {
         assert!(matches!(fs.scenario, FleetScenario::Diurnal { .. }));
         assert_eq!(fs.app_mix.len(), 3, "mixed ir/fd/stt by default");
         assert!(fs.shards >= 1);
+        assert_eq!(fs.feedback, FeedbackMode::Off, "feedback off by default");
     }
 
     #[test]

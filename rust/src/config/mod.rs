@@ -12,7 +12,7 @@ mod settings;
 
 pub use fleet::{FleetScenario, FleetSettings};
 pub use region::{CilMode, MobilityEvent, RegionSettings, TopologySpec};
-pub use settings::{ExperimentSettings, Objective, PredictorBackendKind};
+pub use settings::{ExperimentSettings, FeedbackMode, Objective, PredictorBackendKind};
 
 use std::collections::BTreeMap;
 

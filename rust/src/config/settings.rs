@@ -43,6 +43,36 @@ impl PredictorBackendKind {
     }
 }
 
+/// Whether realized warm/cold outcomes are fed back into the CIL belief.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedbackMode {
+    /// the paper's protocol: the CIL tracks *predicted* outcomes only —
+    /// pinned bit-identical to the pre-feedback implementation
+    Off,
+    /// closed loop: realized start kinds and busy windows correct the
+    /// working CIL once each cloud response lands (sim: at the stored
+    /// event; live: when the worker thread reports; fleet: at the next
+    /// epoch barrier, and into the regional hub in hub-CIL mode)
+    Observe,
+}
+
+impl FeedbackMode {
+    pub fn parse(s: &str) -> Result<FeedbackMode> {
+        match s {
+            "off" | "none" | "predicted" => Ok(FeedbackMode::Off),
+            "observe" | "on" | "closed-loop" => Ok(FeedbackMode::Observe),
+            _ => bail!("unknown feedback mode `{s}` (off | observe)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FeedbackMode::Off => "off",
+            FeedbackMode::Observe => "observe",
+        }
+    }
+}
+
 /// Settings for one framework run (simulation or live).
 #[derive(Debug, Clone)]
 pub struct ExperimentSettings {
@@ -68,6 +98,8 @@ pub struct ExperimentSettings {
     /// variance-aware margin in σ units (paper §VIII future work); 0 = the
     /// published mean-prediction behaviour
     pub risk_factor: f64,
+    /// closed-loop warm/cold feedback; Off = the paper's pure-belief CIL
+    pub feedback: FeedbackMode,
 }
 
 impl ExperimentSettings {
@@ -85,6 +117,7 @@ impl ExperimentSettings {
             seed: 2020,
             tidl_belief_ms: None,
             risk_factor: 0.0,
+            feedback: FeedbackMode::Off,
         }
     }
 
@@ -125,6 +158,11 @@ impl ExperimentSettings {
 
     pub fn with_risk_factor(mut self, r: f64) -> Self {
         self.risk_factor = r;
+        self
+    }
+
+    pub fn with_feedback(mut self, f: FeedbackMode) -> Self {
+        self.feedback = f;
         self
     }
 
@@ -177,5 +215,16 @@ mod tests {
         assert_eq!(s.alpha, Some(0.05));
         assert_eq!(s.n_inputs, Some(10));
         assert!(s.replay);
+        assert_eq!(s.feedback, FeedbackMode::Off, "feedback defaults to the paper protocol");
+        assert_eq!(s.with_feedback(FeedbackMode::Observe).feedback, FeedbackMode::Observe);
+    }
+
+    #[test]
+    fn feedback_mode_parse() {
+        assert_eq!(FeedbackMode::parse("off").unwrap(), FeedbackMode::Off);
+        assert_eq!(FeedbackMode::parse("observe").unwrap(), FeedbackMode::Observe);
+        assert_eq!(FeedbackMode::parse("closed-loop").unwrap(), FeedbackMode::Observe);
+        assert!(FeedbackMode::parse("x").is_err());
+        assert_eq!(FeedbackMode::Observe.label(), "observe");
     }
 }

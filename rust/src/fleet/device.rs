@@ -126,7 +126,49 @@ pub struct CloudRequest {
     pub pred_trigger_ms: f64,
     /// predicted start+compute busy window behind the belief
     pub pred_busy_ms: f64,
+    /// working-CIL tag stamped by this placement's `note_placement` —
+    /// closed-loop feedback routes the realized outcome back to the same
+    /// believed container (unused with `FeedbackMode::Off`)
+    pub belief_tag: u64,
+    /// hub-CIL tag stamped when the coordinator absorbed this request's
+    /// belief (hub mode only; 0 until absorbed)
+    pub hub_tag: u64,
     fields: DecisionFields,
+}
+
+/// One realized cloud outcome flowing back to the issuing device (and, in
+/// hub mode, into the regional hub): closed-loop warm/cold feedback. With
+/// `FeedbackMode::Off` no observation is ever constructed, which is what
+/// keeps that path bit-identical to the paper's pure-belief protocol.
+#[derive(Debug, Clone, Copy)]
+pub struct CloudObservation {
+    pub device_id: usize,
+    pub region: usize,
+    /// configuration index within the region
+    pub j: usize,
+    /// the request's `belief_tag` (working-CIL correlation handle)
+    pub tag: u64,
+    /// realized trigger time against the region's pool
+    pub trigger_ms: f64,
+    /// realized start + compute busy window
+    pub busy_ms: f64,
+    /// realized start kind
+    pub warm: bool,
+}
+
+impl CloudObservation {
+    /// Capture the realized outcome of an applied request.
+    pub fn from_execution(req: &CloudRequest, exec: &CloudExecution) -> Self {
+        CloudObservation {
+            device_id: req.device_id,
+            region: req.region,
+            j: req.j,
+            tag: req.belief_tag,
+            trigger_ms: exec.triggered_at,
+            busy_ms: exec.start_ms + req.comp_ms,
+            warm: exec.kind == StartKind::Warm,
+        }
+    }
 }
 
 /// What one arrival produced: a finished edge record or a pending cloud
@@ -282,6 +324,9 @@ impl<'a> Device<'a> {
                 let tidl = self.gt.sample_tidl();
                 let seq = self.seq;
                 self.seq += 1;
+                // note_placement above just updated this region's working
+                // CIL; its tag is the feedback correlation handle
+                let belief_tag = self.router.last_update_tag(region);
                 Ok(Dispatch::Cloud(CloudRequest {
                     device_id: self.profile.id,
                     seq,
@@ -303,10 +348,22 @@ impl<'a> Device<'a> {
                     warm_predicted: cp.warm,
                     pred_trigger_ms: now + cp.upld_ms,
                     pred_busy_ms: cp.start_ms + cp.comp_ms,
+                    belief_tag,
+                    hub_tag: 0,
                     fields,
                 }))
             }
         }
+    }
+
+    /// Closed-loop feedback: fold one realized cloud outcome into this
+    /// device's working CIL for the chosen region. The caller gates on
+    /// `FeedbackMode` — with feedback off this is never invoked and the
+    /// belief stays purely prediction-driven (the paper's protocol).
+    pub fn observe_cloud(&mut self, obs: &CloudObservation) {
+        debug_assert_eq!(obs.device_id, self.profile.id);
+        self.router
+            .observe(obs.region, obs.j, obs.tag, obs.trigger_ms, obs.busy_ms, obs.warm);
     }
 }
 
@@ -389,6 +446,8 @@ mod tests {
                     assert_eq!(req.routing_ms, 0.0);
                     assert_eq!(req.price_mult, 1.0);
                     assert!(req.pred_busy_ms > 0.0);
+                    assert!(req.belief_tag > 0, "placement must stamp a belief tag");
+                    assert_eq!(req.hub_tag, 0, "hub tag set only by the coordinator");
                 }
             }
         }
@@ -448,6 +507,37 @@ mod tests {
                 _ => panic!("batched and per-task scoring diverged on placement"),
             }
         }
+    }
+
+    #[test]
+    fn observe_cloud_closes_the_loop_on_the_working_cil() {
+        // predicted-outcome belief vs realized outcome: after feedback the
+        // device's working CIL reflects the platform's actual busy window
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0]);
+        let tasks = build_workload(&meta, "fd", 30, true, s.seed).unwrap();
+        let mut dev = Device::new(&meta, &s, DeviceProfile::uniform(0, "fd", 5)).unwrap();
+        let mut pools = CloudPlatform::new(meta.memory_configs_mb.len());
+        let mut observed = 0;
+        for t in &tasks {
+            if let Dispatch::Cloud(req) = dev.ingest(t, t.arrive_ms).unwrap() {
+                let exec = execute_cloud(&req, &mut pools);
+                let obs = CloudObservation::from_execution(&req, &exec);
+                assert_eq!(obs.tag, req.belief_tag);
+                assert_eq!(obs.busy_ms, exec.start_ms + req.comp_ms);
+                dev.observe_cloud(&obs);
+                observed += 1;
+                // the belief window now equals the realized one, so
+                // re-observing the same outcome must be a no-op
+                assert!(
+                    !dev.router.observe(
+                        obs.region, obs.j, obs.tag, obs.trigger_ms, obs.busy_ms, obs.warm
+                    ),
+                    "re-observing the same outcome must change nothing"
+                );
+            }
+        }
+        assert!(observed > 0, "FD latency-min must place cloud tasks");
     }
 
     #[test]

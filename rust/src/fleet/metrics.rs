@@ -5,28 +5,11 @@
 
 use crate::metrics::TaskRecord;
 use crate::predictor::Placement;
-use crate::util::stats;
+use crate::runtime::RunOutcome;
 
-/// p50 / p95 / p99 of a latency distribution (ms).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct LatencyPercentiles {
-    pub p50: f64,
-    pub p95: f64,
-    pub p99: f64,
-}
-
-/// Compute tail percentiles with a single sort (the fleet produces
-/// hundreds of thousands of samples; three independent sorts would triple
-/// the aggregation cost).
-pub fn latency_percentiles(xs: &[f64]) -> LatencyPercentiles {
-    let mut v = xs.to_vec();
-    v.sort_by(f64::total_cmp);
-    LatencyPercentiles {
-        p50: stats::percentile_sorted(&v, 50.0),
-        p95: stats::percentile_sorted(&v, 95.0),
-        p99: stats::percentile_sorted(&v, 99.0),
-    }
-}
+// percentile assembly lives in the unified run-outcome core; re-exported
+// here for the fleet-flavoured imports that predate it
+pub use crate::runtime::outcome::{latency_percentiles, LatencyPercentiles};
 
 /// One device's aggregated outcome.
 #[derive(Debug, Clone)]
@@ -117,7 +100,9 @@ impl FleetSummary {
         pool_high_water: Vec<usize>,
         peak_edge_queue: usize,
     ) -> FleetSummary {
+        let run = RunOutcome::from_records(records.concat());
         Self::build_with_regions(
+            &run,
             records,
             deadlines,
             pool_high_water,
@@ -127,10 +112,16 @@ impl FleetSummary {
         )
     }
 
-    /// Aggregate with a region layout: `pool_high_water` is the
-    /// region-major concatenation of per-config marks, and cloud placements
-    /// carry flattened (region · n_configs + config) indices.
+    /// Aggregate with a region layout. Task-level totals, the mean e2e, and
+    /// the latency tail come from the shared run-outcome core (`run` is the
+    /// flattened canonical-order record stream); this pass adds only the
+    /// fleet-specific views — per-device deadline violations, per-region
+    /// breakdowns, the determinism fingerprint, and pool pressure.
+    /// `pool_high_water` is the region-major concatenation of per-config
+    /// marks, and cloud placements carry flattened
+    /// (region · n_configs + config) indices.
     pub fn build_with_regions(
+        run: &RunOutcome,
         records: &[Vec<TaskRecord>],
         deadlines: &[f64],
         pool_high_water: Vec<usize>,
@@ -139,19 +130,12 @@ impl FleetSummary {
         n_configs: usize,
     ) -> FleetSummary {
         assert_eq!(records.len(), deadlines.len());
+        assert_eq!(run.records.len(), run.summary.n);
         let n_regions = region_names.len().max(1);
         let region_of = |flat: usize| {
             if n_configs == 0 { 0 } else { (flat / n_configs).min(n_regions - 1) }
         };
-        let mut e2e = Vec::new();
-        let mut edge_count = 0;
-        let mut cloud_count = 0;
         let mut violations = 0usize;
-        let mut total_actual_cost = 0.0;
-        let mut total_predicted_cost = 0.0;
-        let mut warm = 0;
-        let mut cold = 0;
-        let mut mismatches = 0;
         let mut regions: Vec<RegionBreakdown> = (0..n_regions)
             .map(|r| RegionBreakdown {
                 region: r,
@@ -166,12 +150,6 @@ impl FleetSummary {
         let mut h = FNV_OFFSET;
         for (recs, &deadline) in records.iter().zip(deadlines) {
             for r in recs {
-                e2e.push(r.actual_e2e_ms);
-                if r.is_edge() {
-                    edge_count += 1;
-                } else {
-                    cloud_count += 1;
-                }
                 if let Placement::Cloud(flat) = r.placement {
                     let br = &mut regions[region_of(flat)];
                     br.cloud_count += 1;
@@ -186,16 +164,6 @@ impl FleetSummary {
                 }
                 if r.actual_e2e_ms > deadline {
                     violations += 1;
-                }
-                total_actual_cost += r.actual_cost;
-                total_predicted_cost += r.predicted_cost;
-                match r.warm_actual {
-                    Some(true) => warm += 1,
-                    Some(false) => cold += 1,
-                    None => {}
-                }
-                if r.warm_cold_mismatch() {
-                    mismatches += 1;
                 }
                 h = fold_record(h, r);
             }
@@ -215,20 +183,20 @@ impl FleetSummary {
                     .unwrap_or(0);
             }
         }
-        let n_tasks = e2e.len();
+        let s = &run.summary;
         FleetSummary {
             n_devices: records.len(),
-            n_tasks,
-            edge_count,
-            cloud_count,
-            avg_e2e_ms: stats::mean(&e2e),
-            latency: latency_percentiles(&e2e),
-            deadline_violation_pct: violations as f64 / n_tasks.max(1) as f64 * 100.0,
-            total_actual_cost,
-            total_predicted_cost,
-            cloud_actual_warm: warm,
-            cloud_actual_cold: cold,
-            warm_cold_mismatches: mismatches,
+            n_tasks: s.n,
+            edge_count: s.edge_count,
+            cloud_count: s.cloud_count,
+            avg_e2e_ms: s.avg_actual_e2e_ms,
+            latency: run.latency,
+            deadline_violation_pct: violations as f64 / s.n.max(1) as f64 * 100.0,
+            total_actual_cost: s.total_actual_cost,
+            total_predicted_cost: s.total_predicted_cost,
+            cloud_actual_warm: s.cloud_actual_warm,
+            cloud_actual_cold: s.cloud_actual_cold,
+            warm_cold_mismatches: s.warm_cold_mismatches,
             max_pool_high_water: pool_high_water.iter().copied().max().unwrap_or(0),
             pool_high_water,
             peak_edge_queue,
@@ -319,8 +287,9 @@ mod tests {
         // n_configs = 3: flat 2 → region 0, flat 4 → region 1
         let recs = vec![mk(2, true), mk(4, false), mk(4, true)];
         let names = vec!["near".to_string(), "far".to_string()];
+        let run = RunOutcome::from_records(recs.clone());
         let s = FleetSummary::build_with_regions(
-            &[recs], &[1e9], vec![5, 0, 1, 2, 9, 0], 0, &names, 3,
+            &run, &[recs], &[1e9], vec![5, 0, 1, 2, 9, 0], 0, &names, 3,
         );
         assert_eq!(s.regions.len(), 2);
         assert_eq!(s.regions[0].cloud_count, 1);

@@ -36,13 +36,22 @@ use anyhow::Result;
 
 use crate::config::{ExperimentSettings, FleetSettings, Meta};
 use crate::metrics::TaskRecord;
+use crate::runtime::RunOutcome;
 
-pub use device::{CloudRequest, Device, DeviceProfile, Dispatch};
+pub use device::{CloudObservation, CloudRequest, Device, DeviceProfile, Dispatch};
 pub use metrics::{DeviceSummary, FleetSummary, LatencyPercentiles, RegionBreakdown};
 pub use scenario::{DeviceInit, DeviceRegionInit};
 
 /// Result of one fleet run.
 pub struct FleetOutcome {
+    /// the unified run-outcome core over the flattened record stream
+    /// (canonical device order) — the same records/summary/percentiles
+    /// shape `sim::run` and `live::run` report. NOTE: `run.records` is a
+    /// flattened *copy* of the per-device `records` below (~100 B/task);
+    /// the duplication buys a stable per-device API plus the shared
+    /// assembly core — revisit if fleet record volumes grow much past the
+    /// current ~10^5-task runs.
+    pub run: RunOutcome,
     /// per-device task records, devices in canonical order
     pub records: Vec<Vec<TaskRecord>>,
     pub device_summaries: Vec<DeviceSummary>,
@@ -50,6 +59,9 @@ pub struct FleetOutcome {
     /// per-region belief updates absorbed by the hub CILs (all zero in
     /// private-CIL mode)
     pub hub_updates: Vec<u64>,
+    /// per-region realized outcomes folded back into the hub CILs (all
+    /// zero unless hub mode runs with `FeedbackMode::Observe`)
+    pub hub_observations: Vec<u64>,
     /// virtual time at which the last event fired
     pub sim_end_ms: f64,
 }
@@ -68,6 +80,9 @@ pub fn run_sim_equivalent(
     n_shards: usize,
 ) -> Result<FleetOutcome> {
     let init = scenario::mirror_sim(meta, settings)?;
-    let fs = FleetSettings::new(1).with_shards(n_shards).with_epoch_ms(5_000.0);
+    let fs = FleetSettings::new(1)
+        .with_shards(n_shards)
+        .with_epoch_ms(5_000.0)
+        .with_feedback(settings.feedback);
     shard::run_fleet(meta, vec![init], &fs)
 }

@@ -29,6 +29,8 @@ const REGION_STREAM: u64 = 37;
 const ROUTING_STREAM: u64 = 41;
 /// PCG stream id for the mobility-fraction selection draw.
 const MOBILITY_STREAM: u64 = 43;
+/// PCG stream id for the per-device rate-drift multiplier draw.
+const DRIFT_STREAM: u64 = 47;
 /// XOR'd into a device's sub-seed for its actuals sampling stream.
 const ACTUALS_SALT: u64 = 0xACC;
 /// XOR'd into a device's sub-seed for its T_idl stream — the same salt the
@@ -170,6 +172,30 @@ pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64, phase_ms: 
                 k += 1.0;
             }
             out.sort_by(f64::total_cmp);
+            out
+        }
+        FleetScenario::Drift { sigma } => {
+            if rate <= 0.0 {
+                return Vec::new();
+            }
+            // each device drifts towards its own lognormal(0, σ) end-of-run
+            // multiplier — a per-device draw, so the stream is identical
+            // under any sharding (ROADMAP "per-device rate drift")
+            let end_mult = Pcg32::new(dseed, DRIFT_STREAM).lognormal(0.0, sigma);
+            let rate_max = rate * end_mult.max(1.0);
+            let mut src = PoissonArrivals::new(rate_max, dseed);
+            let mut accept = Pcg32::new(dseed, THINNING_STREAM);
+            let mut out = Vec::new();
+            loop {
+                let t = src.next_arrival_ms();
+                if t >= fs.duration_ms {
+                    break;
+                }
+                let r = rate * (1.0 + (end_mult - 1.0) * t / fs.duration_ms);
+                if accept.uniform() * rate_max < r {
+                    out.push(t);
+                }
+            }
             out
         }
         FleetScenario::Churn { on_ms, off_ms } => {
@@ -554,6 +580,53 @@ mod tests {
             "flash crowd should multiply the rate (before {before:.4}/ms, after {after:.4}/ms)"
         );
         assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn drift_is_deterministic_and_moves_rates_per_device() {
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Drift { sigma: 0.5 })
+            .with_duration_ms(120_000.0);
+        // determinism per device seed
+        for dseed in [3u64, 9, 21] {
+            assert_eq!(arrival_times(&fs, 6.0, dseed, 0.0), arrival_times(&fs, 6.0, dseed, 0.0));
+        }
+        // the realized drift direction matches each device's drawn
+        // multiplier: heated-up devices arrive more in the second half,
+        // cooled-down devices less. Only clear drifters (≥2× or ≤0.5×) are
+        // checked — there the expected late/early gap is >5σ of Poisson
+        // noise, so the deterministic streams cannot contradict it.
+        let mut checked = 0;
+        for dseed in 0..60u64 {
+            let end_mult = Pcg32::new(dseed, DRIFT_STREAM).lognormal(0.0, 0.5);
+            let times = arrival_times(&fs, 6.0, dseed, 0.0);
+            let late = times.iter().filter(|&&t| t >= 60_000.0).count();
+            let early = times.len() - late;
+            if end_mult > 2.0 {
+                assert!(late > early, "seed {dseed}: mult {end_mult} but {early}/{late}");
+                checked += 1;
+            } else if end_mult < 0.5 {
+                assert!(late < early, "seed {dseed}: mult {end_mult} but {early}/{late}");
+                checked += 1;
+            }
+        }
+        assert!(checked >= 2, "σ = 0.5 over 60 devices must produce clear drifters");
+    }
+
+    #[test]
+    fn drift_sigma_zero_matches_poisson() {
+        // a zero-σ drift draws multiplier 1 for every device: the thinning
+        // accepts everything and the stream is the plain Poisson one
+        let drift = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Drift { sigma: 0.0 })
+            .with_duration_ms(30_000.0);
+        let poisson = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Poisson)
+            .with_duration_ms(30_000.0);
+        assert_eq!(
+            arrival_times(&drift, 4.0, 11, 0.0),
+            arrival_times(&poisson, 4.0, 11, 0.0)
+        );
     }
 
     #[test]

@@ -38,25 +38,27 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{CilMode, FleetSettings, Meta, PredictorBackendKind};
+use crate::config::{CilMode, FeedbackMode, FleetSettings, Meta, PredictorBackendKind};
 use crate::metrics::TaskRecord;
 use crate::models::{NativeModels, RawPrediction};
 use crate::predictor::cil::Cil;
 use crate::predictor::Backend;
 use crate::region::{DeviceRouter, RegionTopology, ResolvedTopology};
-use crate::runtime::XlaEngine;
+use crate::runtime::{RunOutcome, XlaEngine};
 use crate::sim::events::{Event, EventQueue};
 
-use super::device::{self, CloudRequest, Device, Dispatch};
+use super::device::{self, CloudObservation, CloudRequest, Device, Dispatch};
 use super::metrics::{DeviceSummary, FleetSummary};
 use super::scenario::DeviceInit;
 use super::FleetOutcome;
 
 /// One barrier command: step to `epoch_end`, optionally adopting fresh
-/// hub-CIL snapshots first (hub mode only).
+/// hub-CIL snapshots first (hub mode only), then folding in the realized
+/// outcomes of this shard's devices merged last epoch (feedback mode only).
 struct EpochCmd {
     epoch_end: f64,
     hub: Option<Arc<Vec<Cil>>>,
+    obs: Vec<CloudObservation>,
 }
 
 /// Immutable scoring backends shared by every device requesting the same
@@ -280,10 +282,23 @@ fn worker_loop(
             }
         }
     }
+    // device id → local index, for routing observations back
+    let idx: BTreeMap<usize, usize> = runs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.device.profile.id, i))
+        .collect();
     while let Ok(cmd) = commands.recv() {
         if let Some(hub) = &cmd.hub {
             for run in &mut runs {
                 run.device.router.refresh_from_hub(hub);
+            }
+        }
+        // realized outcomes land after any snapshot adoption: observations
+        // are fresher ground truth than the broadcast beliefs
+        for ob in &cmd.obs {
+            if let Some(&ri) = idx.get(&ob.device_id) {
+                runs[ri].device.observe_cloud(ob);
             }
         }
         if let Err(e) = score_epoch(&mut runs, &bank, cmd.epoch_end) {
@@ -308,7 +323,8 @@ fn worker_loop(
     }
 }
 
-/// One barrier round: command every shard to step to `epoch_end`, then
+/// One barrier round: command every shard to step to `epoch_end` (shipping
+/// the hub snapshots and last epoch's realized outcomes along), then
 /// collect edge records and this epoch's fresh cloud requests from all of
 /// them. Returns (arrivals still queued, total events still queued).
 #[allow(clippy::too_many_arguments)]
@@ -317,13 +333,21 @@ fn barrier(
     res_rx: &Receiver<Result<EpochOutput, String>>,
     epoch_end: f64,
     hub: Option<Arc<Vec<Cil>>>,
+    obs: Vec<CloudObservation>,
     records: &mut [Vec<Option<TaskRecord>>],
     fresh: &mut Vec<CloudRequest>,
     peak_edge_queue: &mut usize,
     sim_end: &mut f64,
 ) -> Result<(usize, usize)> {
-    for tx in cmd_txs {
-        let cmd = EpochCmd { epoch_end, hub: hub.clone() };
+    // observations are partitioned exactly like the devices were (round
+    // robin by id), preserving their canonical merge order per shard
+    let mut obs_parts: Vec<Vec<CloudObservation>> =
+        (0..cmd_txs.len()).map(|_| Vec::new()).collect();
+    for ob in obs {
+        obs_parts[ob.device_id % cmd_txs.len()].push(ob);
+    }
+    for (tx, obs_part) in cmd_txs.iter().zip(obs_parts) {
+        let cmd = EpochCmd { epoch_end, hub: hub.clone(), obs: obs_part };
         if tx.send(cmd).is_err() {
             // the worker died before this epoch — surface its own report
             // (e.g. a device build error) instead of the generic message
@@ -368,20 +392,34 @@ fn absorb_into_hubs(fresh: &mut [CloudRequest], topo: &mut RegionTopology) {
             .then_with(|| a.seq.cmp(&b.seq))
     });
     for req in fresh {
-        topo.regions[req.region]
-            .hub
-            .absorb(req.j, req.pred_trigger_ms, req.pred_busy_ms);
+        let hub = &mut topo.regions[req.region].hub;
+        hub.absorb(req.j, req.pred_trigger_ms, req.pred_busy_ms);
+        // remember which hub entry backs this belief so the realized
+        // outcome can correct it at merge time (feedback mode)
+        req.hub_tag = hub.last_update_tag();
     }
 }
 
 /// Apply every pending request triggering before `horizon` to its region's
-/// shared pools, in canonical order. Later requests stay pending.
+/// shared pools, in canonical order. Later requests stay pending. With
+/// feedback on, each applied request's realized outcome is
+///  * private mode: collected for delivery to the issuing device at the
+///    next barrier (it corrects the device's working CIL);
+///  * hub mode: folded into the region's hub CIL immediately —
+///    observations ride the next epoch snapshot alongside beliefs, so
+///    devices are NOT sent the observation a second time (the snapshot
+///    already carries the corrected entry; re-applying it would
+///    double-count the container).
+#[allow(clippy::too_many_arguments)]
 fn merge_ready(
     pending: &mut Vec<CloudRequest>,
     horizon: f64,
     topo: &mut RegionTopology,
     records: &mut [Vec<Option<TaskRecord>>],
     sim_end: &mut f64,
+    feedback: bool,
+    hub_mode: bool,
+    obs_out: &mut Vec<CloudObservation>,
 ) {
     pending.sort_by(|a, b| {
         a.trigger_ms
@@ -400,6 +438,14 @@ fn merge_ready(
         region.pool_high_water[req.j] = region.pool_high_water[req.j]
             .max(region.cloud.pool(req.j).live_count(req.trigger_ms));
         *sim_end = sim_end.max(exec.stored_at);
+        if feedback {
+            let obs = CloudObservation::from_execution(&req, &exec);
+            if hub_mode {
+                region.hub.observe(req.j, req.hub_tag, obs.trigger_ms, obs.busy_ms, obs.warm);
+            } else {
+                obs_out.push(obs);
+            }
+        }
         records[req.device_id][req.task_id] = Some(device::complete_cloud(&req, &exec));
     }
     *pending = deferred;
@@ -444,6 +490,8 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         parts[i % n_shards].push(init);
     }
 
+    let feedback = fs.feedback == FeedbackMode::Observe;
+    let hub_mode = mode == CilMode::Hub;
     let mut pending: Vec<CloudRequest> = Vec::new();
     let mut sim_end = 0.0f64;
     let mut peak_edge_queue = 0usize;
@@ -466,31 +514,40 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
             (mode == CilMode::Hub).then(|| Arc::new(topo.hub_snapshots()))
         };
 
+        // realized outcomes from the previous epoch's merge, delivered to
+        // the issuing devices with the next barrier command
+        let mut carry_obs: Vec<CloudObservation> = Vec::new();
         let mut epoch_end = epoch_ms;
         loop {
             let mut fresh = Vec::new();
             let (arrivals_left, events_left) = barrier(
-                &cmd_txs, &res_rx, epoch_end, snapshots(&topo), &mut records,
+                &cmd_txs, &res_rx, epoch_end, snapshots(&topo),
+                std::mem::take(&mut carry_obs), &mut records,
                 &mut fresh, &mut peak_edge_queue, &mut sim_end,
             )?;
-            if mode == CilMode::Hub {
+            if hub_mode {
                 absorb_into_hubs(&mut fresh, &mut topo);
             }
             pending.extend(fresh);
-            merge_ready(&mut pending, epoch_end, &mut topo, &mut records, &mut sim_end);
+            merge_ready(
+                &mut pending, epoch_end, &mut topo, &mut records, &mut sim_end,
+                feedback, hub_mode, &mut carry_obs,
+            );
             if arrivals_left == 0 {
                 // no arrival can emit further cloud requests; drain the
                 // remaining edge events in one unbounded pass and flush
                 if events_left > 0 {
                     let mut fresh = Vec::new();
                     barrier(
-                        &cmd_txs, &res_rx, f64::INFINITY, snapshots(&topo), &mut records,
+                        &cmd_txs, &res_rx, f64::INFINITY, snapshots(&topo),
+                        std::mem::take(&mut carry_obs), &mut records,
                         &mut fresh, &mut peak_edge_queue, &mut sim_end,
                     )?;
                     pending.extend(fresh);
                 }
                 merge_ready(
                     &mut pending, f64::INFINITY, &mut topo, &mut records, &mut sim_end,
+                    feedback, hub_mode, &mut carry_obs,
                 );
                 break;
             }
@@ -517,7 +574,11 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         .enumerate()
         .map(|(d, recs)| DeviceSummary::from_records(d, &apps[d], deadlines[d], recs))
         .collect();
+    // the unified run-outcome core over the flattened canonical-order
+    // stream; the fleet summary reuses its totals and percentiles
+    let run = RunOutcome::from_records(final_records.concat());
     let summary = FleetSummary::build_with_regions(
+        &run,
         &final_records,
         &deadlines,
         topo.flat_pool_high_water(),
@@ -526,11 +587,14 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         n_configs,
     );
     let hub_updates = topo.regions.iter().map(|r| r.hub.updates_absorbed).collect();
+    let hub_observations = topo.regions.iter().map(|r| r.hub.observations_absorbed).collect();
     Ok(FleetOutcome {
+        run,
         records: final_records,
         device_summaries,
         summary,
         hub_updates,
+        hub_observations,
         sim_end_ms: sim_end,
     })
 }
@@ -597,6 +661,37 @@ mod tests {
             }
         }
         assert_eq!(out.summary.n_tasks, expected.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn feedback_fleet_is_shard_invariant() {
+        // observation delivery is canonical-order and partitioned like the
+        // devices, so the closed loop must not break shard invariance
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(17)
+            .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_feedback(crate::config::FeedbackMode::Observe);
+        let base = run(&meta, &fs.clone().with_shards(1));
+        for shards in [2, 3, 6] {
+            let other = run(&meta, &fs.clone().with_shards(shards));
+            assert_eq!(base.summary.fingerprint, other.summary.fingerprint,
+                       "{shards} shards diverged under feedback");
+        }
+    }
+
+    #[test]
+    fn run_outcome_core_matches_fleet_summary() {
+        let meta = meta();
+        let fs = FleetSettings::new(4).with_seed(9).with_duration_ms(4_000.0);
+        let out = run(&meta, &fs);
+        assert_eq!(out.run.summary.n, out.summary.n_tasks);
+        assert_eq!(out.run.summary.edge_count, out.summary.edge_count);
+        assert_eq!(out.run.latency, out.summary.latency);
+        assert_eq!(out.run.records.len(), out.records.iter().map(Vec::len).sum::<usize>());
+        assert_eq!(out.hub_observations, vec![0], "feedback off never feeds the hub");
     }
 
     #[test]

@@ -1,20 +1,37 @@
 //! Live prototype (paper Sec. VI-B): the framework running on real threads
 //! and wall-clock time rather than virtual simulation time.
 //!
+//! Live mode is a **thin wall-clock dispatcher over the shared per-device
+//! stepper**: every arrival goes through [`Device::ingest`] — the same
+//! predict → decide → updateCIL → dispatch body `sim::run` and the fleet
+//! drive — and the resulting [`Dispatch`] is mapped onto the thread
+//! topology. No predict/decide/CIL logic of its own lives here, so the
+//! sim/fleet/region scoring core (one Eqn.-1 body, router-backed CILs,
+//! region-aware candidates) is exactly what the prototype validates.
+//!
 //! Topology (tokio is unavailable offline; std threads + channels):
-//!  * the **ingest/decision thread** (this thread) releases inputs at the
-//!    app's fixed rate, scores each through the Predictor — the XLA
-//!    artifact on the hot path in production mode — runs the Decision
-//!    Engine, and dispatches;
+//!  * the **ingest/decision thread** (this thread) releases inputs at their
+//!    scheduled times — fixed rate (the paper's prototype) or the replayed
+//!    Poisson stream — and steps the [`Device`];
 //!  * the **edge worker thread** drains a FIFO channel, sleeping the actual
 //!    compute duration per task (the Greengrass long-lived function);
 //!  * **cloud worker threads** are spawned per request (AWS Lambda scales
-//!    out per invocation), sleeping upload/start/compute/store durations and
-//!    sharing the ground-truth container pools behind a mutex.
+//!    out per invocation): they sleep the upload leg, apply the request to
+//!    the ground-truth container pools behind a mutex via
+//!    [`device::execute_cloud`], assemble the record with
+//!    [`device::complete_cloud`], and sleep out start/compute/store.
 //!
-//! All durations are scaled by `time_scale` so a 150 s (virtual) run
-//! finishes in seconds while preserving the concurrency structure; measured
-//! wall-clock latencies are scaled back to virtual ms for reporting.
+//! Task records carry the platform's virtual-time math (identical to the
+//! simulator's, which is what the live-vs-sim parity suite pins); the
+//! measured wall-clock tail is reported separately as `wall_latency`. All
+//! sleeps are scaled by `time_scale` so a 150 s (virtual) run finishes in
+//! seconds while preserving the concurrency structure.
+//!
+//! With `FeedbackMode::Observe`, each cloud worker ships the realized
+//! start kind back over the completion channel and the ingest thread folds
+//! it into the device's working CIL before the next decision — the
+//! closed-loop feedback arrives exactly when the response lands, like a
+//! real client would see it.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -22,15 +39,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{ExperimentSettings, Meta};
-use crate::engine::DecisionEngine;
-use crate::fleet::metrics::{latency_percentiles, LatencyPercentiles};
-use crate::metrics::{Summary, TaskRecord};
-use crate::platform::containers::StartKind;
+use crate::config::{ExperimentSettings, FeedbackMode, Meta};
+use crate::fleet::device::{self, CloudObservation, Device, DeviceProfile, Dispatch};
+use crate::fleet::scenario::TIDL_SALT;
+use crate::metrics::TaskRecord;
 use crate::platform::lambda::CloudPlatform;
-use crate::platform::latency::GroundTruthSampler;
-use crate::platform::pricing::aws_pricing;
-use crate::predictor::{Placement, Predictor};
+use crate::runtime::{latency_percentiles, LatencyPercentiles, RunOutcome};
 use crate::util::panic_message;
 use crate::workload::build_workload;
 
@@ -44,51 +58,80 @@ pub struct LiveConfig {
     pub fixed_rate: bool,
 }
 
-/// Outcome of one live run.
+/// Outcome of one live run. Derefs to the unified [`RunOutcome`] core
+/// (records, summary, latency percentiles — the platform's virtual-time
+/// view, shared with `sim::run` and the fleet).
 pub struct LiveOutcome {
-    pub records: Vec<TaskRecord>,
-    pub summary: Summary,
-    /// actual e2e latency tail (virtual ms), via the fleet percentile helper
-    pub latency: LatencyPercentiles,
+    pub run: RunOutcome,
     pub wall_seconds: f64,
+    /// measured wall-clock e2e tail, scaled back to virtual ms — what the
+    /// threads actually experienced, scheduling jitter included
+    pub wall_latency: LatencyPercentiles,
+    /// mean measured wall-clock e2e (virtual ms)
+    pub wall_avg_e2e_ms: f64,
 }
 
+impl LiveOutcome {
+    /// The prototype's headline metric (paper Sec. VI-B, Table V): latency
+    /// prediction error against the **measured** wall-clock average. The
+    /// records' `summary.latency_prediction_error_pct()` is the
+    /// virtual-time (simulator-identical) view; this one keeps real
+    /// thread scheduling and contention in the denominator.
+    pub fn wall_latency_prediction_error_pct(&self) -> f64 {
+        crate::util::stats::ape(self.wall_avg_e2e_ms, self.summary.avg_predicted_e2e_ms)
+    }
+}
+
+impl std::ops::Deref for LiveOutcome {
+    type Target = RunOutcome;
+
+    fn deref(&self) -> &RunOutcome {
+        &self.run
+    }
+}
+
+/// One finished edge execution queued behind the edge worker's FIFO.
 struct EdgeJob {
-    id: usize,
+    /// stepper-produced record (virtual-time math, real queue wait)
+    record: TaskRecord,
+    /// actual compute the worker serializes (scaled sleep)
     comp_ms: f64,
-    iotup_ms: f64,
-    store_ms: f64,
+    /// iotup + store: I/O after compute; part of latency, not of the FIFO
+    tail_ms: f64,
     dispatched: Instant,
-    base: PartialRecord,
 }
 
-struct CloudJob {
-    id: usize,
-    j: usize,
-    upld_ms: f64,
-    comp_ms: f64,
-    start_w_ms: f64,
-    start_c_ms: f64,
-    store_ms: f64,
-    tidl_ms: f64,
-    dispatched: Instant,
-    warm_predicted: bool,
-    base: PartialRecord,
-}
-
-#[derive(Clone)]
-struct PartialRecord {
-    arrive_virtual_ms: f64,
-    predicted_e2e_ms: f64,
-    predicted_cost: f64,
-    allowed_cost: f64,
-    feasible_found: bool,
+/// What a worker reports back to the ingest thread.
+struct Completion {
+    record: TaskRecord,
+    /// measured wall-clock e2e, scaled back to virtual ms
+    measured_ms: f64,
+    /// realized cloud outcome (feedback mode only)
+    obs: Option<CloudObservation>,
 }
 
 fn scaled_sleep(ms: f64, scale: f64) {
     if ms > 0.0 {
         std::thread::sleep(Duration::from_secs_f64(ms * scale / 1000.0));
     }
+}
+
+/// Fold one worker completion into the run state: apply the realized cloud
+/// outcome to the device's working CIL (feedback mode), then file the
+/// record and the measured wall latency under the task id.
+fn collect(
+    c: Completion,
+    dev: &mut Device<'_>,
+    slots: &mut [Option<TaskRecord>],
+    measured: &mut [Option<f64>],
+) {
+    // observations exist only under FeedbackMode::Observe — with feedback
+    // off none is ever constructed, same as the sim and fleet paths
+    if let Some(obs) = &c.obs {
+        dev.observe_cloud(obs);
+    }
+    measured[c.record.id] = Some(c.measured_ms);
+    slots[c.record.id] = Some(c.record);
 }
 
 /// Run the live prototype once.
@@ -98,54 +141,31 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
     let n = s.n_inputs.unwrap_or(app.n_eval);
     let tasks = build_workload(meta, &s.app, n, s.replay, s.seed)?;
     let scale = cfg.time_scale;
+    let feedback = s.feedback == FeedbackMode::Observe;
 
-    let mut predictor = Predictor::with_backend_kind(meta, &app, s.backend)?;
-    let config_idxs: Vec<usize> = s
-        .config_set
-        .iter()
-        .map(|&m| meta.config_index(m).expect("config must be one of the 19"))
-        .collect();
-    let mut engine = DecisionEngine::new(
-        s.objective,
-        config_idxs,
-        s.deadline_ms.unwrap_or(app.deadline_ms),
-        s.cmax.unwrap_or(app.cmax),
-        s.alpha.unwrap_or(app.alpha),
-    )
-    .with_risk_factor(s.risk_factor);
-    let mut gt = GroundTruthSampler::new(meta, &s.app, s.seed ^ 0x11FE);
-
-    let records: Arc<Mutex<Vec<Option<TaskRecord>>>> = Arc::new(Mutex::new(vec![None; n]));
+    // the same device construction as `sim::run` — bad configuration sets
+    // surface as errors here instead of panicking mid-run
+    let profile = DeviceProfile::uniform(0, &s.app, s.seed ^ TIDL_SALT);
+    let mut dev = Device::new(meta, s, profile)?;
     let cloud: Arc<Mutex<CloudPlatform>> =
         Arc::new(Mutex::new(CloudPlatform::new(meta.memory_configs_mb.len())));
 
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
     // ---- edge worker -----------------------------------------------------
     let (edge_tx, edge_rx) = mpsc::channel::<EdgeJob>();
-    // predicted drain time of the edge queue, in virtual ms since t0
-    let edge_pred_busy: Arc<Mutex<f64>> = Arc::new(Mutex::new(0.0));
-    let edge_records = Arc::clone(&records);
+    let edge_done = done_tx.clone();
     let edge_handle = std::thread::spawn(move || {
         while let Ok(job) = edge_rx.recv() {
             scaled_sleep(job.comp_ms, scale); // FIFO: serialized compute
-            // iotup + store are I/O: do not block the executor thread, but
-            // the task's latency includes them.
-            let e2e_virtual =
-                job.dispatched.elapsed().as_secs_f64() * 1000.0 / scale + job.iotup_ms + job.store_ms;
-            let rec = TaskRecord {
-                id: job.id,
-                arrive_ms: job.base.arrive_virtual_ms,
-                placement: Placement::Edge,
-                predicted_e2e_ms: job.base.predicted_e2e_ms,
-                actual_e2e_ms: e2e_virtual,
-                predicted_cost: job.base.predicted_cost,
-                actual_cost: 0.0,
-                allowed_cost: job.base.allowed_cost,
-                feasible_found: job.base.feasible_found,
-                warm_predicted: None,
-                warm_actual: None,
-                edge_wait_ms: 0.0,
-            };
-            edge_records.lock().unwrap()[job.id] = Some(rec);
+            let measured_ms =
+                job.dispatched.elapsed().as_secs_f64() * 1000.0 / scale + job.tail_ms;
+            if edge_done
+                .send(Completion { record: job.record, measured_ms, obs: None })
+                .is_err()
+            {
+                return; // ingest thread gone
+            }
         }
     });
 
@@ -154,6 +174,8 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
     let virtual_now = |t0: &Instant| t0.elapsed().as_secs_f64() * 1000.0 / scale;
     let mut cloud_handles = Vec::new();
     let gap_ms = 1000.0 / app.arrival_rate_per_s;
+    let mut slots: Vec<Option<TaskRecord>> = vec![None; n];
+    let mut measured: Vec<Option<f64>> = vec![None; n];
 
     for (i, task) in tasks.iter().enumerate() {
         // release at fixed rate (paper prototype) or replayed Poisson times
@@ -162,88 +184,43 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
         if behind > 0.0 {
             scaled_sleep(behind, scale);
         }
-        let now_v = virtual_now(&t0);
-        let a = &task.actuals;
+        // fold in whatever the workers finished while we slept — with
+        // feedback on, realized warm/cold outcomes correct the working CIL
+        // before this decision
+        while let Ok(c) = done_rx.try_recv() {
+            collect(c, &mut dev, &mut slots, &mut measured);
+        }
 
-        // hot path: predictor (XLA executes here in production mode)
-        let pred = predictor.predict(a.size, now_v)?;
-        let edge_wait_pred = (*edge_pred_busy.lock().unwrap() - now_v).max(0.0);
-        let decision = engine.decide(&pred, edge_wait_pred);
-        predictor.update_cil(decision.placement, &pred, now_v);
-
-        let base = PartialRecord {
-            arrive_virtual_ms: now_v,
-            predicted_e2e_ms: decision.predicted_e2e_ms,
-            predicted_cost: decision.predicted_cost,
-            allowed_cost: decision.allowed_cost,
-            feasible_found: decision.feasible_found,
-        };
-
-        match decision.placement {
-            Placement::Edge => {
-                {
-                    let mut b = edge_pred_busy.lock().unwrap();
-                    *b = b.max(now_v) + pred.edge_comp_ms;
-                }
+        // the shared stepper: predict → decide → updateCIL → dispatch
+        match dev.ingest(task, release_ms)? {
+            Dispatch::Edge(e) => {
+                let a = &task.actuals;
                 edge_tx
                     .send(EdgeJob {
-                        id: task.id,
+                        record: e.record,
                         comp_ms: a.edge_comp,
-                        iotup_ms: a.iotup,
-                        store_ms: a.edge_store,
+                        tail_ms: a.iotup + a.edge_store,
                         dispatched: Instant::now(),
-                        base,
                     })
                     .map_err(|_| anyhow!("edge worker exited before the run finished"))?;
             }
-            Placement::Cloud(j) => {
-                let job = CloudJob {
-                    id: task.id,
-                    j,
-                    upld_ms: a.upld,
-                    comp_ms: a.comp[j],
-                    start_w_ms: a.start_w,
-                    start_c_ms: a.start_c,
-                    store_ms: a.store,
-                    tidl_ms: gt.sample_tidl(),
-                    dispatched: Instant::now(),
-                    warm_predicted: pred.cloud[j].warm,
-                    base,
-                };
+            Dispatch::Cloud(req) => {
                 let cloud = Arc::clone(&cloud);
-                let records = Arc::clone(&records);
-                let mem = meta.memory_configs_mb[j];
-                let t0c = t0;
+                let done = done_tx.clone();
+                let dispatched = Instant::now();
                 cloud_handles.push(std::thread::spawn(move || {
-                    scaled_sleep(job.upld_ms, scale);
-                    let trig_v = t0c.elapsed().as_secs_f64() * 1000.0 / scale;
-                    let (kind, start_ms) = {
-                        let mut c = cloud.lock().unwrap();
-                        let warm = c.pool(job.j).peek_warm(trig_v);
-                        let start = if warm { job.start_w_ms } else { job.start_c_ms };
-                        let e = c.execute(
-                            job.j, trig_v - job.upld_ms, job.upld_ms, job.comp_ms,
-                            job.start_w_ms, job.start_c_ms, job.store_ms, job.tidl_ms,
-                        );
-                        (e.kind, start)
+                    scaled_sleep(req.upld_ms + req.routing_ms, scale);
+                    // the pools decide warm vs cold at (virtual) trigger
+                    // time — the same ground truth the simulator applies
+                    let (exec, record) = {
+                        let mut pools = cloud.lock().unwrap();
+                        let exec = device::execute_cloud(&req, &mut pools);
+                        (exec, device::complete_cloud(&req, &exec))
                     };
-                    scaled_sleep(start_ms + job.comp_ms + job.store_ms, scale);
-                    let e2e_virtual = job.dispatched.elapsed().as_secs_f64() * 1000.0 / scale;
-                    let rec = TaskRecord {
-                        id: job.id,
-                        arrive_ms: job.base.arrive_virtual_ms,
-                        placement: Placement::Cloud(job.j),
-                        predicted_e2e_ms: job.base.predicted_e2e_ms,
-                        actual_e2e_ms: e2e_virtual,
-                        predicted_cost: job.base.predicted_cost,
-                        actual_cost: aws_pricing().cost(job.comp_ms, mem),
-                        allowed_cost: job.base.allowed_cost,
-                        feasible_found: job.base.feasible_found,
-                        warm_predicted: Some(job.warm_predicted),
-                        warm_actual: Some(kind == StartKind::Warm),
-                        edge_wait_ms: 0.0,
-                    };
-                    records.lock().unwrap()[job.id] = Some(rec);
+                    let obs = feedback.then(|| CloudObservation::from_execution(&req, &exec));
+                    scaled_sleep(exec.start_ms + req.comp_ms + req.store_ms, scale);
+                    let measured_ms = dispatched.elapsed().as_secs_f64() * 1000.0 / scale;
+                    let _ = done.send(Completion { record, measured_ms, obs });
                 }));
             }
         }
@@ -257,19 +234,18 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
     edge_handle
         .join()
         .map_err(|e| anyhow!("edge worker panicked: {}", panic_message(&*e)))?;
+    drop(done_tx);
+    for c in done_rx {
+        collect(c, &mut dev, &mut slots, &mut measured);
+    }
 
-    let records: Vec<TaskRecord> = Arc::try_unwrap(records)
-        .map_err(|_| anyhow!("a worker still holds the record table after join"))?
-        .into_inner()
-        .map_err(|_| anyhow!("record table poisoned by a worker panic"))?
-        .into_iter()
-        .enumerate()
-        .map(|(id, r)| r.ok_or_else(|| anyhow!("task {id} was never recorded")))
-        .collect::<Result<_>>()?;
-    let summary = Summary::from_records(&records);
-    let e2e: Vec<f64> = records.iter().map(|r| r.actual_e2e_ms).collect();
-    let latency = latency_percentiles(&e2e);
-    Ok(LiveOutcome { records, summary, latency, wall_seconds: t0.elapsed().as_secs_f64() })
+    let wall: Vec<f64> = measured.iter().copied().flatten().collect();
+    Ok(LiveOutcome {
+        run: RunOutcome::from_slots(slots)?,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_latency: latency_percentiles(&wall),
+        wall_avg_e2e_ms: crate::util::stats::mean(&wall),
+    })
 }
 
 #[cfg(test)]
@@ -292,12 +268,17 @@ mod tests {
         let out = run(&meta, &cfg).unwrap();
         assert_eq!(out.records.len(), 40);
         assert!(out.summary.avg_actual_e2e_ms > 0.0);
-        // tail summary comes from the shared fleet percentile helper
+        // tail summaries come from the shared run-outcome core
         assert!(out.latency.p50 > 0.0);
         assert!(out.latency.p50 <= out.latency.p95 && out.latency.p95 <= out.latency.p99);
-        // live latency should be in the same ballpark as predicted
+        assert!(out.wall_latency.p50 > 0.0);
+        assert!(out.wall_avg_e2e_ms > 0.0);
+        // live latency should be in the same ballpark as predicted — both
+        // the virtual-time view and the measured wall-clock one
         let err = out.summary.latency_prediction_error_pct();
         assert!(err < 60.0, "latency prediction error {err}%");
+        let wall_err = out.wall_latency_prediction_error_pct();
+        assert!(wall_err < 100.0, "measured prediction error {wall_err}%");
         // all tasks recorded exactly once, ids intact
         let mut ids: Vec<usize> = out.records.iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -320,4 +301,7 @@ mod tests {
             assert!(cloud.iter().any(|r| r.warm_actual == Some(false)));
         }
     }
+
+    // the bad-config error twin of the simulator's pin lives in
+    // rust/tests/live.rs (it also checks the error message)
 }

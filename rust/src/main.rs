@@ -7,15 +7,17 @@
 //!   sim     --app <ir|fd|stt> --objective <cost-min|latency-min>
 //!           --set 1536,1664,2048 [--alpha A] [--deadline MS] [--cmax $]
 //!           [--n N] [--seed S] [--backend xla|native] [--generate]
+//!           [--feedback off|observe]
 //!   fleet   --devices 1000 [--scenario poisson|diurnal|diurnal-tz|burst|
-//!                           churn|flash]
+//!                           churn|flash|drift]
 //!           [--duration-s 30] [--shards 4] [--apps ir:0.4,fd:0.4,stt:0.2]
 //!           [--objective O] [--seed S] [--rate-mult M] [--epoch-ms E]
+//!           [--drift-sigma S] [--feedback off|observe]
 //!           [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
 //!           [--cil private|hub] [--cross-ms 60] [--route-jitter S]
 //!           [--move-frac F] [--move-at-s T]
 //!   live    --app <ir|fd|stt> [--set ...] [--n N] [--scale 0.05]
-//!           [--runs R] [--backend xla|native]
+//!           [--runs R] [--backend xla|native] [--feedback off|observe]
 //!   report                       # run every experiment in order
 //!
 //! `--xla` / `--backend xla` put the AOT-compiled artifact (PJRT) on the
@@ -26,8 +28,8 @@ use anyhow::{bail, Result};
 
 use skedge::cli::Args;
 use skedge::config::{
-    default_artifact_dir, CilMode, ExperimentSettings, FleetScenario, FleetSettings, Meta,
-    Objective, PredictorBackendKind, TopologySpec,
+    default_artifact_dir, CilMode, ExperimentSettings, FeedbackMode, FleetScenario, FleetSettings,
+    Meta, Objective, PredictorBackendKind, TopologySpec,
 };
 use skedge::experiments;
 use skedge::fleet;
@@ -101,6 +103,15 @@ fn main() -> Result<()> {
                     o.latency.p95 / 1e3,
                     o.latency.p99 / 1e3
                 );
+                println!(
+                    "wall tail      : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s \
+                     (measured; mean {:.3} s, pred err {:.2}%)",
+                    o.wall_latency.p50 / 1e3,
+                    o.wall_latency.p95 / 1e3,
+                    o.wall_latency.p99 / 1e3,
+                    o.wall_avg_e2e_ms / 1e3,
+                    o.wall_latency_prediction_error_pct()
+                );
                 print_run_summary(&meta, &settings, &o.summary, &o.records);
             }
             Ok(())
@@ -137,6 +148,12 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
             _ => bail!("--burst-size only applies to the burst scenario"),
         }
     }
+    if let Some(s) = args.f64("drift-sigma")? {
+        match &mut fs.scenario {
+            FleetScenario::Drift { sigma } => *sigma = s,
+            _ => bail!("--drift-sigma only applies to the drift scenario"),
+        }
+    }
     if let Some(d) = args.f64("duration-s")? {
         fs.duration_ms = d * 1000.0;
     }
@@ -155,6 +172,9 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
     }
     if let Some(m) = args.f64("rate-mult")? {
         fs.rate_mult = m;
+    }
+    if let Some(f) = args.get("feedback") {
+        fs.feedback = FeedbackMode::parse(f)?;
     }
     if let Some(spec) = args.get("topology") {
         let mut topo = TopologySpec::parse(spec)?;
@@ -203,6 +223,13 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
             "topology       : {} regions, {} CIL",
             topo.n_regions(),
             topo.cil_mode.label()
+        );
+    }
+    if fs.feedback != FeedbackMode::Off {
+        println!(
+            "feedback       : {} ({} hub observations)",
+            fs.feedback.label(),
+            o.hub_observations.iter().sum::<u64>()
         );
     }
     println!(
@@ -274,6 +301,7 @@ fn settings_from_args(meta: &Meta, args: &Args) -> Result<ExperimentSettings> {
     settings.replay = !args.has_switch("generate");
     settings.risk_factor = args.f64("risk")?.unwrap_or(0.0);
     settings.backend = PredictorBackendKind::parse(args.get_or("backend", "native"))?;
+    settings.feedback = FeedbackMode::parse(args.get_or("feedback", "off"))?;
     Ok(settings)
 }
 
@@ -337,17 +365,22 @@ USAGE:
   skedge sim     --app fd --objective latency-min --set 1536,1664,2048
                  [--alpha A] [--deadline MS] [--cmax $] [--n N] [--risk R]
                  [--backend xla|native] [--generate] [--seed S]
+                 [--feedback off|observe]
   skedge fleet   --devices 1000
-                 [--scenario poisson|diurnal|diurnal-tz|burst|churn|flash]
+                 [--scenario poisson|diurnal|diurnal-tz|burst|churn|flash|drift]
                  [--duration-s 30] [--shards 4] [--epoch-ms 5000]
                  [--apps ir:0.4,fd:0.4,stt:0.2] [--objective latency-min]
                  [--seed S] [--rate-mult M] [--period-s P] [--amplitude A]
-                 [--burst-size N]
+                 [--burst-size N] [--drift-sigma S] [--feedback off|observe]
                  [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
                  [--cil private|hub] [--cross-ms 60] [--route-jitter S]
                  [--move-frac F] [--move-at-s T]
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
-                 [--backend xla|native]
+                 [--backend xla|native] [--feedback off|observe]
+
+`--feedback observe` closes the warm/cold loop: realized start kinds flow
+back into the working CILs (sim: at response time; live: when the worker
+reports; fleet: at the next epoch barrier, hubs included in --cil hub).
 
 Experiments: table1 table2 fig3 fig4 table3 fig5 table4 fig6 table5
              edgeonly baselines tidl configsel ablations fleet_scaling

@@ -11,6 +11,14 @@
 //! The CIL is a belief, not ground truth — prediction noise in comp(k, m)
 //! shifts believed completion times, which is exactly how warm/cold
 //! mispredictions arise (measured in Table V).
+//!
+//! With closed-loop feedback (`FeedbackMode::Observe`) the belief is
+//! *observation-corrected*: every `update` stamps the touched entry with a
+//! monotone tag, the dispatcher remembers which tag backed each cloud
+//! placement, and when the realized outcome comes back [`Cil::observe`]
+//! pins that entry to the container's actual busy window. Feedback off
+//! never calls `observe`, so the paper's pure predicted-outcome belief is
+//! preserved bit for bit.
 
 /// One believed container.
 #[derive(Debug, Clone, Copy)]
@@ -19,6 +27,9 @@ pub struct CilEntry {
     pub busy_until: f64,
     /// believed completion time of the latest function
     pub last_completion: f64,
+    /// tag of the `update` that last touched this entry (0 = untracked,
+    /// e.g. after hub-snapshot adoption)
+    pub tag: u64,
 }
 
 /// CIL over all configurations.
@@ -27,11 +38,13 @@ pub struct Cil {
     per_config: Vec<Vec<CilEntry>>,
     /// assumed container idle lifetime (fixed 27 min; Sec. IV-A)
     tidl_ms: f64,
+    /// next update tag; starts at 1 so tag 0 stays the "untracked" sentinel
+    next_tag: u64,
 }
 
 impl Cil {
     pub fn new(n_configs: usize, tidl_ms: f64) -> Self {
-        Cil { per_config: vec![Vec::new(); n_configs], tidl_ms }
+        Cil { per_config: vec![Vec::new(); n_configs], tidl_ms, next_tag: 1 }
     }
 
     pub fn tidl_ms(&self) -> f64 {
@@ -67,6 +80,8 @@ impl Cil {
     pub fn update(&mut self, j: usize, trigger: f64, busy_ms: f64) -> bool {
         self.purge(trigger);
         let tidl = self.tidl_ms;
+        let tag = self.next_tag;
+        self.next_tag += 1;
         let list = &mut self.per_config[j];
         let cand = list
             .iter_mut()
@@ -75,10 +90,74 @@ impl Cil {
         if let Some(c) = cand {
             c.busy_until = trigger + busy_ms;
             c.last_completion = trigger + busy_ms;
+            c.tag = tag;
             true
         } else {
-            list.push(CilEntry { busy_until: trigger + busy_ms, last_completion: trigger + busy_ms });
+            list.push(CilEntry {
+                busy_until: trigger + busy_ms,
+                last_completion: trigger + busy_ms,
+                tag,
+            });
             false
+        }
+    }
+
+    /// Tag stamped by the most recent [`Cil::update`] (0 if none yet) — the
+    /// correlation handle a dispatcher stores alongside a cloud placement so
+    /// the realized outcome can be fed back to the right believed container.
+    pub fn last_update_tag(&self) -> u64 {
+        self.next_tag - 1
+    }
+
+    /// Closed-loop correction: the invocation tracked under `tag` actually
+    /// fired at `trigger` and kept its container busy for `busy_ms`
+    /// (realized start + compute), with realized start kind `was_warm`.
+    ///
+    ///  * tagged entry still present → pin its window to the realized one
+    ///    (this is the common case: predicted times replaced by reality);
+    ///  * tagged entry gone and the start was **cold** → a real container
+    ///    provably exists through `trigger + busy_ms (+ T_idl)`; reinstate
+    ///    it as an untracked entry (the predicted entry was superseded by a
+    ///    later placement or a hub-snapshot adoption);
+    ///  * tagged entry gone and the start was **warm** → the container is
+    ///    already represented by whatever newer belief superseded the
+    ///    entry; inserting again would double-count, so drop it.
+    ///
+    /// Returns whether the belief changed.
+    pub fn observe(
+        &mut self,
+        j: usize,
+        tag: u64,
+        trigger: f64,
+        busy_ms: f64,
+        was_warm: bool,
+    ) -> bool {
+        let done = trigger + busy_ms;
+        let list = &mut self.per_config[j];
+        if tag != 0 {
+            if let Some(c) = list.iter_mut().find(|c| c.tag == tag) {
+                let changed = c.busy_until != done || c.last_completion != done;
+                c.busy_until = done;
+                c.last_completion = done;
+                return changed;
+            }
+        }
+        if !was_warm {
+            list.push(CilEntry { busy_until: done, last_completion: done, tag: 0 });
+            return true;
+        }
+        false
+    }
+
+    /// Forget update provenance (all entries become untracked). Called when
+    /// a device adopts a hub snapshot: the snapshot's tags belong to the
+    /// hub's own update sequence, so pending device observations must not
+    /// alias against them.
+    pub fn clear_tags(&mut self) {
+        for list in &mut self.per_config {
+            for c in list {
+                c.tag = 0;
+            }
         }
     }
 
@@ -162,5 +241,58 @@ mod tests {
         cil.update(0, 0.0, 1000.0);
         cil.update(0, TIDL, 500.0); // reuse right at the edge
         assert!(cil.predicts_warm(0, TIDL + 500.0 + TIDL - 1.0));
+    }
+
+    #[test]
+    fn observe_pins_the_tagged_entry_to_reality() {
+        let mut cil = Cil::new(1, TIDL);
+        cil.update(0, 0.0, 10_000.0); // predicted completion 10 s
+        let tag = cil.last_update_tag();
+        assert!(tag > 0);
+        // prediction said busy until 10 s → an arrival at 8 s looks cold
+        assert!(!cil.predicts_warm(0, 8_000.0));
+        // reality: the function completed at 7 s
+        assert!(cil.observe(0, tag, 0.0, 7_000.0, false));
+        assert!(cil.predicts_warm(0, 8_000.0), "corrected belief is warm");
+        // a second identical observation is a no-op
+        assert!(!cil.observe(0, tag, 0.0, 7_000.0, false));
+    }
+
+    #[test]
+    fn cold_observation_without_entry_reinstates_the_container() {
+        let mut cil = Cil::new(1, TIDL);
+        // no belief at all, but reality cold-started a container
+        assert!(cil.observe(0, 0, 1_000.0, 2_000.0, false));
+        assert_eq!(cil.believed_count(0, 3_000.0), 1);
+        assert!(cil.predicts_warm(0, 3_000.0));
+    }
+
+    #[test]
+    fn warm_observation_without_entry_is_dropped() {
+        let mut cil = Cil::new(1, TIDL);
+        assert!(!cil.observe(0, 42, 1_000.0, 2_000.0, true));
+        assert_eq!(cil.total_entries(), 0, "no double counting");
+    }
+
+    #[test]
+    fn clear_tags_breaks_observation_aliasing() {
+        let mut cil = Cil::new(1, TIDL);
+        cil.update(0, 0.0, 1_000.0);
+        let tag = cil.last_update_tag();
+        cil.clear_tags();
+        // warm observation with a stale tag must not touch the entry
+        assert!(!cil.observe(0, tag, 0.0, 9_000.0, true));
+        assert!(cil.predicts_warm(0, 2_000.0), "window untouched");
+    }
+
+    #[test]
+    fn update_tags_are_monotone_and_stamped() {
+        let mut cil = Cil::new(2, TIDL);
+        assert_eq!(cil.last_update_tag(), 0, "no update yet → sentinel");
+        cil.update(0, 0.0, 100.0);
+        let t1 = cil.last_update_tag();
+        cil.update(1, 0.0, 100.0);
+        let t2 = cil.last_update_tag();
+        assert!(t2 > t1);
     }
 }

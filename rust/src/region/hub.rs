@@ -29,11 +29,18 @@ pub struct RegionalCilHub {
     cil: Cil,
     /// belief updates absorbed from routed devices (observability)
     pub updates_absorbed: u64,
+    /// realized warm/cold outcomes folded back in (closed-loop feedback;
+    /// stays 0 with `FeedbackMode::Off`)
+    pub observations_absorbed: u64,
 }
 
 impl RegionalCilHub {
     pub fn new(n_configs: usize, tidl_ms: f64) -> Self {
-        RegionalCilHub { cil: Cil::new(n_configs, tidl_ms), updates_absorbed: 0 }
+        RegionalCilHub {
+            cil: Cil::new(n_configs, tidl_ms),
+            updates_absorbed: 0,
+            observations_absorbed: 0,
+        }
     }
 
     /// Absorb one device's placement belief: config `j` triggered at the
@@ -42,6 +49,28 @@ impl RegionalCilHub {
     pub fn absorb(&mut self, j: usize, pred_trigger_ms: f64, pred_busy_ms: f64) -> bool {
         self.updates_absorbed += 1;
         self.cil.update(j, pred_trigger_ms, pred_busy_ms)
+    }
+
+    /// Tag of the most recent [`RegionalCilHub::absorb`] — recorded on the
+    /// pending request so the realized outcome can correct the same entry.
+    pub fn last_update_tag(&self) -> u64 {
+        self.cil.last_update_tag()
+    }
+
+    /// Closed-loop feedback: the request absorbed under `tag` actually
+    /// fired at `trigger_ms` with a realized `busy_ms` window and start
+    /// kind `warm`. The corrected entry rides the next epoch snapshot to
+    /// every routed device — observations alongside beliefs.
+    pub fn observe(
+        &mut self,
+        j: usize,
+        tag: u64,
+        trigger_ms: f64,
+        busy_ms: f64,
+        warm: bool,
+    ) -> bool {
+        self.observations_absorbed += 1;
+        self.cil.observe(j, tag, trigger_ms, busy_ms, warm)
     }
 
     /// Clone the hub state — the epoch broadcast payload devices overlay
@@ -85,6 +114,20 @@ mod tests {
         hub.absorb(0, 5000.0, 1000.0);
         assert_eq!(snap.believed_count(0, 2000.0), 1);
         assert_eq!(hub.believed_count(0, 6000.0), 2);
+    }
+
+    #[test]
+    fn observation_corrects_the_absorbed_belief() {
+        let mut hub = RegionalCilHub::new(1, TIDL);
+        hub.absorb(0, 0.0, 10_000.0); // believed busy until 10 s
+        let tag = hub.last_update_tag();
+        assert!(!hub.predicts_warm(0, 8_000.0));
+        // reality completed at 7 s (warm feedback for the same entry)
+        assert!(hub.observe(0, tag, 0.0, 7_000.0, false));
+        assert!(hub.predicts_warm(0, 8_000.0));
+        assert_eq!(hub.observations_absorbed, 1);
+        // the corrected window rides the snapshot
+        assert!(hub.snapshot().predicts_warm(0, 8_000.0));
     }
 
     #[test]

@@ -127,6 +127,10 @@ impl DeviceRouter {
             self.cils.clone_from_slice(snapshots);
             for cil in &mut self.cils {
                 cil.set_tidl_ms(self.tidl_belief_ms);
+                // snapshot tags belong to the hub's update sequence; clear
+                // them so this device's in-flight observation tags cannot
+                // alias against unrelated hub entries
+                cil.clear_tags();
             }
         }
     }
@@ -160,6 +164,30 @@ impl DeviceRouter {
             let cp = &pred.cloud[flat];
             self.cils[r].update(j, now + cp.upld_ms, cp.start_ms + cp.comp_ms);
         }
+    }
+
+    /// Tag of the most recent working-CIL update in `region` — what
+    /// [`note_placement`](Self::note_placement) stamped, recorded on the
+    /// outgoing [`CloudRequest`](crate::fleet::device::CloudRequest) so the
+    /// realized outcome can be routed back to the same believed container.
+    pub fn last_update_tag(&self, region: usize) -> u64 {
+        self.cils[region].last_update_tag()
+    }
+
+    /// Closed-loop feedback (paper ROADMAP: "devices observe realized
+    /// start latencies"): correct the working CIL of `region` with one
+    /// realized cloud outcome. No-op semantics are delegated to
+    /// [`Cil::observe`]; never called with `FeedbackMode::Off`.
+    pub fn observe(
+        &mut self,
+        region: usize,
+        j: usize,
+        tag: u64,
+        trigger_ms: f64,
+        busy_ms: f64,
+        warm: bool,
+    ) -> bool {
+        self.cils[region].observe(j, tag, trigger_ms, busy_ms, warm)
     }
 
     pub fn split(&self, flat: usize) -> (usize, usize) {
@@ -281,6 +309,59 @@ mod tests {
         .unwrap();
         hub.refresh_from_hub(&snaps);
         assert_eq!(hub.cils[0].total_entries(), 1, "hub mode adopts the snapshot");
+    }
+
+    #[test]
+    fn observation_corrects_the_noted_placement() {
+        use crate::predictor::{CloudPrediction, Prediction};
+        let topo = two_region_topo();
+        let mut r = DeviceRouter::new(
+            topo, CilMode::Private, 0, vec![1.0, 1.0], Vec::new(), TIDL,
+        )
+        .unwrap();
+        // a flat-0 (region 0, config 0) placement believed busy 10 s
+        let cp = CloudPrediction {
+            e2e_ms: 10_000.0,
+            cost: 1e-6,
+            warm: false,
+            upld_ms: 0.0,
+            start_ms: 2_000.0,
+            comp_ms: 8_000.0,
+        };
+        let pred = Prediction {
+            cloud: vec![cp; 6],
+            edge_e2e_ms: 1.0,
+            edge_comp_ms: 1.0,
+            cloud_sigma_frac: 0.0,
+            edge_sigma_frac: 0.0,
+        };
+        r.note_placement(Placement::Cloud(0), &pred, 0.0);
+        let tag = r.last_update_tag(0);
+        assert!(tag > 0);
+        assert!(!r.cils[0].predicts_warm(0, 8_000.0), "believed busy");
+        // realized completion at 7 s → corrected belief is warm at 8 s
+        r.observe(0, 0, tag, 0.0, 7_000.0, false);
+        assert!(r.cils[0].predicts_warm(0, 8_000.0));
+        // the other region's CIL is untouched
+        assert_eq!(r.cils[1].total_entries(), 0);
+    }
+
+    #[test]
+    fn hub_refresh_clears_snapshot_tags() {
+        let topo = two_region_topo();
+        let mut warmed = Cil::new(3, TIDL);
+        warmed.update(0, 0.0, 10_000.0);
+        let hub_tag = warmed.last_update_tag();
+        let snaps = vec![warmed, Cil::new(3, TIDL)];
+        let mut r = DeviceRouter::new(
+            topo, CilMode::Hub, 0, vec![1.0, 1.0], Vec::new(), TIDL,
+        )
+        .unwrap();
+        r.refresh_from_hub(&snaps);
+        // a stale device observation carrying an aliasing tag must not
+        // rewrite the adopted snapshot entry
+        r.observe(0, 0, hub_tag, 0.0, 500.0, true);
+        assert!(!r.cils[0].predicts_warm(0, 5_000.0), "entry still believed busy");
     }
 
     #[test]

@@ -1,247 +1,13 @@
-//! PJRT runtime: load the AOT-compiled prediction graphs and execute them on
-//! the request path.
+//! The runtime layer shared by every execution mode: the PJRT scoring
+//! engine ([`xla`]) and the unified run-outcome core ([`outcome`]).
 //!
-//! The artifacts are HLO *text* (see `python/compile/aot.py` for why), parsed
-//! with `HloModuleProto::from_text_file`, compiled once per process with the
-//! PJRT CPU client, and cached as loaded executables. Python is never
-//! involved at runtime.
-//!
-//! The `xla` crate (PJRT bindings) is an optional dependency: offline
-//! environments build without the `xla` cargo feature and get a stub
-//! [`XlaEngine`] whose `load` returns an error, leaving the native mirror
-//! backend as the scoring path. All call sites compile either way. With the
-//! feature enabled, the dependency resolves to the vendored offline API
-//! stub (`rust/vendor/xla-stub`) by default, which compile-checks this
-//! module's real request/bulk paths and still errors at `load`; repoint
-//! the dependency at real PJRT bindings to serve from the artifact.
+//! Sim (virtual clock), live (wall clock), and fleet (sharded epochs) all
+//! drive the same per-device stepper (`crate::fleet::device::Device`) and
+//! all report through the same [`RunOutcome`] — records, summary, and
+//! latency percentiles are assembled in exactly one place.
 
-use anyhow::{anyhow, Result};
+pub mod outcome;
+pub mod xla;
 
-#[cfg(feature = "xla")]
-use anyhow::Context;
-
-use crate::config::Meta;
-use crate::models::RawPrediction;
-
-/// Convert the `xla` crate's error type (no std::error impl) to anyhow.
-#[cfg(feature = "xla")]
-macro_rules! xerr {
-    ($e:expr, $what:expr) => {
-        $e.map_err(|err| anyhow!("xla {}: {err:?}", $what))
-    };
-}
-
-/// A compiled predictor executable for one (app, batch-size) pair.
-#[cfg(feature = "xla")]
-pub struct CompiledPredictor {
-    exe: xla::PjRtLoadedExecutable,
-    pub batch: usize,
-    pub n_cfg: usize,
-}
-
-#[cfg(not(feature = "xla"))]
-mod stub {
-    use super::*;
-
-    fn unavailable() -> anyhow::Error {
-        anyhow!(
-            "skedge was built without the `xla` cargo feature; rebuild with \
-             `--features xla` or use the native predictor backend"
-        )
-    }
-
-    /// Stub of the PJRT executable wrapper (built without the `xla` feature).
-    pub struct CompiledPredictor {
-        pub batch: usize,
-        pub n_cfg: usize,
-    }
-
-    impl CompiledPredictor {
-        pub fn run(&self, _sizes: &[f32], _n_valid: usize) -> Result<Vec<RawPrediction>> {
-            Err(unavailable())
-        }
-    }
-
-    /// Stub of the PJRT engine (built without the `xla` feature). `load`
-    /// always errors, so no instance can exist at runtime.
-    pub struct XlaEngine {
-        pub b1: CompiledPredictor,
-        pub b64: Option<CompiledPredictor>,
-        pub app: String,
-    }
-
-    impl XlaEngine {
-        pub fn load(_meta: &Meta, _app: &str) -> Result<XlaEngine> {
-            Err(unavailable())
-        }
-
-        pub fn predict(&self, _size: f64) -> Result<RawPrediction> {
-            Err(unavailable())
-        }
-
-        pub fn predict_batch(&self, _sizes: &[f64]) -> Result<Vec<RawPrediction>> {
-            Err(unavailable())
-        }
-    }
-}
-
-#[cfg(not(feature = "xla"))]
-pub use stub::{CompiledPredictor, XlaEngine};
-
-#[cfg(feature = "xla")]
-impl CompiledPredictor {
-    /// Execute on a padded batch of sizes; returns per-input raw predictions
-    /// for the first `n_valid` entries.
-    pub fn run(&self, sizes: &[f32], n_valid: usize) -> Result<Vec<RawPrediction>> {
-        assert_eq!(sizes.len(), self.batch, "caller must pad to the batch size");
-        assert!(n_valid <= self.batch);
-        let input = xla::Literal::vec1(sizes);
-        let bufs = xerr!(self.exe.execute::<xla::Literal>(&[input]), "execute")?;
-        let lit = xerr!(bufs[0][0].to_literal_sync(), "to_literal")?;
-        let (upld, comp, comp_edge, cost) = xerr!(lit.to_tuple4(), "to_tuple4")?;
-        let upld = xerr!(upld.to_vec::<f32>(), "upld")?;
-        let comp = xerr!(comp.to_vec::<f32>(), "comp")?;
-        let comp_edge = xerr!(comp_edge.to_vec::<f32>(), "comp_edge")?;
-        let cost = xerr!(cost.to_vec::<f32>(), "cost")?;
-        let n = self.n_cfg;
-        let mut out = Vec::with_capacity(n_valid);
-        for i in 0..n_valid {
-            out.push(RawPrediction {
-                upld_ms: upld[i] as f64,
-                comp_cloud_ms: comp[i * n..(i + 1) * n].iter().map(|&v| v as f64).collect(),
-                comp_edge_ms: comp_edge[i] as f64,
-                cost_cloud: cost[i * n..(i + 1) * n].iter().map(|&v| v as f64).collect(),
-            });
-        }
-        Ok(out)
-    }
-}
-
-/// The runtime engine: PJRT client + per-app compiled executables.
-#[cfg(feature = "xla")]
-pub struct XlaEngine {
-    _client: xla::PjRtClient,
-    /// request-path executable (batch 1)
-    pub b1: CompiledPredictor,
-    /// bulk-scoring executable (batch 64), if the artifact exists
-    pub b64: Option<CompiledPredictor>,
-    pub app: String,
-}
-
-#[cfg(feature = "xla")]
-impl XlaEngine {
-    /// Load and compile both batch variants for an app.
-    pub fn load(meta: &Meta, app: &str) -> Result<XlaEngine> {
-        let client = xerr!(xla::PjRtClient::cpu(), "PjRtClient::cpu")?;
-        let n_cfg = meta.memory_configs_mb.len();
-        let b1 = Self::compile_one(&client, &meta.artifact_path(app, "b1"), 1, n_cfg)?;
-        let b64 = match meta.app(app).artifacts.get("b64") {
-            Some(_) => Some(Self::compile_one(&client, &meta.artifact_path(app, "b64"), 64, n_cfg)?),
-            None => None,
-        };
-        Ok(XlaEngine { _client: client, b1, b64, app: app.to_string() })
-    }
-
-    fn compile_one(
-        client: &xla::PjRtClient,
-        path: &str,
-        batch: usize,
-        n_cfg: usize,
-    ) -> Result<CompiledPredictor> {
-        let proto = xerr!(xla::HloModuleProto::from_text_file(path), "from_text_file")
-            .with_context(|| format!("loading HLO artifact {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = xerr!(client.compile(&comp), "compile")?;
-        Ok(CompiledPredictor { exe, batch, n_cfg })
-    }
-
-    /// Request-path prediction for a single input size.
-    pub fn predict(&self, size: f64) -> Result<RawPrediction> {
-        let mut out = self.b1.run(&[size as f32], 1)?;
-        Ok(out.pop().unwrap())
-    }
-
-    /// Bulk scoring: chunks through the b64 executable (padding the tail),
-    /// falling back to b1 if no bulk artifact was built.
-    pub fn predict_batch(&self, sizes: &[f64]) -> Result<Vec<RawPrediction>> {
-        let mut out = Vec::with_capacity(sizes.len());
-        match &self.b64 {
-            Some(bp) => {
-                for chunk in sizes.chunks(bp.batch) {
-                    let mut padded = vec![0f32; bp.batch];
-                    for (i, &s) in chunk.iter().enumerate() {
-                        padded[i] = s as f32;
-                    }
-                    out.extend(bp.run(&padded, chunk.len())?);
-                }
-            }
-            None => {
-                for &s in sizes {
-                    out.push(self.predict(s)?);
-                }
-            }
-        }
-        Ok(out)
-    }
-}
-
-#[cfg(all(test, feature = "xla"))]
-mod tests {
-    use super::*;
-    use crate::config::default_artifact_dir;
-    use crate::models::NativeModels;
-
-    fn meta() -> Meta {
-        Meta::load(&default_artifact_dir()).unwrap()
-    }
-
-    #[test]
-    fn loads_and_predicts_fd() {
-        let meta = meta();
-        let eng = XlaEngine::load(&meta, "fd").unwrap();
-        let p = eng.predict(2.5e6).unwrap();
-        assert_eq!(p.comp_cloud_ms.len(), 19);
-        assert!(p.upld_ms > 0.0);
-        assert!(p.comp_cloud_ms[0] > p.comp_cloud_ms[18]);
-    }
-
-    #[test]
-    fn xla_matches_native_mirror() {
-        // The parity test: the AOT artifact and the Rust mirror must agree.
-        let meta = meta();
-        for app in ["ir", "fd", "stt"] {
-            let eng = XlaEngine::load(&meta, app).unwrap();
-            let native = NativeModels::from_meta(&meta, meta.app(app));
-            let mut sampler =
-                crate::platform::latency::GroundTruthSampler::new(&meta, app, 5);
-            for _ in 0..20 {
-                let size = sampler.sample_size();
-                let x = eng.predict(size).unwrap();
-                let n = native.predict(size);
-                assert!((x.upld_ms - n.upld_ms).abs() / n.upld_ms < 1e-4);
-                assert!((x.comp_edge_ms - n.comp_edge_ms).abs() / n.comp_edge_ms < 1e-4);
-                for j in 0..19 {
-                    let rel = (x.comp_cloud_ms[j] - n.comp_cloud_ms[j]).abs()
-                        / n.comp_cloud_ms[j].max(1.0);
-                    assert!(rel < 1e-3, "{app} cfg {j}: {} vs {}", x.comp_cloud_ms[j], n.comp_cloud_ms[j]);
-                    let relc = (x.cost_cloud[j] - n.cost_cloud[j]).abs() / n.cost_cloud[j];
-                    assert!(relc < 1e-3, "{app} cost {j}");
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn batch_matches_single() {
-        let meta = meta();
-        let eng = XlaEngine::load(&meta, "stt").unwrap();
-        let sizes: Vec<f64> = (0..70).map(|i| 20_000.0 + 1000.0 * i as f64).collect();
-        let batch = eng.predict_batch(&sizes).unwrap();
-        assert_eq!(batch.len(), 70);
-        for (i, &s) in sizes.iter().enumerate().step_by(17) {
-            let single = eng.predict(s).unwrap();
-            assert!((batch[i].upld_ms - single.upld_ms).abs() < 1e-6);
-            assert_eq!(batch[i].comp_cloud_ms, single.comp_cloud_ms);
-        }
-    }
-}
+pub use outcome::{latency_percentiles, LatencyPercentiles, RunOutcome};
+pub use xla::{CompiledPredictor, XlaEngine};

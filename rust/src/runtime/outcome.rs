@@ -1,0 +1,102 @@
+//! The unified run-outcome core: per-task records plus the aggregations
+//! every execution mode reports — one `Summary`, one latency-percentile
+//! assembly, shared by `sim::run`, `live::run`, and the fleet runner.
+//!
+//! `SimOutcome` / `LiveOutcome` deref to [`RunOutcome`], and `FleetOutcome`
+//! embeds one built over the flattened canonical-order record stream, so
+//! metrics assembly exists exactly once in the tree.
+
+use crate::metrics::{Summary, TaskRecord};
+use crate::util::stats;
+
+/// p50 / p95 / p99 of a latency distribution (ms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyPercentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Compute tail percentiles with a single sort (the fleet produces
+/// hundreds of thousands of samples; three independent sorts would triple
+/// the aggregation cost).
+pub fn latency_percentiles(xs: &[f64]) -> LatencyPercentiles {
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    LatencyPercentiles {
+        p50: stats::percentile_sorted(&v, 50.0),
+        p95: stats::percentile_sorted(&v, 95.0),
+        p99: stats::percentile_sorted(&v, 99.0),
+    }
+}
+
+/// What every run produces, regardless of execution mode: the per-task
+/// records in task order plus the derived summary and latency tail.
+pub struct RunOutcome {
+    pub records: Vec<TaskRecord>,
+    pub summary: Summary,
+    /// actual end-to-end latency percentiles (virtual ms)
+    pub latency: LatencyPercentiles,
+}
+
+impl RunOutcome {
+    /// Assemble summary and percentiles from a finished record stream.
+    pub fn from_records(records: Vec<TaskRecord>) -> RunOutcome {
+        let summary = Summary::from_records(&records);
+        let e2e: Vec<f64> = records.iter().map(|r| r.actual_e2e_ms).collect();
+        let latency = latency_percentiles(&e2e);
+        RunOutcome { records, summary, latency }
+    }
+
+    /// Collect an indexed record table (`records[id]`), failing on any task
+    /// that never produced a record — the common tail of every runner.
+    pub fn from_slots(slots: Vec<Option<TaskRecord>>) -> anyhow::Result<RunOutcome> {
+        let records: Vec<TaskRecord> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(id, r)| {
+                r.ok_or_else(|| anyhow::anyhow!("task {id} never produced a record"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Ok(Self::from_records(records))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::Placement;
+
+    fn rec(id: usize, e2e: f64) -> TaskRecord {
+        TaskRecord {
+            id,
+            arrive_ms: 0.0,
+            placement: Placement::Edge,
+            predicted_e2e_ms: e2e,
+            actual_e2e_ms: e2e,
+            predicted_cost: 0.0,
+            actual_cost: 0.0,
+            allowed_cost: f64::INFINITY,
+            feasible_found: true,
+            warm_predicted: None,
+            warm_actual: None,
+            edge_wait_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn from_records_assembles_summary_and_tail() {
+        let out = RunOutcome::from_records((0..100).map(|i| rec(i, (i + 1) as f64)).collect());
+        assert_eq!(out.summary.n, 100);
+        assert!((out.latency.p50 - 50.5).abs() < 1e-9);
+        assert!(out.latency.p50 <= out.latency.p95 && out.latency.p95 <= out.latency.p99);
+    }
+
+    #[test]
+    fn from_slots_rejects_missing_records() {
+        let ok = RunOutcome::from_slots(vec![Some(rec(0, 1.0)), Some(rec(1, 2.0))]).unwrap();
+        assert_eq!(ok.records.len(), 2);
+        let err = RunOutcome::from_slots(vec![Some(rec(0, 1.0)), None]);
+        assert!(err.is_err(), "a hole in the record table is an error");
+    }
+}

@@ -20,22 +20,31 @@ pub mod events;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{ExperimentSettings, Meta};
-use crate::fleet::device::{self, CloudRequest, Device, DeviceProfile, Dispatch};
-use crate::metrics::{Summary, TaskRecord};
+use crate::config::{ExperimentSettings, FeedbackMode, Meta};
+use crate::fleet::device::{self, CloudObservation, CloudRequest, Device, DeviceProfile, Dispatch};
+use crate::metrics::TaskRecord;
 use crate::platform::lambda::CloudPlatform;
+use crate::runtime::RunOutcome;
 use crate::workload::{build_workload, Task};
 use events::{Event, EventQueue};
 
-/// Result of one simulation run.
+/// Result of one simulation run. Derefs to the unified
+/// [`RunOutcome`] core (records, summary, latency percentiles).
 pub struct SimOutcome {
-    pub records: Vec<TaskRecord>,
-    pub summary: Summary,
+    pub run: RunOutcome,
     /// virtual time at which the last event fired
     pub sim_end_ms: f64,
     pub settings: ExperimentSettings,
     /// peak edge queue length observed
     pub peak_edge_queue: usize,
+}
+
+impl std::ops::Deref for SimOutcome {
+    type Target = RunOutcome;
+
+    fn deref(&self) -> &RunOutcome {
+        &self.run
+    }
 }
 
 /// Run with an overridden CIL idle-lifetime belief (ablation support).
@@ -68,8 +77,11 @@ pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
         q.schedule(t.arrive_ms, Event::Arrival { id: t.id });
     }
 
+    let feedback = settings.feedback == FeedbackMode::Observe;
     let mut records: Vec<Option<TaskRecord>> = vec![None; tasks.len()];
     let mut in_flight: Vec<Option<CloudRequest>> = vec![None; tasks.len()];
+    // realized outcomes waiting for their response to land (feedback only)
+    let mut pending_obs: Vec<Option<CloudObservation>> = vec![None; tasks.len()];
     let mut sim_end = 0.0f64;
 
     while let Some((now, ev)) = q.pop() {
@@ -92,22 +104,25 @@ pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
                     .ok_or_else(|| anyhow!("task {id} triggered without a pending request"))?;
                 let exec = device::execute_cloud(&req, &mut cloud);
                 q.schedule(exec.stored_at, Event::CloudStored { id });
+                if feedback {
+                    // the realized start kind reaches the device only when
+                    // the response lands (the CloudStored event)
+                    pending_obs[id] = Some(CloudObservation::from_execution(&req, &exec));
+                }
                 records[id] = Some(device::complete_cloud(&req, &exec));
             }
             Event::EdgeCompDone { .. } => dev.edge.drain_one(),
-            Event::CloudStored { .. } | Event::EdgeStored { .. } => {}
+            Event::CloudStored { id } => {
+                if let Some(obs) = pending_obs[id].take() {
+                    dev.observe_cloud(&obs);
+                }
+            }
+            Event::EdgeStored { .. } => {}
         }
     }
 
-    let records: Vec<TaskRecord> = records
-        .into_iter()
-        .enumerate()
-        .map(|(id, r)| r.ok_or_else(|| anyhow!("task {id} never produced a record")))
-        .collect::<Result<_>>()?;
-    let summary = Summary::from_records(&records);
     Ok(SimOutcome {
-        records,
-        summary,
+        run: RunOutcome::from_slots(records)?,
         sim_end_ms: sim_end,
         settings: settings.clone(),
         peak_edge_queue: dev.peak_edge_queue,
@@ -231,4 +246,40 @@ mod tests {
         let s = base_settings("fd", Objective::LatencyMin, &[1234.0]);
         assert!(run(&meta, &s).is_err(), "1234 MB is not one of the 19 configs");
     }
+
+    #[test]
+    fn feedback_run_is_deterministic() {
+        let meta = meta();
+        let s = base_settings("fd", Objective::CostMin, &[1280.0, 1408.0, 1664.0])
+            .with_n_inputs(200)
+            .with_feedback(crate::config::FeedbackMode::Observe);
+        let a = run(&meta, &s).unwrap();
+        let b = run(&meta, &s).unwrap();
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.actual_e2e_ms.to_bits(), y.actual_e2e_ms.to_bits());
+            assert_eq!(x.placement, y.placement);
+            assert_eq!(x.warm_predicted, y.warm_predicted);
+        }
+    }
+
+    #[test]
+    fn feedback_off_matches_default_bitwise() {
+        // FeedbackMode::Off must be byte-for-byte the paper protocol: the
+        // observation plumbing is dead code unless switched on
+        let meta = meta();
+        let s = base_settings("fd", Objective::CostMin, &[1280.0, 1408.0, 1664.0])
+            .with_n_inputs(150);
+        let default_run = run(&meta, &s).unwrap();
+        let explicit_off =
+            run(&meta, &s.clone().with_feedback(crate::config::FeedbackMode::Off)).unwrap();
+        for (x, y) in default_run.records.iter().zip(&explicit_off.records) {
+            assert_eq!(x.actual_e2e_ms.to_bits(), y.actual_e2e_ms.to_bits());
+            assert_eq!(x.predicted_e2e_ms.to_bits(), y.predicted_e2e_ms.to_bits());
+            assert_eq!(x.placement, y.placement);
+            assert_eq!(x.warm_predicted, y.warm_predicted);
+            assert_eq!(x.warm_actual, y.warm_actual);
+        }
+    }
+    // the closed-loop-vs-pure-belief mismatch bound (cold-storm workload)
+    // is pinned in rust/tests/live.rs next to the live parity suite
 }

@@ -80,6 +80,29 @@ fn fleet_run_is_reproducible_across_invocations() {
 }
 
 #[test]
+fn drift_fleet_is_deterministic_and_shard_invariant() {
+    // the per-device rate-drift scenario: arrival streams are generated
+    // per device before sharding, so the fleet must stay bit-identical
+    // across shard counts and across invocations
+    let meta = meta();
+    let fs = FleetSettings::new(10)
+        .with_seed(77)
+        .with_duration_ms(10_000.0)
+        .with_epoch_ms(2_500.0)
+        .with_scenario(FleetScenario::Drift { sigma: 0.6 });
+    let base = fleet::run(&meta, &fs.clone().with_shards(1)).unwrap();
+    assert!(base.summary.n_tasks > 50, "drift fleet should generate real load");
+    for shards in [2usize, 4] {
+        let other = fleet::run(&meta, &fs.clone().with_shards(shards)).unwrap();
+        assert_eq!(base.summary.fingerprint, other.summary.fingerprint,
+                   "{shards} shards diverged on the drift scenario");
+        assert_eq!(base.sim_end_ms, other.sim_end_ms);
+    }
+    let again = fleet::run(&meta, &fs.clone().with_shards(3)).unwrap();
+    assert_eq!(base.summary.fingerprint, again.summary.fingerprint, "not reproducible");
+}
+
+#[test]
 fn shared_pools_see_cross_device_concurrency() {
     // 8 FD devices under latency-min push most tasks to the cloud; with
     // arrivals overlapping fleet-wide, some pool must hold several live
