@@ -3,7 +3,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts verify
+.PHONY: artifacts test-python clean-artifacts verify soak
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
@@ -11,9 +11,17 @@ artifacts:
 # Tier-1 verification: release build + the full test suite, which already
 # includes the cross-path invariant suites under rust/tests/ (fleet shard
 # determinism, region topology, one-scoring-core pins, live parity +
-# closed-loop feedback). Assumes `make artifacts` has run.
+# closed-loop feedback, region resilience + property suites). Assumes
+# `make artifacts` has run.
 verify:
 	cd rust && cargo build --release && cargo test -q
+
+# Long-soak nondeterminism smoke: the 10-epoch outage storm (caps + rate
+# limits + queueing + failover + region blackouts + correlated device
+# outages) replayed across shard counts and epoch lengths. #[ignore]d by
+# default; this target opts in.
+soak:
+	cd rust && cargo test --release --test resilience -- --ignored --nocapture
 
 test-python:
 	cd python && python3 -m pytest -q tests

@@ -26,12 +26,13 @@ fn main() -> anyhow::Result<()> {
         let o = fleet::run(&meta, &fs)?;
         let s = &o.summary;
         let cloud = s.cloud_count.max(1) as f64;
+        let lat = s.latency.expect("sweep runs serve tasks");
         println!(
             "{:>8} {:>8} {:>8.3} {:>9.3} {:>9.2} {:>8.1} {:>9.2} {:>9}",
             devices,
             s.n_tasks,
-            s.latency.p50 / 1e3,
-            s.latency.p95 / 1e3,
+            lat.p50 / 1e3,
+            lat.p95 / 1e3,
             s.deadline_violation_pct,
             s.cloud_actual_warm as f64 / cloud * 100.0,
             s.warm_cold_mismatches as f64 / cloud * 100.0,
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             "{:<32} {:>7} tasks  p95 {:>7.3} s  viol {:>6.2}%  pool max {:>4}  fp {:016x}",
             sc.label(),
             s.n_tasks,
-            s.latency.p95 / 1e3,
+            s.latency.expect("sweep runs serve tasks").p95 / 1e3,
             s.deadline_violation_pct,
             s.max_pool_high_water,
             s.fingerprint,
@@ -87,7 +88,7 @@ fn main() -> anyhow::Result<()> {
         println!(
             "{:<20} p95 {:>7.3} s  warm {:>5.1}%  mispredicted {:>5.1}%  hub updates {:>6}",
             label,
-            s.latency.p95 / 1e3,
+            s.latency.expect("sweep runs serve tasks").p95 / 1e3,
             s.cloud_actual_warm as f64 / cloud * 100.0,
             s.warm_cold_mismatches as f64 / cloud * 100.0,
             o.hub_updates.iter().sum::<u64>(),

@@ -1,6 +1,7 @@
 //! Region subsystem throughput: tasks/s through the routed
-//! predict→decide→merge pipeline as the topology grows, and the cost of
-//! hub-CIL snapshot broadcast vs private CILs.
+//! predict→decide→merge pipeline as the topology grows, the cost of
+//! hub-CIL snapshot broadcast vs private CILs, and the admission →
+//! failover re-route path on a saturated topology.
 //!
 //! Workload generation is excluded from the timed region (a one-time setup
 //! cost in real sweeps too). Writes the measured baseline to
@@ -25,6 +26,16 @@ fn main() -> anyhow::Result<()> {
         DURATION_MS / 1e3
     ));
 
+    // saturated variant: the closest (most attractive) region capped hard,
+    // so a large share of placements take the admission → re-route path —
+    // the failover hot loop this bench exists to watch
+    let saturated = {
+        let mut topo = TopologySpec::parse("triad")?
+            .with_cil_mode(CilMode::Private)
+            .with_failover(true);
+        topo.regions[0].max_concurrent = Some(16);
+        topo
+    };
     let variants: Vec<(&str, Option<TopologySpec>)> = vec![
         ("1 region / private", None),
         (
@@ -35,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             "3 regions / hub",
             Some(TopologySpec::parse("triad")?.with_cil_mode(CilMode::Hub)),
         ),
+        ("3 regions / cap+failover", Some(saturated)),
     ];
 
     let mut rows = Vec::new();

@@ -32,6 +32,11 @@ pub enum FleetScenario {
     /// linearly from base to base·multiplier over the run (long-horizon
     /// usage shifts — some devices heat up while others cool down)
     Drift { sigma: f64 },
+    /// correlated device outages: every `period_ms` a seeded draw darkens
+    /// a `frac` fraction of the fleet for `down_ms` (synchronized window
+    /// boundaries — edge sites fail together — with per-window membership),
+    /// after which the affected devices recover
+    Outage { period_ms: f64, down_ms: f64, frac: f64 },
 }
 
 impl FleetScenario {
@@ -55,9 +60,14 @@ impl FleetScenario {
                 peak_mult: 4.0,
             }),
             "drift" | "rate-drift" => Ok(FleetScenario::Drift { sigma: 0.4 }),
+            "outage" | "outages" => Ok(FleetScenario::Outage {
+                period_ms: 10_000.0,
+                down_ms: 5_000.0,
+                frac: 0.5,
+            }),
             _ => bail!(
                 "unknown scenario `{s}` (poisson | diurnal | diurnal-tz | burst | churn | \
-                 flash | drift)"
+                 flash | drift | outage)"
             ),
         }
     }
@@ -89,6 +99,13 @@ impl FleetScenario {
                 )
             }
             FleetScenario::Drift { sigma } => format!("drift(sigma {sigma})"),
+            FleetScenario::Outage { period_ms, down_ms, frac } => {
+                format!(
+                    "outage({frac} of fleet dark {:.0}s every {:.0}s)",
+                    down_ms / 1000.0,
+                    period_ms / 1000.0
+                )
+            }
         }
     }
 }
@@ -258,6 +275,11 @@ mod tests {
             FleetScenario::parse("drift").unwrap(),
             FleetScenario::Drift { .. }
         ));
+        assert!(matches!(
+            FleetScenario::parse("outage").unwrap(),
+            FleetScenario::Outage { .. }
+        ));
+        assert!(FleetScenario::parse("outage").unwrap().label().contains("dark"));
         assert!(FleetScenario::parse("drift").unwrap().label().contains("drift"));
         assert!(FleetScenario::parse("nope").is_err());
         assert!(FleetScenario::Poisson.label().contains("poisson"));

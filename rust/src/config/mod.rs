@@ -11,7 +11,9 @@ mod region;
 mod settings;
 
 pub use fleet::{FleetScenario, FleetSettings};
-pub use region::{CilMode, MobilityEvent, RegionSettings, TopologySpec};
+pub use region::{
+    CilMode, MobilityEvent, OutageWindow, RegionSettings, ThrottlePolicy, TopologySpec,
+};
 pub use settings::{ExperimentSettings, FeedbackMode, Objective, PredictorBackendKind};
 
 use std::collections::BTreeMap;

@@ -37,6 +37,64 @@ impl CilMode {
     }
 }
 
+/// Admission behaviour when a region is over capacity (or dark): drop the
+/// request outright, or let it wait for a slot up to a deadline. Either way
+/// a denied request is eligible for inter-region failover when the topology
+/// enables it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ThrottlePolicy {
+    /// deny immediately — the request is rejected (or failed over) the
+    /// instant the region cannot admit it
+    Reject,
+    /// queue-with-deadline: wait for capacity, but give up (reject or fail
+    /// over) once the accumulated wait would exceed `max_wait_ms`
+    Queue { max_wait_ms: f64 },
+}
+
+impl ThrottlePolicy {
+    /// Parse `reject` | `queue` | `queue:WAIT_S`.
+    pub fn parse(s: &str) -> Result<ThrottlePolicy> {
+        match s {
+            "reject" | "drop" => Ok(ThrottlePolicy::Reject),
+            "queue" => Ok(ThrottlePolicy::Queue { max_wait_ms: 10_000.0 }),
+            _ => {
+                if let Some(w) = s.strip_prefix("queue:") {
+                    let secs: f64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad queue wait `{w}` (seconds)"))?;
+                    if secs < 0.0 {
+                        bail!("queue wait must be non-negative");
+                    }
+                    Ok(ThrottlePolicy::Queue { max_wait_ms: secs * 1000.0 })
+                } else {
+                    bail!("unknown throttle policy `{s}` (reject | queue[:WAIT_S])")
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ThrottlePolicy::Reject => "reject".to_string(),
+            ThrottlePolicy::Queue { max_wait_ms } => {
+                format!("queue(≤{:.0}s)", max_wait_ms / 1000.0)
+            }
+        }
+    }
+}
+
+/// One scheduled region blackout: the region's pools admit nothing during
+/// `[start_ms, end_ms)` and recover at `end_ms` (containers that were live
+/// before the window are treated as lost — admission denies, the pools are
+/// not consulted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutageWindow {
+    pub region: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+}
+
 /// One cloud region's static profile.
 #[derive(Debug, Clone)]
 pub struct RegionSettings {
@@ -49,6 +107,14 @@ pub struct RegionSettings {
     pub tz_offset_ms: f64,
     /// weight for the initial device-home assignment draw
     pub weight: f64,
+    /// max concurrently executing functions across this region's pools;
+    /// None = unlimited (the paper's assumption). `Some(0)` marks the
+    /// region permanently shut: its candidates are masked out of every
+    /// device's decision set up front.
+    pub max_concurrent: Option<usize>,
+    /// max admitted invocations per 1-second sliding window; None = no
+    /// rate limit
+    pub max_rps: Option<f64>,
 }
 
 impl RegionSettings {
@@ -59,6 +125,8 @@ impl RegionSettings {
             price_mult: 1.0,
             tz_offset_ms: 0.0,
             weight: 1.0,
+            max_concurrent: None,
+            max_rps: None,
         }
     }
 
@@ -74,6 +142,16 @@ impl RegionSettings {
 
     pub fn with_weight(mut self, w: f64) -> Self {
         self.weight = w;
+        self
+    }
+
+    pub fn with_max_concurrent(mut self, cap: usize) -> Self {
+        self.max_concurrent = Some(cap);
+        self
+    }
+
+    pub fn with_max_rps(mut self, rps: f64) -> Self {
+        self.max_rps = Some(rps);
         self
     }
 }
@@ -103,6 +181,14 @@ pub struct TopologySpec {
     pub mobility_fraction: f64,
     /// ... at this virtual time (ms)
     pub mobility_at_ms: f64,
+    /// admission behaviour when a region denies a request (capacity / rate
+    /// limit / outage)
+    pub throttle: ThrottlePolicy,
+    /// inter-region failover: retry a denied placement in the next-best
+    /// surviving region (engine-preference order) instead of dropping it
+    pub failover: bool,
+    /// scheduled region blackouts (correlated-outage scenarios)
+    pub outages: Vec<OutageWindow>,
 }
 
 impl TopologySpec {
@@ -115,6 +201,9 @@ impl TopologySpec {
             moves: Vec::new(),
             mobility_fraction: 0.0,
             mobility_at_ms: 0.0,
+            throttle: ThrottlePolicy::Reject,
+            failover: false,
+            outages: Vec::new(),
         }
     }
 
@@ -144,8 +233,109 @@ impl TopologySpec {
         self
     }
 
+    pub fn with_throttle(mut self, t: ThrottlePolicy) -> Self {
+        self.throttle = t;
+        self
+    }
+
+    pub fn with_failover(mut self, on: bool) -> Self {
+        self.failover = on;
+        self
+    }
+
+    pub fn with_outages(mut self, outages: Vec<OutageWindow>) -> Self {
+        self.outages = outages;
+        self
+    }
+
     pub fn n_regions(&self) -> usize {
         self.regions.len()
+    }
+
+    pub fn region_index(&self, name: &str) -> Option<usize> {
+        self.regions.iter().position(|r| r.name == name)
+    }
+
+    /// Shared skeleton of the per-region limit specs: a bare value applies
+    /// to every region, `name:VALUE[,name:VALUE...]` to named regions.
+    fn apply_per_region<T: Copy + std::str::FromStr>(
+        &mut self,
+        spec: &str,
+        flag: &str,
+        set: impl Fn(&mut RegionSettings, T),
+    ) -> Result<()> {
+        if let Ok(v) = spec.trim().parse::<T>() {
+            for r in &mut self.regions {
+                set(r, v);
+            }
+            return Ok(());
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((name, value)) = part.rsplit_once(':') else {
+                bail!("bad --{flag} entry `{part}` (want VALUE or name:VALUE)");
+            };
+            let v: T = value
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value in --{flag} entry `{part}`"))?;
+            let Some(r) = self.region_index(name.trim()) else {
+                bail!("--{flag} names unknown region `{name}`");
+            };
+            set(&mut self.regions[r], v);
+        }
+        Ok(())
+    }
+
+    /// Apply a `--region-cap` spec: a bare integer caps every region at the
+    /// same max concurrency; `name:N[,name:M...]` caps named regions only.
+    pub fn apply_caps(&mut self, spec: &str) -> Result<()> {
+        self.apply_per_region(spec, "region-cap", |r, cap: usize| {
+            r.max_concurrent = Some(cap);
+        })
+    }
+
+    /// Apply a `--region-rps` spec: bare number for all regions, or
+    /// `name:R[,...]` for named regions.
+    pub fn apply_rps(&mut self, spec: &str) -> Result<()> {
+        self.apply_per_region(spec, "region-rps", |r, rps: f64| r.max_rps = Some(rps))
+    }
+
+    /// Parse a `--outage` spec of region blackout windows:
+    /// `name:START_S-END_S[,name:START_S-END_S...]`.
+    pub fn parse_outages(&mut self, spec: &str) -> Result<()> {
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((name, window)) = part.split_once(':') else {
+                bail!("bad outage `{part}` (want name:START_S-END_S)");
+            };
+            let Some((start, end)) = window.split_once('-') else {
+                bail!("bad outage window in `{part}` (want START_S-END_S)");
+            };
+            let start: f64 = start
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad outage start in `{part}`"))?;
+            let end: f64 = end
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad outage end in `{part}`"))?;
+            let Some(region) = self.region_index(name.trim()) else {
+                bail!("--outage names unknown region `{name}`");
+            };
+            self.outages.push(OutageWindow {
+                region,
+                start_ms: start * 1000.0,
+                end_ms: end * 1000.0,
+            });
+        }
+        Ok(())
     }
 
     /// Validate invariants the runtime relies on.
@@ -167,6 +357,32 @@ impl TopologySpec {
         for m in &self.moves {
             if m.to_region >= self.regions.len() {
                 bail!("mobility event targets unknown region {}", m.to_region);
+            }
+        }
+        if self.regions.iter().all(|r| r.max_concurrent == Some(0)) {
+            bail!("every region has zero capacity — nothing can serve cloud traffic");
+        }
+        for r in &self.regions {
+            if let Some(rps) = r.max_rps {
+                if rps <= 0.0 {
+                    bail!("region `{}`: max_rps must be positive (use max_concurrent 0 \
+                           to shut a region)", r.name);
+                }
+            }
+        }
+        if let ThrottlePolicy::Queue { max_wait_ms } = self.throttle {
+            if max_wait_ms.is_nan() || max_wait_ms < 0.0 {
+                bail!("throttle queue wait must be non-negative");
+            }
+        }
+        for o in &self.outages {
+            if o.region >= self.regions.len() {
+                bail!("outage window targets unknown region {}", o.region);
+            }
+            if o.start_ms.is_nan() || o.start_ms < 0.0 || o.end_ms.is_nan()
+                || o.end_ms <= o.start_ms
+            {
+                bail!("outage window [{}, {}) is empty or negative", o.start_ms, o.end_ms);
             }
         }
         Ok(())
@@ -281,5 +497,73 @@ mod tests {
         assert_eq!(CilMode::parse("private").unwrap(), CilMode::Private);
         assert!(CilMode::parse("gossip").is_err());
         assert_eq!(CilMode::Hub.label(), "hub");
+    }
+
+    #[test]
+    fn throttle_policy_parse() {
+        assert_eq!(ThrottlePolicy::parse("reject").unwrap(), ThrottlePolicy::Reject);
+        assert_eq!(
+            ThrottlePolicy::parse("queue").unwrap(),
+            ThrottlePolicy::Queue { max_wait_ms: 10_000.0 }
+        );
+        assert_eq!(
+            ThrottlePolicy::parse("queue:2.5").unwrap(),
+            ThrottlePolicy::Queue { max_wait_ms: 2_500.0 }
+        );
+        assert!(ThrottlePolicy::parse("queue:-1").is_err());
+        assert!(ThrottlePolicy::parse("spill").is_err());
+        assert!(ThrottlePolicy::parse("queue:2.5").unwrap().label().contains("2"));
+    }
+
+    #[test]
+    fn region_caps_apply_uniform_and_named() {
+        let mut t = TopologySpec::parse("duo").unwrap();
+        t.apply_caps("40").unwrap();
+        assert!(t.regions.iter().all(|r| r.max_concurrent == Some(40)));
+        t.apply_caps("eu-west:3").unwrap();
+        assert_eq!(t.regions[0].max_concurrent, Some(40));
+        assert_eq!(t.regions[1].max_concurrent, Some(3));
+        assert!(t.apply_caps("atlantis:9").is_err());
+        assert!(t.apply_caps("eu-west:many").is_err());
+        t.apply_rps("us-east:12.5").unwrap();
+        assert_eq!(t.regions[0].max_rps, Some(12.5));
+        assert!(t.apply_rps("nowhere:1").is_err());
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn all_regions_shut_rejected() {
+        let mut t = TopologySpec::parse("duo").unwrap();
+        t.apply_caps("0").unwrap();
+        assert!(t.validate().is_err());
+        t.apply_caps("us-east:5").unwrap();
+        assert!(t.validate().is_ok(), "one open region suffices");
+    }
+
+    #[test]
+    fn outage_spec_parses_and_validates() {
+        let mut t = TopologySpec::parse("duo").unwrap();
+        t.parse_outages("eu-west:10-20,us-east:5-7.5").unwrap();
+        assert_eq!(t.outages.len(), 2);
+        assert_eq!(
+            t.outages[0],
+            OutageWindow { region: 1, start_ms: 10_000.0, end_ms: 20_000.0 }
+        );
+        assert_eq!(t.outages[1].end_ms, 7_500.0);
+        assert!(t.validate().is_ok());
+        assert!(t.clone().parse_outages("mars:1-2").is_err());
+        assert!(t.clone().parse_outages("eu-west:9").is_err());
+        let mut bad = TopologySpec::parse("duo").unwrap();
+        bad.outages.push(OutageWindow { region: 0, start_ms: 5.0, end_ms: 5.0 });
+        assert!(bad.validate().is_err(), "empty window");
+    }
+
+    #[test]
+    fn resilience_knobs_default_off() {
+        let t = TopologySpec::parse("triad").unwrap();
+        assert_eq!(t.throttle, ThrottlePolicy::Reject);
+        assert!(!t.failover);
+        assert!(t.outages.is_empty());
+        assert!(t.regions.iter().all(|r| r.max_concurrent.is_none() && r.max_rps.is_none()));
     }
 }

@@ -41,9 +41,9 @@ pub fn table(meta: &Meta) -> Result<String> {
             devices.to_string(),
             s.n_tasks.to_string(),
             render::f(edge_pct, 1),
-            render::f(s.latency.p50 / 1e3, 3),
-            render::f(s.latency.p95 / 1e3, 3),
-            render::f(s.latency.p99 / 1e3, 3),
+            render::f_opt(s.latency.map(|l| l.p50 / 1e3), 3),
+            render::f_opt(s.latency.map(|l| l.p95 / 1e3), 3),
+            render::f_opt(s.latency.map(|l| l.p99 / 1e3), 3),
             render::f(s.deadline_violation_pct, 2),
             format!("{:.6}", s.total_actual_cost),
             render::f(warm_pct, 1),
@@ -51,13 +51,13 @@ pub fn table(meta: &Meta) -> Result<String> {
             s.max_pool_high_water.to_string(),
         ]);
         csv.push_str(&format!(
-            "{},{},{:.2},{:.4},{:.4},{:.4},{:.3},{:.8},{:.2},{:.2},{}\n",
+            "{},{},{:.2},{},{},{},{:.3},{:.8},{:.2},{:.2},{}\n",
             devices,
             s.n_tasks,
             edge_pct,
-            s.latency.p50 / 1e3,
-            s.latency.p95 / 1e3,
-            s.latency.p99 / 1e3,
+            render::f_opt(s.latency.map(|l| l.p50 / 1e3), 4),
+            render::f_opt(s.latency.map(|l| l.p95 / 1e3), 4),
+            render::f_opt(s.latency.map(|l| l.p99 / 1e3), 4),
             s.deadline_violation_pct,
             s.total_actual_cost,
             warm_pct,

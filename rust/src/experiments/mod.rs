@@ -12,6 +12,7 @@ pub mod fleet_scaling;
 pub mod live_table;
 pub mod model_tables;
 pub mod placement_tables;
+pub mod region_failover;
 pub mod region_routing;
 pub mod render;
 pub mod sweeps;
@@ -131,6 +132,7 @@ fn render_experiment(meta: &Meta, id: &str, xla: bool) -> Result<String> {
         "ablations" => ablate::all(meta, xla)?,
         "fleet_scaling" => fleet_scaling::table(meta)?,
         "region_routing" => region_routing::table(meta)?,
+        "region_failover" => region_failover::table(meta)?,
         _ => bail!("unknown experiment id `{id}`"),
     };
     Ok(out)
@@ -140,7 +142,7 @@ fn render_experiment(meta: &Meta, id: &str, xla: bool) -> Result<String> {
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "table2", "fig3", "fig4", "table3", "fig5", "table4", "fig6",
     "table5", "edgeonly", "baselines", "tidl", "configsel", "ablations",
-    "fleet_scaling", "region_routing",
+    "fleet_scaling", "region_routing", "region_failover",
 ];
 
 #[cfg(test)]

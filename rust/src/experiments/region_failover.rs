@@ -1,0 +1,140 @@
+//! Region resilience: what capacity limits do to a saturated topology, and
+//! how much throttling policy + inter-region failover recover.
+//!
+//! One 80-device fleet, flash-crowd load, two regions: a close, cheap `hot`
+//! region that attracts nearly all home assignments, and a farther `cold`
+//! region with idle capacity. Four runs over the same workload:
+//!
+//!  * **no cap** — the paper's always-admitted assumption (baseline);
+//!  * **cap / reject** — `hot` bounded to a small concurrency, excess
+//!    dropped (LaSS-style admission control without reallocation);
+//!  * **cap / queue** — excess waits for a slot up to a deadline
+//!    (queue-with-deadline throttling);
+//!  * **cap / failover** — excess re-routes to `cold` via the Eqn.-1-ranked
+//!    alternate list (admission control *with* reallocation).
+//!
+//! The headline columns: `rejected` (lost work), `p99 s` over served tasks,
+//! and `hops` (re-routed placements). Reject-only keeps the served tail
+//! clean but loses tasks; queueing serves everything at the cost of a long
+//! tail; failover serves everything while keeping the tail close to the
+//! uncapped baseline — the LaSS observation, reproduced at fleet scale.
+
+use anyhow::Result;
+
+use crate::config::{
+    FleetScenario, FleetSettings, Meta, RegionSettings, ThrottlePolicy, TopologySpec,
+};
+use crate::fleet::{self, FleetOutcome};
+
+use super::render;
+
+const DEVICES: usize = 80;
+const DURATION_MS: f64 = 20_000.0;
+const HOT_CAP: usize = 12;
+
+fn saturated_topology() -> TopologySpec {
+    TopologySpec::new(vec![
+        RegionSettings::new("hot", 6.0).with_weight(0.95),
+        RegionSettings::new("cold", 45.0).with_weight(0.05).with_price_mult(1.08),
+    ])
+    .with_cross_penalty_ms(20.0)
+}
+
+fn fleet_settings(topology: TopologySpec) -> FleetSettings {
+    FleetSettings::new(DEVICES)
+        .with_seed(2020)
+        .with_duration_ms(DURATION_MS)
+        .with_scenario(FleetScenario::FlashCrowd {
+            at_ms: 5_000.0,
+            ramp_ms: 4_000.0,
+            peak_mult: 3.0,
+        })
+        .with_topology(topology)
+}
+
+struct Row {
+    label: &'static str,
+    outcome: FleetOutcome,
+}
+
+pub fn table(meta: &Meta) -> Result<String> {
+    let capped = |throttle: ThrottlePolicy, failover: bool| {
+        let mut topo = saturated_topology().with_throttle(throttle).with_failover(failover);
+        topo.regions[0].max_concurrent = Some(HOT_CAP);
+        topo
+    };
+    let rows = vec![
+        Row {
+            label: "no cap",
+            outcome: fleet::run(meta, &fleet_settings(saturated_topology()))?,
+        },
+        Row {
+            label: "cap / reject",
+            outcome: fleet::run(meta, &fleet_settings(capped(ThrottlePolicy::Reject, false)))?,
+        },
+        Row {
+            label: "cap / queue",
+            outcome: fleet::run(
+                meta,
+                &fleet_settings(capped(ThrottlePolicy::Queue { max_wait_ms: 15_000.0 }, false)),
+            )?,
+        },
+        Row {
+            label: "cap / failover",
+            outcome: fleet::run(meta, &fleet_settings(capped(ThrottlePolicy::Reject, true)))?,
+        },
+    ];
+
+    let mut out = String::from(
+        "## Region failover — capacity limits, throttling, and inter-region \
+         reallocation on a saturated topology (80 devices, flash-crowd load, \
+         hot region capped, seed 2020)\n\n",
+    );
+    let mut t = render::Table::new(&[
+        "policy", "tasks", "served", "rejected", "hops", "queued", "p50 s", "p99 s",
+        "viol %", "total $", "hot pool", "cold pool",
+    ]);
+    let mut csv = String::from(
+        "policy,tasks,served,rejected,hops,queued,p50_s,p99_s,viol_pct,total_cost,\
+         hot_pool,cold_pool\n",
+    );
+    for row in &rows {
+        let s = &row.outcome.summary;
+        let served = s.n_tasks - s.rejected_count;
+        let queued: u64 = row.outcome.region_queued.iter().sum();
+        t.row(vec![
+            row.label.to_string(),
+            s.n_tasks.to_string(),
+            served.to_string(),
+            s.rejected_count.to_string(),
+            s.failover_hops_total.to_string(),
+            queued.to_string(),
+            render::f_opt(s.latency.map(|l| l.p50 / 1e3), 3),
+            render::f_opt(s.latency.map(|l| l.p99 / 1e3), 3),
+            render::f(s.deadline_violation_pct, 2),
+            format!("{:.6}", s.total_actual_cost),
+            s.regions[0].max_pool_high_water.to_string(),
+            s.regions[1].max_pool_high_water.to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{:.3},{:.8},{},{}\n",
+            row.label,
+            s.n_tasks,
+            served,
+            s.rejected_count,
+            s.failover_hops_total,
+            queued,
+            render::f_opt(s.latency.map(|l| l.p50 / 1e3), 4),
+            render::f_opt(s.latency.map(|l| l.p99 / 1e3), 4),
+            s.deadline_violation_pct,
+            s.total_actual_cost,
+            s.regions[0].max_pool_high_water,
+            s.regions[1].max_pool_high_water,
+        ));
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    super::write_result("region_failover.csv", &csv)?;
+    Ok(out)
+}

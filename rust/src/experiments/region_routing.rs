@@ -87,8 +87,8 @@ pub fn table(meta: &Meta) -> Result<String> {
             row.label.to_string(),
             s.n_tasks.to_string(),
             render::f(cloud_pct, 1),
-            render::f(s.latency.p50 / 1e3, 3),
-            render::f(s.latency.p95 / 1e3, 3),
+            render::f_opt(s.latency.map(|l| l.p50 / 1e3), 3),
+            render::f_opt(s.latency.map(|l| l.p95 / 1e3), 3),
             render::f(s.deadline_violation_pct, 2),
             format!("{:.6}", s.total_actual_cost),
             render::f(warm_pct, 1),
@@ -97,12 +97,12 @@ pub fn table(meta: &Meta) -> Result<String> {
             hub_updates.to_string(),
         ]);
         csv.push_str(&format!(
-            "{},{},{:.2},{:.4},{:.4},{:.3},{:.8},{:.2},{:.2},{},{}\n",
+            "{},{},{:.2},{},{},{:.3},{:.8},{:.2},{:.2},{},{}\n",
             row.label,
             s.n_tasks,
             cloud_pct,
-            s.latency.p50 / 1e3,
-            s.latency.p95 / 1e3,
+            render::f_opt(s.latency.map(|l| l.p50 / 1e3), 4),
+            render::f_opt(s.latency.map(|l| l.p95 / 1e3), 4),
             s.deadline_violation_pct,
             s.total_actual_cost,
             warm_pct,

@@ -57,6 +57,15 @@ pub fn f(x: f64, digits: usize) -> String {
     format!("{x:.digits$}")
 }
 
+/// Format an optional value (`None` → "n/a": e.g. the latency tail of a
+/// run that served nothing).
+pub fn f_opt(x: Option<f64>, digits: usize) -> String {
+    match x {
+        Some(x) => f(x, digits),
+        None => "n/a".to_string(),
+    }
+}
+
 pub fn money(x: f64) -> String {
     format!("{x:.8}")
 }

@@ -85,6 +85,27 @@ pub struct EdgeOutcome {
     pub stored_ms: f64,
 }
 
+/// One engine-ranked fallback candidate for inter-region failover: the best
+/// surviving (region, config) pair in a region other than the chosen one,
+/// captured at decision time so the coordinator can re-route a denied
+/// request without any device state.
+#[derive(Debug, Clone, Copy)]
+pub struct FailoverAlt {
+    pub region: usize,
+    /// configuration index within the region
+    pub j: usize,
+    /// flattened (region, config) index
+    pub flat: usize,
+    /// the device's one-way routing latency to this region at decision time
+    pub routing_ms: f64,
+    pub price_mult: f64,
+    /// the task's actual compute duration under this config
+    pub comp_ms: f64,
+    pub mem_mb: f64,
+    /// what the working CIL predicted for this candidate
+    pub warm_predicted: bool,
+}
+
 /// A cloud placement waiting to be applied to the chosen region's shared
 /// container pools.
 ///
@@ -133,6 +154,9 @@ pub struct CloudRequest {
     /// hub-CIL tag stamped when the coordinator absorbed this request's
     /// belief (hub mode only; 0 until absorbed)
     pub hub_tag: u64,
+    /// engine-preference-ordered fallback candidates, one per other region
+    /// (empty unless the topology enables failover)
+    pub alternates: Vec<FailoverAlt>,
     fields: DecisionFields,
 }
 
@@ -154,6 +178,10 @@ pub struct CloudObservation {
     pub busy_ms: f64,
     /// realized start kind
     pub warm: bool,
+    /// admission denied: the tagged belief describes a container that
+    /// never started — drop it instead of correcting it (the remaining
+    /// realized-outcome fields are meaningless and zero)
+    pub retract: bool,
 }
 
 impl CloudObservation {
@@ -167,6 +195,42 @@ impl CloudObservation {
             trigger_ms: exec.triggered_at,
             busy_ms: exec.start_ms + req.comp_ms,
             warm: exec.kind == StartKind::Warm,
+            retract: false,
+        }
+    }
+
+    /// Capture the realized outcome of a request applied under a serve
+    /// plan: the observation targets the **serving** region/config. After
+    /// a failover hop the original belief tag belongs to the rejecting
+    /// region's CIL, so the observation carries tag 0 (evidence of a
+    /// container, not a correction of a tracked belief).
+    pub fn from_serve(req: &CloudRequest, serve: &CloudServe, exec: &CloudExecution) -> Self {
+        CloudObservation {
+            device_id: req.device_id,
+            region: serve.region,
+            j: serve.j,
+            tag: if serve.hops == 0 { req.belief_tag } else { 0 },
+            trigger_ms: exec.triggered_at,
+            busy_ms: exec.start_ms + serve.comp_ms,
+            warm: exec.kind == StartKind::Warm,
+            retract: false,
+        }
+    }
+
+    /// The request's first-choice region denied it: retract the phantom
+    /// belief `note_placement` recorded there (a container that never
+    /// started must not keep the region warm-attractive under closed-loop
+    /// feedback).
+    pub fn retraction(req: &CloudRequest) -> Self {
+        CloudObservation {
+            device_id: req.device_id,
+            region: req.region,
+            j: req.j,
+            tag: req.belief_tag,
+            trigger_ms: 0.0,
+            busy_ms: 0.0,
+            warm: false,
+            retract: true,
         }
     }
 }
@@ -195,6 +259,8 @@ pub struct Device<'a> {
     /// peak edge FIFO length observed on this device
     pub peak_edge_queue: usize,
     seq: u64,
+    /// attach engine-ranked failover alternates to cloud requests
+    failover: bool,
 }
 
 impl<'a> Device<'a> {
@@ -238,11 +304,17 @@ impl<'a> Device<'a> {
                 })
             })
             .collect::<Result<_>>()?;
-        let flat_idxs = flatten_region_candidates(
+        let mut flat_idxs = flatten_region_candidates(
             &config_idxs,
             router.n_regions(),
             meta.memory_configs_mb.len(),
         );
+        // zero-capacity regions can serve nothing: mask their candidates up
+        // front, so a shut region is observationally identical to a topology
+        // without it (pinned in rust/tests/resilience.rs). TopologySpec
+        // validation guarantees at least one region stays open.
+        let n_configs = meta.memory_configs_mb.len();
+        flat_idxs.retain(|&flat| router.region_open(flat / n_configs));
         let engine = DecisionEngine::new(
             settings.objective,
             flat_idxs,
@@ -252,6 +324,7 @@ impl<'a> Device<'a> {
         )
         .with_risk_factor(settings.risk_factor);
         let gt = GroundTruthSampler::new(meta, &profile.app, profile.gt_seed);
+        let failover = router.failover_enabled();
         Ok(Device {
             profile,
             predictor,
@@ -261,6 +334,7 @@ impl<'a> Device<'a> {
             gt,
             peak_edge_queue: 0,
             seq: 0,
+            failover,
         })
     }
 
@@ -312,6 +386,10 @@ impl<'a> Device<'a> {
                         warm_predicted: None,
                         warm_actual: None,
                         edge_wait_ms: wait,
+                        rejected: false,
+                        failover_hops: 0,
+                        failover_routing_ms: 0.0,
+                        throttle_wait_ms: 0.0,
                     },
                     comp_end_ms: comp_end,
                     stored_ms: stored,
@@ -327,6 +405,11 @@ impl<'a> Device<'a> {
                 // note_placement above just updated this region's working
                 // CIL; its tag is the feedback correlation handle
                 let belief_tag = self.router.last_update_tag(region);
+                let alternates = if self.failover {
+                    self.build_alternates(&pred, a, region, decision.allowed_cost)
+                } else {
+                    Vec::new()
+                };
                 Ok(Dispatch::Cloud(CloudRequest {
                     device_id: self.profile.id,
                     seq,
@@ -350,20 +433,167 @@ impl<'a> Device<'a> {
                     pred_busy_ms: cp.start_ms + cp.comp_ms,
                     belief_tag,
                     hub_tag: 0,
+                    alternates,
                     fields,
                 }))
             }
         }
     }
 
+    /// Engine-ranked fallback candidates for a cloud placement in
+    /// `chosen_region`: per other *open* region, the engine-preferred
+    /// candidate config (constraint-satisfying first, then by the
+    /// objective), regions ordered by the same preference. Captured at
+    /// decision time from the very prediction the engine scored, so the
+    /// coordinator's failover retry re-ranks the same Eqn.-1 candidate list
+    /// without any device state.
+    fn build_alternates(
+        &self,
+        pred: &crate::predictor::Prediction,
+        actuals: &crate::platform::latency::TaskActuals,
+        chosen_region: usize,
+        allowed_cost: f64,
+    ) -> Vec<FailoverAlt> {
+        use crate::config::Objective;
+        // preference key: constraint violations last, then the objective,
+        // then the flat index for a total deterministic order
+        let key = |flat: usize| -> (bool, f64) {
+            let cp = &pred.cloud[flat];
+            match self.engine.objective {
+                Objective::LatencyMin => (cp.cost > allowed_cost, cp.e2e_ms),
+                Objective::CostMin => (cp.e2e_ms > self.engine.deadline_ms, cp.cost),
+            }
+        };
+        let better = |a: usize, b: usize| -> bool {
+            let (ka, kb) = (key(a), key(b));
+            (ka.0, kb.0) == (false, true)
+                || ka.0 == kb.0
+                    && (ka.1.total_cmp(&kb.1) == std::cmp::Ordering::Less
+                        || ka.1 == kb.1 && a < b)
+        };
+        // best candidate per region ≠ chosen (candidate flats already
+        // exclude shut regions)
+        let mut best: Vec<Option<usize>> = vec![None; self.router.n_regions()];
+        for &flat in &self.engine.config_idxs {
+            let (r, _) = self.router.split(flat);
+            if r == chosen_region {
+                continue;
+            }
+            if best[r].is_none_or(|b| better(flat, b)) {
+                best[r] = Some(flat);
+            }
+        }
+        let mut flats: Vec<usize> = best.into_iter().flatten().collect();
+        flats.sort_by(|&x, &y| {
+            if better(x, y) {
+                std::cmp::Ordering::Less
+            } else if better(y, x) {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        });
+        flats
+            .into_iter()
+            .map(|flat| {
+                let (r, j) = self.router.split(flat);
+                FailoverAlt {
+                    region: r,
+                    j,
+                    flat,
+                    routing_ms: self.router.routing_ms(r),
+                    price_mult: self.router.price_mult(r),
+                    comp_ms: actuals.comp[j],
+                    mem_mb: self.predictor.mems[j],
+                    warm_predicted: pred.cloud[flat].warm,
+                }
+            })
+            .collect()
+    }
+
     /// Closed-loop feedback: fold one realized cloud outcome into this
-    /// device's working CIL for the chosen region. The caller gates on
-    /// `FeedbackMode` — with feedback off this is never invoked and the
-    /// belief stays purely prediction-driven (the paper's protocol).
+    /// device's working CIL for the serving region — or, for a
+    /// retraction, drop the denied placement's phantom belief from the
+    /// rejecting region. The caller gates on `FeedbackMode` — with
+    /// feedback off this is never invoked and the belief stays purely
+    /// prediction-driven (the paper's protocol).
     pub fn observe_cloud(&mut self, obs: &CloudObservation) {
         debug_assert_eq!(obs.device_id, self.profile.id);
-        self.router
-            .observe(obs.region, obs.j, obs.tag, obs.trigger_ms, obs.busy_ms, obs.warm);
+        if obs.retract {
+            self.router.retract(obs.region, obs.j, obs.tag);
+        } else {
+            self.router
+                .observe(obs.region, obs.j, obs.tag, obs.trigger_ms, obs.busy_ms, obs.warm);
+        }
+    }
+}
+
+/// Where (and at what penalty) a pending cloud request is actually being
+/// served: the original choice, or — after admission denials — some
+/// engine-ranked alternate region. The coordinator threads one of these
+/// through admission, failover hops, and queue waits; the paper's
+/// always-admitted path is exactly [`CloudServe::origin`] with zero hops
+/// and zero wait.
+#[derive(Debug, Clone, Copy)]
+pub struct CloudServe {
+    pub region: usize,
+    pub j: usize,
+    pub flat: usize,
+    /// one-way routing latency of the serving region
+    pub routing_ms: f64,
+    pub price_mult: f64,
+    pub comp_ms: f64,
+    pub mem_mb: f64,
+    pub warm_predicted: bool,
+    /// failover hops taken so far
+    pub hops: u32,
+    /// extra one-way routing accumulated by those hops (reject notice back
+    /// + re-route out, per hop)
+    pub extra_routing_ms: f64,
+    /// admission queue wait accumulated under `ThrottlePolicy::Queue`
+    pub queue_wait_ms: f64,
+}
+
+impl CloudServe {
+    /// The request's own (first-choice) placement.
+    pub fn origin(req: &CloudRequest) -> CloudServe {
+        CloudServe {
+            region: req.region,
+            j: req.j,
+            flat: req.flat,
+            routing_ms: req.routing_ms,
+            price_mult: req.price_mult,
+            comp_ms: req.comp_ms,
+            mem_mb: req.mem_mb,
+            warm_predicted: req.warm_predicted,
+            hops: 0,
+            extra_routing_ms: 0.0,
+            queue_wait_ms: 0.0,
+        }
+    }
+
+    /// Fail over to `alt`: the denial notice travels back over the current
+    /// region's routing leg and the request re-routes out over the
+    /// alternate's. Returns the new serve plan and the added one-way
+    /// latency (the caller pushes the trigger out by the same amount).
+    pub fn hop(&self, alt: &FailoverAlt) -> (CloudServe, f64) {
+        let added = self.routing_ms + alt.routing_ms;
+        (
+            CloudServe {
+                region: alt.region,
+                j: alt.j,
+                flat: alt.flat,
+                routing_ms: alt.routing_ms,
+                price_mult: alt.price_mult,
+                comp_ms: alt.comp_ms,
+                mem_mb: alt.mem_mb,
+                warm_predicted: alt.warm_predicted,
+                hops: self.hops + 1,
+                extra_routing_ms: self.extra_routing_ms + added,
+                queue_wait_ms: self.queue_wait_ms,
+            },
+            added,
+        )
     }
 }
 
@@ -383,23 +613,86 @@ pub fn execute_cloud(req: &CloudRequest, cloud: &mut CloudPlatform) -> CloudExec
     )
 }
 
-/// Assemble the task record for an applied cloud request. The actual billed
-/// cost comes from the actual compute duration through AWS pricing, scaled
-/// by the chosen region's price multiplier.
+/// Apply a request under a failover/queue serve plan: the function fires
+/// against `serve.region`'s pools at `fire_at_ms` (trigger + hop routing +
+/// queue wait) running `serve`'s config. The default path never comes
+/// through here — [`execute_cloud`] keeps the paper's float math
+/// bit-identical.
+pub fn execute_cloud_serve(
+    req: &CloudRequest,
+    serve: &CloudServe,
+    fire_at_ms: f64,
+    cloud: &mut CloudPlatform,
+) -> CloudExecution {
+    cloud.execute(
+        serve.j,
+        req.arrive_ms,
+        fire_at_ms - req.arrive_ms,
+        serve.comp_ms,
+        req.start_w_ms,
+        req.start_c_ms,
+        req.store_ms,
+        req.tidl_ms,
+    )
+}
+
+/// Assemble the task record for a request applied under `serve`. The actual
+/// billed cost comes from the served config's actual compute duration
+/// through AWS pricing, scaled by the serving region's price multiplier.
+pub fn complete_cloud_serve(
+    req: &CloudRequest,
+    exec: &CloudExecution,
+    serve: &CloudServe,
+) -> TaskRecord {
+    TaskRecord {
+        id: req.task_id,
+        arrive_ms: req.arrive_ms,
+        placement: Placement::Cloud(serve.flat),
+        predicted_e2e_ms: req.fields.predicted_e2e_ms,
+        actual_e2e_ms: exec.stored_at - req.arrive_ms,
+        predicted_cost: req.fields.predicted_cost,
+        actual_cost: aws_pricing().cost(serve.comp_ms, serve.mem_mb) * serve.price_mult,
+        allowed_cost: req.fields.allowed_cost,
+        feasible_found: req.fields.feasible_found,
+        warm_predicted: Some(serve.warm_predicted),
+        warm_actual: Some(exec.kind == StartKind::Warm),
+        edge_wait_ms: 0.0,
+        rejected: false,
+        failover_hops: serve.hops,
+        failover_routing_ms: serve.extra_routing_ms,
+        throttle_wait_ms: serve.queue_wait_ms,
+    }
+}
+
+/// Assemble the task record for an applied cloud request on the paper's
+/// always-admitted path (zero hops, zero wait).
 pub fn complete_cloud(req: &CloudRequest, exec: &CloudExecution) -> TaskRecord {
+    complete_cloud_serve(req, exec, &CloudServe::origin(req))
+}
+
+/// The terminal record of a task denied everywhere it was tried: it never
+/// executed, so latency/cost are zero and the record is flagged `rejected`
+/// (excluded from percentiles, counted in summaries). The placement keeps
+/// the *original* choice — the region the device asked for — so per-region
+/// breakdowns attribute the rejection to the pressured region.
+pub fn rejected_record(req: &CloudRequest, serve: &CloudServe) -> TaskRecord {
     TaskRecord {
         id: req.task_id,
         arrive_ms: req.arrive_ms,
         placement: Placement::Cloud(req.flat),
         predicted_e2e_ms: req.fields.predicted_e2e_ms,
-        actual_e2e_ms: exec.stored_at - req.arrive_ms,
+        actual_e2e_ms: 0.0,
         predicted_cost: req.fields.predicted_cost,
-        actual_cost: aws_pricing().cost(req.comp_ms, req.mem_mb) * req.price_mult,
+        actual_cost: 0.0,
         allowed_cost: req.fields.allowed_cost,
         feasible_found: req.fields.feasible_found,
-        warm_predicted: Some(req.warm_predicted),
-        warm_actual: Some(exec.kind == StartKind::Warm),
+        warm_predicted: None,
+        warm_actual: None,
         edge_wait_ms: 0.0,
+        rejected: true,
+        failover_hops: serve.hops,
+        failover_routing_ms: serve.extra_routing_ms,
+        throttle_wait_ms: serve.queue_wait_ms,
     }
 }
 
@@ -546,5 +839,127 @@ mod tests {
         assert_eq!(p.id, 3);
         assert_eq!(p.compute_mult, 1.0);
         assert_eq!(p.network_mult, 1.0);
+    }
+
+    fn failover_device<'a>(meta: &'a Meta, s: &ExperimentSettings, failover: bool) -> Device<'a> {
+        use crate::config::{CilMode, RegionSettings, ThrottlePolicy};
+        use crate::region::{DeviceRouter, ResolvedTopology};
+        let topo = std::sync::Arc::new(ResolvedTopology {
+            regions: vec![
+                RegionSettings::new("near", 10.0),
+                RegionSettings::new("far", 50.0).with_price_mult(1.2),
+            ],
+            cross_penalty_ms: 40.0,
+            n_configs: meta.memory_configs_mb.len(),
+            throttle: ThrottlePolicy::Reject,
+            failover,
+            ..ResolvedTopology::single(meta.memory_configs_mb.len())
+        });
+        let tidl = meta.tidl_mean_ms;
+        let router =
+            DeviceRouter::new(topo, CilMode::Private, 0, vec![1.0, 1.0], Vec::new(), tidl)
+                .unwrap();
+        Device::build(meta, s, DeviceProfile::uniform(0, &s.app, 7), None, router).unwrap()
+    }
+
+    #[test]
+    fn alternates_only_attached_under_failover() {
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0]);
+        let tasks = build_workload(&meta, "fd", 30, true, s.seed).unwrap();
+        let mut plain = failover_device(&meta, &s, false);
+        let mut with = failover_device(&meta, &s, true);
+        let mut saw_cloud = false;
+        for t in &tasks {
+            let dp = plain.ingest(t, t.arrive_ms).unwrap();
+            let df = with.ingest(t, t.arrive_ms).unwrap();
+            match (dp, df) {
+                (Dispatch::Cloud(a), Dispatch::Cloud(b)) => {
+                    saw_cloud = true;
+                    assert!(a.alternates.is_empty(), "no failover → no alternates");
+                    assert_eq!(b.alternates.len(), 1, "one alternate per other region");
+                    let alt = &b.alternates[0];
+                    assert_ne!(alt.region, b.region, "alternate lives elsewhere");
+                    assert_eq!(alt.flat, alt.region * meta.memory_configs_mb.len() + alt.j);
+                    assert_eq!(alt.comp_ms, t.actuals.comp[alt.j], "actual compute rides along");
+                    assert!(alt.routing_ms > 0.0);
+                    // placement itself must be unaffected by attaching them
+                    assert_eq!(a.flat, b.flat);
+                    assert_eq!(a.trigger_ms, b.trigger_ms);
+                }
+                (Dispatch::Edge(_), Dispatch::Edge(_)) => {}
+                _ => panic!("failover alternates must not change the decision"),
+            }
+        }
+        assert!(saw_cloud, "FD latency-min must use the cloud");
+    }
+
+    #[test]
+    fn serve_roundtrip_conservation() {
+        // a failover/queue serve plan decomposes exactly:
+        // e2e = upld + routing + hop routing + queue wait + start + comp + store
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0]);
+        let tasks = build_workload(&meta, "fd", 30, true, s.seed).unwrap();
+        let mut dev = failover_device(&meta, &s, true);
+        let mut pools = CloudPlatform::new(meta.memory_configs_mb.len());
+        let mut served = 0;
+        for t in &tasks {
+            if let Dispatch::Cloud(req) = dev.ingest(t, t.arrive_ms).unwrap() {
+                let Some(alt) = req.alternates.first() else { continue };
+                let (mut serve, added) = CloudServe::origin(&req).hop(alt);
+                assert_eq!(serve.hops, 1);
+                assert_eq!(serve.extra_routing_ms, added);
+                let wait = 123.0;
+                serve.queue_wait_ms = wait;
+                let fire_at = req.trigger_ms + added + wait;
+                let exec = execute_cloud_serve(&req, &serve, fire_at, &mut pools);
+                let rec = complete_cloud_serve(&req, &exec, &serve);
+                let want = req.upld_ms + req.routing_ms + added + wait + exec.start_ms
+                    + serve.comp_ms + req.store_ms;
+                assert!((rec.actual_e2e_ms - want).abs() < 1e-6, "conservation");
+                // the realized observation targets the SERVING region under
+                // tag 0 (the belief tag belongs to the rejecting region)
+                let obs = CloudObservation::from_serve(&req, &serve, &exec);
+                assert_eq!(obs.region, serve.region);
+                assert_eq!(obs.j, serve.j);
+                assert_eq!(obs.tag, 0, "hopped outcome must not alias the origin belief");
+                assert_eq!(obs.busy_ms, exec.start_ms + serve.comp_ms);
+                let origin_obs = CloudObservation::from_serve(&req, &CloudServe::origin(&req), &exec);
+                assert_eq!(origin_obs.tag, req.belief_tag, "first choice keeps its tag");
+                assert_eq!(rec.failover_hops, 1);
+                assert_eq!(rec.failover_routing_ms, added);
+                assert_eq!(rec.throttle_wait_ms, wait);
+                assert_eq!(rec.placement, Placement::Cloud(serve.flat));
+                assert!(!rec.rejected);
+                served += 1;
+            }
+        }
+        assert!(served > 0);
+    }
+
+    #[test]
+    fn rejected_record_is_inert() {
+        let meta = meta();
+        let s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0]);
+        let tasks = build_workload(&meta, "fd", 20, true, s.seed).unwrap();
+        let mut dev = failover_device(&meta, &s, true);
+        for t in &tasks {
+            if let Dispatch::Cloud(req) = dev.ingest(t, t.arrive_ms).unwrap() {
+                let serve = CloudServe::origin(&req);
+                let rec = rejected_record(&req, &serve);
+                assert!(rec.rejected);
+                assert_eq!(rec.actual_e2e_ms, 0.0);
+                assert_eq!(rec.actual_cost, 0.0);
+                assert_eq!(rec.warm_actual, None);
+                assert_eq!(
+                    rec.placement,
+                    Placement::Cloud(req.flat),
+                    "rejection attributed to the originally chosen region"
+                );
+                return;
+            }
+        }
+        panic!("expected at least one cloud placement");
     }
 }

@@ -19,7 +19,10 @@ pub struct DeviceSummary {
     pub n: usize,
     pub edge_count: usize,
     pub cloud_count: usize,
-    pub latency: LatencyPercentiles,
+    /// throttled-rejected tasks (counted in `n`, excluded everywhere else)
+    pub rejected: usize,
+    /// served-task latency tail; `None` when nothing was served
+    pub latency: Option<LatencyPercentiles>,
     pub deadline_violation_pct: f64,
     pub actual_cost: f64,
 }
@@ -31,17 +34,19 @@ impl DeviceSummary {
         deadline_ms: f64,
         records: &[TaskRecord],
     ) -> DeviceSummary {
-        let e2e: Vec<f64> = records.iter().map(|r| r.actual_e2e_ms).collect();
-        let (viol_pct, _) = crate::metrics::deadline_violations(records, deadline_ms);
+        let served: Vec<&TaskRecord> = records.iter().filter(|r| r.is_served()).collect();
+        let e2e: Vec<f64> = served.iter().map(|r| r.actual_e2e_ms).collect();
+        let violations = served.iter().filter(|r| r.actual_e2e_ms > deadline_ms).count();
         DeviceSummary {
             device,
             app: app.to_string(),
             n: records.len(),
-            edge_count: records.iter().filter(|r| r.is_edge()).count(),
-            cloud_count: records.iter().filter(|r| !r.is_edge()).count(),
+            edge_count: served.iter().filter(|r| r.is_edge()).count(),
+            cloud_count: served.iter().filter(|r| !r.is_edge()).count(),
+            rejected: records.len() - served.len(),
             latency: latency_percentiles(&e2e),
-            deadline_violation_pct: viol_pct,
-            actual_cost: records.iter().map(|r| r.actual_cost).sum(),
+            deadline_violation_pct: violations as f64 / served.len().max(1) as f64 * 100.0,
+            actual_cost: served.iter().map(|r| r.actual_cost).sum(),
         }
     }
 }
@@ -56,6 +61,11 @@ pub struct RegionBreakdown {
     pub warm: usize,
     pub cold: usize,
     pub mismatches: usize,
+    /// tasks that originally chose this region and were denied everywhere
+    /// (admission pressure attribution)
+    pub rejected: usize,
+    /// tasks served here after failing over from another region
+    pub failover_in: usize,
     /// peak live containers in any one of this region's pools
     pub max_pool_high_water: usize,
 }
@@ -67,10 +77,16 @@ pub struct FleetSummary {
     pub n_tasks: usize,
     pub edge_count: usize,
     pub cloud_count: usize,
+    /// throttled-rejected tasks fleet-wide (counted in `n_tasks`, excluded
+    /// from every latency aggregate)
+    pub rejected_count: usize,
+    /// inter-region failover hops fleet-wide
+    pub failover_hops_total: u64,
     pub avg_e2e_ms: f64,
-    pub latency: LatencyPercentiles,
-    /// share of tasks exceeding their *own device's* deadline (%; devices
-    /// run different apps with different δ)
+    /// served-task latency tail; `None` when nothing was served
+    pub latency: Option<LatencyPercentiles>,
+    /// share of **served** tasks exceeding their *own device's* deadline
+    /// (%; devices run different apps with different δ)
     pub deadline_violation_pct: f64,
     pub total_actual_cost: f64,
     pub total_predicted_cost: f64,
@@ -144,15 +160,30 @@ impl FleetSummary {
                 warm: 0,
                 cold: 0,
                 mismatches: 0,
+                rejected: 0,
+                failover_in: 0,
                 max_pool_high_water: 0,
             })
             .collect();
         let mut h = FNV_OFFSET;
         for (recs, &deadline) in records.iter().zip(deadlines) {
             for r in recs {
+                h = fold_record(h, r);
+                if r.rejected {
+                    // never executed: attribute the denial to the region
+                    // the device originally chose, skip every latency /
+                    // warm-pool aggregate
+                    if let Placement::Cloud(flat) = r.placement {
+                        regions[region_of(flat)].rejected += 1;
+                    }
+                    continue;
+                }
                 if let Placement::Cloud(flat) = r.placement {
                     let br = &mut regions[region_of(flat)];
                     br.cloud_count += 1;
+                    if r.failover_hops > 0 {
+                        br.failover_in += 1;
+                    }
                     match r.warm_actual {
                         Some(true) => br.warm += 1,
                         Some(false) => br.cold += 1,
@@ -165,7 +196,6 @@ impl FleetSummary {
                 if r.actual_e2e_ms > deadline {
                     violations += 1;
                 }
-                h = fold_record(h, r);
             }
         }
         // slice the region-major pool marks back into per-region peaks
@@ -184,14 +214,17 @@ impl FleetSummary {
             }
         }
         let s = &run.summary;
+        let served = s.n - s.rejected_count;
         FleetSummary {
             n_devices: records.len(),
             n_tasks: s.n,
             edge_count: s.edge_count,
             cloud_count: s.cloud_count,
+            rejected_count: s.rejected_count,
+            failover_hops_total: s.failover_hops,
             avg_e2e_ms: s.avg_actual_e2e_ms,
             latency: run.latency,
-            deadline_violation_pct: violations as f64 / s.n.max(1) as f64 * 100.0,
+            deadline_violation_pct: violations as f64 / served.max(1) as f64 * 100.0,
             total_actual_cost: s.total_actual_cost,
             total_predicted_cost: s.total_predicted_cost,
             cloud_actual_warm: s.cloud_actual_warm,
@@ -226,7 +259,16 @@ fn fold_record(h: u64, r: &TaskRecord) -> u64 {
     let mut h = mix(h, place);
     h = mix(h, r.actual_e2e_ms.to_bits());
     h = mix(h, r.actual_cost.to_bits());
-    mix(h, warm)
+    h = mix(h, warm);
+    // resilience outcomes are part of the determinism pin (equal
+    // fingerprints ⇒ identical rejection/failover streams), folded only
+    // when present so default-off runs keep their pre-resilience
+    // fingerprints byte for byte
+    if r.rejected || r.failover_hops > 0 {
+        h = mix(h, r.rejected as u64);
+        h = mix(h, r.failover_hops as u64);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -247,13 +289,17 @@ mod tests {
             warm_predicted: warm,
             warm_actual: warm,
             edge_wait_ms: 0.0,
+            rejected: false,
+            failover_hops: 0,
+            failover_routing_ms: 0.0,
+            throttle_wait_ms: 0.0,
         }
     }
 
     #[test]
     fn percentiles_ordered_and_exact_on_known_data() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        let p = latency_percentiles(&xs);
+        let p = latency_percentiles(&xs).unwrap();
         assert!((p.p50 - 50.5).abs() < 1e-9);
         assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
         assert!((p.p99 - 99.01).abs() < 1e-9);
@@ -324,10 +370,67 @@ mod tests {
     }
 
     #[test]
-    fn empty_fleet_is_safe() {
+    fn empty_fleet_is_safe_and_has_no_percentiles() {
         let s = FleetSummary::build(&[], &[], vec![], 0);
         assert_eq!(s.n_tasks, 0);
         assert_eq!(s.deadline_violation_pct, 0.0);
         assert_eq!(s.max_pool_high_water, 0);
+        // regression: an empty record stream must not fabricate an
+        // all-zeros latency tail
+        assert_eq!(s.latency, None);
+        let empty_device = FleetSummary::build(&[Vec::new()], &[1e9], vec![], 0);
+        assert_eq!(empty_device.latency, None);
+    }
+
+    #[test]
+    fn rejected_records_split_out_of_the_breakdown() {
+        // n_configs = 3: flat 1 → region 0, flat 4 → region 1
+        let served = TaskRecord {
+            placement: Placement::Cloud(4),
+            failover_hops: 1,
+            failover_routing_ms: 80.0,
+            ..rec(2_000.0, 1e-6, false, Some(false))
+        };
+        let denied = TaskRecord {
+            placement: Placement::Cloud(1),
+            rejected: true,
+            failover_hops: 1,
+            actual_e2e_ms: 0.0,
+            actual_cost: 0.0,
+            warm_predicted: None,
+            warm_actual: None,
+            ..rec(0.0, 0.0, false, None)
+        };
+        let recs = vec![served, denied];
+        let names = vec!["hot".to_string(), "cold".to_string()];
+        let run = RunOutcome::from_records(recs.clone());
+        let s = FleetSummary::build_with_regions(
+            &run, &[recs], &[1_000.0], vec![0; 6], 0, &names, 3,
+        );
+        assert_eq!(s.n_tasks, 2);
+        assert_eq!(s.rejected_count, 1);
+        assert_eq!(s.failover_hops_total, 2);
+        assert_eq!(s.cloud_count, 1, "the rejected task never executed");
+        assert_eq!(s.regions[0].rejected, 1, "denial attributed to the chosen region");
+        assert_eq!(s.regions[0].cloud_count, 0);
+        assert_eq!(s.regions[1].failover_in, 1, "served after hopping in");
+        assert_eq!(s.regions[1].cloud_count, 1);
+        // rejected task (e2e 0) is out of the percentile stream…
+        assert_eq!(s.latency.unwrap().p50, 2_000.0);
+        // …and out of the deadline denominator (1 violation / 1 served)
+        assert_eq!(s.deadline_violation_pct, 100.0);
+    }
+
+    #[test]
+    fn fingerprint_sees_rejection_and_hops() {
+        let a = vec![rec(1000.0, 1e-6, false, Some(true))];
+        let mut b = a.clone();
+        b[0].failover_hops = 1;
+        let mut c = a.clone();
+        c[0].rejected = true;
+        let fp = |v: &Vec<TaskRecord>| FleetSummary::build(&[v.clone()], &[1e9], vec![], 0)
+            .fingerprint;
+        assert_ne!(fp(&a), fp(&b), "hops are part of the determinism pin");
+        assert_ne!(fp(&a), fp(&c), "rejection is part of the determinism pin");
     }
 }

@@ -38,7 +38,9 @@ use crate::config::{ExperimentSettings, FleetSettings, Meta};
 use crate::metrics::TaskRecord;
 use crate::runtime::RunOutcome;
 
-pub use device::{CloudObservation, CloudRequest, Device, DeviceProfile, Dispatch};
+pub use device::{
+    CloudObservation, CloudRequest, CloudServe, Device, DeviceProfile, Dispatch, FailoverAlt,
+};
 pub use metrics::{DeviceSummary, FleetSummary, LatencyPercentiles, RegionBreakdown};
 pub use scenario::{DeviceInit, DeviceRegionInit};
 
@@ -62,6 +64,16 @@ pub struct FleetOutcome {
     /// per-region realized outcomes folded back into the hub CILs (all
     /// zero unless hub mode runs with `FeedbackMode::Observe`)
     pub hub_observations: Vec<u64>,
+    /// per-region admission-denied beliefs dropped from the hub CILs (all
+    /// zero unless hub mode runs observe-feedback against capacity limits
+    /// or outages)
+    pub hub_retractions: Vec<u64>,
+    /// per-region admission denials (failover retries count once per
+    /// region tried; all zero without capacity limits / outages)
+    pub region_rejections: Vec<u64>,
+    /// per-region admissions that had to queue for a slot
+    /// (`ThrottlePolicy::Queue` only)
+    pub region_queued: Vec<u64>,
     /// virtual time at which the last event fired
     pub sim_end_ms: f64,
 }

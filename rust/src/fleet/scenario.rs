@@ -31,6 +31,8 @@ const ROUTING_STREAM: u64 = 41;
 const MOBILITY_STREAM: u64 = 43;
 /// PCG stream id for the per-device rate-drift multiplier draw.
 const DRIFT_STREAM: u64 = 47;
+/// PCG stream id for per-(device, window) outage-membership draws.
+const OUTAGE_STREAM: u64 = 53;
 /// XOR'd into a device's sub-seed for its actuals sampling stream.
 const ACTUALS_SALT: u64 = 0xACC;
 /// XOR'd into a device's sub-seed for its T_idl stream — the same salt the
@@ -205,6 +207,28 @@ pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64, phase_ms: 
             poisson_times(rate, fs.duration_ms, dseed)
                 .into_iter()
                 .filter(|t| (t + offset) % cycle < on_ms)
+                .collect()
+        }
+        FleetScenario::Outage { period_ms, down_ms, frac } => {
+            // correlated device outages: window boundaries are synchronized
+            // fleet-wide (k·period), membership is a per-(device, window)
+            // draw from the device's own stream — so a random `frac` of the
+            // fleet goes dark *together* each window and recovers after
+            // `down_ms`. Per-device draws keep the stream shard-invariant.
+            let times = poisson_times(rate, fs.duration_ms, dseed);
+            if frac <= 0.0 || down_ms <= 0.0 {
+                return times;
+            }
+            let period = period_ms.max(1.0);
+            let n_windows = (fs.duration_ms / period).ceil() as usize + 1;
+            let mut rng = Pcg32::new(dseed, OUTAGE_STREAM);
+            let dark: Vec<bool> = (0..n_windows).map(|_| rng.uniform() < frac).collect();
+            times
+                .into_iter()
+                .filter(|t| {
+                    let k = (t / period) as usize;
+                    !(dark.get(k).copied().unwrap_or(false) && t - k as f64 * period < down_ms)
+                })
                 .collect()
         }
     }
@@ -627,6 +651,61 @@ mod tests {
             arrival_times(&drift, 4.0, 11, 0.0),
             arrival_times(&poisson, 4.0, 11, 0.0)
         );
+    }
+
+    #[test]
+    fn outage_scenario_darkens_windows_and_recovers() {
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Outage {
+                period_ms: 10_000.0,
+                down_ms: 5_000.0,
+                frac: 1.0, // every window dark for its first half
+            })
+            .with_duration_ms(60_000.0);
+        let times = arrival_times(&fs, 4.0, 11, 0.0);
+        assert!(!times.is_empty(), "devices recover between windows");
+        for &t in &times {
+            assert!(t % 10_000.0 >= 5_000.0, "arrival {t} inside a dark half-window");
+        }
+        // determinism
+        assert_eq!(times, arrival_times(&fs, 4.0, 11, 0.0));
+        // frac 0 degenerates to the plain Poisson stream
+        let quiet = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Outage {
+                period_ms: 10_000.0,
+                down_ms: 5_000.0,
+                frac: 0.0,
+            })
+            .with_duration_ms(60_000.0);
+        let poisson = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Poisson)
+            .with_duration_ms(60_000.0);
+        assert_eq!(arrival_times(&quiet, 4.0, 11, 0.0), arrival_times(&poisson, 4.0, 11, 0.0));
+    }
+
+    #[test]
+    fn outage_membership_is_correlated_but_not_universal() {
+        // at frac 0.5 some devices are dark in window 0 and others are not:
+        // the outage is a correlated *group*, not a global blackout
+        let fs = FleetSettings::new(1)
+            .with_scenario(FleetScenario::Outage {
+                period_ms: 30_000.0,
+                down_ms: 30_000.0,
+                frac: 0.5,
+            })
+            .with_duration_ms(30_000.0);
+        let mut dark_devices = 0;
+        let mut lit_devices = 0;
+        for dseed in 0..40u64 {
+            let n = arrival_times(&fs, 4.0, dseed, 0.0).len();
+            if n == 0 {
+                dark_devices += 1;
+            } else {
+                lit_devices += 1;
+            }
+        }
+        assert!(dark_devices >= 8, "about half the devices should be dark");
+        assert!(lit_devices >= 8, "about half the devices should stay up");
     }
 
     #[test]

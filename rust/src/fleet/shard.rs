@@ -18,6 +18,15 @@
 //! never enters the math. This argument is per-region, so it extends to
 //! any region count unchanged.
 //!
+//! Region resilience rides the same order: each request passes its
+//! region's [`AdmissionControl`](crate::platform::admission) gate before
+//! the pools, and a denied request either queues (its admission attempt
+//! moves forward in time and re-enters the canonical order), fails over
+//! along its engine-ranked alternates, or ends as a `rejected` record —
+//! all coordinator-side, so rejection and failover streams are exactly as
+//! deterministic as the merge itself (pinned in
+//! `rust/tests/resilience.rs`).
+//!
 //! ## Hub-CIL epochs
 //!
 //! In hub mode the coordinator additionally absorbs every new request's
@@ -47,7 +56,9 @@ use crate::region::{DeviceRouter, RegionTopology, ResolvedTopology};
 use crate::runtime::{RunOutcome, XlaEngine};
 use crate::sim::events::{Event, EventQueue};
 
-use super::device::{self, CloudObservation, CloudRequest, Device, Dispatch};
+use crate::platform::admission::Admission;
+
+use super::device::{self, CloudObservation, CloudRequest, CloudServe, Device, Dispatch};
 use super::metrics::{DeviceSummary, FleetSummary};
 use super::scenario::DeviceInit;
 use super::FleetOutcome;
@@ -400,19 +411,90 @@ fn absorb_into_hubs(fresh: &mut [CloudRequest], topo: &mut RegionTopology) {
     }
 }
 
-/// Apply every pending request triggering before `horizon` to its region's
-/// shared pools, in canonical order. Later requests stay pending. With
-/// feedback on, each applied request's realized outcome is
+/// One cloud request threaded through admission: the serve plan (original
+/// choice, or an alternate after failover hops), the time of its current
+/// admission attempt, and how many alternates were already consumed.
+/// Fresh requests start at their own trigger with the origin plan, so the
+/// no-capacity default path degenerates to the plain request stream.
+struct PendingServe {
+    req: CloudRequest,
+    serve: CloudServe,
+    /// time of the current admission attempt (trigger + hop routing, and
+    /// pushed forward while queueing for a slot)
+    attempt_ms: f64,
+    /// attempt time before any queueing in the current region (wait budget
+    /// baseline)
+    base_ms: f64,
+    /// alternates consumed so far
+    alt_idx: usize,
+}
+
+impl PendingServe {
+    fn new(req: CloudRequest) -> PendingServe {
+        let serve = CloudServe::origin(&req);
+        let attempt_ms = req.trigger_ms;
+        PendingServe { req, serve, attempt_ms, base_ms: attempt_ms, alt_idx: 0 }
+    }
+}
+
+/// Descending canonical order (attempt time, device, seq) — `pop()` from
+/// the end yields the globally next admission attempt, so pool and
+/// admission state only ever move forward in virtual time.
+fn sort_desc(work: &mut [PendingServe]) {
+    work.sort_by(|a, b| {
+        b.attempt_ms
+            .total_cmp(&a.attempt_ms)
+            .then_with(|| b.req.device_id.cmp(&a.req.device_id))
+            .then_with(|| b.req.seq.cmp(&a.req.seq))
+    });
+}
+
+/// Re-insert a pushed-forward item keeping the descending order.
+fn insert_desc(work: &mut Vec<PendingServe>, item: PendingServe) {
+    let key = |p: &PendingServe| (p.attempt_ms, p.req.device_id, p.req.seq);
+    let (at, dev, seq) = key(&item);
+    let pos = work.partition_point(|p| {
+        let (pt, pd, ps) = key(p);
+        pt.total_cmp(&at)
+            .then_with(|| pd.cmp(&dev))
+            .then_with(|| ps.cmp(&seq))
+            .is_gt()
+    });
+    work.insert(pos, item);
+}
+
+/// Apply every pending request whose admission attempt lands before
+/// `horizon` to its region's shared pools, in canonical order, gated by
+/// per-region admission (capacity / rate / outage windows):
+///
+///  * admitted now → execute against the pools (the always-admitted path
+///    is byte-for-byte the paper's merge);
+///  * admitted later (`ThrottlePolicy::Queue`) → the attempt moves to the
+///    slot time and re-enters the canonically-ordered worklist, so pool
+///    invocations stay monotone in virtual time and queued requests
+///    compete fairly with later arrivals;
+///  * denied → with failover, hop to the next engine-ranked alternate
+///    region (denial notice travels back, the request re-routes out,
+///    `failover_hops`/`failover_routing_ms` accumulate); otherwise the
+///    task ends as a `rejected` record.
+///
+/// Attempts landing at or past `horizon` stay pending — a later epoch
+/// re-asks admission, which is decision-only and answers identically, so
+/// shard count and epoch length never enter the math.
+///
+/// With feedback on, each applied request's realized outcome is
 ///  * private mode: collected for delivery to the issuing device at the
-///    next barrier (it corrects the device's working CIL);
-///  * hub mode: folded into the region's hub CIL immediately —
+///    next barrier (it corrects the working CIL of the **serving** region —
+///    under tag 0 after failover, since the original belief belongs to the
+///    rejecting region);
+///  * hub mode: folded into the **serving** region's hub CIL immediately —
 ///    observations ride the next epoch snapshot alongside beliefs, so
 ///    devices are NOT sent the observation a second time (the snapshot
 ///    already carries the corrected entry; re-applying it would
 ///    double-count the container).
 #[allow(clippy::too_many_arguments)]
 fn merge_ready(
-    pending: &mut Vec<CloudRequest>,
+    pending: &mut Vec<PendingServe>,
     horizon: f64,
     topo: &mut RegionTopology,
     records: &mut [Vec<Option<TaskRecord>>],
@@ -421,32 +503,89 @@ fn merge_ready(
     hub_mode: bool,
     obs_out: &mut Vec<CloudObservation>,
 ) {
-    pending.sort_by(|a, b| {
-        a.trigger_ms
-            .total_cmp(&b.trigger_ms)
-            .then_with(|| a.device_id.cmp(&b.device_id))
-            .then_with(|| a.seq.cmp(&b.seq))
-    });
+    sort_desc(pending);
+    let mut work = std::mem::take(pending);
     let mut deferred = Vec::new();
-    for req in pending.drain(..) {
-        if req.trigger_ms >= horizon {
-            deferred.push(req);
+    while let Some(mut item) = work.pop() {
+        if item.attempt_ms >= horizon {
+            deferred.push(item);
             continue;
         }
-        let region = &mut topo.regions[req.region];
-        let exec = device::execute_cloud(&req, &mut region.cloud);
-        region.pool_high_water[req.j] = region.pool_high_water[req.j]
-            .max(region.cloud.pool(req.j).live_count(req.trigger_ms));
-        *sim_end = sim_end.max(exec.stored_at);
-        if feedback {
-            let obs = CloudObservation::from_execution(&req, &exec);
-            if hub_mode {
-                region.hub.observe(req.j, req.hub_tag, obs.trigger_ms, obs.busy_ms, obs.warm);
-            } else {
-                obs_out.push(obs);
+        let region = &mut topo.regions[item.serve.region];
+        let waited = item.attempt_ms - item.base_ms;
+        match region.admission.admit(item.attempt_ms, waited) {
+            Admission::Admit { at_ms } if at_ms > item.attempt_ms => {
+                // queue-with-deadline: move the attempt to the slot time
+                // and re-enter the canonical order (or a later epoch)
+                item.attempt_ms = at_ms;
+                if at_ms >= horizon {
+                    deferred.push(item);
+                } else {
+                    insert_desc(&mut work, item);
+                }
+            }
+            Admission::Admit { at_ms } => {
+                item.serve.queue_wait_ms += waited;
+                let first_choice = item.serve.hops == 0;
+                let exec = if first_choice && item.serve.queue_wait_ms == 0.0 {
+                    // the paper's always-admitted path, bit-identical
+                    device::execute_cloud(&item.req, &mut region.cloud)
+                } else {
+                    device::execute_cloud_serve(&item.req, &item.serve, at_ms, &mut region.cloud)
+                };
+                // per-region queue counters track only the wait spent HERE
+                // (`serve.queue_wait_ms` may carry wait from hopped-away
+                // regions; the record keeps the total)
+                region.admission.commit(at_ms, waited, exec.comp_end);
+                let j = item.serve.j;
+                region.pool_high_water[j] =
+                    region.pool_high_water[j].max(region.cloud.pool(j).live_count(at_ms));
+                *sim_end = sim_end.max(exec.stored_at);
+                if feedback {
+                    let obs = CloudObservation::from_serve(&item.req, &item.serve, &exec);
+                    if hub_mode {
+                        // the SERVING region's hub learns the outcome; a
+                        // failed-over request's belief tag belongs to the
+                        // rejecting region's hub and must not alias here
+                        let hub_tag = if first_choice { item.req.hub_tag } else { 0 };
+                        region.hub.observe(j, hub_tag, obs.trigger_ms, obs.busy_ms, obs.warm);
+                    } else {
+                        obs_out.push(obs);
+                    }
+                }
+                records[item.req.device_id][item.req.task_id] =
+                    Some(device::complete_cloud_serve(&item.req, &exec, &item.serve));
+            }
+            Admission::Reject => {
+                region.admission.reject();
+                // closed loop: the first-choice region denied a placement
+                // whose belief `note_placement` already recorded there —
+                // retract the phantom container so the denied region does
+                // not stay warm-attractive (alternates never stamped a
+                // belief, so this fires at most once per request)
+                if feedback && item.serve.hops == 0 {
+                    if hub_mode {
+                        region.hub.retract(item.req.j, item.req.hub_tag);
+                    } else {
+                        obs_out.push(CloudObservation::retraction(&item.req));
+                    }
+                }
+                if let Some(&alt) = item.req.alternates.get(item.alt_idx) {
+                    item.alt_idx += 1;
+                    // queue time already spent in the denying region stays
+                    // on the record (it is part of the realized e2e)
+                    item.serve.queue_wait_ms += waited;
+                    let (serve, added) = item.serve.hop(&alt);
+                    item.serve = serve;
+                    item.attempt_ms += added;
+                    item.base_ms = item.attempt_ms;
+                    insert_desc(&mut work, item);
+                } else {
+                    records[item.req.device_id][item.req.task_id] =
+                        Some(device::rejected_record(&item.req, &item.serve));
+                }
             }
         }
-        records[req.device_id][req.task_id] = Some(device::complete_cloud(&req, &exec));
     }
     *pending = deferred;
 }
@@ -492,7 +631,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
 
     let feedback = fs.feedback == FeedbackMode::Observe;
     let hub_mode = mode == CilMode::Hub;
-    let mut pending: Vec<CloudRequest> = Vec::new();
+    let mut pending: Vec<PendingServe> = Vec::new();
     let mut sim_end = 0.0f64;
     let mut peak_edge_queue = 0usize;
 
@@ -528,7 +667,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
             if hub_mode {
                 absorb_into_hubs(&mut fresh, &mut topo);
             }
-            pending.extend(fresh);
+            pending.extend(fresh.into_iter().map(PendingServe::new));
             merge_ready(
                 &mut pending, epoch_end, &mut topo, &mut records, &mut sim_end,
                 feedback, hub_mode, &mut carry_obs,
@@ -543,7 +682,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
                         std::mem::take(&mut carry_obs), &mut records,
                         &mut fresh, &mut peak_edge_queue, &mut sim_end,
                     )?;
-                    pending.extend(fresh);
+                    pending.extend(fresh.into_iter().map(PendingServe::new));
                 }
                 merge_ready(
                     &mut pending, f64::INFINITY, &mut topo, &mut records, &mut sim_end,
@@ -588,6 +727,9 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
     );
     let hub_updates = topo.regions.iter().map(|r| r.hub.updates_absorbed).collect();
     let hub_observations = topo.regions.iter().map(|r| r.hub.observations_absorbed).collect();
+    let hub_retractions = topo.regions.iter().map(|r| r.hub.retractions).collect();
+    let region_rejections = topo.regions.iter().map(|r| r.admission.rejected).collect();
+    let region_queued = topo.regions.iter().map(|r| r.admission.queued).collect();
     Ok(FleetOutcome {
         run,
         records: final_records,
@@ -595,6 +737,9 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         summary,
         hub_updates,
         hub_observations,
+        hub_retractions,
+        region_rejections,
+        region_queued,
         sim_end_ms: sim_end,
     })
 }

@@ -9,13 +9,17 @@
 //!           [--n N] [--seed S] [--backend xla|native] [--generate]
 //!           [--feedback off|observe]
 //!   fleet   --devices 1000 [--scenario poisson|diurnal|diurnal-tz|burst|
-//!                           churn|flash|drift]
+//!                           churn|flash|drift|outage]
 //!           [--duration-s 30] [--shards 4] [--apps ir:0.4,fd:0.4,stt:0.2]
 //!           [--objective O] [--seed S] [--rate-mult M] [--epoch-ms E]
-//!           [--drift-sigma S] [--feedback off|observe]
+//!           [--drift-sigma S] [--outage-frac F] [--outage-period-s P]
+//!           [--outage-down-s D] [--feedback off|observe]
 //!           [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
 //!           [--cil private|hub] [--cross-ms 60] [--route-jitter S]
 //!           [--move-frac F] [--move-at-s T]
+//!           [--region-cap N|name:N,...] [--region-rps R|name:R,...]
+//!           [--throttle reject|queue[:WAIT_S]] [--failover]
+//!           [--outage name:START_S-END_S,...]
 //!   live    --app <ir|fd|stt> [--set ...] [--n N] [--scale 0.05]
 //!           [--runs R] [--backend xla|native] [--feedback off|observe]
 //!   report                       # run every experiment in order
@@ -29,7 +33,7 @@ use anyhow::{bail, Result};
 use skedge::cli::Args;
 use skedge::config::{
     default_artifact_dir, CilMode, ExperimentSettings, FeedbackMode, FleetScenario, FleetSettings,
-    Meta, Objective, PredictorBackendKind, TopologySpec,
+    Meta, Objective, PredictorBackendKind, ThrottlePolicy, TopologySpec,
 };
 use skedge::experiments;
 use skedge::fleet;
@@ -97,21 +101,19 @@ fn main() -> Result<()> {
                 };
                 let o = live::run(&meta, &cfg)?;
                 println!("-- live run {} ({:.1}s wall) --", r + 1, o.wall_seconds);
-                println!(
-                    "latency tail   : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s",
-                    o.latency.p50 / 1e3,
-                    o.latency.p95 / 1e3,
-                    o.latency.p99 / 1e3
-                );
-                println!(
-                    "wall tail      : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s \
-                     (measured; mean {:.3} s, pred err {:.2}%)",
-                    o.wall_latency.p50 / 1e3,
-                    o.wall_latency.p95 / 1e3,
-                    o.wall_latency.p99 / 1e3,
-                    o.wall_avg_e2e_ms / 1e3,
-                    o.wall_latency_prediction_error_pct()
-                );
+                println!("latency tail   : {}", fmt_latency(&o.latency));
+                match &o.wall_latency {
+                    Some(w) => println!(
+                        "wall tail      : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s \
+                         (measured; mean {:.3} s, pred err {:.2}%)",
+                        w.p50 / 1e3,
+                        w.p95 / 1e3,
+                        w.p99 / 1e3,
+                        o.wall_avg_e2e_ms / 1e3,
+                        o.wall_latency_prediction_error_pct()
+                    ),
+                    None => println!("wall tail      : n/a (no tasks measured)"),
+                }
                 print_run_summary(&meta, &settings, &o.summary, &o.records);
             }
             Ok(())
@@ -152,6 +154,24 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
         match &mut fs.scenario {
             FleetScenario::Drift { sigma } => *sigma = s,
             _ => bail!("--drift-sigma only applies to the drift scenario"),
+        }
+    }
+    if let Some(f) = args.f64("outage-frac")? {
+        match &mut fs.scenario {
+            FleetScenario::Outage { frac, .. } => *frac = f,
+            _ => bail!("--outage-frac only applies to the outage scenario"),
+        }
+    }
+    if let Some(p) = args.f64("outage-period-s")? {
+        match &mut fs.scenario {
+            FleetScenario::Outage { period_ms, .. } => *period_ms = p * 1000.0,
+            _ => bail!("--outage-period-s only applies to the outage scenario"),
+        }
+    }
+    if let Some(d) = args.f64("outage-down-s")? {
+        match &mut fs.scenario {
+            FleetScenario::Outage { down_ms, .. } => *down_ms = d * 1000.0,
+            _ => bail!("--outage-down-s only applies to the outage scenario"),
         }
     }
     if let Some(d) = args.f64("duration-s")? {
@@ -195,13 +215,34 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
             (None, Some(_)) => bail!("--move-at-s requires --move-frac"),
             (None, None) => {}
         }
+        // region resilience: capacity limits, throttling, failover, outages
+        if let Some(cap) = args.get("region-cap") {
+            topo.apply_caps(cap)?;
+        }
+        if let Some(rps) = args.get("region-rps") {
+            topo.apply_rps(rps)?;
+        }
+        if let Some(t) = args.get("throttle") {
+            topo.throttle = ThrottlePolicy::parse(t)?;
+        }
+        if args.has_switch("failover") {
+            topo.failover = true;
+        }
+        if let Some(windows) = args.get("outage") {
+            topo.parse_outages(windows)?;
+        }
         topo.validate()?;
         fs.topology = Some(topo);
-    } else if ["cil", "cross-ms", "route-jitter", "move-frac", "move-at-s"]
+    } else if ["cil", "cross-ms", "route-jitter", "move-frac", "move-at-s", "region-cap",
+               "region-rps", "throttle", "outage"]
         .iter()
         .any(|k| args.get(k).is_some())
+        || args.has_switch("failover")
     {
-        bail!("--cil/--cross-ms/--route-jitter/--move-frac/--move-at-s require --topology");
+        bail!(
+            "--cil/--cross-ms/--route-jitter/--move-frac/--move-at-s/--region-cap/\
+             --region-rps/--throttle/--failover/--outage require --topology"
+        );
     }
     Ok(fs)
 }
@@ -239,13 +280,26 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
         s.cloud_count,
         o.sim_end_ms / 1e3
     );
-    println!(
-        "latency        : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s  (mean {:.3} s)",
-        s.latency.p50 / 1e3,
-        s.latency.p95 / 1e3,
-        s.latency.p99 / 1e3,
-        s.avg_e2e_ms / 1e3
-    );
+    match &s.latency {
+        Some(l) => println!(
+            "latency        : p50 {:.3} s  p95 {:.3} s  p99 {:.3} s  (mean {:.3} s)",
+            l.p50 / 1e3,
+            l.p95 / 1e3,
+            l.p99 / 1e3,
+            s.avg_e2e_ms / 1e3
+        ),
+        None => println!("latency        : n/a (no tasks served)"),
+    }
+    let queued_total: u64 = o.region_queued.iter().sum();
+    if s.rejected_count > 0 || s.failover_hops_total > 0 || queued_total > 0 {
+        println!(
+            "resilience     : {} rejected ({:.2}%), {} failover hops, {} queued admissions",
+            s.rejected_count,
+            s.rejected_count as f64 / s.n_tasks.max(1) as f64 * 100.0,
+            s.failover_hops_total,
+            queued_total,
+        );
+    }
     println!("deadlines      : {:.2}% violated", s.deadline_violation_pct);
     println!(
         "cost           : ${:.8} actual (${:.8} predicted)",
@@ -262,8 +316,13 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
     if s.regions.len() > 1 {
         for (br, &hub) in s.regions.iter().zip(&o.hub_updates) {
             let cloud = br.cloud_count.max(1) as f64;
+            let resilience = if br.rejected > 0 || br.failover_in > 0 {
+                format!(", {} rejected, {} failed over in", br.rejected, br.failover_in)
+            } else {
+                String::new()
+            };
             println!(
-                "  region {:<10}: {:>6} cloud tasks, {:>5.1}% warm, {:>5.1}% mispredicted, pool max {}, {} hub updates",
+                "  region {:<10}: {:>6} cloud tasks, {:>5.1}% warm, {:>5.1}% mispredicted, pool max {}, {} hub updates{resilience}",
                 br.name,
                 br.cloud_count,
                 br.warm as f64 / cloud * 100.0,
@@ -280,6 +339,18 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
         wall_s
     );
     println!("fingerprint    : {:016x}", s.fingerprint);
+}
+
+fn fmt_latency(l: &Option<skedge::fleet::LatencyPercentiles>) -> String {
+    match l {
+        Some(l) => format!(
+            "p50 {:.3} s  p95 {:.3} s  p99 {:.3} s",
+            l.p50 / 1e3,
+            l.p95 / 1e3,
+            l.p99 / 1e3
+        ),
+        None => "n/a (no tasks served)".to_string(),
+    }
 }
 
 fn settings_from_args(meta: &Meta, args: &Args) -> Result<ExperimentSettings> {
@@ -367,14 +438,27 @@ USAGE:
                  [--backend xla|native] [--generate] [--seed S]
                  [--feedback off|observe]
   skedge fleet   --devices 1000
-                 [--scenario poisson|diurnal|diurnal-tz|burst|churn|flash|drift]
+                 [--scenario poisson|diurnal|diurnal-tz|burst|churn|flash|
+                             drift|outage]
                  [--duration-s 30] [--shards 4] [--epoch-ms 5000]
                  [--apps ir:0.4,fd:0.4,stt:0.2] [--objective latency-min]
                  [--seed S] [--rate-mult M] [--period-s P] [--amplitude A]
-                 [--burst-size N] [--drift-sigma S] [--feedback off|observe]
+                 [--burst-size N] [--drift-sigma S] [--outage-frac F]
+                 [--outage-period-s P] [--outage-down-s D]
+                 [--feedback off|observe]
                  [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
                  [--cil private|hub] [--cross-ms 60] [--route-jitter S]
                  [--move-frac F] [--move-at-s T]
+                 [--region-cap N|name:N,...] [--region-rps R|name:R,...]
+                 [--throttle reject|queue[:WAIT_S]] [--failover]
+                 [--outage name:START_S-END_S,...]
+
+Region resilience: --region-cap / --region-rps bound each region's ground
+truth (concurrent executions / admissions per second); --throttle picks what
+happens past the bound (drop, or queue up to a wait deadline); --failover
+retries a denied placement in the next-best surviving region (Eqn.-1 ranked,
+recorded as failover hops + added routing); --outage blacks out regions for
+scheduled windows; --scenario outage darkens correlated device groups.
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
                  [--backend xla|native] [--feedback off|observe]
 
@@ -384,7 +468,7 @@ reports; fleet: at the next epoch barrier, hubs included in --cil hub).
 
 Experiments: table1 table2 fig3 fig4 table3 fig5 table4 fig6 table5
              edgeonly baselines tidl configsel ablations fleet_scaling
-             region_routing | all
+             region_routing region_failover | all
 
 Artifacts are read from ./artifacts (override: --artifacts DIR or
 $SKEDGE_ARTIFACTS). Run `make artifacts` first.

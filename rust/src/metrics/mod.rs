@@ -23,11 +23,29 @@ pub struct TaskRecord {
     pub warm_actual: Option<bool>,
     /// edge only: time spent waiting in the Executor FIFO
     pub edge_wait_ms: f64,
+    /// admission denied everywhere the task was tried: it never executed.
+    /// Rejected tasks are counted in summaries but excluded from latency
+    /// percentiles and averages (their e2e/cost fields are zero).
+    pub rejected: bool,
+    /// inter-region failover hops taken before the task was served (or
+    /// finally rejected)
+    pub failover_hops: u32,
+    /// extra one-way routing latency accumulated by failover hops (ms);
+    /// part of `actual_e2e_ms` for served tasks
+    pub failover_routing_ms: f64,
+    /// admission queue wait under `ThrottlePolicy::Queue` (ms); part of
+    /// `actual_e2e_ms` for served tasks
+    pub throttle_wait_ms: f64,
 }
 
 impl TaskRecord {
     pub fn is_edge(&self) -> bool {
         self.placement == Placement::Edge
+    }
+
+    /// Executed somewhere (edge or cloud) — i.e. not throttled-rejected.
+    pub fn is_served(&self) -> bool {
+        !self.rejected
     }
 
     pub fn warm_cold_mismatch(&self) -> bool {
@@ -38,7 +56,13 @@ impl TaskRecord {
 /// Aggregated run metrics — one per simulation / live run.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// all records, served and rejected
     pub n: usize,
+    /// throttled-rejected tasks: counted here, excluded from every latency
+    /// / cost aggregate below (the remaining fields describe served tasks)
+    pub rejected_count: usize,
+    /// failover hops summed over all records
+    pub failover_hops: u64,
     pub total_actual_cost: f64,
     pub total_predicted_cost: f64,
     pub avg_actual_e2e_ms: f64,
@@ -53,25 +77,29 @@ pub struct Summary {
 impl Summary {
     pub fn from_records(records: &[TaskRecord]) -> Summary {
         let n = records.len();
+        // all aggregates below run over served records only; with zero
+        // rejections the filter is an order-preserving no-op, which keeps
+        // the no-capacity paths bit-identical to the paper protocol
+        let served = || records.iter().filter(|r| r.is_served());
         Summary {
             n,
-            total_actual_cost: records.iter().map(|r| r.actual_cost).sum(),
-            total_predicted_cost: records.iter().map(|r| r.predicted_cost).sum(),
+            rejected_count: records.iter().filter(|r| r.rejected).count(),
+            failover_hops: records.iter().map(|r| r.failover_hops as u64).sum(),
+            total_actual_cost: served().map(|r| r.actual_cost).sum(),
+            total_predicted_cost: served().map(|r| r.predicted_cost).sum(),
             avg_actual_e2e_ms: stats::mean(
-                &records.iter().map(|r| r.actual_e2e_ms).collect::<Vec<_>>(),
+                &served().map(|r| r.actual_e2e_ms).collect::<Vec<_>>(),
             ),
             avg_predicted_e2e_ms: stats::mean(
-                &records.iter().map(|r| r.predicted_e2e_ms).collect::<Vec<_>>(),
+                &served().map(|r| r.predicted_e2e_ms).collect::<Vec<_>>(),
             ),
-            edge_count: records.iter().filter(|r| r.is_edge()).count(),
-            cloud_count: records.iter().filter(|r| !r.is_edge()).count(),
-            warm_cold_mismatches: records.iter().filter(|r| r.warm_cold_mismatch()).count(),
-            cloud_actual_warm: records
-                .iter()
+            edge_count: served().filter(|r| r.is_edge()).count(),
+            cloud_count: served().filter(|r| !r.is_edge()).count(),
+            warm_cold_mismatches: served().filter(|r| r.warm_cold_mismatch()).count(),
+            cloud_actual_warm: served()
                 .filter(|r| r.warm_actual == Some(true))
                 .count(),
-            cloud_actual_cold: records
-                .iter()
+            cloud_actual_cold: served()
                 .filter(|r| r.warm_actual == Some(false))
                 .count(),
         }
@@ -138,6 +166,10 @@ mod tests {
             warm_predicted: if edge { None } else { Some(true) },
             warm_actual: if edge { None } else { Some(false) },
             edge_wait_ms: 0.0,
+            rejected: false,
+            failover_hops: 0,
+            failover_routing_ms: 0.0,
+            throttle_wait_ms: 0.0,
         }
     }
 
@@ -190,7 +222,30 @@ mod tests {
     fn empty_records_safe() {
         let s = Summary::from_records(&[]);
         assert_eq!(s.n, 0);
+        assert_eq!(s.rejected_count, 0);
         let (pct, avg) = deadline_violations(&[], 100.0);
         assert_eq!((pct, avg), (0.0, 0.0));
+    }
+
+    #[test]
+    fn rejected_tasks_counted_but_excluded_from_aggregates() {
+        let mut rejected = rec(0.0, 0.0, 0.0, 2e-6, false, f64::INFINITY);
+        rejected.rejected = true;
+        rejected.warm_predicted = None;
+        rejected.warm_actual = None;
+        rejected.failover_hops = 2;
+        let served = rec(1000.0, 900.0, 3e-6, 3e-6, false, f64::INFINITY);
+        let s = Summary::from_records(&[rejected, served]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.rejected_count, 1);
+        assert_eq!(s.failover_hops, 2);
+        assert_eq!(s.cloud_count, 1, "rejected tasks never executed anywhere");
+        assert_eq!(s.edge_count, 0);
+        assert!((s.avg_actual_e2e_ms - 1000.0).abs() < 1e-9, "mean over served only");
+        assert!((s.total_actual_cost - 3e-6).abs() < 1e-18);
+        assert!(
+            (s.total_predicted_cost - 3e-6).abs() < 1e-18,
+            "a rejected task's decision-time prediction stays out of the totals"
+        );
     }
 }

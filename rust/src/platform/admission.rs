@@ -1,0 +1,405 @@
+//! Per-region admission control: concurrency caps, rate limits, and outage
+//! windows, applied at the coordinator in canonical request order.
+//!
+//! The paper assumes the chosen Lambda region always admits the request; at
+//! fleet scale that assumption breaks first (LaSS-style overload, correlated
+//! site failures). [`AdmissionControl`] is the ground-truth gate one
+//! [`RegionRuntime`](crate::region::RegionRuntime) applies before its pools
+//! are touched:
+//!
+//!  * `max_concurrent` — at most N functions executing at once across the
+//!    region's pools (AWS account concurrency limit);
+//!  * `max_rps` — at most R admissions per 1-second sliding window
+//!    (API-gateway style throttling);
+//!  * outage windows — scheduled blackouts during which nothing is admitted
+//!    (correlated-outage scenarios), with recovery at the window end.
+//!
+//! [`AdmissionControl::admit`] is *decision-only*: it garbage-collects
+//! expired state but commits nothing, so a caller may defer an admitted
+//! request past an epoch horizon and re-ask later with an identical answer.
+//! The caller commits exactly one of [`commit`](AdmissionControl::commit) /
+//! [`reject`](AdmissionControl::reject) per final outcome, which is what
+//! keeps the admission stream a pure function of the canonically-ordered
+//! request sequence — independent of shard count and epoch length.
+
+use std::collections::VecDeque;
+
+use crate::config::{RegionSettings, ThrottlePolicy};
+
+/// Length of the rate-limit sliding window (ms).
+const RPS_WINDOW_MS: f64 = 1_000.0;
+
+/// The gate's verdict for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Admission {
+    /// admissible at `at_ms` (== the asked trigger when capacity is free
+    /// now; later under `ThrottlePolicy::Queue` when a slot must free up)
+    Admit { at_ms: f64 },
+    /// denied: over capacity / rate / in an outage, and the throttle policy
+    /// does not allow waiting (long enough)
+    Reject,
+}
+
+/// Runtime admission state for one region.
+pub struct AdmissionControl {
+    max_concurrent: Option<usize>,
+    max_rps: Option<f64>,
+    throttle: ThrottlePolicy,
+    /// blackout windows [start, end), sorted by start
+    outages: Vec<(f64, f64)>,
+    /// busy-until times of currently executing functions (capacity only)
+    inflight: Vec<f64>,
+    /// admission times inside the current rate window (rate limit only)
+    window: VecDeque<f64>,
+    /// requests ultimately admitted here
+    pub admitted: u64,
+    /// admission attempts denied here (failover retries count per region)
+    pub rejected: u64,
+    /// admitted requests that had to wait for a slot
+    pub queued: u64,
+    /// total slot wait accumulated by queued admissions (ms)
+    pub queued_wait_ms: f64,
+}
+
+impl AdmissionControl {
+    /// Build the gate for one region from its settings plus the topology's
+    /// throttle policy and this region's outage windows.
+    pub fn new(
+        spec: &RegionSettings,
+        throttle: ThrottlePolicy,
+        mut outages: Vec<(f64, f64)>,
+    ) -> Self {
+        outages.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        AdmissionControl {
+            max_concurrent: spec.max_concurrent,
+            max_rps: spec.max_rps,
+            throttle,
+            outages,
+            inflight: Vec::new(),
+            window: VecDeque::new(),
+            admitted: 0,
+            rejected: 0,
+            queued: 0,
+            queued_wait_ms: 0.0,
+        }
+    }
+
+    /// No limits configured: every request admits at its own trigger and
+    /// the gate never mutates state beyond the admitted counter.
+    pub fn unlimited(&self) -> bool {
+        self.max_concurrent.is_none() && self.max_rps.is_none() && self.outages.is_empty()
+    }
+
+    /// Drop state that is dead at `now_ms` — the time of the *asked*
+    /// trigger, never a look-ahead time. Admission attempts arrive in
+    /// non-decreasing trigger order (the coordinator's canonical merge),
+    /// so anything dead now stays dead for every later ask; collecting at
+    /// any later candidate time would destroy entries that still constrain
+    /// requests between now and then.
+    fn gc(&mut self, now_ms: f64) {
+        if self.max_concurrent.is_some() {
+            self.inflight.retain(|&busy_until| busy_until > now_ms);
+        }
+        if self.max_rps.is_some() {
+            while self.window.front().is_some_and(|&a| a <= now_ms - RPS_WINDOW_MS) {
+                self.window.pop_front();
+            }
+        }
+    }
+
+    /// Earliest time ≥ `t` outside every outage window.
+    fn after_outage(&self, mut t: f64) -> f64 {
+        for &(start, end) in &self.outages {
+            if t >= start && t < end {
+                t = end;
+            }
+        }
+        t
+    }
+
+    /// Earliest time ≥ `t` with a free concurrency slot (non-destructive:
+    /// the fixpoint loop probes future times without touching state).
+    fn after_capacity(&self, t: f64) -> f64 {
+        let Some(cap) = self.max_concurrent else { return t };
+        if cap == 0 {
+            return f64::INFINITY;
+        }
+        let mut live: Vec<f64> =
+            self.inflight.iter().copied().filter(|&busy_until| busy_until > t).collect();
+        if live.len() < cap {
+            return t;
+        }
+        // a slot frees once all but cap−1 of the live executions finish
+        live.sort_by(f64::total_cmp);
+        live[live.len() - cap]
+    }
+
+    /// Earliest time ≥ `t` with room in the rate window (non-destructive).
+    /// Window entries are admission times in non-decreasing commit order.
+    fn after_rps(&self, t: f64) -> f64 {
+        let Some(rps) = self.max_rps else { return t };
+        let rotated = self.window.partition_point(|&a| a <= t - RPS_WINDOW_MS);
+        let in_window = self.window.len() - rotated;
+        if (in_window as f64) + 1.0 <= rps {
+            t
+        } else {
+            // room opens when the oldest in-window admission rotates out
+            self.window[rotated] + RPS_WINDOW_MS
+        }
+    }
+
+    /// Decide one request asking to fire at `trigger_ms`, having already
+    /// waited `waited_ms` in this region's queue (queue-with-deadline
+    /// budget). Commits nothing beyond idempotent garbage collection —
+    /// call [`commit`](Self::commit) once the request actually executes,
+    /// or [`reject`](Self::reject) when the denial is final for this
+    /// region.
+    pub fn admit(&mut self, trigger_ms: f64, waited_ms: f64) -> Admission {
+        if self.unlimited() {
+            return Admission::Admit { at_ms: trigger_ms };
+        }
+        self.gc(trigger_ms);
+        let mut t = trigger_ms;
+        loop {
+            let t0 = t;
+            t = self.after_outage(t);
+            t = self.after_capacity(t);
+            t = self.after_rps(t);
+            if t <= t0 {
+                break;
+            }
+        }
+        if t == trigger_ms {
+            return Admission::Admit { at_ms: t };
+        }
+        match self.throttle {
+            ThrottlePolicy::Reject => Admission::Reject,
+            ThrottlePolicy::Queue { max_wait_ms } => {
+                if t.is_finite() && waited_ms + (t - trigger_ms) <= max_wait_ms {
+                    Admission::Admit { at_ms: t }
+                } else {
+                    Admission::Reject
+                }
+            }
+        }
+    }
+
+    /// Commit one admitted execution: it fires at `at_ms` after
+    /// `waited_ms` of slot wait and keeps a concurrency slot busy until
+    /// `busy_until_ms`.
+    pub fn commit(&mut self, at_ms: f64, waited_ms: f64, busy_until_ms: f64) {
+        self.admitted += 1;
+        if waited_ms > 0.0 {
+            self.queued += 1;
+            self.queued_wait_ms += waited_ms;
+        }
+        if self.max_concurrent.is_some() {
+            self.inflight.push(busy_until_ms);
+        }
+        if self.max_rps.is_some() {
+            self.window.push_back(at_ms);
+        }
+    }
+
+    /// Record one final denial in this region.
+    pub fn reject(&mut self) {
+        self.rejected += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(cap: Option<usize>, rps: Option<f64>) -> RegionSettings {
+        let mut r = RegionSettings::new("r", 0.0);
+        r.max_concurrent = cap;
+        r.max_rps = rps;
+        r
+    }
+
+    #[test]
+    fn unlimited_admits_at_trigger() {
+        let mut a = AdmissionControl::new(&spec(None, None), ThrottlePolicy::Reject, vec![]);
+        assert!(a.unlimited());
+        assert_eq!(a.admit(123.456, 0.0), Admission::Admit { at_ms: 123.456 });
+    }
+
+    #[test]
+    fn concurrency_cap_rejects_then_frees() {
+        let mut a = AdmissionControl::new(&spec(Some(2), None), ThrottlePolicy::Reject, vec![]);
+        for _ in 0..2 {
+            assert_eq!(a.admit(0.0, 0.0), Admission::Admit { at_ms: 0.0 });
+            a.commit(0.0, 0.0, 1_000.0);
+        }
+        assert_eq!(a.admit(500.0, 0.0), Admission::Reject, "both slots busy");
+        a.reject();
+        assert_eq!(a.rejected, 1);
+        // at 1 ms past completion both slots are free again
+        assert_eq!(a.admit(1_000.5, 0.0), Admission::Admit { at_ms: 1_000.5 });
+    }
+
+    #[test]
+    fn queue_policy_waits_for_the_earliest_slot() {
+        let mut a = AdmissionControl::new(
+            &spec(Some(1), None),
+            ThrottlePolicy::Queue { max_wait_ms: 5_000.0 },
+            vec![],
+        );
+        assert_eq!(a.admit(0.0, 0.0), Admission::Admit { at_ms: 0.0 });
+        a.commit(0.0, 0.0, 2_000.0);
+        // slot frees at 2 s → queued 1.5 s
+        assert_eq!(a.admit(500.0, 0.0), Admission::Admit { at_ms: 2_000.0 });
+        a.commit(2_000.0, 1_500.0, 9_000.0);
+        assert_eq!(a.queued, 1);
+        assert_eq!(a.queued_wait_ms, 1_500.0);
+        // next would wait 6.5 s > the 5 s deadline → denied
+        assert_eq!(a.admit(2_500.0, 0.0), Admission::Reject);
+        // an already-spent budget also counts against the deadline
+        assert_eq!(a.admit(8_000.0, 4_500.0), Admission::Reject);
+        assert_eq!(a.admit(8_000.0, 3_000.0), Admission::Admit { at_ms: 9_000.0 });
+    }
+
+    #[test]
+    fn denial_probing_never_frees_slots() {
+        // regression: computing the would-be slot time for a denied
+        // request must not garbage-collect in-flight entries at that
+        // future time — a later request inside the busy window must still
+        // see the region full
+        let mut a = AdmissionControl::new(&spec(Some(1), None), ThrottlePolicy::Reject, vec![]);
+        assert_eq!(a.admit(0.0, 0.0), Admission::Admit { at_ms: 0.0 });
+        a.commit(0.0, 0.0, 1_000.0);
+        assert_eq!(a.admit(100.0, 0.0), Admission::Reject);
+        a.reject();
+        assert_eq!(
+            a.admit(200.0, 0.0),
+            Admission::Reject,
+            "the slot is still busy until 1 s — the earlier denial must not have freed it"
+        );
+    }
+
+    #[test]
+    fn queued_future_slots_stack_fifo() {
+        // a queued admission reserves its future slot: the next asker must
+        // wait behind BOTH the running and the queued execution
+        let mut a = AdmissionControl::new(
+            &spec(Some(1), None),
+            ThrottlePolicy::Queue { max_wait_ms: 1e9 },
+            vec![],
+        );
+        assert_eq!(a.admit(0.0, 0.0), Admission::Admit { at_ms: 0.0 });
+        a.commit(0.0, 0.0, 1_000.0);
+        assert_eq!(a.admit(100.0, 0.0), Admission::Admit { at_ms: 1_000.0 });
+        a.commit(1_000.0, 900.0, 4_000.0);
+        assert_eq!(
+            a.admit(200.0, 0.0),
+            Admission::Admit { at_ms: 4_000.0 },
+            "must queue behind the already-reserved slot, not the running one"
+        );
+    }
+
+    #[test]
+    fn fractional_rps_floors_the_window() {
+        // rps 2.5 means at most 2 admissions can coexist in one window
+        let mut a = AdmissionControl::new(&spec(None, Some(2.5)), ThrottlePolicy::Reject, vec![]);
+        for t in [0.0, 100.0] {
+            assert_eq!(a.admit(t, 0.0), Admission::Admit { at_ms: t });
+            a.commit(t, 0.0, 0.0);
+        }
+        assert_eq!(a.admit(200.0, 0.0), Admission::Reject, "a third would exceed 2.5/s");
+    }
+
+    #[test]
+    fn zero_capacity_never_admits() {
+        let mut a = AdmissionControl::new(
+            &spec(Some(0), None),
+            ThrottlePolicy::Queue { max_wait_ms: 1e12 },
+            vec![],
+        );
+        assert_eq!(a.admit(0.0, 0.0), Admission::Reject, "infinite wait beats any deadline");
+    }
+
+    #[test]
+    fn rps_window_rotates() {
+        let mut a = AdmissionControl::new(&spec(None, Some(2.0)), ThrottlePolicy::Reject, vec![]);
+        assert!(!a.unlimited());
+        for t in [0.0, 100.0] {
+            assert_eq!(a.admit(t, 0.0), Admission::Admit { at_ms: t });
+            a.commit(t, 0.0, 0.0);
+        }
+        assert_eq!(a.admit(900.0, 0.0), Admission::Reject, "2 admissions in-window");
+        // the t=0 admission rotates out after 1 s
+        assert_eq!(a.admit(1_000.5, 0.0), Admission::Admit { at_ms: 1_000.5 });
+    }
+
+    #[test]
+    fn rps_queue_waits_for_rotation() {
+        let mut a = AdmissionControl::new(
+            &spec(None, Some(1.0)),
+            ThrottlePolicy::Queue { max_wait_ms: 10_000.0 },
+            vec![],
+        );
+        assert_eq!(a.admit(0.0, 0.0), Admission::Admit { at_ms: 0.0 });
+        a.commit(0.0, 0.0, 0.0);
+        assert_eq!(a.admit(300.0, 0.0), Admission::Admit { at_ms: 1_000.0 });
+    }
+
+    #[test]
+    fn outage_blocks_then_recovers() {
+        let mut a = AdmissionControl::new(
+            &spec(None, None),
+            ThrottlePolicy::Reject,
+            vec![(1_000.0, 3_000.0)],
+        );
+        assert_eq!(a.admit(999.0, 0.0), Admission::Admit { at_ms: 999.0 });
+        assert_eq!(a.admit(1_000.0, 0.0), Admission::Reject, "window is [start, end)");
+        assert_eq!(a.admit(2_999.0, 0.0), Admission::Reject);
+        assert_eq!(a.admit(3_000.0, 0.0), Admission::Admit { at_ms: 3_000.0 }, "recovered");
+    }
+
+    #[test]
+    fn queue_rides_out_an_outage() {
+        let mut a = AdmissionControl::new(
+            &spec(None, None),
+            ThrottlePolicy::Queue { max_wait_ms: 2_500.0 },
+            vec![(1_000.0, 3_000.0)],
+        );
+        assert_eq!(a.admit(900.0, 0.0), Admission::Admit { at_ms: 900.0 });
+        assert_eq!(a.admit(1_200.0, 0.0), Admission::Admit { at_ms: 3_000.0 });
+        assert_eq!(
+            a.admit(1_200.0, 1_000.0),
+            Admission::Reject,
+            "1.8 s wait on top of 1 s already spent exceeds the 2.5 s deadline"
+        );
+    }
+
+    #[test]
+    fn admit_is_decision_only() {
+        // deferring an admitted request and re-asking yields the same answer
+        let mut a = AdmissionControl::new(
+            &spec(Some(1), None),
+            ThrottlePolicy::Queue { max_wait_ms: 1e9 },
+            vec![],
+        );
+        assert_eq!(a.admit(0.0, 0.0), Admission::Admit { at_ms: 0.0 });
+        a.commit(0.0, 0.0, 4_000.0);
+        let first = a.admit(100.0, 0.0);
+        let second = a.admit(100.0, 0.0);
+        assert_eq!(first, second);
+        assert_eq!(first, Admission::Admit { at_ms: 4_000.0 });
+        assert_eq!(a.admitted, 1, "admit() itself commits nothing");
+    }
+
+    #[test]
+    fn combined_constraints_fixpoint() {
+        // capacity frees at 2 s but the rate window only opens at 2.5 s
+        let mut a = AdmissionControl::new(
+            &spec(Some(1), Some(1.0)),
+            ThrottlePolicy::Queue { max_wait_ms: 1e9 },
+            vec![],
+        );
+        assert_eq!(a.admit(1_500.0, 0.0), Admission::Admit { at_ms: 1_500.0 });
+        a.commit(1_500.0, 0.0, 2_000.0);
+        assert_eq!(a.admit(1_600.0, 0.0), Admission::Admit { at_ms: 2_500.0 });
+    }
+}

@@ -3,6 +3,7 @@
 //! `containers`), the edge long-lived executor (`greengrass`), ground-truth
 //! latency distributions (`latency`) and the AWS billing model (`pricing`).
 
+pub mod admission;
 pub mod containers;
 pub mod greengrass;
 pub mod lambda;

@@ -149,6 +149,32 @@ impl Cil {
         false
     }
 
+    /// Closed-loop retraction: the placement tracked under `tag` was
+    /// *denied admission* and never started a container — drop the belief
+    /// outright (it describes a container that does not exist). Distinct
+    /// from [`Cil::observe`]: there is no realized window to pin, and a
+    /// cold-start reinstatement would be wrong. No-op for untracked tags
+    /// (tag 0, or entries superseded / adopted from a hub snapshot).
+    ///
+    /// Note: if the denied placement was believed to *reuse* an existing
+    /// idle container (a warm belief), dropping the entry also forgets
+    /// that the container existed before this placement; the next real
+    /// invocation re-learns it through its own observation. Erring toward
+    /// believed-cold is the conservative direction for admission-denied
+    /// regions.
+    pub fn retract(&mut self, j: usize, tag: u64) -> bool {
+        if tag == 0 {
+            return false;
+        }
+        let list = &mut self.per_config[j];
+        if let Some(i) = list.iter().position(|c| c.tag == tag) {
+            // keep insertion order (MRU ties break on iteration order)
+            list.remove(i);
+            return true;
+        }
+        false
+    }
+
     /// Forget update provenance (all entries become untracked). Called when
     /// a device adopts a hub snapshot: the snapshot's tags belong to the
     /// hub's own update sequence, so pending device observations must not
@@ -272,6 +298,26 @@ mod tests {
         let mut cil = Cil::new(1, TIDL);
         assert!(!cil.observe(0, 42, 1_000.0, 2_000.0, true));
         assert_eq!(cil.total_entries(), 0, "no double counting");
+    }
+
+    #[test]
+    fn retract_drops_the_denied_belief() {
+        let mut cil = Cil::new(2, TIDL);
+        cil.update(0, 0.0, 2_000.0);
+        let tag = cil.last_update_tag();
+        assert!(cil.predicts_warm(0, 3_000.0));
+        assert!(cil.retract(0, tag), "tracked entry retracted");
+        assert!(!cil.predicts_warm(0, 3_000.0), "the phantom container is gone");
+        assert_eq!(cil.total_entries(), 0);
+        // idempotent / untracked: no-ops
+        assert!(!cil.retract(0, tag));
+        assert!(!cil.retract(0, 0));
+        // a cleared (snapshot-adopted) entry must not alias a retraction
+        cil.update(1, 0.0, 1_000.0);
+        let t2 = cil.last_update_tag();
+        cil.clear_tags();
+        assert!(!cil.retract(1, t2), "untracked entries are not retractable");
+        assert_eq!(cil.total_entries(), 1);
     }
 
     #[test]

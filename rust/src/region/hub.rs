@@ -32,6 +32,9 @@ pub struct RegionalCilHub {
     /// realized warm/cold outcomes folded back in (closed-loop feedback;
     /// stays 0 with `FeedbackMode::Off`)
     pub observations_absorbed: u64,
+    /// admission-denied beliefs dropped again (closed-loop feedback with
+    /// capacity limits / outages; stays 0 otherwise)
+    pub retractions: u64,
 }
 
 impl RegionalCilHub {
@@ -40,6 +43,7 @@ impl RegionalCilHub {
             cil: Cil::new(n_configs, tidl_ms),
             updates_absorbed: 0,
             observations_absorbed: 0,
+            retractions: 0,
         }
     }
 
@@ -71,6 +75,18 @@ impl RegionalCilHub {
     ) -> bool {
         self.observations_absorbed += 1;
         self.cil.observe(j, tag, trigger_ms, busy_ms, warm)
+    }
+
+    /// Closed-loop retraction: the request absorbed under `tag` was denied
+    /// admission and never warmed a container — drop the phantom belief so
+    /// the next snapshot stops advertising a warm pool the region never
+    /// had (admission-denied regions must not stay warm-attractive).
+    pub fn retract(&mut self, j: usize, tag: u64) -> bool {
+        let dropped = self.cil.retract(j, tag);
+        if dropped {
+            self.retractions += 1;
+        }
+        dropped
     }
 
     /// Clone the hub state — the epoch broadcast payload devices overlay
@@ -128,6 +144,19 @@ mod tests {
         assert_eq!(hub.observations_absorbed, 1);
         // the corrected window rides the snapshot
         assert!(hub.snapshot().predicts_warm(0, 8_000.0));
+    }
+
+    #[test]
+    fn retraction_drops_the_phantom_warm_belief() {
+        let mut hub = RegionalCilHub::new(1, TIDL);
+        hub.absorb(0, 0.0, 1_000.0);
+        let tag = hub.last_update_tag();
+        assert!(hub.predicts_warm(0, 2_000.0), "belief advertises a warm pool");
+        assert!(hub.retract(0, tag), "admission denied → belief dropped");
+        assert!(!hub.predicts_warm(0, 2_000.0));
+        assert!(!hub.snapshot().predicts_warm(0, 2_000.0), "snapshots stop advertising it");
+        assert_eq!(hub.retractions, 1);
+        assert!(!hub.retract(0, tag), "idempotent");
     }
 
     #[test]

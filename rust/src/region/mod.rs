@@ -27,6 +27,13 @@
 //!    the device's routing-latency row over all regions, per-region working
 //!    CILs, and scenario-driven mobility (re-homing mid-run with hub
 //!    handoff).
+//!  * **Resilience** — each [`RegionRuntime`] carries an
+//!    [`AdmissionControl`] gate (concurrency cap, rate limit, scheduled
+//!    outage windows) the coordinator consults in canonical request order
+//!    before touching the pools; denials either throttle
+//!    (reject / queue-with-deadline) or fail over to the next-best
+//!    surviving region along the request's engine-ranked alternates. The
+//!    whole surface is pinned by `rust/tests/resilience.rs`.
 //!
 //! The decision engine sees regions through candidate flattening
 //! (`engine::flatten_region_candidates`): each task is scored over
@@ -39,7 +46,8 @@ pub mod router;
 pub use hub::RegionalCilHub;
 pub use router::DeviceRouter;
 
-use crate::config::{FleetSettings, Meta, RegionSettings};
+use crate::config::{FleetSettings, Meta, OutageWindow, RegionSettings, ThrottlePolicy};
+use crate::platform::admission::AdmissionControl;
 use crate::platform::lambda::CloudPlatform;
 use crate::predictor::cil::Cil;
 
@@ -51,6 +59,12 @@ pub struct ResolvedTopology {
     pub routing_jitter_sigma: f64,
     /// number of memory configurations per region (flattening stride)
     pub n_configs: usize,
+    /// admission behaviour when a region denies a request
+    pub throttle: ThrottlePolicy,
+    /// inter-region failover on admission denial
+    pub failover: bool,
+    /// scheduled region blackout windows
+    pub outages: Vec<OutageWindow>,
 }
 
 impl ResolvedTopology {
@@ -65,6 +79,9 @@ impl ResolvedTopology {
                     cross_penalty_ms: spec.cross_penalty_ms,
                     routing_jitter_sigma: spec.routing_jitter_sigma,
                     n_configs,
+                    throttle: spec.throttle,
+                    failover: spec.failover,
+                    outages: spec.outages.clone(),
                 })
             }
             None => Ok(Self::single(n_configs)),
@@ -78,11 +95,23 @@ impl ResolvedTopology {
             cross_penalty_ms: 0.0,
             routing_jitter_sigma: 0.0,
             n_configs,
+            throttle: ThrottlePolicy::Reject,
+            failover: false,
+            outages: Vec::new(),
         }
     }
 
     pub fn n_regions(&self) -> usize {
         self.regions.len()
+    }
+
+    /// Whether region `r` can serve anything at all. A `max_concurrent` of
+    /// zero marks the region permanently shut; its (region, config)
+    /// candidates are masked out of every device's decision set, so a
+    /// zero-capacity region is observationally identical to a topology
+    /// without it (pinned in `rust/tests/resilience.rs`).
+    pub fn region_open(&self, r: usize) -> bool {
+        self.regions[r].max_concurrent != Some(0)
     }
 
     /// Base one-way routing latency from a device homed in `home` to
@@ -107,6 +136,8 @@ pub struct RegionRuntime {
     pub hub: RegionalCilHub,
     /// per-config peak live container count
     pub pool_high_water: Vec<usize>,
+    /// capacity / rate / outage gate applied before the pools
+    pub admission: AdmissionControl,
 }
 
 /// All regions' runtime state for one fleet run.
@@ -119,11 +150,22 @@ impl RegionTopology {
         let regions = resolved
             .regions
             .iter()
-            .map(|spec| RegionRuntime {
+            .enumerate()
+            .map(|(r, spec)| RegionRuntime {
                 spec: spec.clone(),
                 cloud: CloudPlatform::new(resolved.n_configs),
                 hub: RegionalCilHub::new(resolved.n_configs, meta.tidl_mean_ms),
                 pool_high_water: vec![0usize; resolved.n_configs],
+                admission: AdmissionControl::new(
+                    spec,
+                    resolved.throttle,
+                    resolved
+                        .outages
+                        .iter()
+                        .filter(|o| o.region == r)
+                        .map(|o| (o.start_ms, o.end_ms))
+                        .collect(),
+                ),
             })
             .collect();
         RegionTopology { regions }
@@ -180,11 +222,46 @@ mod tests {
                 RegionSettings::new("a", 0.0),
                 RegionSettings::new("b", 10.0),
             ],
-            cross_penalty_ms: 0.0,
-            routing_jitter_sigma: 0.0,
             n_configs: 19,
+            ..ResolvedTopology::single(19)
         };
         assert_eq!(t.split(3), (0, 3));
         assert_eq!(t.split(19 + 4), (1, 4));
+    }
+
+    #[test]
+    fn zero_capacity_region_is_shut() {
+        let t = ResolvedTopology {
+            regions: vec![
+                RegionSettings::new("open", 0.0).with_max_concurrent(5),
+                RegionSettings::new("shut", 0.0).with_max_concurrent(0),
+                RegionSettings::new("free", 0.0),
+            ],
+            n_configs: 3,
+            ..ResolvedTopology::single(3)
+        };
+        assert!(t.region_open(0));
+        assert!(!t.region_open(1));
+        assert!(t.region_open(2));
+    }
+
+    #[test]
+    fn runtime_carries_per_region_outage_windows() {
+        use crate::config::{default_artifact_dir, OutageWindow};
+        let meta = Meta::load(&default_artifact_dir()).unwrap();
+        let resolved = ResolvedTopology {
+            regions: vec![RegionSettings::new("a", 0.0), RegionSettings::new("b", 0.0)],
+            outages: vec![OutageWindow { region: 1, start_ms: 100.0, end_ms: 200.0 }],
+            n_configs: meta.memory_configs_mb.len(),
+            ..ResolvedTopology::single(meta.memory_configs_mb.len())
+        };
+        use crate::platform::admission::Admission;
+        let mut topo = RegionTopology::new(&resolved, &meta);
+        assert_eq!(
+            topo.regions[0].admission.admit(150.0, 0.0),
+            Admission::Admit { at_ms: 150.0 },
+            "region a is unaffected"
+        );
+        assert_eq!(topo.regions[1].admission.admit(150.0, 0.0), Admission::Reject);
     }
 }

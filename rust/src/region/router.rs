@@ -190,12 +190,31 @@ impl DeviceRouter {
         self.cils[region].observe(j, tag, trigger_ms, busy_ms, warm)
     }
 
+    /// Closed-loop retraction: the placement recorded under `tag` in
+    /// `region`'s working CIL was denied admission and never started a
+    /// container — drop the phantom belief (see [`Cil::retract`]).
+    pub fn retract(&mut self, region: usize, j: usize, tag: u64) -> bool {
+        self.cils[region].retract(j, tag)
+    }
+
     pub fn split(&self, flat: usize) -> (usize, usize) {
         self.topo.split(flat)
     }
 
     pub fn n_regions(&self) -> usize {
         self.topo.n_regions()
+    }
+
+    /// Whether region `r` can serve at all (zero-capacity regions are
+    /// masked out of the candidate set at device construction).
+    pub fn region_open(&self, r: usize) -> bool {
+        self.topo.region_open(r)
+    }
+
+    /// Whether the topology runs with inter-region failover: the device
+    /// then attaches engine-ranked alternates to every cloud request.
+    pub fn failover_enabled(&self) -> bool {
+        self.topo.failover
     }
 
     pub fn n_configs(&self) -> usize {
@@ -231,8 +250,8 @@ mod tests {
         Arc::new(ResolvedTopology {
             regions: spec.regions.clone(),
             cross_penalty_ms: spec.cross_penalty_ms,
-            routing_jitter_sigma: 0.0,
             n_configs: 3,
+            ..ResolvedTopology::single(3)
         })
     }
 
@@ -362,6 +381,25 @@ mod tests {
         // rewrite the adopted snapshot entry
         r.observe(0, 0, hub_tag, 0.0, 500.0, true);
         assert!(!r.cils[0].predicts_warm(0, 5_000.0), "entry still believed busy");
+    }
+
+    #[test]
+    fn failover_observation_lands_in_the_serving_region_only() {
+        // a request placed in region 0 but served (after failover) in
+        // region 1 feeds its realized outcome back under tag 0 to the
+        // SERVING region's working CIL — never the rejecting one's
+        let topo = two_region_topo();
+        let mut r = DeviceRouter::new(
+            topo, CilMode::Private, 0, vec![1.0, 1.0], Vec::new(), TIDL,
+        )
+        .unwrap();
+        // realized cold start in the serving region creates evidence there
+        assert!(r.observe(1, 2, 0, 1_000.0, 3_000.0, false));
+        assert_eq!(r.cils[1].total_entries(), 1);
+        assert!(r.cils[1].predicts_warm(2, 5_000.0));
+        assert_eq!(r.cils[0].total_entries(), 0, "rejecting region untouched");
+        // a realized warm start elsewhere is already represented — dropped
+        assert!(!r.observe(1, 0, 0, 1_000.0, 3_000.0, true));
     }
 
     #[test]

@@ -19,15 +19,20 @@ pub struct LatencyPercentiles {
 
 /// Compute tail percentiles with a single sort (the fleet produces
 /// hundreds of thousands of samples; three independent sorts would triple
-/// the aggregation cost).
-pub fn latency_percentiles(xs: &[f64]) -> LatencyPercentiles {
+/// the aggregation cost). An empty sample — an empty fleet, or a run whose
+/// every task was throttled-rejected — has no percentiles: `None`, never a
+/// fabricated all-zeros tail.
+pub fn latency_percentiles(xs: &[f64]) -> Option<LatencyPercentiles> {
+    if xs.is_empty() {
+        return None;
+    }
     let mut v = xs.to_vec();
     v.sort_by(f64::total_cmp);
-    LatencyPercentiles {
+    Some(LatencyPercentiles {
         p50: stats::percentile_sorted(&v, 50.0),
         p95: stats::percentile_sorted(&v, 95.0),
         p99: stats::percentile_sorted(&v, 99.0),
-    }
+    })
 }
 
 /// What every run produces, regardless of execution mode: the per-task
@@ -35,15 +40,22 @@ pub fn latency_percentiles(xs: &[f64]) -> LatencyPercentiles {
 pub struct RunOutcome {
     pub records: Vec<TaskRecord>,
     pub summary: Summary,
-    /// actual end-to-end latency percentiles (virtual ms)
-    pub latency: LatencyPercentiles,
+    /// actual end-to-end latency percentiles over **served** tasks
+    /// (virtual ms); `None` when nothing was served
+    pub latency: Option<LatencyPercentiles>,
 }
 
 impl RunOutcome {
     /// Assemble summary and percentiles from a finished record stream.
+    /// Throttled-rejected tasks are counted in the summary but never enter
+    /// the latency percentiles.
     pub fn from_records(records: Vec<TaskRecord>) -> RunOutcome {
         let summary = Summary::from_records(&records);
-        let e2e: Vec<f64> = records.iter().map(|r| r.actual_e2e_ms).collect();
+        let e2e: Vec<f64> = records
+            .iter()
+            .filter(|r| r.is_served())
+            .map(|r| r.actual_e2e_ms)
+            .collect();
         let latency = latency_percentiles(&e2e);
         RunOutcome { records, summary, latency }
     }
@@ -81,6 +93,10 @@ mod tests {
             warm_predicted: None,
             warm_actual: None,
             edge_wait_ms: 0.0,
+            rejected: false,
+            failover_hops: 0,
+            failover_routing_ms: 0.0,
+            throttle_wait_ms: 0.0,
         }
     }
 
@@ -88,8 +104,22 @@ mod tests {
     fn from_records_assembles_summary_and_tail() {
         let out = RunOutcome::from_records((0..100).map(|i| rec(i, (i + 1) as f64)).collect());
         assert_eq!(out.summary.n, 100);
-        assert!((out.latency.p50 - 50.5).abs() < 1e-9);
-        assert!(out.latency.p50 <= out.latency.p95 && out.latency.p95 <= out.latency.p99);
+        let l = out.latency.expect("non-empty run has percentiles");
+        assert!((l.p50 - 50.5).abs() < 1e-9);
+        assert!(l.p50 <= l.p95 && l.p95 <= l.p99);
+    }
+
+    #[test]
+    fn empty_and_all_rejected_streams_have_no_percentiles() {
+        assert_eq!(latency_percentiles(&[]), None, "no fabricated zero tail");
+        let out = RunOutcome::from_records(Vec::new());
+        assert_eq!(out.latency, None);
+        let mut dead = rec(0, 0.0);
+        dead.rejected = true;
+        let out = RunOutcome::from_records(vec![dead.clone(), dead]);
+        assert_eq!(out.latency, None, "rejected tasks never enter percentiles");
+        assert_eq!(out.summary.n, 2);
+        assert_eq!(out.summary.rejected_count, 2);
     }
 
     #[test]

@@ -138,7 +138,8 @@ fn mixed_diurnal_default_completes_and_aggregates() {
     assert_eq!(s.n_devices, 40);
     assert_eq!(s.n_tasks, s.edge_count + s.cloud_count);
     assert!(s.n_tasks > 100, "diurnal mix should generate real load");
-    assert!(s.latency.p50 <= s.latency.p95 && s.latency.p95 <= s.latency.p99);
+    let lat = s.latency.expect("served tasks have a latency tail");
+    assert!(lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
     assert!((0.0..=100.0).contains(&s.deadline_violation_pct));
     // mixed fleet: more than one app present
     let apps: std::collections::BTreeSet<&str> =

@@ -2,8 +2,13 @@
 //! (proptest is unavailable offline). Each property runs over hundreds of
 //! seeded random cases; failures report the replayable seed.
 
-use skedge::config::Objective;
+use skedge::config::{
+    default_artifact_dir, FleetScenario, FleetSettings, Meta, Objective, OutageWindow,
+    RegionSettings, ThrottlePolicy, TopologySpec,
+};
 use skedge::engine::DecisionEngine;
+use skedge::fleet::{self, metrics::latency_percentiles};
+use skedge::platform::admission::{Admission, AdmissionControl};
 use skedge::platform::containers::{ConfigPool, StartKind};
 use skedge::platform::greengrass::EdgeExecutor;
 use skedge::platform::pricing::aws_pricing;
@@ -206,6 +211,275 @@ fn prop_event_queue_sorted() {
             count += 1;
         }
         prop_assert!(count == n, "lost events: {count} != {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_admission_gate_never_violates_its_limits() {
+    check("admission-gate", 150, |g| {
+        let cap = g.bool().then(|| g.usize_range(1, 4));
+        // fractional rates included: 2.5/s must floor to 2 per window
+        let rps = g.bool().then(|| g.f64_range(0.5, 5.0));
+        let throttle = if g.bool() {
+            ThrottlePolicy::Reject
+        } else {
+            ThrottlePolicy::Queue { max_wait_ms: g.f64_range(0.0, 5_000.0) }
+        };
+        let outages = if g.bool() {
+            let s = g.f64_range(0.0, 20_000.0);
+            vec![(s, s + g.f64_range(100.0, 5_000.0))]
+        } else {
+            Vec::new()
+        };
+        let mut spec = RegionSettings::new("r", 0.0);
+        spec.max_concurrent = cap;
+        spec.max_rps = rps;
+        let mut gate = AdmissionControl::new(&spec, throttle, outages.clone());
+        // (admitted at, busy until) of every committed execution
+        let mut commits: Vec<(f64, f64)> = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..g.usize_range(1, 60) {
+            t += g.f64_range(0.0, 1_500.0);
+            match gate.admit(t, 0.0) {
+                Admission::Admit { at_ms } => {
+                    prop_assert!(at_ms >= t, "admitted into the past: {at_ms} < {t}");
+                    match throttle {
+                        ThrottlePolicy::Reject => {
+                            prop_assert!(at_ms == t, "reject policy queued a request")
+                        }
+                        ThrottlePolicy::Queue { max_wait_ms } => prop_assert!(
+                            at_ms - t <= max_wait_ms + 1e-9,
+                            "wait {} exceeds the {} deadline", at_ms - t, max_wait_ms
+                        ),
+                    }
+                    for &(s, e) in &outages {
+                        prop_assert!(
+                            !(at_ms >= s && at_ms < e),
+                            "admitted at {at_ms} inside outage [{s}, {e})"
+                        );
+                    }
+                    if let Some(cap) = cap {
+                        let inflight = commits
+                            .iter()
+                            .filter(|&&(at, busy)| at <= at_ms && busy > at_ms)
+                            .count();
+                        prop_assert!(inflight < cap, "{inflight} in flight at cap {cap}");
+                    }
+                    if let Some(rps) = rps {
+                        let in_window = commits
+                            .iter()
+                            .filter(|&&(at, _)| at > at_ms - 1_000.0 && at <= at_ms)
+                            .count();
+                        prop_assert!(
+                            (in_window as f64) + 1.0 <= rps,
+                            "admitting a {}th execution into the window exceeds rps {rps}",
+                            in_window + 1
+                        );
+                    }
+                    let busy_until = at_ms + g.duration_ms(2_000.0);
+                    gate.commit(at_ms, at_ms - t, busy_until);
+                    commits.push((at_ms, busy_until));
+                }
+                Admission::Reject => gate.reject(),
+            }
+        }
+        prop_assert!(
+            gate.admitted as usize == commits.len(),
+            "commit counter drifted"
+        );
+        Ok(())
+    });
+}
+
+/// Satellite pin: per-record conservation. A served cloud record's e2e
+/// decomposes exactly into upload + routing (+ failover hop routing +
+/// throttle queue wait) + start + compute + store; the plain path carries
+/// zero penalty terms.
+#[test]
+fn prop_cloud_serve_conservation() {
+    use skedge::config::{CilMode, ExperimentSettings};
+    use skedge::fleet::device::{
+        self, CloudServe, Device, DeviceProfile, Dispatch,
+    };
+    use skedge::platform::lambda::CloudPlatform;
+    use skedge::region::{DeviceRouter, ResolvedTopology};
+    use skedge::workload::build_workload;
+
+    let meta = Meta::load(&default_artifact_dir()).unwrap();
+    check("serve-conservation", 8, |g| {
+        let seed = g.usize_range(0, 1 << 30) as u64;
+        let topo = std::sync::Arc::new(ResolvedTopology {
+            regions: vec![
+                RegionSettings::new("near", g.f64_range(1.0, 20.0)),
+                RegionSettings::new("far", g.f64_range(20.0, 90.0))
+                    .with_price_mult(g.f64_range(0.8, 1.3)),
+            ],
+            cross_penalty_ms: g.f64_range(0.0, 80.0),
+            failover: true,
+            n_configs: meta.memory_configs_mb.len(),
+            ..ResolvedTopology::single(meta.memory_configs_mb.len())
+        });
+        let s = ExperimentSettings::new(
+            "fd",
+            Objective::LatencyMin,
+            &[1536.0, 1664.0, 2048.0],
+        )
+        .with_seed(seed);
+        let router = DeviceRouter::new(
+            topo, CilMode::Private, 0, vec![1.0, 1.0], Vec::new(), meta.tidl_mean_ms,
+        )
+        .map_err(|e| e.to_string())?;
+        let mut dev = Device::build(
+            &meta, &s, DeviceProfile::uniform(0, "fd", seed), None, router,
+        )
+        .map_err(|e| e.to_string())?;
+        let tasks = build_workload(&meta, "fd", 25, true, seed).map_err(|e| e.to_string())?;
+        let mut pools = CloudPlatform::new(meta.memory_configs_mb.len());
+        for t in &tasks {
+            let Dispatch::Cloud(req) = dev.ingest(t, t.arrive_ms).map_err(|e| e.to_string())?
+            else {
+                continue;
+            };
+            // randomly serve in place or after a failover hop + queue wait
+            let (serve, added) = if g.bool() && !req.alternates.is_empty() {
+                CloudServe::origin(&req).hop(&req.alternates[0])
+            } else {
+                (CloudServe::origin(&req), 0.0)
+            };
+            let mut serve = serve;
+            serve.queue_wait_ms = if g.bool() { g.f64_range(0.0, 3_000.0) } else { 0.0 };
+            let fire_at = req.trigger_ms + added + serve.queue_wait_ms;
+            let plain = serve.hops == 0 && serve.queue_wait_ms == 0.0;
+            let (exec, rec) = if plain {
+                let exec = device::execute_cloud(&req, &mut pools);
+                let rec = device::complete_cloud(&req, &exec);
+                (exec, rec)
+            } else {
+                let exec = device::execute_cloud_serve(&req, &serve, fire_at, &mut pools);
+                let rec = device::complete_cloud_serve(&req, &exec, &serve);
+                (exec, rec)
+            };
+            let want = req.upld_ms + req.routing_ms + serve.extra_routing_ms
+                + serve.queue_wait_ms + exec.start_ms + serve.comp_ms + req.store_ms;
+            prop_assert!(
+                (rec.actual_e2e_ms - want).abs() < 1e-6,
+                "conservation: e2e {} != components {want}", rec.actual_e2e_ms
+            );
+            prop_assert!(rec.failover_routing_ms == serve.extra_routing_ms, "penalty recorded");
+            prop_assert!(rec.throttle_wait_ms == serve.queue_wait_ms, "wait recorded");
+            prop_assert!(!rec.rejected && rec.actual_e2e_ms > 0.0, "served record");
+        }
+        Ok(())
+    });
+}
+
+/// Satellite pins over whole resilient fleets: rejected records are inert
+/// and excluded from percentiles but counted in summaries; hops only exist
+/// under failover; penalties only exist where hops/waits happened.
+#[test]
+fn prop_resilient_fleet_record_invariants() {
+    let meta = Meta::load(&default_artifact_dir()).unwrap();
+    check("resilient-fleet-records", 10, |g| {
+        let mut topo = TopologySpec::parse("duo").unwrap();
+        topo.regions[0].max_concurrent = Some(g.usize_range(1, 5));
+        if g.bool() {
+            topo.regions[1].max_rps = Some(g.usize_range(2, 8) as f64);
+        }
+        let throttle = if g.bool() {
+            ThrottlePolicy::Reject
+        } else {
+            ThrottlePolicy::Queue { max_wait_ms: g.f64_range(0.0, 4_000.0) }
+        };
+        let failover = g.bool();
+        topo = topo.with_throttle(throttle).with_failover(failover);
+        if g.bool() {
+            let start = g.f64_range(0.0, 4_000.0);
+            topo.outages.push(OutageWindow {
+                region: 0,
+                start_ms: start,
+                end_ms: start + g.f64_range(500.0, 3_000.0),
+            });
+        }
+        let fs = FleetSettings::new(g.usize_range(2, 6))
+            .with_seed(g.usize_range(0, 1 << 30) as u64)
+            .with_duration_ms(5_000.0)
+            .with_epoch_ms(1_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_app_mix(vec![("fd".to_string(), 1.0)])
+            .with_shards(g.usize_range(1, 3))
+            .with_topology(topo);
+        let o = fleet::run(&meta, &fs).map_err(|e| e.to_string())?;
+        let mut served_e2e = Vec::new();
+        let mut rejected = 0usize;
+        for r in o.records.iter().flatten() {
+            if r.rejected {
+                rejected += 1;
+                prop_assert!(r.actual_e2e_ms == 0.0, "rejected record carries latency");
+                prop_assert!(r.actual_cost == 0.0, "rejected record carries cost");
+                prop_assert!(r.warm_actual.is_none(), "rejected record executed?");
+            } else {
+                prop_assert!(r.actual_e2e_ms > 0.0, "served record without latency");
+                served_e2e.push(r.actual_e2e_ms);
+            }
+            if !failover {
+                prop_assert!(r.failover_hops == 0, "hops without failover enabled");
+            }
+            if r.failover_hops == 0 {
+                prop_assert!(r.failover_routing_ms == 0.0, "penalty without hops");
+            } else {
+                prop_assert!(r.failover_routing_ms > 0.0, "hops without penalty");
+            }
+            if throttle == ThrottlePolicy::Reject {
+                prop_assert!(r.throttle_wait_ms == 0.0, "queue wait under reject policy");
+            }
+        }
+        prop_assert!(
+            o.summary.rejected_count == rejected,
+            "summary rejected {} != records {rejected}", o.summary.rejected_count
+        );
+        prop_assert!(
+            o.summary.n_tasks == o.records.iter().map(Vec::len).sum::<usize>(),
+            "rejected tasks must stay counted in the task total"
+        );
+        // percentiles are exactly the served-only percentiles
+        prop_assert!(
+            o.summary.latency == latency_percentiles(&served_e2e),
+            "summary percentiles must be served-only"
+        );
+        Ok(())
+    });
+}
+
+/// Satellite pin: `failover_hops == 0` whenever capacity is unlimited —
+/// enabling failover on an uncapped topology is a no-op.
+#[test]
+fn prop_unlimited_capacity_means_zero_hops() {
+    let meta = Meta::load(&default_artifact_dir()).unwrap();
+    check("unlimited-zero-hops", 6, |g| {
+        let seed = g.usize_range(0, 1 << 30) as u64;
+        let devices = g.usize_range(2, 5);
+        let run = |failover: bool| {
+            let topo = TopologySpec::parse("duo").unwrap().with_failover(failover);
+            let fs = FleetSettings::new(devices)
+                .with_seed(seed)
+                .with_duration_ms(4_000.0)
+                .with_scenario(FleetScenario::Poisson)
+                .with_shards(2)
+                .with_topology(topo);
+            fleet::run(&meta, &fs)
+        };
+        let with = run(true).map_err(|e| e.to_string())?;
+        let without = run(false).map_err(|e| e.to_string())?;
+        prop_assert!(with.summary.failover_hops_total == 0, "hops under unlimited capacity");
+        prop_assert!(with.summary.rejected_count == 0, "rejections under unlimited capacity");
+        for r in with.records.iter().flatten() {
+            prop_assert!(r.failover_hops == 0 && !r.rejected, "record-level zero-hop pin");
+        }
+        prop_assert!(
+            with.summary.fingerprint == without.summary.fingerprint,
+            "failover flag must be outcome-inert without capacity pressure"
+        );
         Ok(())
     });
 }

@@ -1,0 +1,480 @@
+//! Region resilience chaos/invariance suite: the pins behind capacity
+//! limits, throttling, inter-region failover, and correlated outages.
+//!
+//!  1. **Zero-capacity masking** — a region with `max_concurrent = 0` (and
+//!     no homed devices) is bitwise equivalent to the same topology without
+//!     that region: its candidates are masked out of every decision set, so
+//!     nothing else about the run may move.
+//!  2. **Unlimited capacity degeneration** — huge caps + queue throttling +
+//!     failover enabled produce byte-for-byte the uncapped run: admission
+//!     always answers "now", the alternates are never consumed, and the
+//!     default (no-knobs) path is the pre-resilience fleet exactly.
+//!  3. **Failover determinism** — rejection and failover streams are pure
+//!     functions of the fleet seed: identical fingerprints, rejection
+//!     counts, and hop totals for any shard count, and (private CIL mode)
+//!     any epoch length.
+//!  4. **Outage windows** — scheduled region blackouts are deterministic,
+//!     shard-invariant, change outcomes, and *recover*: the darkened region
+//!     serves traffic again after the window.
+//!  5. **Saturation** — on an overloaded region, failover strictly reduces
+//!     the effective p99 (rejections counted as never-completing) vs
+//!     reject-only admission control, and beats queue-in-place throttling
+//!     on the served tail: LaSS's admission-control-with-reallocation
+//!     observation at fleet scale.
+
+use skedge::config::{
+    default_artifact_dir, CilMode, FeedbackMode, FleetScenario, FleetSettings, Meta, OutageWindow,
+    RegionSettings, ThrottlePolicy, TopologySpec,
+};
+use skedge::fleet::{self, FleetOutcome};
+use skedge::predictor::Placement;
+
+fn meta() -> Meta {
+    Meta::load(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+/// An fd-only Poisson fleet (latency-min fd is cloud-heavy, so admission
+/// actually gets exercised).
+fn fd_fleet(devices: usize, duration_ms: f64, topo: TopologySpec) -> FleetSettings {
+    FleetSettings::new(devices)
+        .with_seed(4242)
+        .with_duration_ms(duration_ms)
+        .with_epoch_ms(2_000.0)
+        .with_scenario(FleetScenario::Poisson)
+        .with_app_mix(vec![("fd".to_string(), 1.0)])
+        .with_topology(topo)
+}
+
+fn assert_records_identical(a: &FleetOutcome, b: &FleetOutcome, what: &str) {
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint, "{what}: fingerprint");
+    assert_eq!(a.sim_end_ms, b.sim_end_ms, "{what}: sim end");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: device count");
+    for (da, db) in a.records.iter().zip(&b.records) {
+        assert_eq!(da.len(), db.len(), "{what}: task count");
+        for (x, y) in da.iter().zip(db) {
+            assert_eq!(x.placement, y.placement, "{what}: task {}", x.id);
+            assert_eq!(x.actual_e2e_ms.to_bits(), y.actual_e2e_ms.to_bits(), "{what}: e2e");
+            assert_eq!(x.actual_cost.to_bits(), y.actual_cost.to_bits(), "{what}: cost");
+            assert_eq!(x.predicted_e2e_ms.to_bits(), y.predicted_e2e_ms.to_bits(), "{what}");
+            assert_eq!(x.warm_actual, y.warm_actual, "{what}: warm");
+            assert_eq!(x.rejected, y.rejected, "{what}: rejected");
+            assert_eq!(x.failover_hops, y.failover_hops, "{what}: hops");
+        }
+    }
+}
+
+/// Serving region of a cloud record under `n_configs` flattening.
+fn region_of(meta: &Meta, p: Placement) -> Option<usize> {
+    match p {
+        Placement::Cloud(flat) => Some(flat / meta.memory_configs_mb.len()),
+        Placement::Edge => None,
+    }
+}
+
+// ---------------------------------------------------------------- pin 1
+
+#[test]
+fn zero_capacity_region_is_bitwise_equivalent_to_absent_region() {
+    // region `c` never homes a device (weight 0) and can serve nothing
+    // (capacity 0): masking must make the 3-region run reproduce the
+    // 2-region run bit for bit — in BOTH CIL modes.
+    let meta = meta();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let with_dead = TopologySpec::new(vec![
+            RegionSettings::new("a", 5.0),
+            RegionSettings::new("b", 40.0).with_price_mult(1.1),
+            RegionSettings::new("c", 70.0).with_weight(0.0).with_max_concurrent(0),
+        ])
+        .with_cross_penalty_ms(30.0)
+        .with_cil_mode(cil);
+        let without = TopologySpec::new(vec![
+            RegionSettings::new("a", 5.0),
+            RegionSettings::new("b", 40.0).with_price_mult(1.1),
+        ])
+        .with_cross_penalty_ms(30.0)
+        .with_cil_mode(cil);
+        let a = fleet::run(&meta, &fd_fleet(8, 8_000.0, with_dead)).unwrap();
+        let b = fleet::run(&meta, &fd_fleet(8, 8_000.0, without)).unwrap();
+        assert_records_identical(&a, &b, &format!("{cil:?} zero-cap vs absent"));
+        assert_eq!(a.summary.rejected_count, 0, "nothing ever routed to the dead region");
+        assert_eq!(a.summary.regions[2].cloud_count, 0);
+        assert_eq!(
+            &a.summary.pool_high_water[..b.summary.pool_high_water.len()],
+            &b.summary.pool_high_water[..],
+            "live regions see identical pool pressure"
+        );
+        assert!(
+            a.summary.pool_high_water[b.summary.pool_high_water.len()..]
+                .iter()
+                .all(|&x| x == 0),
+            "the dead region's pools were never touched"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- pin 2
+
+#[test]
+fn unlimited_capacity_is_bitwise_identical_to_uncapped_run() {
+    // capacity present but never binding + queue throttling + failover
+    // enabled: admission must answer "now" for every request, the
+    // alternates must never be consumed, and the run must equal the plain
+    // topology run byte for byte (the `--region-cap`-off pin rides on the
+    // same code path: no knobs ⇒ AdmissionControl::unlimited()).
+    let meta = meta();
+    let plain = TopologySpec::parse("duo").unwrap();
+    let mut capped = TopologySpec::parse("duo")
+        .unwrap()
+        .with_throttle(ThrottlePolicy::Queue { max_wait_ms: 30_000.0 })
+        .with_failover(true);
+    capped.apply_caps("1000000").unwrap();
+    capped.apply_rps("1000000").unwrap();
+    let a = fleet::run(&meta, &fd_fleet(8, 8_000.0, plain)).unwrap();
+    let b = fleet::run(&meta, &fd_fleet(8, 8_000.0, capped)).unwrap();
+    assert_records_identical(&a, &b, "unlimited caps vs no caps");
+    assert_eq!(b.summary.rejected_count, 0);
+    assert_eq!(b.summary.failover_hops_total, 0, "failover never fires under headroom");
+    assert_eq!(b.region_queued, vec![0, 0], "queue throttle never waits under headroom");
+    assert!(b.summary.cloud_count > 0, "the pin is vacuous without cloud traffic");
+}
+
+// ---------------------------------------------------------------- pin 3
+
+/// A duo topology whose `us-east` region is tightly capped — the standard
+/// pressure cooker for the failover pins.
+fn capped_duo(cap: usize, throttle: ThrottlePolicy, failover: bool) -> TopologySpec {
+    let mut topo = TopologySpec::parse("duo")
+        .unwrap()
+        .with_throttle(throttle)
+        .with_failover(failover);
+    topo.regions[0].max_concurrent = Some(cap);
+    topo
+}
+
+#[test]
+fn failover_and_rejection_streams_are_shard_invariant() {
+    let meta = meta();
+    let mk = |shards| {
+        let fs = fd_fleet(10, 8_000.0, capped_duo(3, ThrottlePolicy::Reject, true))
+            .with_shards(shards);
+        fleet::run(&meta, &fs).unwrap()
+    };
+    let base = mk(1);
+    assert!(
+        base.summary.failover_hops_total > 0,
+        "cap 3 must actually trigger failover (got {} hops)",
+        base.summary.failover_hops_total
+    );
+    for shards in [2usize, 4] {
+        let other = mk(shards);
+        assert_records_identical(&base, &other, &format!("{shards} shards"));
+        assert_eq!(base.summary.rejected_count, other.summary.rejected_count);
+        assert_eq!(base.summary.failover_hops_total, other.summary.failover_hops_total);
+        assert_eq!(base.region_rejections, other.region_rejections);
+        assert_eq!(base.region_queued, other.region_queued);
+    }
+}
+
+#[test]
+fn capacity_queue_and_failover_preserve_epoch_invariance() {
+    // private-CIL mode: admission runs at the coordinator in canonical
+    // (attempt, device, seq) order and deferred attempts re-ask with an
+    // identical answer, so the epoch length must not leak into outcomes
+    let meta = meta();
+    let mk = |epoch_ms: f64| {
+        let fs = fd_fleet(
+            8,
+            8_000.0,
+            capped_duo(3, ThrottlePolicy::Queue { max_wait_ms: 6_000.0 }, true),
+        )
+        .with_epoch_ms(epoch_ms)
+        .with_shards(2);
+        fleet::run(&meta, &fs).unwrap()
+    };
+    let short = mk(500.0);
+    let long = mk(8_000.0);
+    assert_records_identical(&short, &long, "epoch 0.5 s vs 8 s");
+    assert!(
+        short.region_queued.iter().sum::<u64>() > 0,
+        "queue throttling must actually engage for this pin to bite"
+    );
+}
+
+// ---------------------------------------------------------------- pin 4
+
+#[test]
+fn outage_windows_are_deterministic_and_recover() {
+    let meta = meta();
+    let outage_topo = |failover: bool| {
+        TopologySpec::parse("duo")
+            .unwrap()
+            .with_failover(failover)
+            .with_outages(vec![OutageWindow {
+                region: 0,
+                start_ms: 2_000.0,
+                end_ms: 5_000.0,
+            }])
+    };
+    let mk = |failover: bool, shards: usize| {
+        fleet::run(&meta, &fd_fleet(10, 10_000.0, outage_topo(failover)).with_shards(shards))
+            .unwrap()
+    };
+    let dark = mk(false, 1);
+    // deterministic: same seed reproduces, shard count is irrelevant
+    assert_records_identical(&dark, &mk(false, 1), "outage rerun");
+    assert_records_identical(&dark, &mk(false, 3), "outage 3 shards");
+    // the blackout changes outcomes and rejects in-window traffic
+    let calm =
+        fleet::run(&meta, &fd_fleet(10, 10_000.0, TopologySpec::parse("duo").unwrap())).unwrap();
+    assert_ne!(dark.summary.fingerprint, calm.summary.fingerprint);
+    assert!(dark.summary.rejected_count > 0, "in-window traffic must be denied");
+    assert_eq!(calm.summary.rejected_count, 0);
+    // recovery: us-east serves again after the window ends
+    let served_after = dark.records.iter().flatten().any(|r| {
+        !r.rejected && r.arrive_ms >= 5_000.0 && region_of(&meta, r.placement) == Some(0)
+    });
+    assert!(served_after, "the darkened region must recover at the window end");
+    // failover rides out the outage: denied traffic re-routes instead
+    let routed = mk(true, 2);
+    assert!(routed.summary.failover_hops_total > 0);
+    assert!(
+        routed.summary.rejected_count < dark.summary.rejected_count,
+        "failover must convert outage rejections into served hops ({} vs {})",
+        routed.summary.rejected_count,
+        dark.summary.rejected_count
+    );
+    assert_records_identical(&routed, &mk(true, 4), "outage+failover shard invariance");
+}
+
+#[test]
+fn outage_scenario_fleet_is_deterministic_across_shards() {
+    // correlated *device* outages (scenario-side): dark windows silence a
+    // seeded group of devices together; determinism and shard invariance
+    // must survive, and load must visibly drop vs plain Poisson
+    let meta = meta();
+    let mk = |shards| {
+        let fs = FleetSettings::new(12)
+            .with_seed(7)
+            .with_duration_ms(10_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Outage {
+                period_ms: 4_000.0,
+                down_ms: 2_000.0,
+                frac: 0.7,
+            })
+            .with_app_mix(vec![("fd".to_string(), 1.0)]);
+        fleet::run(&meta, &fs.with_shards(shards)).unwrap()
+    };
+    let base = mk(1);
+    assert_records_identical(&base, &mk(3), "outage scenario shards");
+    let poisson = fleet::run(
+        &meta,
+        &FleetSettings::new(12)
+            .with_seed(7)
+            .with_duration_ms(10_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_app_mix(vec![("fd".to_string(), 1.0)]),
+    )
+    .unwrap();
+    assert!(
+        base.summary.n_tasks < poisson.summary.n_tasks,
+        "dark windows must drop arrivals ({} vs {})",
+        base.summary.n_tasks,
+        poisson.summary.n_tasks
+    );
+}
+
+// ---------------------------------------------------------------- pin 5
+
+/// p99 with rejected tasks counted as never completing (+∞): the
+/// operator's view of tail latency under load shedding.
+fn effective_p99(o: &FleetOutcome) -> f64 {
+    let mut xs: Vec<f64> = o
+        .records
+        .iter()
+        .flatten()
+        .map(|r| if r.rejected { f64::INFINITY } else { r.actual_e2e_ms })
+        .collect();
+    xs.sort_by(f64::total_cmp);
+    xs[((xs.len() as f64 * 0.99).ceil() as usize).min(xs.len()) - 1]
+}
+
+#[test]
+fn saturation_failover_strictly_reduces_p99() {
+    // every device homes in a tightly capped `hot` region; `cold` idles
+    // with free capacity. Reject-only sheds >1% of tasks → effective p99
+    // diverges. Failover serves everything at a bounded routing penalty →
+    // finite, strictly smaller p99. Queue-in-place serves everything too,
+    // but its backlog tail must stay above failover's served tail.
+    let meta = meta();
+    let saturated = |throttle: ThrottlePolicy, failover: bool| {
+        let mut topo = TopologySpec::new(vec![
+            RegionSettings::new("hot", 5.0).with_weight(1.0),
+            RegionSettings::new("cold", 40.0).with_weight(0.0),
+        ])
+        .with_cross_penalty_ms(20.0)
+        .with_throttle(throttle)
+        .with_failover(failover);
+        topo.regions[0].max_concurrent = Some(4);
+        let mut fs = fd_fleet(12, 12_000.0, topo);
+        fs.rate_mult = 1.5;
+        fs
+    };
+    let reject_only =
+        fleet::run(&meta, &saturated(ThrottlePolicy::Reject, false)).unwrap();
+    let failover = fleet::run(&meta, &saturated(ThrottlePolicy::Reject, true)).unwrap();
+    // effectively unbounded wait deadline: queue-in-place must serve
+    // everything so its tail is comparable against failover's
+    let queue_only = fleet::run(
+        &meta,
+        &saturated(ThrottlePolicy::Queue { max_wait_ms: 1e9 }, false),
+    )
+    .unwrap();
+
+    let shed = reject_only.summary.rejected_count as f64
+        / reject_only.summary.n_tasks.max(1) as f64;
+    assert!(
+        shed > 0.01,
+        "saturation setup must shed >1% of tasks under reject-only (shed {:.1}%)",
+        shed * 100.0
+    );
+    assert_eq!(
+        effective_p99(&reject_only),
+        f64::INFINITY,
+        ">1% rejections ⇒ the effective p99 never completes"
+    );
+
+    assert!(failover.summary.failover_hops_total > 0);
+    assert!(
+        failover.summary.rejected_count < reject_only.summary.rejected_count,
+        "failover must serve tasks reject-only sheds"
+    );
+    let p99_failover = effective_p99(&failover);
+    assert!(p99_failover.is_finite(), "failover absorbs the overload in `cold`");
+    assert!(
+        p99_failover < effective_p99(&reject_only),
+        "failover strictly reduces the effective p99 vs reject-only"
+    );
+    // the cold region actually served hopped-in traffic
+    assert!(failover.summary.regions[1].failover_in > 0);
+
+    // queue-in-place serves everything but pays the backlog in its tail
+    assert_eq!(queue_only.summary.rejected_count, 0);
+    let p99_queue = queue_only.summary.latency.unwrap().p99;
+    let p99_served_failover = failover.summary.latency.unwrap().p99;
+    assert!(
+        p99_served_failover < p99_queue,
+        "re-routing must beat waiting in place at p99 ({p99_served_failover} vs {p99_queue})"
+    );
+    // conservation spot-check: queue waits show up in records
+    assert!(queue_only
+        .records
+        .iter()
+        .flatten()
+        .any(|r| r.throttle_wait_ms > 0.0));
+}
+
+// ------------------------------------------------- feedback composition
+
+#[test]
+fn feedback_observe_composes_with_failover() {
+    // satellite pin: realized outcomes correct the *serving* region's
+    // belief state. In hub mode every served cloud execution feeds exactly
+    // its serving region's hub — failed-over tasks included — and the
+    // rejecting region's hub absorbs nothing for them. Rejected tasks
+    // observe nothing anywhere. Shard invariance must survive the closed
+    // loop in both CIL modes.
+    let meta = meta();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let mk = |shards| {
+            let topo = capped_duo(3, ThrottlePolicy::Reject, true).with_cil_mode(cil);
+            let fs = fd_fleet(10, 8_000.0, topo)
+                .with_shards(shards)
+                .with_feedback(FeedbackMode::Observe);
+            fleet::run(&meta, &fs).unwrap()
+        };
+        let base = mk(1);
+        assert!(base.summary.failover_hops_total > 0, "{cil:?}: failover must engage");
+        for shards in [2usize, 4] {
+            assert_records_identical(&base, &mk(shards), &format!("{cil:?} feedback+failover"));
+        }
+        if cil == CilMode::Hub {
+            // exactly one hub observation per served cloud execution, in
+            // the serving region
+            let mut served_per_region = vec![0u64; 2];
+            for r in base.records.iter().flatten() {
+                if !r.rejected {
+                    if let Some(region) = region_of(&meta, r.placement) {
+                        served_per_region[region] += 1;
+                    }
+                }
+            }
+            assert_eq!(
+                base.hub_observations, served_per_region,
+                "hub observations land in the serving region, one per execution"
+            );
+            // denied placements retract their phantom beliefs from the
+            // REJECTING region's hub — the saturated region must not stay
+            // warm-attractive on beliefs for containers that never started
+            assert!(
+                base.hub_retractions[0] > 0,
+                "the capped region's hub must see retractions"
+            );
+            assert_eq!(base.hub_retractions[1], 0, "the open region denies nothing");
+        }
+    }
+}
+
+// ------------------------------------------------------------- soak
+
+/// 10-epoch outage storm: caps + rate limits + queueing + failover +
+/// region blackouts + correlated device outages, all at once, replayed
+/// across shard counts and epoch lengths as a nondeterminism smoke test.
+/// Ignored by default (slow); run via `make soak` or
+/// `cargo test --test resilience -- --ignored`.
+#[test]
+#[ignore]
+fn soak_outage_storm_ten_epochs() {
+    let meta = meta();
+    let mk = |shards: usize, epoch_ms: f64| {
+        let mut topo = TopologySpec::parse("triad")
+            .unwrap()
+            .with_throttle(ThrottlePolicy::Queue { max_wait_ms: 5_000.0 })
+            .with_failover(true)
+            .with_outages(vec![
+                OutageWindow { region: 0, start_ms: 4_000.0, end_ms: 8_000.0 },
+                OutageWindow { region: 1, start_ms: 10_000.0, end_ms: 13_000.0 },
+                OutageWindow { region: 0, start_ms: 15_000.0, end_ms: 16_000.0 },
+            ]);
+        topo.regions[0].max_concurrent = Some(6);
+        topo.regions[1].max_concurrent = Some(8);
+        topo.regions[2].max_rps = Some(10.0);
+        let fs = FleetSettings::new(30)
+            .with_seed(99)
+            .with_duration_ms(20_000.0)
+            .with_epoch_ms(epoch_ms)
+            .with_scenario(FleetScenario::Outage {
+                period_ms: 6_000.0,
+                down_ms: 2_500.0,
+                frac: 0.4,
+            })
+            .with_rate_mult(1.3)
+            .with_topology(topo)
+            .with_shards(shards);
+        fleet::run(&meta, &fs).unwrap()
+    };
+    let base = mk(1, 2_000.0);
+    assert!(
+        base.summary.failover_hops_total > 0 && base.region_queued.iter().sum::<u64>() > 0,
+        "the storm must exercise both failover and queueing"
+    );
+    for shards in [3usize, 5] {
+        assert_records_identical(&base, &mk(shards, 2_000.0), &format!("storm {shards} shards"));
+    }
+    // private CIL mode is the default for `triad` — epoch length must not
+    // leak either
+    assert_records_identical(&base, &mk(2, 5_000.0), "storm epoch 5 s");
+    // and the whole storm replays bit-for-bit
+    assert_records_identical(&base, &mk(1, 2_000.0), "storm replay");
+}

@@ -146,7 +146,7 @@ fn solo_topology(n_configs: usize) -> Arc<ResolvedTopology> {
         regions: vec![RegionSettings::new("solo", 0.0)],
         cross_penalty_ms: 0.0,
         routing_jitter_sigma: 0.0,
-        n_configs,
+        ..ResolvedTopology::single(n_configs)
     })
 }
 
