@@ -3,7 +3,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts verify soak
+.PHONY: artifacts test-python clean-artifacts verify soak record-replay
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
@@ -22,6 +22,21 @@ verify:
 # default; this target opts in.
 soak:
 	cd rust && cargo test --release --test resilience -- --ignored --nocapture
+
+# Record → replay round-trip through the CLI: record a small fleet's event
+# stream, re-drive the identical fleet from its own recording (--replay
+# accepts the recorded events file directly), and require the two printed
+# fingerprints to match — the bitwise-reproduction guarantee end to end.
+# Assumes `make artifacts` has run.
+record-replay:
+	cd rust && cargo run --release --quiet -- fleet --devices 8 --duration-s 6 \
+		--scenario poisson --record /tmp/skedge-record.jsonl | tee /tmp/skedge-record.out
+	cd rust && cargo run --release --quiet -- fleet --devices 8 --duration-s 6 \
+		--replay /tmp/skedge-record.jsonl --record /tmp/skedge-replay.jsonl | tee /tmp/skedge-replay.out
+	@a=$$(grep '^fingerprint' /tmp/skedge-record.out); \
+	b=$$(grep '^fingerprint' /tmp/skedge-replay.out); \
+	if [ "$$a" = "$$b" ]; then echo "record-replay: round trip reproduced ($$a)"; \
+	else echo "record-replay: MISMATCH: recorded '$$a' vs replayed '$$b'" >&2; exit 1; fi
 
 test-python:
 	cd python && python3 -m pytest -q tests

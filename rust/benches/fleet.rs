@@ -51,6 +51,39 @@ fn main() -> anyhow::Result<()> {
         rows.push((devices, n_tasks, tasks_per_s));
     }
 
+    // retained vs streaming aggregation at the largest sweep size: the
+    // streaming fold keeps O(devices + sketch) state instead of every
+    // per-task record, so this isolates the cost/benefit of `--stream-metrics`
+    let devices = *DEVICE_SWEEP.last().unwrap();
+    section(&format!(
+        "aggregation: retained records vs --stream-metrics ({devices} devices)"
+    ));
+    let mut agg_rows = Vec::new();
+    for (label, stream) in [("retained", false), ("streaming", true)] {
+        let fs = FleetSettings::new(devices)
+            .with_duration_ms(DURATION_MS)
+            .with_shards(SHARDS)
+            .with_seed(2020)
+            .with_stream_metrics(stream);
+        let inits = scenario::build_fleet(&meta, &fs)?;
+        let n_tasks: usize = inits.iter().map(|d| d.tasks.len()).sum();
+        let mut per_run = Vec::with_capacity(2);
+        for _ in 0..2 {
+            let inits = inits.clone();
+            let t0 = Instant::now();
+            black_box(shard::run_fleet(&meta, inits, &fs)?);
+            per_run.push(t0.elapsed().as_secs_f64());
+        }
+        per_run.sort_by(f64::total_cmp);
+        let secs = per_run[0];
+        let tasks_per_s = n_tasks as f64 / secs.max(1e-9);
+        println!(
+            "{label:>10}   {:>8} tasks   {:>10.3} s/run   {:>12.0} tasks/s",
+            n_tasks, secs, tasks_per_s
+        );
+        agg_rows.push((label, n_tasks, tasks_per_s));
+    }
+
     // record the baseline for future performance PRs
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"fleet\",\n");
@@ -63,6 +96,15 @@ fn main() -> anyhow::Result<()> {
         let comma = if i + 1 < rows.len() { "," } else { "" };
         json.push_str(&format!(
             "    {{\"devices\": {devices}, \"tasks\": {tasks}, \"tasks_per_s\": {tps:.1}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"aggregation_devices\": {devices},\n"));
+    json.push_str("  \"aggregation\": [\n");
+    for (i, (label, tasks, tps)) in agg_rows.iter().enumerate() {
+        let comma = if i + 1 < agg_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"mode\": \"{label}\", \"tasks\": {tasks}, \"tasks_per_s\": {tps:.1}}}{comma}\n"
         ));
     }
     json.push_str("  ]\n}\n");

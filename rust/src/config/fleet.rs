@@ -37,6 +37,10 @@ pub enum FleetScenario {
     /// boundaries — edge sites fail together — with per-window membership),
     /// after which the affected devices recover
     Outage { period_ms: f64, down_ms: f64, frac: f64 },
+    /// arrival times come from an external trace
+    /// ([`FleetSettings::replay_trace`]) instead of a generative process —
+    /// the record/replay inverse (`--replay PATH`)
+    Replay,
 }
 
 impl FleetScenario {
@@ -65,9 +69,10 @@ impl FleetScenario {
                 down_ms: 5_000.0,
                 frac: 0.5,
             }),
+            "replay" => Ok(FleetScenario::Replay),
             _ => bail!(
                 "unknown scenario `{s}` (poisson | diurnal | diurnal-tz | burst | churn | \
-                 flash | drift | outage)"
+                 flash | drift | outage | replay)"
             ),
         }
     }
@@ -106,6 +111,7 @@ impl FleetScenario {
                     period_ms / 1000.0
                 )
             }
+            FleetScenario::Replay => "replay(recorded trace)".to_string(),
         }
     }
 }
@@ -141,6 +147,14 @@ pub struct FleetSettings {
     /// each epoch barrier. Off = pure predicted-outcome CILs, pinned
     /// bit-identical to the pre-feedback fleet.
     pub feedback: FeedbackMode,
+    /// record the typed task-event stream during the run (`--record`)
+    pub record_events: bool,
+    /// fold records into streaming online summaries instead of retaining
+    /// them (`--stream-metrics`)
+    pub stream_metrics: bool,
+    /// the arrival trace driving `FleetScenario::Replay` (canonical order;
+    /// shared cheaply across shards)
+    pub replay_trace: Option<std::sync::Arc<Vec<crate::obs::replay::ReplayArrival>>>,
 }
 
 impl FleetSettings {
@@ -164,11 +178,35 @@ impl FleetSettings {
             network_jitter_sigma: 0.25,
             topology: None,
             feedback: FeedbackMode::Off,
+            record_events: false,
+            stream_metrics: false,
+            replay_trace: None,
         }
     }
 
     pub fn with_feedback(mut self, f: FeedbackMode) -> Self {
         self.feedback = f;
+        self
+    }
+
+    pub fn with_recording(mut self, on: bool) -> Self {
+        self.record_events = on;
+        self
+    }
+
+    pub fn with_stream_metrics(mut self, on: bool) -> Self {
+        self.stream_metrics = on;
+        self
+    }
+
+    /// Drive the fleet from an arrival trace: sets the scenario to
+    /// [`FleetScenario::Replay`] and attaches the (canonical-order) rows.
+    pub fn with_replay_trace(
+        mut self,
+        rows: std::sync::Arc<Vec<crate::obs::replay::ReplayArrival>>,
+    ) -> Self {
+        self.scenario = FleetScenario::Replay;
+        self.replay_trace = Some(rows);
         self
     }
 
@@ -281,6 +319,8 @@ mod tests {
         ));
         assert!(FleetScenario::parse("outage").unwrap().label().contains("dark"));
         assert!(FleetScenario::parse("drift").unwrap().label().contains("drift"));
+        assert_eq!(FleetScenario::parse("replay").unwrap(), FleetScenario::Replay);
+        assert!(FleetScenario::Replay.label().contains("replay"));
         assert!(FleetScenario::parse("nope").is_err());
         assert!(FleetScenario::Poisson.label().contains("poisson"));
         assert!(FleetScenario::parse("tz").unwrap().label().contains("zones"));

@@ -28,6 +28,7 @@ use crate::config::{ExperimentSettings, Meta};
 use crate::engine::{flatten_region_candidates, DecisionEngine};
 use crate::metrics::TaskRecord;
 use crate::models::RawPrediction;
+use crate::obs::event::{EventMeta, Stages, TaskEvent};
 use crate::platform::containers::StartKind;
 use crate::platform::greengrass::EdgeExecutor;
 use crate::platform::lambda::{CloudExecution, CloudPlatform};
@@ -261,6 +262,11 @@ pub struct Device<'a> {
     seq: u64,
     /// attach engine-ranked failover alternates to cloud requests
     failover: bool,
+    /// emit lifecycle events into `events` (off by default; `--record`)
+    pub recording: bool,
+    /// buffered device-side events of the current epoch — the runner
+    /// drains these (`std::mem::take`) into its `Recorder` at each barrier
+    pub events: Vec<TaskEvent>,
 }
 
 impl<'a> Device<'a> {
@@ -335,6 +341,8 @@ impl<'a> Device<'a> {
             peak_edge_queue: 0,
             seq: 0,
             failover,
+            recording: false,
+            events: Vec::new(),
         })
     }
 
@@ -365,6 +373,34 @@ impl<'a> Device<'a> {
             allowed_cost: decision.allowed_cost,
             feasible_found: decision.feasible_found,
         };
+        // events carry the pre-increment seq: it equals the CloudRequest's
+        // seq for cloud placements (edge tasks share the next one, with the
+        // strictly increasing arrival time disambiguating)
+        let ev_seq = self.seq;
+        if self.recording {
+            let meta = EventMeta::new(now, self.profile.id, &self.profile.app, ev_seq, task.id);
+            self.events.push(TaskEvent::Arrival {
+                meta: meta.clone(),
+                bytes: a.bytes,
+                home: None,
+            });
+            let (edge, region, mem_mb) = match decision.placement {
+                Placement::Edge => (true, None, 0.0),
+                Placement::Cloud(flat) => {
+                    let (region, j) = self.router.split(flat);
+                    (false, Some(region), self.predictor.mems[j])
+                }
+            };
+            self.events.push(TaskEvent::Decision {
+                meta,
+                edge,
+                region,
+                mem_mb,
+                predicted_e2e_ms: fields.predicted_e2e_ms,
+                predicted_cost: fields.predicted_cost,
+                feasible: fields.feasible_found,
+            });
+        }
 
         match decision.placement {
             Placement::Edge => {
@@ -372,6 +408,29 @@ impl<'a> Device<'a> {
                     self.edge.submit(now, a.edge_comp, pred.edge_comp_ms);
                 self.peak_edge_queue = self.peak_edge_queue.max(self.edge.queue_len());
                 let stored = comp_end + a.iotup + a.edge_store;
+                if self.recording {
+                    self.events.push(TaskEvent::Completion {
+                        meta: EventMeta::new(
+                            stored,
+                            self.profile.id,
+                            &self.profile.app,
+                            ev_seq,
+                            task.id,
+                        ),
+                        edge: true,
+                        region: None,
+                        warm: None,
+                        e2e_ms: stored - now,
+                        cost: 0.0,
+                        stages: Stages {
+                            edge_wait: wait,
+                            edge_comp: a.edge_comp,
+                            iotup: a.iotup,
+                            edge_store: a.edge_store,
+                            ..Default::default()
+                        },
+                    });
+                }
                 Ok(Dispatch::Edge(EdgeOutcome {
                     record: TaskRecord {
                         id: task.id,

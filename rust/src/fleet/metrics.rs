@@ -237,6 +237,85 @@ impl FleetSummary {
             fingerprint: h,
         }
     }
+
+    /// Assemble the fleet view from a finished streaming fold
+    /// (`--stream-metrics`): no per-task records exist, so every field
+    /// comes from the mergeable accumulators. Counts match the retained
+    /// pass exactly; the latency tail comes from the quantile sketch
+    /// (within its documented relative-error bound), and `fingerprint` is
+    /// the order-invariant streaming digest — its own domain, never
+    /// comparable to a retained (order-sensitive) fingerprint.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_streaming(
+        stream: &crate::obs::stream::StreamingSummary,
+        n_devices: usize,
+        pool_high_water: Vec<usize>,
+        peak_edge_queue: usize,
+        region_names: &[String],
+    ) -> FleetSummary {
+        let n_regions = region_names.len().max(1);
+        assert_eq!(stream.regions.len(), n_regions);
+        let mut regions: Vec<RegionBreakdown> = stream
+            .regions
+            .iter()
+            .enumerate()
+            .map(|(r, c)| RegionBreakdown {
+                region: r,
+                name: region_names.get(r).cloned().unwrap_or_default(),
+                cloud_count: c.cloud as usize,
+                warm: c.warm as usize,
+                cold: c.cold as usize,
+                mismatches: c.mismatches as usize,
+                rejected: c.rejected as usize,
+                failover_in: c.failover_in as usize,
+                max_pool_high_water: 0,
+            })
+            .collect();
+        let chunk = if pool_high_water.is_empty() {
+            0
+        } else {
+            pool_high_water.len() / n_regions
+        };
+        if chunk > 0 {
+            for (r, br) in regions.iter_mut().enumerate() {
+                br.max_pool_high_water = pool_high_water[r * chunk..(r + 1) * chunk]
+                    .iter()
+                    .copied()
+                    .max()
+                    .unwrap_or(0);
+            }
+        }
+        FleetSummary {
+            n_devices,
+            n_tasks: stream.n as usize,
+            edge_count: stream.edge as usize,
+            cloud_count: stream.cloud as usize,
+            rejected_count: stream.rejected as usize,
+            failover_hops_total: stream.failover_hops,
+            avg_e2e_ms: stream.e2e.mean(),
+            latency: stream.latency(),
+            deadline_violation_pct: stream.deadline_violations as f64
+                / stream.served().max(1) as f64
+                * 100.0,
+            total_actual_cost: stream.cost.sum(),
+            total_predicted_cost: stream.predicted_cost.sum(),
+            cloud_actual_warm: stream.warm as usize,
+            cloud_actual_cold: stream.cold as usize,
+            warm_cold_mismatches: stream.mismatches as usize,
+            max_pool_high_water: pool_high_water.iter().copied().max().unwrap_or(0),
+            pool_high_water,
+            peak_edge_queue,
+            regions,
+            fingerprint: stream.fingerprint_xor,
+        }
+    }
+
+    /// Fold the recorded-event count into the determinism fingerprint —
+    /// called only when `--record` is on, so default-off runs keep their
+    /// fingerprints byte for byte.
+    pub fn fold_recorded_events(&mut self, n_events: u64) {
+        self.fingerprint = mix(self.fingerprint, n_events);
+    }
 }
 
 const FNV_OFFSET: u64 = 0xcbf29ce484222325;

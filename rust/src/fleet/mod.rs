@@ -26,6 +26,12 @@
 //!  * [`metrics`] — per-device and fleet-wide summaries: p50/p95/p99
 //!    latency, deadline-violation rate, pool-concurrency high-water marks,
 //!    aggregate cost, and a determinism fingerprint.
+//!
+//! Observability rides the same stepper: with recording on, devices and
+//! the coordinator emit typed [`crate::obs::event::TaskEvent`]s merged
+//! into one canonical shard-invariant stream, and `--stream-metrics`
+//! replaces record retention with the mergeable online summaries in
+//! [`crate::obs::stream`].
 
 pub mod device;
 pub mod metrics;
@@ -54,10 +60,17 @@ pub struct FleetOutcome {
     /// assembly core — revisit if fleet record volumes grow much past the
     /// current ~10^5-task runs.
     pub run: RunOutcome,
-    /// per-device task records, devices in canonical order
+    /// per-device task records, devices in canonical order (empty in
+    /// `--stream-metrics` mode, which never retains records)
     pub records: Vec<Vec<TaskRecord>>,
+    /// per-device aggregates (empty in `--stream-metrics` mode)
     pub device_summaries: Vec<DeviceSummary>,
     pub summary: FleetSummary,
+    /// the recorded task-event stream in canonical
+    /// `(time, device, seq)` order — empty unless recording was on
+    pub events: Vec<crate::obs::event::TaskEvent>,
+    /// the mergeable streaming fold (`--stream-metrics` only)
+    pub stream: Option<crate::obs::stream::StreamingSummary>,
     /// per-region belief updates absorbed by the hub CILs (all zero in
     /// private-CIL mode)
     pub hub_updates: Vec<u64>,
@@ -76,6 +89,15 @@ pub struct FleetOutcome {
     pub region_queued: Vec<u64>,
     /// virtual time at which the last event fired
     pub sim_end_ms: f64,
+}
+
+impl FleetOutcome {
+    /// How many per-task records this outcome retains anywhere — the
+    /// streaming-mode accounting hook: `--stream-metrics` runs must report
+    /// exactly 0 (asserted in `rust/tests/events.rs`).
+    pub fn retained_records(&self) -> usize {
+        self.run.records.len() + self.records.iter().map(Vec::len).sum::<usize>()
+    }
 }
 
 /// Build the fleet described by `fs` and run it to completion.

@@ -231,6 +231,9 @@ pub fn arrival_times(fs: &FleetSettings, rate_per_s: f64, dseed: u64, phase_ms: 
                 })
                 .collect()
         }
+        // replay arrivals come from the trace, not a generative process;
+        // `build_fleet` substitutes them per device
+        FleetScenario::Replay => Vec::new(),
     }
 }
 
@@ -361,14 +364,45 @@ pub fn build_fleet(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceInit>> {
     }
     let profiles = build_profiles(meta, fs)?;
     let homes = assign_regions(fs, profiles.len());
+    // replay scenario: arrival times (and app identities) come from the
+    // attached trace instead of a generative process. Everything else —
+    // actuals, T_idl, jitter multipliers — is still derived from the fleet
+    // seed, which is what makes record → replay reproduce a run bitwise.
+    let replay: Option<(Vec<Vec<f64>>, Vec<Option<String>>)> = match fs.scenario {
+        FleetScenario::Replay => {
+            let rows = fs.replay_trace.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "replay scenario needs a trace (FleetSettings::with_replay_trace)"
+                )
+            })?;
+            Some((
+                crate::obs::replay::per_device_times(rows, fs.devices)?,
+                crate::obs::replay::per_device_apps(rows, fs.devices)?,
+            ))
+        }
+        _ => None,
+    };
     let mut inits = Vec::with_capacity(profiles.len());
-    for profile in profiles {
+    for mut profile in profiles {
+        if let Some((_, apps)) = &replay {
+            // the trace names each device's app; devices without trace
+            // arrivals keep their generated app (and get no tasks)
+            if let Some(app) = &apps[profile.id] {
+                if !meta.apps.contains_key(app) {
+                    bail!("trace device {} runs unknown app `{app}`", profile.id);
+                }
+                profile.app = app.clone();
+            }
+        }
         let app = meta.app(&profile.app);
         let dseed = device_seed(fs.seed, profile.id);
         let home = homes[profile.id];
         let phase = device_phase_ms(fs, profile.id, home);
         let region = build_region_init(fs, profile.id, home);
-        let times = arrival_times(fs, app.arrival_rate_per_s, dseed, phase);
+        let times = match &replay {
+            Some((times, _)) => times[profile.id].clone(),
+            None => arrival_times(fs, app.arrival_rate_per_s, dseed, phase),
+        };
         let mut sampler = GroundTruthSampler::new(meta, &profile.app, dseed ^ ACTUALS_SALT);
         let mut tasks = Vec::with_capacity(times.len());
         for (id, t) in times.into_iter().enumerate() {
@@ -745,6 +779,50 @@ mod tests {
             assert_eq!(init.region.jitter, vec![1.0]);
             assert!(init.region.moves.is_empty());
         }
+    }
+
+    #[test]
+    fn replay_scenario_reproduces_generated_fleet_bitwise() {
+        use crate::obs::replay::{canonicalize, ReplayArrival};
+        let meta = meta();
+        let fs = FleetSettings::new(5)
+            .with_seed(3)
+            .with_duration_ms(5_000.0)
+            .with_jitter(0.3, 0.3);
+        let orig = build_fleet(&meta, &fs).unwrap();
+        let rows: Vec<ReplayArrival> = orig
+            .iter()
+            .flat_map(|init| {
+                init.tasks.iter().map(|t| ReplayArrival {
+                    device: init.profile.id,
+                    app: init.profile.app.clone(),
+                    t_ms: t.arrive_ms,
+                    bytes: t.actuals.bytes,
+                    home: None,
+                })
+            })
+            .collect();
+        let rows = canonicalize(rows).unwrap();
+        let fs2 = fs.clone().with_replay_trace(std::sync::Arc::new(rows));
+        let re = build_fleet(&meta, &fs2).unwrap();
+        assert_eq!(orig.len(), re.len());
+        for (a, b) in orig.iter().zip(&re) {
+            assert_eq!(a.profile.app, b.profile.app);
+            assert_eq!(a.tasks.len(), b.tasks.len());
+            for (x, y) in a.tasks.iter().zip(&b.tasks) {
+                assert_eq!(x.arrive_ms.to_bits(), y.arrive_ms.to_bits());
+                assert_eq!(x.actuals.edge_comp.to_bits(), y.actuals.edge_comp.to_bits());
+                assert_eq!(x.actuals.upld.to_bits(), y.actuals.upld.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn replay_scenario_without_trace_is_an_error() {
+        let meta = meta();
+        let mut fs = FleetSettings::new(2).with_scenario(FleetScenario::Replay);
+        fs.replay_trace = None;
+        assert!(build_fleet(&meta, &fs).is_err());
     }
 
     #[test]

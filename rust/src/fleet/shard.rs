@@ -56,7 +56,11 @@ use crate::region::{DeviceRouter, RegionTopology, ResolvedTopology};
 use crate::runtime::{RunOutcome, XlaEngine};
 use crate::sim::events::{Event, EventQueue};
 
+use crate::obs::event::{EventMeta, Stages, TaskEvent};
+use crate::obs::sink::Recorder;
+use crate::obs::stream::StreamingSummary;
 use crate::platform::admission::Admission;
+use crate::platform::containers::StartKind;
 
 use super::device::{self, CloudObservation, CloudRequest, CloudServe, Device, Dispatch};
 use super::metrics::{DeviceSummary, FleetSummary};
@@ -125,6 +129,9 @@ struct DeviceRun<'a> {
     next_unscored: usize,
     /// whether this device scores through the shared batched path
     batched: bool,
+    /// effective deadline δ — the streaming fold counts per-device
+    /// deadline violations shard-side
+    deadline_ms: f64,
 }
 
 impl<'a> DeviceRun<'a> {
@@ -147,7 +154,14 @@ impl<'a> DeviceRun<'a> {
                         Dispatch::Edge(e) => {
                             self.queue.schedule(e.comp_end_ms, Event::EdgeCompDone { id });
                             self.queue.schedule(e.stored_ms, Event::EdgeStored { id });
-                            out.edge_records.push((self.device.profile.id, e.record));
+                            // streaming mode folds the record here and
+                            // drops it — the shard never retains records
+                            match &mut out.stream {
+                                Some(s) => s.fold(&e.record, self.deadline_ms),
+                                None => {
+                                    out.edge_records.push((self.device.profile.id, e.record))
+                                }
+                            }
                         }
                         Dispatch::Cloud(req) => out.requests.push(req),
                     }
@@ -172,10 +186,18 @@ struct EpochOutput {
     events_left: usize,
     peak_edge_queue: usize,
     last_event_ms: f64,
+    /// lifecycle events emitted by this shard's devices this epoch
+    /// (recording mode only; the coordinator's `Recorder` sorts the merged
+    /// stream into canonical order, so per-shard emission order is free)
+    events: Vec<TaskEvent>,
+    /// this epoch's shard-side streaming fold (`--stream-metrics` only);
+    /// boxed to keep the per-epoch message small in retained mode
+    stream: Option<Box<StreamingSummary>>,
 }
 
 impl EpochOutput {
-    fn new() -> Self {
+    /// `stream_dims` is `Some((n_regions, n_configs))` in streaming mode.
+    fn new(stream_dims: Option<(usize, usize)>) -> Self {
         EpochOutput {
             edge_records: Vec::new(),
             requests: Vec::new(),
@@ -183,6 +205,8 @@ impl EpochOutput {
             events_left: 0,
             peak_edge_queue: 0,
             last_event_ms: 0.0,
+            events: Vec::new(),
+            stream: stream_dims.map(|(r, c)| Box::new(StreamingSummary::new(r, c))),
         }
     }
 }
@@ -252,6 +276,10 @@ fn build_run<'a>(
         .get(&(init.profile.app.clone(), init.settings.backend))
         .cloned();
     let batched = shared.is_some();
+    let deadline_ms = init
+        .settings
+        .deadline_ms
+        .unwrap_or(meta.app(&init.profile.app).deadline_ms);
     let device = Device::build(meta, &init.settings, init.profile, shared, router)?;
     let mut queue = EventQueue::new();
     for t in &init.tasks {
@@ -267,12 +295,14 @@ fn build_run<'a>(
         raw_cache,
         next_unscored: 0,
         batched,
+        deadline_ms,
     })
 }
 
 /// Worker body: build this shard's devices, then serve epoch commands until
 /// the command channel closes. Errors are reported through the result
 /// channel; the worker never panics on expected failure modes.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     meta: &Meta,
     topo: Arc<ResolvedTopology>,
@@ -281,12 +311,17 @@ fn worker_loop(
     inits: Vec<DeviceInit>,
     commands: Receiver<EpochCmd>,
     results: Sender<Result<EpochOutput, String>>,
+    record: bool,
+    stream_dims: Option<(usize, usize)>,
 ) {
     let mut runs: Vec<DeviceRun> = Vec::with_capacity(inits.len());
     for init in inits {
         let dev_id = init.profile.id;
         match build_run(meta, &topo, mode, &bank, init) {
-            Ok(run) => runs.push(run),
+            Ok(mut run) => {
+                run.device.recording = record;
+                runs.push(run);
+            }
             Err(e) => {
                 let _ = results.send(Err(format!("building device {dev_id}: {e:#}")));
                 return;
@@ -316,12 +351,15 @@ fn worker_loop(
             let _ = results.send(Err(format!("epoch bulk scoring: {e:#}")));
             return;
         }
-        let mut out = EpochOutput::new();
+        let mut out = EpochOutput::new(stream_dims);
         for run in &mut runs {
             if let Err(e) = run.step_until(cmd.epoch_end, &mut out) {
                 let _ = results
                     .send(Err(format!("device {}: {e:#}", run.device.profile.id)));
                 return;
+            }
+            if record {
+                out.events.append(&mut run.device.events);
             }
         }
         out.arrivals_left = runs.iter().map(|r| r.arrivals_left).sum();
@@ -332,6 +370,43 @@ fn worker_loop(
             return; // coordinator gone
         }
     }
+}
+
+/// Where finished task records land: the retained per-device slot table
+/// (the default), or the streaming fold (`--stream-metrics` — records are
+/// folded and dropped, never stored). The optional `Recorder` buffers the
+/// `--record` event stream; its final sort makes recording shard-invariant
+/// regardless of arrival order here.
+struct Collector {
+    slots: Vec<Vec<Option<TaskRecord>>>,
+    stream: Option<StreamingSummary>,
+    deadlines: Vec<f64>,
+    apps: Vec<String>,
+    recorder: Option<Recorder>,
+}
+
+impl Collector {
+    fn put(&mut self, dev: usize, task: usize, rec: TaskRecord) {
+        match &mut self.stream {
+            Some(s) => s.fold(&rec, self.deadlines[dev]),
+            None => self.slots[dev][task] = Some(rec),
+        }
+    }
+
+    fn record(&mut self, ev: TaskEvent) {
+        if let Some(r) = &mut self.recorder {
+            r.push(ev);
+        }
+    }
+
+    fn recording(&self) -> bool {
+        self.recorder.is_some()
+    }
+}
+
+/// Event meta for coordinator-side emissions about one request's task.
+fn req_meta(apps: &[String], req: &CloudRequest, t_ms: f64) -> EventMeta {
+    EventMeta::new(t_ms, req.device_id, &apps[req.device_id], req.seq, req.task_id)
 }
 
 /// One barrier round: command every shard to step to `epoch_end` (shipping
@@ -345,7 +420,7 @@ fn barrier(
     epoch_end: f64,
     hub: Option<Arc<Vec<Cil>>>,
     obs: Vec<CloudObservation>,
-    records: &mut [Vec<Option<TaskRecord>>],
+    col: &mut Collector,
     fresh: &mut Vec<CloudRequest>,
     peak_edge_queue: &mut usize,
     sim_end: &mut f64,
@@ -379,7 +454,15 @@ fn barrier(
             .map_err(|msg| anyhow!("fleet shard failed: {msg}"))?;
         for (dev, rec) in out.edge_records {
             let slot = rec.id;
-            records[dev][slot] = Some(rec);
+            col.put(dev, slot, rec);
+        }
+        if let Some(s) = out.stream {
+            if let Some(cs) = &mut col.stream {
+                cs.merge(&s);
+            }
+        }
+        if let Some(r) = &mut col.recorder {
+            r.extend(out.events);
         }
         fresh.extend(out.requests);
         arrivals_left += out.arrivals_left;
@@ -497,7 +580,7 @@ fn merge_ready(
     pending: &mut Vec<PendingServe>,
     horizon: f64,
     topo: &mut RegionTopology,
-    records: &mut [Vec<Option<TaskRecord>>],
+    col: &mut Collector,
     sim_end: &mut f64,
     feedback: bool,
     hub_mode: bool,
@@ -538,11 +621,30 @@ fn merge_ready(
                 // regions; the record keeps the total)
                 region.admission.commit(at_ms, waited, exec.comp_end);
                 let j = item.serve.j;
-                region.pool_high_water[j] =
-                    region.pool_high_water[j].max(region.cloud.pool(j).live_count(at_ms));
+                let live = region.cloud.pool(j).live_count(at_ms);
+                if live > region.pool_high_water[j] {
+                    region.pool_high_water[j] = live;
+                    if col.recording() {
+                        let ev = TaskEvent::PoolHighWater {
+                            t_ms: at_ms,
+                            region: item.serve.region,
+                            config: j,
+                            live,
+                        };
+                        col.record(ev);
+                    }
+                }
                 *sim_end = sim_end.max(exec.stored_at);
                 if feedback {
                     let obs = CloudObservation::from_serve(&item.req, &item.serve, &exec);
+                    if col.recording() {
+                        let ev = TaskEvent::Observation {
+                            meta: req_meta(&col.apps, &item.req, exec.stored_at),
+                            region: item.serve.region,
+                            warm: obs.warm,
+                        };
+                        col.record(ev);
+                    }
                     if hub_mode {
                         // the SERVING region's hub learns the outcome; a
                         // failed-over request's belief tag belongs to the
@@ -553,17 +655,69 @@ fn merge_ready(
                         obs_out.push(obs);
                     }
                 }
-                records[item.req.device_id][item.req.task_id] =
-                    Some(device::complete_cloud_serve(&item.req, &exec, &item.serve));
+                let rec = device::complete_cloud_serve(&item.req, &exec, &item.serve);
+                if col.recording() {
+                    if item.serve.queue_wait_ms > 0.0 {
+                        let ev = TaskEvent::QueueWait {
+                            meta: req_meta(&col.apps, &item.req, at_ms),
+                            region: item.serve.region,
+                            waited_ms: item.serve.queue_wait_ms,
+                        };
+                        col.record(ev);
+                    }
+                    let start_ev = TaskEvent::ContainerStart {
+                        meta: req_meta(&col.apps, &item.req, exec.triggered_at),
+                        region: item.serve.region,
+                        mem_mb: item.serve.mem_mb,
+                        warm: exec.kind == StartKind::Warm,
+                        start_ms: exec.start_ms,
+                    };
+                    col.record(start_ev);
+                    let done_ev = TaskEvent::Completion {
+                        meta: req_meta(&col.apps, &item.req, exec.stored_at),
+                        edge: false,
+                        region: Some(item.serve.region),
+                        warm: rec.warm_actual,
+                        e2e_ms: rec.actual_e2e_ms,
+                        cost: rec.actual_cost,
+                        stages: Stages {
+                            upld: item.req.upld_ms,
+                            routing: item.req.routing_ms,
+                            extra_routing: item.serve.extra_routing_ms,
+                            queue_wait: item.serve.queue_wait_ms,
+                            start: exec.start_ms,
+                            comp: item.serve.comp_ms,
+                            store: item.req.store_ms,
+                            ..Default::default()
+                        },
+                    };
+                    col.record(done_ev);
+                }
+                col.put(item.req.device_id, item.req.task_id, rec);
             }
             Admission::Reject => {
                 region.admission.reject();
+                if col.recording() {
+                    let ev = TaskEvent::AdmissionDenied {
+                        meta: req_meta(&col.apps, &item.req, item.attempt_ms),
+                        region: item.serve.region,
+                        hop: item.serve.hops,
+                    };
+                    col.record(ev);
+                }
                 // closed loop: the first-choice region denied a placement
                 // whose belief `note_placement` already recorded there —
                 // retract the phantom container so the denied region does
                 // not stay warm-attractive (alternates never stamped a
                 // belief, so this fires at most once per request)
                 if feedback && item.serve.hops == 0 {
+                    if col.recording() {
+                        let ev = TaskEvent::Retraction {
+                            meta: req_meta(&col.apps, &item.req, item.attempt_ms),
+                            region: item.req.region,
+                        };
+                        col.record(ev);
+                    }
                     if hub_mode {
                         region.hub.retract(item.req.j, item.req.hub_tag);
                     } else {
@@ -575,14 +729,36 @@ fn merge_ready(
                     // queue time already spent in the denying region stays
                     // on the record (it is part of the realized e2e)
                     item.serve.queue_wait_ms += waited;
+                    let from_region = item.serve.region;
                     let (serve, added) = item.serve.hop(&alt);
                     item.serve = serve;
+                    if col.recording() {
+                        let ev = TaskEvent::FailoverHop {
+                            meta: req_meta(&col.apps, &item.req, item.attempt_ms),
+                            from_region,
+                            to_region: item.serve.region,
+                            hop: item.serve.hops,
+                            added_routing_ms: added,
+                        };
+                        col.record(ev);
+                    }
                     item.attempt_ms += added;
                     item.base_ms = item.attempt_ms;
                     insert_desc(&mut work, item);
                 } else {
-                    records[item.req.device_id][item.req.task_id] =
-                        Some(device::rejected_record(&item.req, &item.serve));
+                    if col.recording() {
+                        let ev = TaskEvent::Rejection {
+                            meta: req_meta(&col.apps, &item.req, item.attempt_ms),
+                            region: item.serve.region,
+                            hops: item.serve.hops,
+                        };
+                        col.record(ev);
+                    }
+                    col.put(
+                        item.req.device_id,
+                        item.req.task_id,
+                        device::rejected_record(&item.req, &item.serve),
+                    );
                 }
             }
         }
@@ -620,8 +796,26 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         .iter()
         .map(|d| d.settings.deadline_ms.unwrap_or(meta.app(&d.profile.app).deadline_ms))
         .collect();
-    let mut records: Vec<Vec<Option<TaskRecord>>> =
-        inits.iter().map(|d| vec![None; d.tasks.len()]).collect();
+    let expected_tasks: usize = inits.iter().map(|d| d.tasks.len()).sum();
+    let streaming = fs.stream_metrics;
+    let recording = fs.record_events;
+    let region_names = topo.names();
+    let n_regions = region_names.len();
+    // streaming mode never allocates the per-task slot table — the whole
+    // point is O(devices + sketch) collector state
+    let slots: Vec<Vec<Option<TaskRecord>>> = if streaming {
+        (0..n_devices).map(|_| Vec::new()).collect()
+    } else {
+        inits.iter().map(|d| vec![None; d.tasks.len()]).collect()
+    };
+    let mut col = Collector {
+        slots,
+        stream: streaming.then(|| StreamingSummary::new(n_regions, n_configs)),
+        deadlines: deadlines.clone(),
+        apps: apps.clone(),
+        recorder: recording.then(Recorder::new),
+    };
+    col.record(TaskEvent::ScenarioPhase { t_ms: 0.0, label: fs.scenario.label() });
 
     // partition devices round-robin (any partition yields identical results)
     let mut parts: Vec<Vec<DeviceInit>> = (0..n_shards).map(|_| Vec::new()).collect();
@@ -635,6 +829,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
     let mut sim_end = 0.0f64;
     let mut peak_edge_queue = 0usize;
 
+    let stream_dims = streaming.then_some((n_regions, n_configs));
     std::thread::scope(|scope| -> Result<()> {
         let mut cmd_txs = Vec::with_capacity(n_shards);
         let (res_tx, res_rx) =
@@ -645,7 +840,9 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
             let res_tx = res_tx.clone();
             let topo = resolved.clone();
             let bank = bank.clone();
-            scope.spawn(move || worker_loop(meta, topo, mode, bank, part, rx, res_tx));
+            scope.spawn(move || {
+                worker_loop(meta, topo, mode, bank, part, rx, res_tx, recording, stream_dims)
+            });
         }
         drop(res_tx);
 
@@ -657,11 +854,12 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         // the issuing devices with the next barrier command
         let mut carry_obs: Vec<CloudObservation> = Vec::new();
         let mut epoch_end = epoch_ms;
+        let mut epoch_idx: u64 = 0;
         loop {
             let mut fresh = Vec::new();
             let (arrivals_left, events_left) = barrier(
                 &cmd_txs, &res_rx, epoch_end, snapshots(&topo),
-                std::mem::take(&mut carry_obs), &mut records,
+                std::mem::take(&mut carry_obs), &mut col,
                 &mut fresh, &mut peak_edge_queue, &mut sim_end,
             )?;
             if hub_mode {
@@ -669,9 +867,11 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
             }
             pending.extend(fresh.into_iter().map(PendingServe::new));
             merge_ready(
-                &mut pending, epoch_end, &mut topo, &mut records, &mut sim_end,
+                &mut pending, epoch_end, &mut topo, &mut col, &mut sim_end,
                 feedback, hub_mode, &mut carry_obs,
             );
+            col.record(TaskEvent::EpochBarrier { t_ms: epoch_end, epoch: epoch_idx });
+            epoch_idx += 1;
             if arrivals_left == 0 {
                 // no arrival can emit further cloud requests; drain the
                 // remaining edge events in one unbounded pass and flush
@@ -679,13 +879,13 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
                     let mut fresh = Vec::new();
                     barrier(
                         &cmd_txs, &res_rx, f64::INFINITY, snapshots(&topo),
-                        std::mem::take(&mut carry_obs), &mut records,
+                        std::mem::take(&mut carry_obs), &mut col,
                         &mut fresh, &mut peak_edge_queue, &mut sim_end,
                     )?;
                     pending.extend(fresh.into_iter().map(PendingServe::new));
                 }
                 merge_ready(
-                    &mut pending, f64::INFINITY, &mut topo, &mut records, &mut sim_end,
+                    &mut pending, f64::INFINITY, &mut topo, &mut col, &mut sim_end,
                     feedback, hub_mode, &mut carry_obs,
                 );
                 break;
@@ -696,8 +896,56 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         Ok(())
     })?;
 
+    // the canonical-order recorded event stream (empty unless `--record`);
+    // the stable sort here is what makes recording shard-invariant
+    let events: Vec<TaskEvent> = match col.recorder.take() {
+        Some(rec) => rec.into_events(),
+        None => Vec::new(),
+    };
+    let hub_updates: Vec<u64> = topo.regions.iter().map(|r| r.hub.updates_absorbed).collect();
+    let hub_observations: Vec<u64> =
+        topo.regions.iter().map(|r| r.hub.observations_absorbed).collect();
+    let hub_retractions: Vec<u64> = topo.regions.iter().map(|r| r.hub.retractions).collect();
+    let region_rejections: Vec<u64> =
+        topo.regions.iter().map(|r| r.admission.rejected).collect();
+    let region_queued: Vec<u64> = topo.regions.iter().map(|r| r.admission.queued).collect();
+
+    if let Some(stream) = col.stream.take() {
+        // streaming tail: no records exist anywhere — every aggregate
+        // comes from the mergeable fold. The completeness check replaces
+        // the retained path's per-slot hole check.
+        if stream.n as usize != expected_tasks {
+            bail!(
+                "streaming fold saw {} records but the fleet ran {expected_tasks} tasks",
+                stream.n
+            );
+        }
+        let summary = FleetSummary::from_streaming(
+            &stream,
+            n_devices,
+            topo.flat_pool_high_water(),
+            peak_edge_queue,
+            &region_names,
+        );
+        let run = RunOutcome::summary_only(stream.to_summary(), stream.latency());
+        return Ok(FleetOutcome {
+            run,
+            records: Vec::new(),
+            device_summaries: Vec::new(),
+            summary,
+            events,
+            stream: Some(stream),
+            hub_updates,
+            hub_observations,
+            hub_retractions,
+            region_rejections,
+            region_queued,
+            sim_end_ms: sim_end,
+        });
+    }
+
     let mut final_records: Vec<Vec<TaskRecord>> = Vec::with_capacity(n_devices);
-    for (dev, recs) in records.into_iter().enumerate() {
+    for (dev, recs) in col.slots.into_iter().enumerate() {
         let v: Result<Vec<TaskRecord>> = recs
             .into_iter()
             .enumerate()
@@ -722,19 +970,16 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         &deadlines,
         topo.flat_pool_high_water(),
         peak_edge_queue,
-        &topo.names(),
+        &region_names,
         n_configs,
     );
-    let hub_updates = topo.regions.iter().map(|r| r.hub.updates_absorbed).collect();
-    let hub_observations = topo.regions.iter().map(|r| r.hub.observations_absorbed).collect();
-    let hub_retractions = topo.regions.iter().map(|r| r.hub.retractions).collect();
-    let region_rejections = topo.regions.iter().map(|r| r.admission.rejected).collect();
-    let region_queued = topo.regions.iter().map(|r| r.admission.queued).collect();
     Ok(FleetOutcome {
         run,
         records: final_records,
         device_summaries,
         summary,
+        events,
+        stream: None,
         hub_updates,
         hub_observations,
         hub_retractions,
@@ -837,6 +1082,114 @@ mod tests {
         assert_eq!(out.run.latency, out.summary.latency);
         assert_eq!(out.run.records.len(), out.records.iter().map(Vec::len).sum::<usize>());
         assert_eq!(out.hub_observations, vec![0], "feedback off never feeds the hub");
+    }
+
+    #[test]
+    fn streaming_mode_matches_retained_and_retains_nothing() {
+        let meta = meta();
+        let fs = FleetSettings::new(5)
+            .with_seed(17)
+            .with_duration_ms(6_000.0)
+            .with_shards(2)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson);
+        let retained = run(&meta, &fs);
+        let streamed = run(&meta, &fs.clone().with_stream_metrics(true));
+        assert_eq!(streamed.retained_records(), 0, "streaming must not retain records");
+        assert!(retained.retained_records() > 0);
+        // counts match the retained pass exactly
+        assert_eq!(streamed.summary.n_tasks, retained.summary.n_tasks);
+        assert_eq!(streamed.summary.edge_count, retained.summary.edge_count);
+        assert_eq!(streamed.summary.cloud_count, retained.summary.cloud_count);
+        assert_eq!(streamed.summary.rejected_count, retained.summary.rejected_count);
+        assert_eq!(streamed.summary.cloud_actual_warm, retained.summary.cloud_actual_warm);
+        assert_eq!(streamed.summary.cloud_actual_cold, retained.summary.cloud_actual_cold);
+        assert_eq!(
+            streamed.summary.deadline_violation_pct,
+            retained.summary.deadline_violation_pct
+        );
+        // exact sums agree with the retained totals to rounding noise
+        let rc = retained.summary.total_actual_cost;
+        assert!((streamed.summary.total_actual_cost - rc).abs() <= rc.abs() * 1e-12);
+        // min/max of the served e2e stream match the records exactly
+        let s = streamed.stream.as_ref().expect("streaming outcome carries the fold");
+        let mut e2e: Vec<f64> = retained
+            .run
+            .records
+            .iter()
+            .filter(|r| r.is_served())
+            .map(|r| r.actual_e2e_ms)
+            .collect();
+        e2e.sort_by(f64::total_cmp);
+        assert_eq!(s.e2e.min(), e2e[0]);
+        assert_eq!(s.e2e.max(), *e2e.last().unwrap());
+        // sketch tails track the exact tails within a loose sanity band
+        // (the tight bound vs exact order statistics is pinned in
+        // rust/tests/events.rs)
+        let lr = retained.summary.latency.unwrap();
+        let ls = streamed.summary.latency.unwrap();
+        assert!(ls.p50 <= ls.p95 && ls.p95 <= ls.p99);
+        assert!((ls.p99 - lr.p99).abs() <= lr.p99 * 0.05, "{} vs {}", ls.p99, lr.p99);
+    }
+
+    #[test]
+    fn streaming_is_shard_invariant() {
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(11)
+            .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_stream_metrics(true);
+        let base = run(&meta, &fs.clone().with_shards(1));
+        for shards in [2, 3] {
+            let other = run(&meta, &fs.clone().with_shards(shards));
+            assert_eq!(base.summary.fingerprint, other.summary.fingerprint,
+                       "{shards} shards diverged (streaming digest)");
+            assert_eq!(
+                base.summary.total_actual_cost.to_bits(),
+                other.summary.total_actual_cost.to_bits(),
+                "exact sums must be partition-invariant bitwise"
+            );
+            assert_eq!(base.summary.latency, other.summary.latency);
+        }
+    }
+
+    #[test]
+    fn recording_does_not_change_the_outcome() {
+        let meta = meta();
+        let fs = FleetSettings::new(4)
+            .with_seed(9)
+            .with_duration_ms(4_000.0)
+            .with_shards(2);
+        let base = run(&meta, &fs);
+        let rec = run(&meta, &fs.clone().with_recording(true));
+        assert_eq!(base.summary.fingerprint, rec.summary.fingerprint);
+        assert!(base.events.is_empty(), "recording is off by default");
+        assert!(!rec.events.is_empty());
+    }
+
+    #[test]
+    fn recording_is_shard_invariant() {
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(17)
+            .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_recording(true);
+        let base = run(&meta, &fs.clone().with_shards(1));
+        for shards in [2, 3] {
+            let other = run(&meta, &fs.clone().with_shards(shards));
+            assert_eq!(base.events.len(), other.events.len(), "{shards} shards");
+            for (a, b) in base.events.iter().zip(&other.events) {
+                assert_eq!(
+                    a.to_json().to_string(),
+                    b.to_json().to_string(),
+                    "{shards} shards diverged"
+                );
+            }
+        }
     }
 
     #[test]

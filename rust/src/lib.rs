@@ -29,6 +29,7 @@ pub mod testkit;
 pub mod engine;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod predictor;
 pub mod region;
 pub mod runtime;

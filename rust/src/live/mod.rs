@@ -43,6 +43,9 @@ use crate::config::{ExperimentSettings, FeedbackMode, Meta};
 use crate::fleet::device::{self, CloudObservation, Device, DeviceProfile, Dispatch};
 use crate::fleet::scenario::TIDL_SALT;
 use crate::metrics::TaskRecord;
+use crate::obs::event::{EventMeta, Stages, TaskEvent};
+use crate::obs::sink::Recorder;
+use crate::platform::containers::StartKind;
 use crate::platform::lambda::CloudPlatform;
 use crate::runtime::{latency_percentiles, LatencyPercentiles, RunOutcome};
 use crate::util::panic_message;
@@ -109,6 +112,9 @@ struct Completion {
     measured_ms: f64,
     /// realized cloud outcome (feedback mode only)
     obs: Option<CloudObservation>,
+    /// lifecycle events assembled worker-side (recording mode only; the
+    /// ingest thread's `Recorder` sorts them into canonical order)
+    events: Vec<TaskEvent>,
 }
 
 fn scaled_sleep(ms: f64, scale: f64) {
@@ -125,7 +131,11 @@ fn collect(
     dev: &mut Device<'_>,
     slots: &mut [Option<TaskRecord>],
     measured: &mut [Option<f64>],
+    recorder: Option<&mut Recorder>,
 ) {
+    if let Some(r) = recorder {
+        r.extend(c.events);
+    }
     // observations exist only under FeedbackMode::Observe — with feedback
     // off none is ever constructed, same as the sim and fleet paths
     if let Some(obs) = &c.obs {
@@ -137,17 +147,40 @@ fn collect(
 
 /// Run the live prototype once.
 pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
+    run_inner(meta, cfg, None)
+}
+
+/// [`run`] with the typed event stream recorded: the devices emit
+/// arrival/decision/completion events inside the shared stepper and the
+/// cloud workers ship container-start/completion/observation events back
+/// with their results; the returned stream is in canonical order.
+pub fn run_recorded(meta: &Meta, cfg: &LiveConfig) -> Result<(LiveOutcome, Vec<TaskEvent>)> {
+    let mut recorder = Recorder::new();
+    let out = run_inner(meta, cfg, Some(&mut recorder))?;
+    Ok((out, recorder.into_events()))
+}
+
+fn run_inner(
+    meta: &Meta,
+    cfg: &LiveConfig,
+    mut recorder: Option<&mut Recorder>,
+) -> Result<LiveOutcome> {
     let app = meta.app(&cfg.settings.app).clone();
     let s = &cfg.settings;
     let n = s.n_inputs.unwrap_or(app.n_eval);
     let tasks = build_workload(meta, &s.app, n, s.replay, s.seed)?;
     let scale = cfg.time_scale;
     let feedback = s.feedback == FeedbackMode::Observe;
+    let recording = recorder.is_some();
 
     // the same device construction as `sim::run` — bad configuration sets
     // surface as errors here instead of panicking mid-run
     let profile = DeviceProfile::uniform(0, &s.app, s.seed ^ TIDL_SALT);
     let mut dev = Device::new(meta, s, profile)?;
+    dev.recording = recording;
+    if let Some(rec) = recorder.as_deref_mut() {
+        rec.push(TaskEvent::ScenarioPhase { t_ms: 0.0, label: format!("live:{}", s.app) });
+    }
     let cloud: Arc<Mutex<CloudPlatform>> =
         Arc::new(Mutex::new(CloudPlatform::new(meta.memory_configs_mb.len())));
 
@@ -162,7 +195,12 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
             let measured_ms =
                 job.dispatched.elapsed().as_secs_f64() * 1000.0 / scale + job.tail_ms;
             if edge_done
-                .send(Completion { record: job.record, measured_ms, obs: None })
+                .send(Completion {
+                    record: job.record,
+                    measured_ms,
+                    obs: None,
+                    events: Vec::new(),
+                })
                 .is_err()
             {
                 return; // ingest thread gone
@@ -189,7 +227,7 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
         // feedback on, realized warm/cold outcomes correct the working CIL
         // before this decision
         while let Ok(c) = done_rx.try_recv() {
-            collect(c, &mut dev, &mut slots, &mut measured);
+            collect(c, &mut dev, &mut slots, &mut measured, recorder.as_deref_mut());
         }
 
         // the shared stepper: predict → decide → updateCIL → dispatch
@@ -209,6 +247,7 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
                 let cloud = Arc::clone(&cloud);
                 let done = done_tx.clone();
                 let dispatched = Instant::now();
+                let app_name = s.app.clone();
                 cloud_handles.push(std::thread::spawn(move || {
                     scaled_sleep(req.upld_ms + req.routing_ms, scale);
                     // the pools decide warm vs cold at (virtual) trigger
@@ -219,9 +258,49 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
                         (exec, device::complete_cloud(&req, &exec))
                     };
                     let obs = feedback.then(|| CloudObservation::from_execution(&req, &exec));
+                    let events = if recording {
+                        let at = |t: f64| {
+                            EventMeta::new(t, req.device_id, &app_name, req.seq, req.task_id)
+                        };
+                        let mut evs = vec![
+                            TaskEvent::ContainerStart {
+                                meta: at(exec.triggered_at),
+                                region: req.region,
+                                mem_mb: req.mem_mb,
+                                warm: exec.kind == StartKind::Warm,
+                                start_ms: exec.start_ms,
+                            },
+                            TaskEvent::Completion {
+                                meta: at(exec.stored_at),
+                                edge: false,
+                                region: Some(req.region),
+                                warm: record.warm_actual,
+                                e2e_ms: record.actual_e2e_ms,
+                                cost: record.actual_cost,
+                                stages: Stages {
+                                    upld: req.upld_ms,
+                                    routing: req.routing_ms,
+                                    start: exec.start_ms,
+                                    comp: req.comp_ms,
+                                    store: req.store_ms,
+                                    ..Default::default()
+                                },
+                            },
+                        ];
+                        if let Some(o) = &obs {
+                            evs.push(TaskEvent::Observation {
+                                meta: at(exec.stored_at),
+                                region: req.region,
+                                warm: o.warm,
+                            });
+                        }
+                        evs
+                    } else {
+                        Vec::new()
+                    };
                     scaled_sleep(exec.start_ms + req.comp_ms + req.store_ms, scale);
                     let measured_ms = dispatched.elapsed().as_secs_f64() * 1000.0 / scale;
-                    let _ = done.send(Completion { record, measured_ms, obs });
+                    let _ = done.send(Completion { record, measured_ms, obs, events });
                 }));
             }
         }
@@ -237,7 +316,11 @@ pub fn run(meta: &Meta, cfg: &LiveConfig) -> Result<LiveOutcome> {
         .map_err(|e| anyhow!("edge worker panicked: {}", panic_message(&*e)))?;
     drop(done_tx);
     for c in done_rx {
-        collect(c, &mut dev, &mut slots, &mut measured);
+        collect(c, &mut dev, &mut slots, &mut measured, recorder.as_deref_mut());
+    }
+    if let Some(rec) = recorder.as_deref_mut() {
+        // arrival/decision/edge-completion events accumulated in the device
+        rec.extend(std::mem::take(&mut dev.events));
     }
 
     let wall: Vec<f64> = measured.iter().copied().flatten().collect();
@@ -301,6 +384,29 @@ mod tests {
         if !cloud.is_empty() {
             // at least the very first cloud execution must be an actual cold
             assert!(cloud.iter().any(|r| r.warm_actual == Some(false)));
+        }
+    }
+
+    #[test]
+    fn live_recording_covers_every_task_in_canonical_order() {
+        let meta = meta();
+        let settings =
+            ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0])
+                .with_n_inputs(20)
+                .with_backend(PredictorBackendKind::Native);
+        let cfg = LiveConfig { settings, time_scale: 0.004, fixed_rate: true };
+        let (out, events) = run_recorded(&meta, &cfg).unwrap();
+        assert_eq!(out.records.len(), 20);
+        let count = |k: &str| events.iter().filter(|e| e.kind() == k).count();
+        assert_eq!(count("arrival"), 20, "one arrival event per task");
+        assert_eq!(count("decision"), 20);
+        assert_eq!(count("completion"), 20, "one completion event per task");
+        for w in events.windows(2) {
+            assert_ne!(
+                TaskEvent::canonical_cmp(&w[0], &w[1]),
+                std::cmp::Ordering::Greater,
+                "recorded stream must be canonically ordered"
+            );
         }
     }
 

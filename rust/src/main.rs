@@ -7,7 +7,7 @@
 //!   sim     --app <ir|fd|stt> --objective <cost-min|latency-min>
 //!           --set 1536,1664,2048 [--alpha A] [--deadline MS] [--cmax $]
 //!           [--n N] [--seed S] [--backend xla|native] [--generate]
-//!           [--feedback off|observe]
+//!           [--feedback off|observe] [--record PATH|off] [--replay PATH]
 //!   fleet   --devices 1000 [--scenario poisson|diurnal|diurnal-tz|burst|
 //!                           churn|flash|drift|outage]
 //!           [--duration-s 30] [--shards 4] [--apps ir:0.4,fd:0.4,stt:0.2]
@@ -20,8 +20,10 @@
 //!           [--region-cap N|name:N,...] [--region-rps R|name:R,...]
 //!           [--throttle reject|queue[:WAIT_S]] [--failover]
 //!           [--outage name:START_S-END_S,...]
+//!           [--record PATH|off] [--replay PATH] [--stream-metrics]
 //!   live    --app <ir|fd|stt> [--set ...] [--n N] [--scale 0.05]
 //!           [--runs R] [--backend xla|native] [--feedback off|observe]
+//!           [--record PATH]
 //!   report                       # run every experiment in order
 //!
 //! `--xla` / `--backend xla` put the AOT-compiled artifact (PJRT) on the
@@ -72,19 +74,65 @@ fn main() -> Result<()> {
         "sim" => {
             let meta = Meta::load(&artifact_dir)?;
             let settings = settings_from_args(&meta, &args)?;
-            let o = sim::run(&meta, &settings)?;
+            let record_path = record_path_arg(&args);
+            let replay_times = match args.get("replay") {
+                Some(path) => {
+                    let rows = skedge::obs::read_arrivals(path)?;
+                    // the simulator is the single paper device: the trace
+                    // must be single-device and name the app under test
+                    if let Some(app) = skedge::obs::per_device_apps(&rows, 1)?[0].as_deref() {
+                        if app != settings.app {
+                            bail!(
+                                "trace `{path}` records app `{app}` but --app is `{}` \
+                                 (pass --app {app})",
+                                settings.app
+                            );
+                        }
+                    }
+                    Some(skedge::obs::per_device_times(&rows, 1)?.remove(0))
+                }
+                None => None,
+            };
+            let (o, events) = match (&replay_times, &record_path) {
+                (None, None) => (sim::run(&meta, &settings)?, Vec::new()),
+                (None, Some(_)) => sim::run_recorded(&meta, &settings)?,
+                (Some(t), None) => (sim::run_with_arrivals(&meta, &settings, t)?, Vec::new()),
+                (Some(t), Some(_)) => sim::run_recorded_with_arrivals(&meta, &settings, t)?,
+            };
             print_run_summary(&meta, &settings, &o.summary, &o.records);
+            write_recording(record_path.as_deref(), &events)?;
             Ok(())
         }
         "fleet" => {
             let meta = Meta::load(&artifact_dir)?;
-            let fs = fleet_settings_from_args(&args)?;
+            let mut fs = fleet_settings_from_args(&args)?;
+            let record_path = record_path_arg(&args);
+            fs = fs.with_recording(record_path.is_some());
+            fs = fs.with_stream_metrics(args.has_switch("stream-metrics"));
+            if let Some(path) = args.get("replay") {
+                match args.get("scenario") {
+                    None | Some("replay") => {}
+                    Some(s) => bail!(
+                        "--replay drives arrivals from the trace; `--scenario {s}` conflicts"
+                    ),
+                }
+                let rows = skedge::obs::read_arrivals(path)?;
+                if args.get("devices").is_none() {
+                    // size the fleet to the trace unless told otherwise
+                    fs.devices = rows.iter().map(|r| r.device + 1).max().unwrap_or(1);
+                }
+                fs = fs.with_replay_trace(std::sync::Arc::new(rows));
+            }
             // time only the sharded run, not single-threaded workload
             // generation, so the printed tasks/s reflects threading
             let inits = fleet::scenario::build_fleet(&meta, &fs)?;
             let t0 = std::time::Instant::now();
-            let o = fleet::shard::run_fleet(&meta, inits, &fs)?;
+            let mut o = fleet::shard::run_fleet(&meta, inits, &fs)?;
+            if fs.record_events {
+                o.summary.fold_recorded_events(o.events.len() as u64);
+            }
             print_fleet_summary(&fs, &o, t0.elapsed().as_secs_f64());
+            write_recording(record_path.as_deref(), &o.events)?;
             Ok(())
         }
         "live" => {
@@ -93,13 +141,17 @@ fn main() -> Result<()> {
             settings.objective = Objective::LatencyMin;
             let scale = args.f64("scale")?.unwrap_or(0.05);
             let runs = args.usize("runs")?.unwrap_or(1);
+            let record_path = record_path_arg(&args);
             for r in 0..runs {
                 let cfg = LiveConfig {
                     settings: settings.clone().with_seed(settings.seed + r as u64),
                     time_scale: scale,
                     fixed_rate: true,
                 };
-                let o = live::run(&meta, &cfg)?;
+                let (o, events) = match &record_path {
+                    Some(_) => live::run_recorded(&meta, &cfg)?,
+                    None => (live::run(&meta, &cfg)?, Vec::new()),
+                };
                 println!("-- live run {} ({:.1}s wall) --", r + 1, o.wall_seconds);
                 println!("latency tail   : {}", fmt_latency(&o.latency));
                 match &o.wall_latency {
@@ -115,6 +167,12 @@ fn main() -> Result<()> {
                     None => println!("wall tail      : n/a (no tasks measured)"),
                 }
                 print_run_summary(&meta, &settings, &o.summary, &o.records);
+                if let Some(path) = &record_path {
+                    // one stream per run so repeats don't clobber each other
+                    let path =
+                        if runs > 1 { format!("{path}.run{}", r + 1) } else { path.clone() };
+                    write_recording(Some(&path), &events)?;
+                }
             }
             Ok(())
         }
@@ -247,18 +305,54 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
     Ok(fs)
 }
 
+/// `--record PATH`; the explicit `off` sentinel disables recording.
+fn record_path_arg(args: &Args) -> Option<String> {
+    args.get("record").filter(|p| *p != "off").map(str::to_string)
+}
+
+/// Write a recorded event stream to disk (no-op when recording is off).
+fn write_recording(path: Option<&str>, events: &[skedge::obs::TaskEvent]) -> Result<()> {
+    if let Some(path) = path {
+        skedge::obs::write_events_file(path, events)?;
+        println!("events         : {} recorded -> {path}", events.len());
+    }
+    Ok(())
+}
+
+/// Join the nonzero counter segments of a status line; `None` when every
+/// counter is zero — the uniform elision rule for resilience/feedback
+/// lines (zero-valued fields dropped, all-zero lines dropped entirely).
+fn nonzero_counters(parts: Vec<(u64, String)>) -> Option<String> {
+    let shown: Vec<String> = parts.into_iter().filter(|(v, _)| *v > 0).map(|(_, s)| s).collect();
+    if shown.is_empty() {
+        None
+    } else {
+        Some(shown.join(", "))
+    }
+}
+
 fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64) {
     let s = &o.summary;
     let mut app_counts: std::collections::BTreeMap<&str, usize> = Default::default();
     for d in &o.device_summaries {
         *app_counts.entry(d.app.as_str()).or_default() += 1;
     }
-    let mix = app_counts
-        .iter()
-        .map(|(a, n)| format!("{a} {n}"))
-        .collect::<Vec<_>>()
-        .join(" / ");
-    println!("fleet          : {} devices ({mix}), scenario {}", s.n_devices, fs.scenario.label());
+    // streaming mode retains no per-device summaries to count apps from
+    let mix = if o.device_summaries.is_empty() {
+        String::new()
+    } else {
+        let counts =
+            app_counts.iter().map(|(a, n)| format!("{a} {n}")).collect::<Vec<_>>().join(" / ");
+        format!(" ({counts})")
+    };
+    println!("fleet          : {} devices{mix}, scenario {}", s.n_devices, fs.scenario.label());
+    if fs.stream_metrics {
+        println!(
+            "metrics        : streaming (mergeable summaries; sketch quantiles within \
+             {:.0}% of exact)",
+            skedge::obs::SKETCH_ALPHA * 100.0
+        );
+    }
     if let Some(topo) = &fs.topology {
         println!(
             "topology       : {} regions, {} CIL",
@@ -267,11 +361,16 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
         );
     }
     if fs.feedback != FeedbackMode::Off {
-        println!(
-            "feedback       : {} ({} hub observations)",
-            fs.feedback.label(),
-            o.hub_observations.iter().sum::<u64>()
-        );
+        let obs: u64 = o.hub_observations.iter().sum();
+        let retr: u64 = o.hub_retractions.iter().sum();
+        let counters = nonzero_counters(vec![
+            (obs, format!("{obs} hub observations")),
+            (retr, format!("{retr} hub retractions")),
+        ]);
+        match counters {
+            Some(c) => println!("feedback       : {} ({c})", fs.feedback.label()),
+            None => println!("feedback       : {}", fs.feedback.label()),
+        }
     }
     println!(
         "tasks          : {} ({} edge, {} cloud) over {:.0} virtual s",
@@ -291,14 +390,20 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
         None => println!("latency        : n/a (no tasks served)"),
     }
     let queued_total: u64 = o.region_queued.iter().sum();
-    if s.rejected_count > 0 || s.failover_hops_total > 0 || queued_total > 0 {
-        println!(
-            "resilience     : {} rejected ({:.2}%), {} failover hops, {} queued admissions",
-            s.rejected_count,
-            s.rejected_count as f64 / s.n_tasks.max(1) as f64 * 100.0,
-            s.failover_hops_total,
-            queued_total,
-        );
+    let resilience = nonzero_counters(vec![
+        (
+            s.rejected_count as u64,
+            format!(
+                "{} rejected ({:.2}%)",
+                s.rejected_count,
+                s.rejected_count as f64 / s.n_tasks.max(1) as f64 * 100.0
+            ),
+        ),
+        (s.failover_hops_total, format!("{} failover hops", s.failover_hops_total)),
+        (queued_total, format!("{queued_total} queued admissions")),
+    ]);
+    if let Some(line) = resilience {
+        println!("resilience     : {line}");
     }
     println!("deadlines      : {:.2}% violated", s.deadline_violation_pct);
     println!(
@@ -436,7 +541,7 @@ USAGE:
   skedge sim     --app fd --objective latency-min --set 1536,1664,2048
                  [--alpha A] [--deadline MS] [--cmax $] [--n N] [--risk R]
                  [--backend xla|native] [--generate] [--seed S]
-                 [--feedback off|observe]
+                 [--feedback off|observe] [--record PATH|off] [--replay PATH]
   skedge fleet   --devices 1000
                  [--scenario poisson|diurnal|diurnal-tz|burst|churn|flash|
                              drift|outage]
@@ -452,6 +557,7 @@ USAGE:
                  [--region-cap N|name:N,...] [--region-rps R|name:R,...]
                  [--throttle reject|queue[:WAIT_S]] [--failover]
                  [--outage name:START_S-END_S,...]
+                 [--record PATH|off] [--replay PATH] [--stream-metrics]
 
 Region resilience: --region-cap / --region-rps bound each region's ground
 truth (concurrent executions / admissions per second); --throttle picks what
@@ -461,10 +567,19 @@ recorded as failover hops + added routing); --outage blacks out regions for
 scheduled windows; --scenario outage darkens correlated device groups.
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
                  [--backend xla|native] [--feedback off|observe]
+                 [--record PATH]
 
 `--feedback observe` closes the warm/cold loop: realized start kinds flow
 back into the working CILs (sim: at response time; live: when the worker
 reports; fleet: at the next epoch barrier, hubs included in --cil hub).
+
+Observability: --record PATH writes the typed task-event stream (JSONL,
+canonical (time, device, seq) order, shard-invariant); --replay PATH
+re-drives arrivals from a recorded or imported trace — same seed + settings
+reproduces the original run bitwise; --stream-metrics folds records into
+mergeable online summaries (exact count/sum/min/max + quantile sketch)
+instead of retaining them. Recording never changes outcomes; the printed
+fleet fingerprint folds in the event count only when recording is on.
 
 Experiments: table1 table2 fig3 fig4 table3 fig5 table4 fig6 table5
              edgeonly baselines tidl configsel ablations fleet_scaling

@@ -1,0 +1,642 @@
+//! The typed task-event model: one [`TaskEvent`] enum covering the full
+//! task lifecycle (arrival → Eqn.-1 decision → admission / failover /
+//! queue → container start → completion or rejection → feedback) plus
+//! run-level events (epoch barrier, pool high-water, scenario phase).
+//!
+//! Every task-scoped event carries the same [`EventMeta`] — virtual time,
+//! device id, app, the device's cloud-dispatch sequence number, and the
+//! task slot — so the canonical `(time, device, seq)` merge order used
+//! everywhere else in the fleet is reconstructible from a recorded stream
+//! alone. One serde model is shared by writer and reader:
+//! [`TaskEvent::to_json`] and [`TaskEvent::from_json`] are exact inverses
+//! for finite, non-negative values (the only values events carry — the
+//! JSONL text form of an f64 is shortest-round-trip, so record → parse is
+//! bitwise).
+
+use std::cmp::Ordering;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Schema identifier written in the header line of every event file.
+pub const SCHEMA_NAME: &str = "skedge.events";
+/// Bumped on any change to the serialized event shape; the reader rejects
+/// files it does not understand instead of misparsing them.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Fields shared by every task-scoped event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventMeta {
+    /// virtual time of the event (ms)
+    pub t_ms: f64,
+    /// fleet-wide device index
+    pub device: usize,
+    /// application the device runs (ir | fd | stt)
+    pub app: String,
+    /// the device's cloud-dispatch sequence counter at decision time (the
+    /// canonical merge tiebreak; edge tasks share the counter value of the
+    /// next cloud dispatch)
+    pub seq: u64,
+    /// task id within the device's workload
+    pub task: usize,
+}
+
+impl EventMeta {
+    pub fn new(t_ms: f64, device: usize, app: &str, seq: u64, task: usize) -> Self {
+        EventMeta { t_ms, device, app: app.to_string(), seq, task }
+    }
+}
+
+/// Per-stage latency decomposition carried by completion events. Unused
+/// stages are zero; [`Stages::total`] always reconstructs the record's
+/// end-to-end latency (the conservation property pinned in
+/// `rust/tests/events.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Stages {
+    pub upld: f64,
+    pub routing: f64,
+    /// extra one-way routing accumulated by failover hops
+    pub extra_routing: f64,
+    /// admission queue wait under `ThrottlePolicy::Queue`
+    pub queue_wait: f64,
+    /// realized container start (warm or cold) duration
+    pub start: f64,
+    pub comp: f64,
+    pub store: f64,
+    pub edge_wait: f64,
+    pub edge_comp: f64,
+    pub iotup: f64,
+    pub edge_store: f64,
+}
+
+impl Stages {
+    /// Sum of all stages — equals the end-to-end latency of the record the
+    /// completion event describes.
+    pub fn total(&self) -> f64 {
+        self.upld
+            + self.routing
+            + self.extra_routing
+            + self.queue_wait
+            + self.start
+            + self.comp
+            + self.store
+            + self.edge_wait
+            + self.edge_comp
+            + self.iotup
+            + self.edge_store
+    }
+
+    fn to_json(self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("upld".into(), Json::Num(self.upld));
+        m.insert("routing".into(), Json::Num(self.routing));
+        m.insert("extra_routing".into(), Json::Num(self.extra_routing));
+        m.insert("queue_wait".into(), Json::Num(self.queue_wait));
+        m.insert("start".into(), Json::Num(self.start));
+        m.insert("comp".into(), Json::Num(self.comp));
+        m.insert("store".into(), Json::Num(self.store));
+        m.insert("edge_wait".into(), Json::Num(self.edge_wait));
+        m.insert("edge_comp".into(), Json::Num(self.edge_comp));
+        m.insert("iotup".into(), Json::Num(self.iotup));
+        m.insert("edge_store".into(), Json::Num(self.edge_store));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<Stages> {
+        Ok(Stages {
+            upld: req_f64(v, "upld")?,
+            routing: req_f64(v, "routing")?,
+            extra_routing: req_f64(v, "extra_routing")?,
+            queue_wait: req_f64(v, "queue_wait")?,
+            start: req_f64(v, "start")?,
+            comp: req_f64(v, "comp")?,
+            store: req_f64(v, "store")?,
+            edge_wait: req_f64(v, "edge_wait")?,
+            edge_comp: req_f64(v, "edge_comp")?,
+            iotup: req_f64(v, "iotup")?,
+            edge_store: req_f64(v, "edge_store")?,
+        })
+    }
+}
+
+/// One typed event in a run's lifecycle stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskEvent {
+    /// A task arrived at its device (payload size and optional home region
+    /// ride along so arrivals alone form a replayable trace).
+    Arrival { meta: EventMeta, bytes: f64, home: Option<usize> },
+    /// The Eqn.-1 decision: chosen placement with the predicted latency
+    /// and cost behind it.
+    Decision {
+        meta: EventMeta,
+        edge: bool,
+        /// chosen region (cloud placements only)
+        region: Option<usize>,
+        /// chosen memory configuration in MB (0 for edge)
+        mem_mb: f64,
+        predicted_e2e_ms: f64,
+        predicted_cost: f64,
+        feasible: bool,
+    },
+    /// A region's admission control denied the request.
+    AdmissionDenied { meta: EventMeta, region: usize, hop: u32 },
+    /// The request failed over to an engine-ranked alternate region.
+    FailoverHop {
+        meta: EventMeta,
+        from_region: usize,
+        to_region: usize,
+        hop: u32,
+        added_routing_ms: f64,
+    },
+    /// The request waited in a region's admission queue.
+    QueueWait { meta: EventMeta, region: usize, waited_ms: f64 },
+    /// A container started (warm or cold) for the request.
+    ContainerStart { meta: EventMeta, region: usize, mem_mb: f64, warm: bool, start_ms: f64 },
+    /// The task finished; carries the full stage decomposition.
+    Completion {
+        meta: EventMeta,
+        edge: bool,
+        region: Option<usize>,
+        warm: Option<bool>,
+        e2e_ms: f64,
+        cost: f64,
+        stages: Stages,
+    },
+    /// The task was denied everywhere it was tried and never executed.
+    Rejection { meta: EventMeta, region: usize, hops: u32 },
+    /// Closed-loop feedback: a realized outcome flowed back to the device.
+    Observation { meta: EventMeta, region: usize, warm: bool },
+    /// Closed-loop feedback: a denied placement's phantom belief was
+    /// dropped from the rejecting region.
+    Retraction { meta: EventMeta, region: usize },
+    /// The fleet coordinator crossed an epoch barrier.
+    EpochBarrier { t_ms: f64, epoch: u64 },
+    /// A region × config container pool reached a new high-water mark.
+    PoolHighWater { t_ms: f64, region: usize, config: usize, live: usize },
+    /// Run start marker naming the scenario driving the workload.
+    ScenarioPhase { t_ms: f64, label: String },
+}
+
+impl TaskEvent {
+    /// Virtual time of the event.
+    pub fn t_ms(&self) -> f64 {
+        match self {
+            TaskEvent::EpochBarrier { t_ms, .. }
+            | TaskEvent::PoolHighWater { t_ms, .. }
+            | TaskEvent::ScenarioPhase { t_ms, .. } => *t_ms,
+            _ => self.meta().unwrap().t_ms,
+        }
+    }
+
+    /// The shared meta of task-scoped events; `None` for run-level events.
+    pub fn meta(&self) -> Option<&EventMeta> {
+        match self {
+            TaskEvent::Arrival { meta, .. }
+            | TaskEvent::Decision { meta, .. }
+            | TaskEvent::AdmissionDenied { meta, .. }
+            | TaskEvent::FailoverHop { meta, .. }
+            | TaskEvent::QueueWait { meta, .. }
+            | TaskEvent::ContainerStart { meta, .. }
+            | TaskEvent::Completion { meta, .. }
+            | TaskEvent::Rejection { meta, .. }
+            | TaskEvent::Observation { meta, .. }
+            | TaskEvent::Retraction { meta, .. } => Some(meta),
+            _ => None,
+        }
+    }
+
+    /// Serialized kind tag.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TaskEvent::Arrival { .. } => "arrival",
+            TaskEvent::Decision { .. } => "decision",
+            TaskEvent::AdmissionDenied { .. } => "denied",
+            TaskEvent::FailoverHop { .. } => "failover",
+            TaskEvent::QueueWait { .. } => "queue_wait",
+            TaskEvent::ContainerStart { .. } => "start",
+            TaskEvent::Completion { .. } => "completion",
+            TaskEvent::Rejection { .. } => "rejection",
+            TaskEvent::Observation { .. } => "observation",
+            TaskEvent::Retraction { .. } => "retraction",
+            TaskEvent::EpochBarrier { .. } => "epoch",
+            TaskEvent::PoolHighWater { .. } => "pool_high_water",
+            TaskEvent::ScenarioPhase { .. } => "phase",
+        }
+    }
+
+    /// Lifecycle rank used as the final tiebreak of the canonical order
+    /// (e.g. a task's decision sorts after its arrival at the same time).
+    pub fn kind_rank(&self) -> u8 {
+        match self {
+            TaskEvent::ScenarioPhase { .. } => 0,
+            TaskEvent::Arrival { .. } => 1,
+            TaskEvent::Decision { .. } => 2,
+            TaskEvent::AdmissionDenied { .. } => 3,
+            TaskEvent::FailoverHop { .. } => 4,
+            TaskEvent::QueueWait { .. } => 5,
+            TaskEvent::ContainerStart { .. } => 6,
+            TaskEvent::Completion { .. } => 7,
+            TaskEvent::Observation { .. } => 8,
+            TaskEvent::Retraction { .. } => 9,
+            TaskEvent::Rejection { .. } => 10,
+            TaskEvent::PoolHighWater { .. } => 11,
+            TaskEvent::EpochBarrier { .. } => 12,
+        }
+    }
+
+    /// Canonical stream order: `(time, device, seq, task, kind_rank)` with
+    /// run-level events sorting after task events at equal times. A stable
+    /// sort under this comparator makes a recorded stream shard-invariant:
+    /// event *content* never depends on the shard partition, only the
+    /// collection order does, and this comparator erases that.
+    pub fn canonical_cmp(a: &TaskEvent, b: &TaskEvent) -> Ordering {
+        let key = |e: &TaskEvent| -> (f64, usize, u64, usize, u8) {
+            match e.meta() {
+                Some(m) => (m.t_ms, m.device, m.seq, m.task, e.kind_rank()),
+                None => (e.t_ms(), usize::MAX, u64::MAX, usize::MAX, e.kind_rank()),
+            }
+        };
+        let (ka, kb) = (key(a), key(b));
+        ka.0.total_cmp(&kb.0)
+            .then(ka.1.cmp(&kb.1))
+            .then(ka.2.cmp(&kb.2))
+            .then(ka.3.cmp(&kb.3))
+            .then(ka.4.cmp(&kb.4))
+    }
+
+    /// Serialize to the single shared JSON model (one JSONL line per
+    /// event after `to_string()`).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".into(), Json::Str(self.kind().into()));
+        if let Some(meta) = self.meta() {
+            m.insert("t_ms".into(), Json::Num(meta.t_ms));
+            m.insert("device".into(), Json::Num(meta.device as f64));
+            m.insert("app".into(), Json::Str(meta.app.clone()));
+            m.insert("seq".into(), Json::Num(meta.seq as f64));
+            m.insert("task".into(), Json::Num(meta.task as f64));
+        }
+        match self {
+            TaskEvent::Arrival { bytes, home, .. } => {
+                m.insert("bytes".into(), Json::Num(*bytes));
+                if let Some(h) = home {
+                    m.insert("home".into(), Json::Num(*h as f64));
+                }
+            }
+            TaskEvent::Decision {
+                edge,
+                region,
+                mem_mb,
+                predicted_e2e_ms,
+                predicted_cost,
+                feasible,
+                ..
+            } => {
+                m.insert("edge".into(), Json::Bool(*edge));
+                if let Some(r) = region {
+                    m.insert("region".into(), Json::Num(*r as f64));
+                }
+                m.insert("mem_mb".into(), Json::Num(*mem_mb));
+                m.insert("predicted_e2e_ms".into(), Json::Num(*predicted_e2e_ms));
+                m.insert("predicted_cost".into(), Json::Num(*predicted_cost));
+                m.insert("feasible".into(), Json::Bool(*feasible));
+            }
+            TaskEvent::AdmissionDenied { region, hop, .. } => {
+                m.insert("region".into(), Json::Num(*region as f64));
+                m.insert("hop".into(), Json::Num(*hop as f64));
+            }
+            TaskEvent::FailoverHop {
+                from_region, to_region, hop, added_routing_ms, ..
+            } => {
+                m.insert("from_region".into(), Json::Num(*from_region as f64));
+                m.insert("to_region".into(), Json::Num(*to_region as f64));
+                m.insert("hop".into(), Json::Num(*hop as f64));
+                m.insert("added_routing_ms".into(), Json::Num(*added_routing_ms));
+            }
+            TaskEvent::QueueWait { region, waited_ms, .. } => {
+                m.insert("region".into(), Json::Num(*region as f64));
+                m.insert("waited_ms".into(), Json::Num(*waited_ms));
+            }
+            TaskEvent::ContainerStart { region, mem_mb, warm, start_ms, .. } => {
+                m.insert("region".into(), Json::Num(*region as f64));
+                m.insert("mem_mb".into(), Json::Num(*mem_mb));
+                m.insert("warm".into(), Json::Bool(*warm));
+                m.insert("start_ms".into(), Json::Num(*start_ms));
+            }
+            TaskEvent::Completion { edge, region, warm, e2e_ms, cost, stages, .. } => {
+                m.insert("edge".into(), Json::Bool(*edge));
+                if let Some(r) = region {
+                    m.insert("region".into(), Json::Num(*r as f64));
+                }
+                if let Some(w) = warm {
+                    m.insert("warm".into(), Json::Bool(*w));
+                }
+                m.insert("e2e_ms".into(), Json::Num(*e2e_ms));
+                m.insert("cost".into(), Json::Num(*cost));
+                m.insert("stages".into(), stages.to_json());
+            }
+            TaskEvent::Rejection { region, hops, .. } => {
+                m.insert("region".into(), Json::Num(*region as f64));
+                m.insert("hops".into(), Json::Num(*hops as f64));
+            }
+            TaskEvent::Observation { region, warm, .. } => {
+                m.insert("region".into(), Json::Num(*region as f64));
+                m.insert("warm".into(), Json::Bool(*warm));
+            }
+            TaskEvent::Retraction { region, .. } => {
+                m.insert("region".into(), Json::Num(*region as f64));
+            }
+            TaskEvent::EpochBarrier { t_ms, epoch } => {
+                m.insert("t_ms".into(), Json::Num(*t_ms));
+                m.insert("epoch".into(), Json::Num(*epoch as f64));
+            }
+            TaskEvent::PoolHighWater { t_ms, region, config, live } => {
+                m.insert("t_ms".into(), Json::Num(*t_ms));
+                m.insert("region".into(), Json::Num(*region as f64));
+                m.insert("config".into(), Json::Num(*config as f64));
+                m.insert("live".into(), Json::Num(*live as f64));
+            }
+            TaskEvent::ScenarioPhase { t_ms, label } => {
+                m.insert("t_ms".into(), Json::Num(*t_ms));
+                m.insert("label".into(), Json::Str(label.clone()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse one event from the shared JSON model (inverse of
+    /// [`TaskEvent::to_json`]).
+    pub fn from_json(v: &Json) -> Result<TaskEvent> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event missing `kind`"))?;
+        let meta = || -> Result<EventMeta> {
+            Ok(EventMeta {
+                t_ms: req_f64(v, "t_ms")?,
+                device: req_f64(v, "device")? as usize,
+                app: v
+                    .get("app")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("event missing `app`"))?
+                    .to_string(),
+                seq: req_f64(v, "seq")? as u64,
+                task: req_f64(v, "task")? as usize,
+            })
+        };
+        Ok(match kind {
+            "arrival" => TaskEvent::Arrival {
+                meta: meta()?,
+                bytes: req_f64(v, "bytes")?,
+                home: opt_usize(v, "home"),
+            },
+            "decision" => TaskEvent::Decision {
+                meta: meta()?,
+                edge: req_bool(v, "edge")?,
+                region: opt_usize(v, "region"),
+                mem_mb: req_f64(v, "mem_mb")?,
+                predicted_e2e_ms: req_f64(v, "predicted_e2e_ms")?,
+                predicted_cost: req_f64(v, "predicted_cost")?,
+                feasible: req_bool(v, "feasible")?,
+            },
+            "denied" => TaskEvent::AdmissionDenied {
+                meta: meta()?,
+                region: req_f64(v, "region")? as usize,
+                hop: req_f64(v, "hop")? as u32,
+            },
+            "failover" => TaskEvent::FailoverHop {
+                meta: meta()?,
+                from_region: req_f64(v, "from_region")? as usize,
+                to_region: req_f64(v, "to_region")? as usize,
+                hop: req_f64(v, "hop")? as u32,
+                added_routing_ms: req_f64(v, "added_routing_ms")?,
+            },
+            "queue_wait" => TaskEvent::QueueWait {
+                meta: meta()?,
+                region: req_f64(v, "region")? as usize,
+                waited_ms: req_f64(v, "waited_ms")?,
+            },
+            "start" => TaskEvent::ContainerStart {
+                meta: meta()?,
+                region: req_f64(v, "region")? as usize,
+                mem_mb: req_f64(v, "mem_mb")?,
+                warm: req_bool(v, "warm")?,
+                start_ms: req_f64(v, "start_ms")?,
+            },
+            "completion" => TaskEvent::Completion {
+                meta: meta()?,
+                edge: req_bool(v, "edge")?,
+                region: opt_usize(v, "region"),
+                warm: v.get("warm").and_then(|w| match w {
+                    Json::Bool(b) => Some(*b),
+                    _ => None,
+                }),
+                e2e_ms: req_f64(v, "e2e_ms")?,
+                cost: req_f64(v, "cost")?,
+                stages: Stages::from_json(
+                    v.get("stages").ok_or_else(|| anyhow!("completion missing `stages`"))?,
+                )?,
+            },
+            "rejection" => TaskEvent::Rejection {
+                meta: meta()?,
+                region: req_f64(v, "region")? as usize,
+                hops: req_f64(v, "hops")? as u32,
+            },
+            "observation" => TaskEvent::Observation {
+                meta: meta()?,
+                region: req_f64(v, "region")? as usize,
+                warm: req_bool(v, "warm")?,
+            },
+            "retraction" => TaskEvent::Retraction {
+                meta: meta()?,
+                region: req_f64(v, "region")? as usize,
+            },
+            "epoch" => TaskEvent::EpochBarrier {
+                t_ms: req_f64(v, "t_ms")?,
+                epoch: req_f64(v, "epoch")? as u64,
+            },
+            "pool_high_water" => TaskEvent::PoolHighWater {
+                t_ms: req_f64(v, "t_ms")?,
+                region: req_f64(v, "region")? as usize,
+                config: req_f64(v, "config")? as usize,
+                live: req_f64(v, "live")? as usize,
+            },
+            "phase" => TaskEvent::ScenarioPhase {
+                t_ms: req_f64(v, "t_ms")?,
+                label: v
+                    .get("label")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("phase missing `label`"))?
+                    .to_string(),
+            },
+            other => bail!("unknown event kind `{other}`"),
+        })
+    }
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("event missing numeric `{key}`"))
+}
+
+fn req_bool(v: &Json, key: &str) -> Result<bool> {
+    match v.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(anyhow!("event missing bool `{key}`")),
+    }
+}
+
+fn opt_usize(v: &Json, key: &str) -> Option<usize> {
+    v.get(key).and_then(Json::as_f64).map(|x| x as usize)
+}
+
+/// The versioned header line written at the top of every event file.
+pub fn header_line() -> String {
+    format!("{{\"schema\":\"{SCHEMA_NAME}\",\"version\":{SCHEMA_VERSION}}}")
+}
+
+/// Validate a header line against the schema name/version this build
+/// understands.
+pub fn check_header(line: &str, want_schema: &str) -> Result<()> {
+    let v = Json::parse(line).map_err(|e| anyhow!("bad header line: {e}"))?;
+    let schema = v.get("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != want_schema {
+        bail!("schema mismatch: got `{schema}`, want `{want_schema}`");
+    }
+    let version = v.get("version").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    if version != SCHEMA_VERSION {
+        bail!("unsupported {want_schema} version {version} (this build reads {SCHEMA_VERSION})");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta0() -> EventMeta {
+        EventMeta::new(12.5, 3, "fd", 7, 42)
+    }
+
+    #[test]
+    fn every_variant_roundtrips_through_json() {
+        let evs = vec![
+            TaskEvent::Arrival { meta: meta0(), bytes: 10240.0, home: Some(1) },
+            TaskEvent::Arrival { meta: meta0(), bytes: 0.5, home: None },
+            TaskEvent::Decision {
+                meta: meta0(),
+                edge: false,
+                region: Some(2),
+                mem_mb: 1536.0,
+                predicted_e2e_ms: 1234.5678,
+                predicted_cost: 0.000123,
+                feasible: true,
+            },
+            TaskEvent::AdmissionDenied { meta: meta0(), region: 1, hop: 0 },
+            TaskEvent::FailoverHop {
+                meta: meta0(),
+                from_region: 1,
+                to_region: 2,
+                hop: 1,
+                added_routing_ms: 90.0,
+            },
+            TaskEvent::QueueWait { meta: meta0(), region: 1, waited_ms: 250.25 },
+            TaskEvent::ContainerStart {
+                meta: meta0(),
+                region: 0,
+                mem_mb: 1024.0,
+                warm: true,
+                start_ms: 1.25,
+            },
+            TaskEvent::Completion {
+                meta: meta0(),
+                edge: true,
+                region: None,
+                warm: None,
+                e2e_ms: 77.125,
+                cost: 0.0,
+                stages: Stages { edge_wait: 1.0, edge_comp: 70.0, iotup: 6.0, edge_store: 0.125, ..Default::default() },
+            },
+            TaskEvent::Rejection { meta: meta0(), region: 2, hops: 2 },
+            TaskEvent::Observation { meta: meta0(), region: 0, warm: false },
+            TaskEvent::Retraction { meta: meta0(), region: 1 },
+            TaskEvent::EpochBarrier { t_ms: 5000.0, epoch: 1 },
+            TaskEvent::PoolHighWater { t_ms: 123.0, region: 1, config: 7, live: 3 },
+            TaskEvent::ScenarioPhase { t_ms: 0.0, label: "diurnal".into() },
+        ];
+        for ev in evs {
+            let line = ev.to_json().to_string();
+            assert!(!line.contains('\n'));
+            let back = TaskEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(ev, back, "roundtrip failed for {line}");
+        }
+    }
+
+    #[test]
+    fn f64_bitwise_through_text() {
+        // the serialized text of an f64 parses back to the identical bits
+        // (shortest-round-trip Display); this is what makes record→replay
+        // exact
+        let awkward = [0.1, 1.0 / 3.0, 123456.789012345, 2.5e-9, 9007199254740993.0];
+        for &x in &awkward {
+            let ev = TaskEvent::QueueWait { meta: meta0(), region: 0, waited_ms: x };
+            let line = ev.to_json().to_string();
+            let back = TaskEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+            match back {
+                TaskEvent::QueueWait { waited_ms, .. } => {
+                    assert_eq!(waited_ms.to_bits(), x.to_bits());
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_order_keys() {
+        let a = TaskEvent::Arrival { meta: EventMeta::new(1.0, 0, "ir", 0, 0), bytes: 1.0, home: None };
+        let d = TaskEvent::Decision {
+            meta: EventMeta::new(1.0, 0, "ir", 0, 0),
+            edge: true,
+            region: None,
+            mem_mb: 0.0,
+            predicted_e2e_ms: 1.0,
+            predicted_cost: 0.0,
+            feasible: true,
+        };
+        let later = TaskEvent::Arrival { meta: EventMeta::new(2.0, 0, "ir", 0, 1), bytes: 1.0, home: None };
+        let other_dev = TaskEvent::Arrival { meta: EventMeta::new(1.0, 1, "ir", 0, 0), bytes: 1.0, home: None };
+        let barrier = TaskEvent::EpochBarrier { t_ms: 1.0, epoch: 0 };
+        assert_eq!(TaskEvent::canonical_cmp(&a, &d), Ordering::Less, "arrival before decision");
+        assert_eq!(TaskEvent::canonical_cmp(&a, &later), Ordering::Less);
+        assert_eq!(TaskEvent::canonical_cmp(&a, &other_dev), Ordering::Less);
+        assert_eq!(TaskEvent::canonical_cmp(&barrier, &a), Ordering::Greater, "run-level after tasks");
+    }
+
+    #[test]
+    fn header_roundtrip_and_version_gate() {
+        check_header(&header_line(), SCHEMA_NAME).unwrap();
+        assert!(check_header("{\"schema\":\"skedge.events\",\"version\":99}", SCHEMA_NAME).is_err());
+        assert!(check_header("{\"schema\":\"other\",\"version\":1}", SCHEMA_NAME).is_err());
+        assert!(check_header("not json", SCHEMA_NAME).is_err());
+    }
+
+    #[test]
+    fn stages_total_sums_everything() {
+        let s = Stages {
+            upld: 1.0,
+            routing: 2.0,
+            extra_routing: 3.0,
+            queue_wait: 4.0,
+            start: 5.0,
+            comp: 6.0,
+            store: 7.0,
+            edge_wait: 8.0,
+            edge_comp: 9.0,
+            iotup: 10.0,
+            edge_store: 11.0,
+        };
+        assert_eq!(s.total(), 66.0);
+    }
+}

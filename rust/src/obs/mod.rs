@@ -1,0 +1,38 @@
+//! Observability: the typed task-event stream, record/replay round-trip,
+//! and streaming online summaries.
+//!
+//! * [`event`] — the [`TaskEvent`] model: one enum covering the full task
+//!   lifecycle (arrival → Eqn.-1 decision → queue/start/completion, plus
+//!   denial/failover/rejection and feedback observation/retraction) and
+//!   run-level markers (epoch barrier, pool high-water, scenario phase),
+//!   with a versioned JSONL serialization shared by writer and reader.
+//! * [`sink`] — [`EventSink`]s (JSONL file, in-memory) and the
+//!   [`Recorder`] that merges per-shard buffers into the canonical
+//!   `(time, device, seq)` order, making recordings shard-invariant.
+//! * [`replay`] — the inverse: extract the arrivals out of a recorded
+//!   stream (or import an external trace) and re-drive a run from them
+//!   (`FleetScenario::Replay`), bitwise-identical to the original.
+//! * [`stream`] — `--stream-metrics` accumulators: exact order-invariant
+//!   sums, count/min/max per stage, and a mergeable quantile sketch, so
+//!   shards never retain per-task records.
+//! * [`import`] — Azure-Functions-style invocation-CSV → replay trace.
+
+pub mod event;
+pub mod import;
+pub mod replay;
+pub mod sink;
+pub mod stream;
+
+pub use event::{EventMeta, Stages, TaskEvent, SCHEMA_NAME, SCHEMA_VERSION};
+pub use import::{import_azure_csv, import_azure_file, MS_PER_MIN};
+pub use replay::{
+    extract_arrivals, per_device_apps, per_device_times, read_arrivals, read_trace, trace_from_str,
+    trace_to_string, write_trace, ReplayArrival, TRACE_SCHEMA,
+};
+pub use sink::{
+    read_events_file, read_events_str, write_events, write_events_file, EventSink, JsonlSink,
+    MemorySink, Recorder,
+};
+pub use stream::{
+    record_digest, QuantileSketch, RegionCounters, StageStats, StreamingSummary, SKETCH_ALPHA,
+};

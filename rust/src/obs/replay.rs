@@ -1,0 +1,297 @@
+//! Arrival-trace model: the replay half of the record/replay round-trip.
+//!
+//! A trace is JSONL — a versioned header line, then one arrival per line
+//! `(device, app, trigger time, payload size, optional home region)` in
+//! canonical `(t_ms, device)` order. Traces come from two places: the
+//! arrivals extracted out of a recorded event stream
+//! ([`extract_arrivals`]), or an imported public serverless trace
+//! (`obs::import`). `FleetScenario::Replay` re-drives a fleet from one.
+//!
+//! Round-trip exactness: device actuals, profiles, and T_idl draws are
+//! regenerated from the fleet seed (their sampling streams consume one
+//! draw per arrival, independent of arrival *times*), so replaying the
+//! recorded arrival times under the same seed/devices/app-mix reproduces
+//! the original run bitwise — the f64 times survive the JSONL text form
+//! exactly (shortest-round-trip Display).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::event::{check_header, TaskEvent, SCHEMA_VERSION};
+
+/// Schema identifier of trace files (distinct from full event streams).
+pub const TRACE_SCHEMA: &str = "skedge.trace";
+
+/// One replayable arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayArrival {
+    pub device: usize,
+    pub app: String,
+    /// arrival (trigger) time at the device, virtual ms
+    pub t_ms: f64,
+    /// payload size in bytes (informational; actuals are regenerated)
+    pub bytes: f64,
+    /// optional home region
+    pub home: Option<usize>,
+}
+
+impl ReplayArrival {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("device".into(), Json::Num(self.device as f64));
+        m.insert("app".into(), Json::Str(self.app.clone()));
+        m.insert("t_ms".into(), Json::Num(self.t_ms));
+        m.insert("bytes".into(), Json::Num(self.bytes));
+        if let Some(h) = self.home {
+            m.insert("home".into(), Json::Num(h as f64));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ReplayArrival> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace row missing numeric `{key}`"))
+        };
+        Ok(ReplayArrival {
+            device: num("device")? as usize,
+            app: v
+                .get("app")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("trace row missing `app`"))?
+                .to_string(),
+            t_ms: num("t_ms")?,
+            bytes: num("bytes")?,
+            home: v.get("home").and_then(Json::as_f64).map(|x| x as usize),
+        })
+    }
+}
+
+/// Sort arrivals into canonical trace order and validate: times finite
+/// and non-negative, per-device times strictly increasing.
+pub fn canonicalize(mut rows: Vec<ReplayArrival>) -> Result<Vec<ReplayArrival>> {
+    for r in &rows {
+        if !r.t_ms.is_finite() || r.t_ms < 0.0 {
+            bail!("trace arrival for device {} has bad time {}", r.device, r.t_ms);
+        }
+    }
+    rows.sort_by(|a, b| a.t_ms.total_cmp(&b.t_ms).then(a.device.cmp(&b.device)));
+    let mut last: std::collections::BTreeMap<usize, f64> = Default::default();
+    for r in &rows {
+        if let Some(&prev) = last.get(&r.device) {
+            if r.t_ms <= prev {
+                bail!(
+                    "device {} arrivals not strictly increasing ({} after {})",
+                    r.device,
+                    r.t_ms,
+                    prev
+                );
+            }
+        }
+        last.insert(r.device, r.t_ms);
+    }
+    Ok(rows)
+}
+
+/// Serialize a trace to JSONL text.
+pub fn trace_to_string(rows: &[ReplayArrival]) -> String {
+    let mut out = format!("{{\"schema\":\"{TRACE_SCHEMA}\",\"version\":{SCHEMA_VERSION}}}\n");
+    for r in rows {
+        out.push_str(&r.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a trace file.
+pub fn write_trace(path: &str, rows: &[ReplayArrival]) -> Result<()> {
+    std::fs::write(path, trace_to_string(rows))
+        .with_context(|| format!("cannot write trace `{path}`"))
+}
+
+/// Parse a trace from JSONL text (canonicalizing and validating).
+pub fn trace_from_str(text: &str) -> Result<Vec<ReplayArrival>> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty trace file")?;
+    check_header(header, TRACE_SCHEMA)?;
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow!("trace line {}: {e}", i + 2))?;
+        rows.push(ReplayArrival::from_json(&v).with_context(|| format!("trace line {}", i + 2))?);
+    }
+    canonicalize(rows)
+}
+
+/// Read a trace file.
+pub fn read_trace(path: &str) -> Result<Vec<ReplayArrival>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("cannot open trace `{path}`"))?;
+    trace_from_str(&text)
+}
+
+/// Read replayable arrivals from either file kind, sniffed off the schema
+/// header: a trace file parses directly; a recorded event stream has its
+/// arrival events extracted — so a `--record` output feeds straight back
+/// into `--replay` with no conversion step.
+pub fn read_arrivals(path: &str) -> Result<Vec<ReplayArrival>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("cannot open trace `{path}`"))?;
+    let header = text.lines().next().context("empty trace file")?;
+    let schema = Json::parse(header)
+        .ok()
+        .and_then(|v| v.get("schema").and_then(Json::as_str).map(str::to_string))
+        .with_context(|| format!("`{path}` has no schema header line"))?;
+    if schema == super::event::SCHEMA_NAME {
+        extract_arrivals(&super::sink::read_events_str(&text)?)
+    } else {
+        trace_from_str(&text)
+    }
+}
+
+/// Extract the replayable arrivals out of a recorded event stream — the
+/// record → replay inverse.
+pub fn extract_arrivals(events: &[TaskEvent]) -> Result<Vec<ReplayArrival>> {
+    let rows = events
+        .iter()
+        .filter_map(|ev| match ev {
+            TaskEvent::Arrival { meta, bytes, home } => Some(ReplayArrival {
+                device: meta.device,
+                app: meta.app.clone(),
+                t_ms: meta.t_ms,
+                bytes: *bytes,
+                home: *home,
+            }),
+            _ => None,
+        })
+        .collect();
+    canonicalize(rows)
+}
+
+/// Group a canonical trace into per-device arrival-time streams
+/// (`times[device]`), the shape `build_fleet` consumes. `n_devices` must
+/// cover every device id in the trace.
+pub fn per_device_times(rows: &[ReplayArrival], n_devices: usize) -> Result<Vec<Vec<f64>>> {
+    let mut times = vec![Vec::new(); n_devices];
+    for r in rows {
+        if r.device >= n_devices {
+            bail!("trace device {} out of range (fleet has {n_devices} devices)", r.device);
+        }
+        times[r.device].push(r.t_ms);
+    }
+    Ok(times)
+}
+
+/// The app each device runs according to the trace (`None` when the trace
+/// has no arrivals for that device). Errors if one device's arrivals name
+/// two different apps.
+pub fn per_device_apps(rows: &[ReplayArrival], n_devices: usize) -> Result<Vec<Option<String>>> {
+    let mut apps: Vec<Option<String>> = vec![None; n_devices];
+    for r in rows {
+        if r.device >= n_devices {
+            bail!("trace device {} out of range (fleet has {n_devices} devices)", r.device);
+        }
+        match &apps[r.device] {
+            None => apps[r.device] = Some(r.app.clone()),
+            Some(a) if *a == r.app => {}
+            Some(a) => bail!("trace device {} runs two apps (`{a}` and `{}`)", r.device, r.app),
+        }
+    }
+    Ok(apps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventMeta;
+
+    fn row(device: usize, t: f64) -> ReplayArrival {
+        ReplayArrival { device, app: "ir".into(), t_ms: t, bytes: 100.0, home: None }
+    }
+
+    #[test]
+    fn trace_text_roundtrip() {
+        let rows = vec![row(0, 1.5), row(1, 2.25), row(0, 300.0)];
+        let text = trace_to_string(&rows);
+        let back = trace_from_str(&text).unwrap();
+        assert_eq!(rows, back);
+        for (a, b) in rows.iter().zip(&back) {
+            assert_eq!(a.t_ms.to_bits(), b.t_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn canonicalize_sorts_and_validates() {
+        let rows = canonicalize(vec![row(1, 5.0), row(0, 5.0), row(0, 1.0)]).unwrap();
+        assert_eq!(rows[0].t_ms, 1.0);
+        assert_eq!(rows[1].device, 0, "device tiebreak at equal times");
+        assert!(canonicalize(vec![row(0, 2.0), row(0, 2.0)]).is_err(), "duplicate time");
+        assert!(canonicalize(vec![row(0, f64::NAN)]).is_err());
+        assert!(canonicalize(vec![row(0, -1.0)]).is_err());
+    }
+
+    #[test]
+    fn extract_arrivals_filters_and_orders() {
+        let events = vec![
+            TaskEvent::EpochBarrier { t_ms: 0.0, epoch: 0 },
+            TaskEvent::Arrival {
+                meta: EventMeta::new(7.0, 1, "fd", 0, 0),
+                bytes: 9.0,
+                home: Some(2),
+            },
+            TaskEvent::Arrival { meta: EventMeta::new(3.0, 0, "ir", 0, 0), bytes: 1.0, home: None },
+        ];
+        let rows = extract_arrivals(&events).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].t_ms, 3.0);
+        assert_eq!(rows[1].app, "fd");
+        assert_eq!(rows[1].home, Some(2));
+    }
+
+    #[test]
+    fn read_arrivals_sniffs_both_file_kinds() {
+        let dir = std::env::temp_dir();
+        let rows = canonicalize(vec![row(0, 1.5), row(1, 2.25)]).unwrap();
+        // a trace file parses directly
+        let trace_path = dir.join("skedge_read_arrivals_trace.jsonl");
+        let trace_path = trace_path.to_str().unwrap();
+        write_trace(trace_path, &rows).unwrap();
+        assert_eq!(read_arrivals(trace_path).unwrap(), rows);
+        // a recorded event stream has its arrivals extracted — `--record`
+        // output feeds straight back into `--replay`
+        let events: Vec<TaskEvent> = rows
+            .iter()
+            .map(|r| TaskEvent::Arrival {
+                meta: EventMeta::new(r.t_ms, r.device, &r.app, 0, 0),
+                bytes: r.bytes,
+                home: r.home,
+            })
+            .collect();
+        let ev_path = dir.join("skedge_read_arrivals_events.jsonl");
+        let ev_path = ev_path.to_str().unwrap();
+        crate::obs::sink::write_events_file(ev_path, &events).unwrap();
+        assert_eq!(read_arrivals(ev_path).unwrap(), rows);
+        let _ = std::fs::remove_file(trace_path);
+        let _ = std::fs::remove_file(ev_path);
+    }
+
+    #[test]
+    fn per_device_grouping() {
+        let rows = canonicalize(vec![row(0, 1.0), row(2, 2.0), row(0, 3.0)]).unwrap();
+        let times = per_device_times(&rows, 3).unwrap();
+        assert_eq!(times[0], vec![1.0, 3.0]);
+        assert!(times[1].is_empty());
+        assert_eq!(times[2], vec![2.0]);
+        assert!(per_device_times(&rows, 2).is_err(), "device id out of range");
+        let apps = per_device_apps(&rows, 3).unwrap();
+        assert_eq!(apps[0].as_deref(), Some("ir"));
+        assert!(apps[1].is_none());
+        let mut bad = rows.clone();
+        bad.push(ReplayArrival { device: 0, app: "fd".into(), t_ms: 9.0, bytes: 0.0, home: None });
+        assert!(per_device_apps(&bad, 3).is_err(), "two apps on one device");
+    }
+}

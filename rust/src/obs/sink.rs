@@ -1,0 +1,220 @@
+//! Event sinks and the run recorder.
+//!
+//! [`Recorder`] is what the runners thread through a recorded run: shards
+//! and the coordinator push events in whatever order they produce them
+//! (device-buffered, drained at each epoch barrier), and
+//! [`Recorder::into_events`] performs one final stable sort under the
+//! canonical `(time, device, seq, task, kind)` comparator. Because event
+//! *content* never depends on the shard partition, the sorted stream is
+//! shard-invariant (pinned in `rust/tests/events.rs`).
+//!
+//! [`EventSink`] abstracts the output: a JSONL file writer behind
+//! `--record PATH` ([`JsonlSink`]) or an in-memory buffer for tests
+//! ([`MemorySink`]).
+
+use std::io::{Read, Write};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::event::{check_header, header_line, TaskEvent, SCHEMA_NAME};
+
+/// Anything that consumes a finished event stream.
+pub trait EventSink {
+    /// Consume one event (streams are fed in canonical order).
+    fn emit(&mut self, ev: &TaskEvent) -> Result<()>;
+    /// Flush any buffered output.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// JSONL writer: one versioned header line, then one event per line.
+pub struct JsonlSink<W: Write> {
+    w: W,
+}
+
+impl<W: Write> JsonlSink<W> {
+    /// Wrap a writer and emit the schema header.
+    pub fn new(mut w: W) -> Result<Self> {
+        writeln!(w, "{}", header_line())?;
+        Ok(JsonlSink { w })
+    }
+}
+
+impl JsonlSink<std::io::BufWriter<std::fs::File>> {
+    /// Create (truncate) a JSONL event file at `path`.
+    pub fn create(path: &str) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("cannot create event file `{path}`"))?;
+        Self::new(std::io::BufWriter::new(f))
+    }
+}
+
+impl<W: Write> EventSink for JsonlSink<W> {
+    fn emit(&mut self, ev: &TaskEvent) -> Result<()> {
+        writeln!(self.w, "{}", ev.to_json())?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// In-memory sink for tests.
+#[derive(Default)]
+pub struct MemorySink {
+    pub events: Vec<TaskEvent>,
+}
+
+impl EventSink for MemorySink {
+    fn emit(&mut self, ev: &TaskEvent) -> Result<()> {
+        self.events.push(ev.clone());
+        Ok(())
+    }
+}
+
+/// Buffering recorder threaded through a recorded run.
+#[derive(Default)]
+pub struct Recorder {
+    buf: Vec<TaskEvent>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn push(&mut self, ev: TaskEvent) {
+        self.buf.push(ev);
+    }
+
+    pub fn extend(&mut self, evs: impl IntoIterator<Item = TaskEvent>) {
+        self.buf.extend(evs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Finish the recording: stable-sort into canonical order and return
+    /// the stream.
+    pub fn into_events(mut self) -> Vec<TaskEvent> {
+        self.buf.sort_by(TaskEvent::canonical_cmp);
+        self.buf
+    }
+}
+
+/// Write a finished (canonically ordered) event stream to a sink.
+pub fn write_events(sink: &mut dyn EventSink, events: &[TaskEvent]) -> Result<()> {
+    for ev in events {
+        sink.emit(ev)?;
+    }
+    sink.flush()
+}
+
+/// Write a finished event stream to a JSONL file.
+pub fn write_events_file(path: &str, events: &[TaskEvent]) -> Result<()> {
+    let mut sink = JsonlSink::create(path)?;
+    write_events(&mut sink, events)
+}
+
+/// Read an event stream back from JSONL text (header line first). The
+/// reader uses the same serde model as the writer, so
+/// `read(write(events)) == events` exactly.
+pub fn read_events_str(text: &str) -> Result<Vec<TaskEvent>> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty event file")?;
+    check_header(header, SCHEMA_NAME)?;
+    let mut out = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("event line {}: {e}", i + 2))?;
+        out.push(TaskEvent::from_json(&v).with_context(|| format!("event line {}", i + 2))?);
+    }
+    Ok(out)
+}
+
+/// Read an event stream from a JSONL file.
+pub fn read_events_file(path: &str) -> Result<Vec<TaskEvent>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("cannot open event file `{path}`"))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut text = String::new();
+    r.read_to_string(&mut text)?;
+    read_events_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventMeta;
+
+    fn ev(t: f64, device: usize, seq: u64, task: usize) -> TaskEvent {
+        TaskEvent::Arrival {
+            meta: EventMeta::new(t, device, "ir", seq, task),
+            bytes: 1.0,
+            home: None,
+        }
+    }
+
+    #[test]
+    fn recorder_sorts_canonically() {
+        let mut r = Recorder::new();
+        r.push(ev(5.0, 1, 0, 2));
+        r.push(ev(1.0, 2, 0, 0));
+        r.push(ev(1.0, 0, 0, 0));
+        r.push(TaskEvent::EpochBarrier { t_ms: 1.0, epoch: 0 });
+        let evs = r.into_events();
+        assert_eq!(evs.len(), 4);
+        for pair in evs.windows(2) {
+            assert_ne!(
+                TaskEvent::canonical_cmp(&pair[0], &pair[1]),
+                std::cmp::Ordering::Greater
+            );
+        }
+        assert!(matches!(evs[1], TaskEvent::EpochBarrier { .. }), "run-level after tasks at t=1");
+    }
+
+    #[test]
+    fn jsonl_write_read_roundtrip() {
+        let events = vec![
+            ev(1.0, 0, 0, 0),
+            TaskEvent::EpochBarrier { t_ms: 5000.0, epoch: 1 },
+            ev(6000.25, 3, 2, 9),
+        ];
+        let mut buf = Vec::new();
+        {
+            let mut sink = JsonlSink::new(&mut buf).unwrap();
+            write_events(&mut sink, &events).unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("{\"schema\":\"skedge.events\""));
+        let back = read_events_str(&text).unwrap();
+        assert_eq!(events, back);
+    }
+
+    #[test]
+    fn reader_rejects_wrong_schema() {
+        assert!(read_events_str("").is_err());
+        assert!(read_events_str("{\"schema\":\"nope\",\"version\":1}\n").is_err());
+        assert!(read_events_str("{\"schema\":\"skedge.events\",\"version\":2}\n").is_err());
+    }
+
+    #[test]
+    fn memory_sink_collects() {
+        let mut s = MemorySink::default();
+        write_events(&mut s, &[ev(1.0, 0, 0, 0)]).unwrap();
+        assert_eq!(s.events.len(), 1);
+    }
+}

@@ -60,6 +60,16 @@ impl RunOutcome {
         RunOutcome { records, summary, latency }
     }
 
+    /// Assemble an outcome that carries *no* per-task records — the
+    /// streaming-metrics tail: shards folded every record into mergeable
+    /// online summaries at the barrier, so only the aggregate view exists.
+    /// `summary` comes from the streaming fold and `latency` from the
+    /// quantile sketch (approximate within its documented error bound,
+    /// unlike the exact tails `from_records` computes).
+    pub fn summary_only(summary: Summary, latency: Option<LatencyPercentiles>) -> RunOutcome {
+        RunOutcome { records: Vec::new(), summary, latency }
+    }
+
     /// Collect an indexed record table (`records[id]`), failing on any task
     /// that never produced a record — the common tail of every runner.
     pub fn from_slots(slots: Vec<Option<TaskRecord>>) -> anyhow::Result<RunOutcome> {

@@ -23,9 +23,12 @@ use anyhow::{anyhow, Result};
 use crate::config::{ExperimentSettings, FeedbackMode, Meta};
 use crate::fleet::device::{self, CloudObservation, CloudRequest, Device, DeviceProfile, Dispatch};
 use crate::metrics::TaskRecord;
+use crate::obs::event::{EventMeta, Stages, TaskEvent};
+use crate::obs::sink::Recorder;
+use crate::platform::containers::StartKind;
 use crate::platform::lambda::CloudPlatform;
 use crate::runtime::RunOutcome;
-use crate::workload::{build_workload, Task};
+use crate::workload::{build_workload, build_workload_with_arrivals, Task};
 use events::{Event, EventQueue};
 
 /// Result of one simulation run. Derefs to the unified
@@ -58,9 +61,61 @@ pub fn run_with_tidl_belief(
 
 /// Run one experiment configuration to completion.
 pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
+    run_inner(meta, settings, None, None)
+}
+
+/// [`run`] with event recording: returns the canonical-order event stream
+/// alongside the outcome. The outcome is bitwise-identical to [`run`]'s —
+/// recording only *observes* the stepper.
+pub fn run_recorded(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+) -> Result<(SimOutcome, Vec<TaskEvent>)> {
+    let mut rec = Recorder::new();
+    let out = run_inner(meta, settings, None, Some(&mut rec))?;
+    Ok((out, rec.into_events()))
+}
+
+/// [`run`] with externally supplied arrival times (the replay path):
+/// replaying the times recorded from a run under the same settings
+/// reproduces it bitwise (actuals and T_idl streams are seed-derived and
+/// arrival-time-independent).
+pub fn run_with_arrivals(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+    times: &[f64],
+) -> Result<SimOutcome> {
+    run_inner(meta, settings, Some(times), None)
+}
+
+/// [`run_with_arrivals`], also recording — the full record → replay →
+/// record round-trip.
+pub fn run_recorded_with_arrivals(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+    times: &[f64],
+) -> Result<(SimOutcome, Vec<TaskEvent>)> {
+    let mut rec = Recorder::new();
+    let out = run_inner(meta, settings, Some(times), Some(&mut rec))?;
+    Ok((out, rec.into_events()))
+}
+
+fn run_inner(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+    arrivals: Option<&[f64]>,
+    mut recorder: Option<&mut Recorder>,
+) -> Result<SimOutcome> {
     let app = meta.app(&settings.app).clone();
-    let n = settings.n_inputs.unwrap_or(app.n_eval);
-    let tasks: Vec<Task> = build_workload(meta, &settings.app, n, settings.replay, settings.seed)?;
+    let tasks: Vec<Task> = match arrivals {
+        Some(times) => {
+            build_workload_with_arrivals(meta, &settings.app, times, settings.replay, settings.seed)?
+        }
+        None => {
+            let n = settings.n_inputs.unwrap_or(app.n_eval);
+            build_workload(meta, &settings.app, n, settings.replay, settings.seed)?
+        }
+    };
 
     // the paper's single reference device; its T_idl stream is disjoint
     // from the workload streams (same salt the fleet mirror uses)
@@ -71,6 +126,13 @@ pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
     );
     let mut dev = Device::new(meta, settings, profile)?;
     let mut cloud = CloudPlatform::new(meta.memory_configs_mb.len());
+    dev.recording = recorder.is_some();
+    if let Some(rec) = recorder.as_deref_mut() {
+        rec.push(TaskEvent::ScenarioPhase {
+            t_ms: 0.0,
+            label: format!("sim:{}", settings.app),
+        });
+    }
 
     let mut q = EventQueue::new();
     for t in &tasks {
@@ -110,6 +172,44 @@ pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
                     pending_obs[id] = Some(CloudObservation::from_execution(&req, &exec));
                 }
                 records[id] = Some(device::complete_cloud(&req, &exec));
+                if let Some(rec) = recorder.as_deref_mut() {
+                    let r = records[id].as_ref().unwrap();
+                    let ev_meta = |t: f64| {
+                        EventMeta::new(t, req.device_id, &settings.app, req.seq, req.task_id)
+                    };
+                    rec.push(TaskEvent::ContainerStart {
+                        meta: ev_meta(exec.triggered_at),
+                        region: req.region,
+                        mem_mb: req.mem_mb,
+                        warm: exec.kind == StartKind::Warm,
+                        start_ms: exec.start_ms,
+                    });
+                    rec.push(TaskEvent::Completion {
+                        meta: ev_meta(exec.stored_at),
+                        edge: false,
+                        region: Some(req.region),
+                        warm: r.warm_actual,
+                        e2e_ms: r.actual_e2e_ms,
+                        cost: r.actual_cost,
+                        stages: Stages {
+                            upld: req.upld_ms,
+                            routing: req.routing_ms,
+                            start: exec.start_ms,
+                            comp: req.comp_ms,
+                            store: req.store_ms,
+                            ..Default::default()
+                        },
+                    });
+                    if feedback {
+                        // the realized outcome reaches the device when the
+                        // response lands (the CloudStored instant)
+                        rec.push(TaskEvent::Observation {
+                            meta: ev_meta(exec.stored_at),
+                            region: req.region,
+                            warm: exec.kind == StartKind::Warm,
+                        });
+                    }
+                }
             }
             Event::EdgeCompDone { .. } => dev.edge.drain_one(),
             Event::CloudStored { id } => {
@@ -119,6 +219,10 @@ pub fn run(meta: &Meta, settings: &ExperimentSettings) -> Result<SimOutcome> {
             }
             Event::EdgeStored { .. } => {}
         }
+    }
+
+    if let Some(rec) = recorder.as_deref_mut() {
+        rec.extend(std::mem::take(&mut dev.events));
     }
 
     Ok(SimOutcome {

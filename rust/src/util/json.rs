@@ -32,6 +32,17 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Compact (single-line) serialization — the JSONL form the event
+/// recorder writes. `to_string()` (via `ToString`) yields one line with
+/// no internal newlines.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        f.write_str(&out)
+    }
+}
+
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
@@ -432,6 +443,15 @@ mod tests {
             assert_eq!(meta.req("memory_configs_mb").arr().len(), 19);
             assert!(meta.req("apps").get("fd").is_some());
         }
+    }
+
+    #[test]
+    fn compact_roundtrip_single_line() {
+        let src = r#"{"apps": {"ir": {"x": [1.5, -2, 3e6], "name": "i\"r"}}, "n": 19}"#;
+        let v = Json::parse(src).unwrap();
+        let line = v.to_string();
+        assert!(!line.contains('\n'));
+        assert_eq!(Json::parse(&line).unwrap(), v);
     }
 
     #[test]

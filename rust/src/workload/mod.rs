@@ -111,6 +111,37 @@ pub fn build_workload(
     Ok(tasks)
 }
 
+/// Build a workload with *externally supplied* arrival times (the sim-mode
+/// replay path): same actuals sourcing as [`build_workload`], but each
+/// task's arrival time comes from `times` instead of the Poisson stream.
+///
+/// Actuals draws never consume the arrival RNG (the two streams are
+/// independent in [`build_workload`] too), so replaying the recorded
+/// arrival times under the same seed reproduces the original tasks
+/// bitwise.
+pub fn build_workload_with_arrivals(
+    meta: &Meta,
+    app: &str,
+    times: &[f64],
+    replay: bool,
+    seed: u64,
+) -> Result<Vec<Task>> {
+    let n = times.len();
+    let mut tasks = Vec::with_capacity(n);
+    if replay {
+        let rows = load_replay_cached(meta, app)?;
+        for (id, &arrive_ms) in times.iter().enumerate() {
+            tasks.push(Task { id, arrive_ms, actuals: rows[id % rows.len()].clone() });
+        }
+    } else {
+        let mut sampler = GroundTruthSampler::new(meta, app, seed);
+        for (id, &arrive_ms) in times.iter().enumerate() {
+            tasks.push(Task { id, arrive_ms, actuals: sampler.sample_task() });
+        }
+    }
+    Ok(tasks)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +200,20 @@ mod tests {
         let w = build_workload(&meta, "ir", 700, true, 3).unwrap();
         assert_eq!(w.len(), 700);
         assert_eq!(w[0].actuals.size, w[600].actuals.size);
+    }
+
+    #[test]
+    fn arrivals_substitution_preserves_actuals_bitwise() {
+        let meta = meta();
+        let orig = build_workload(&meta, "fd", 80, false, 11).unwrap();
+        let times: Vec<f64> = orig.iter().map(|t| t.arrive_ms).collect();
+        let re = build_workload_with_arrivals(&meta, "fd", &times, false, 11).unwrap();
+        assert_eq!(re.len(), orig.len());
+        for (a, b) in orig.iter().zip(&re) {
+            assert_eq!(a.arrive_ms.to_bits(), b.arrive_ms.to_bits());
+            assert_eq!(a.actuals.size, b.actuals.size);
+            assert_eq!(a.actuals.comp, b.actuals.comp);
+        }
     }
 
     #[test]

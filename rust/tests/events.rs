@@ -1,0 +1,432 @@
+//! Observability pins: the guarantees the event stream is built on.
+//!
+//!  1. **Golden schema** — the serialized JSONL of a hand-built event list
+//!     matches `tests/data/events_golden.jsonl` byte for byte, so any
+//!     schema drift fails loudly (and the reader parses the golden file
+//!     back to the identical events).
+//!  2. **Round trip** — simulate → record → extract arrivals → replay
+//!     reproduces the original run bitwise (records, fingerprint, and the
+//!     event stream itself), in sim and fleet modes and both CIL modes.
+//!  3. **Observation-only recording** — turning recording on changes no
+//!     outcome, and the stream is totally ordered by the canonical
+//!     `(time, device, seq)` key with per-completion stage sums matching
+//!     the record's end-to-end latency (the PR 5 conservation property,
+//!     extended to events).
+//!  4. **Streaming summaries** — `--stream-metrics` matches the
+//!     retained-record oracle exactly on count/min/max, to rounding on
+//!     sums, within the sketch's documented bound on percentiles, and
+//!     retains zero per-task records (the accounting hook).
+
+use std::sync::Arc;
+
+use skedge::config::{
+    default_artifact_dir, CilMode, ExperimentSettings, FleetScenario, FleetSettings, Meta,
+    Objective, RegionSettings, ThrottlePolicy, TopologySpec,
+};
+use skedge::fleet::{self, FleetOutcome};
+use skedge::metrics::TaskRecord;
+use skedge::obs::{
+    self, extract_arrivals, import_azure_file, per_device_times, read_events_str, write_events,
+    EventMeta, JsonlSink, Stages, TaskEvent, SKETCH_ALPHA,
+};
+use skedge::prop_assert;
+use skedge::sim;
+use skedge::testkit::check;
+
+fn meta() -> Meta {
+    Meta::load(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+fn assert_records_identical(a: &FleetOutcome, b: &FleetOutcome, what: &str) {
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint, "{what}: fingerprint");
+    assert_eq!(a.sim_end_ms, b.sim_end_ms, "{what}: sim end");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: device count");
+    for (da, db) in a.records.iter().zip(&b.records) {
+        assert_eq!(da.len(), db.len(), "{what}: task count");
+        for (x, y) in da.iter().zip(db) {
+            assert_eq!(x.placement, y.placement, "{what}: task {}", x.id);
+            assert_eq!(x.actual_e2e_ms.to_bits(), y.actual_e2e_ms.to_bits(), "{what}: e2e");
+            assert_eq!(x.actual_cost.to_bits(), y.actual_cost.to_bits(), "{what}: cost");
+            assert_eq!(x.warm_actual, y.warm_actual, "{what}: warm");
+            assert_eq!(x.rejected, y.rejected, "{what}: rejected");
+            assert_eq!(x.failover_hops, y.failover_hops, "{what}: hops");
+        }
+    }
+}
+
+// ------------------------------------------------------------ golden pin
+
+/// The hand-built twin of `tests/data/events_golden.jsonl`. Values are
+/// chosen so every serialized number is hand-checkable (integers print
+/// without a fraction, halves/quarters print exactly).
+fn golden_events() -> Vec<TaskEvent> {
+    let meta = |t: f64| EventMeta::new(t, 0, "fd", 0, 0);
+    vec![
+        TaskEvent::ScenarioPhase { t_ms: 0.0, label: "sim:fd".into() },
+        TaskEvent::Arrival { meta: meta(1.5), bytes: 8192.0, home: Some(1) },
+        TaskEvent::Decision {
+            meta: meta(1.5),
+            edge: false,
+            region: Some(0),
+            mem_mb: 1536.0,
+            predicted_e2e_ms: 850.25,
+            predicted_cost: 0.0000125,
+            feasible: true,
+        },
+        TaskEvent::ContainerStart {
+            meta: meta(400.5),
+            region: 0,
+            mem_mb: 1536.0,
+            warm: false,
+            start_ms: 250.0,
+        },
+        TaskEvent::Completion {
+            meta: meta(1100.75),
+            edge: false,
+            region: Some(0),
+            warm: Some(false),
+            e2e_ms: 1099.25,
+            cost: 0.0000125,
+            stages: Stages {
+                upld: 300.0,
+                routing: 50.5,
+                start: 250.0,
+                comp: 490.25,
+                store: 8.5,
+                ..Default::default()
+            },
+        },
+        TaskEvent::EpochBarrier { t_ms: 5000.0, epoch: 1 },
+    ]
+}
+
+#[test]
+fn golden_file_pins_the_serialized_schema() {
+    let golden = include_str!("data/events_golden.jsonl");
+    let events = golden_events();
+    // writer → bytes: any change to key names, ordering, number
+    // formatting, or the header is schema drift and must bump
+    // SCHEMA_VERSION (and this file) deliberately
+    let mut buf = Vec::new();
+    {
+        let mut sink = JsonlSink::new(&mut buf).unwrap();
+        write_events(&mut sink, &events).unwrap();
+    }
+    assert_eq!(
+        String::from_utf8(buf).unwrap(),
+        golden,
+        "serialized event stream drifted from tests/data/events_golden.jsonl"
+    );
+    // reader → events: the same file parses back to the identical list
+    assert_eq!(read_events_str(golden).unwrap(), events);
+    // and the golden stream is in canonical order, like every recording
+    for w in events.windows(2) {
+        assert_ne!(TaskEvent::canonical_cmp(&w[0], &w[1]), std::cmp::Ordering::Greater);
+    }
+}
+
+// ------------------------------------------------------------ round trip
+
+#[test]
+fn sim_record_replay_roundtrip_is_bitwise() {
+    let meta = meta();
+    for feedback in ["off", "observe"] {
+        let mut s = ExperimentSettings::new("fd", Objective::LatencyMin, &[1536.0, 1664.0, 2048.0])
+            .with_n_inputs(150);
+        s.feedback = skedge::config::FeedbackMode::parse(feedback).unwrap();
+        let (orig, events) = sim::run_recorded(&meta, &s).unwrap();
+        let rows = extract_arrivals(&events).unwrap();
+        assert_eq!(rows.len(), orig.records.len(), "one trace row per task");
+        let times = per_device_times(&rows, 1).unwrap().remove(0);
+        let (replayed, replay_events) = sim::run_recorded_with_arrivals(&meta, &s, &times).unwrap();
+        assert_eq!(orig.records.len(), replayed.records.len());
+        for (a, b) in orig.records.iter().zip(&replayed.records) {
+            assert_eq!(a.placement, b.placement, "feedback {feedback} task {}", a.id);
+            assert_eq!(a.actual_e2e_ms.to_bits(), b.actual_e2e_ms.to_bits());
+            assert_eq!(a.actual_cost.to_bits(), b.actual_cost.to_bits());
+            assert_eq!(a.warm_actual, b.warm_actual);
+        }
+        assert_eq!(orig.sim_end_ms, replayed.sim_end_ms);
+        // the replayed run records the identical stream — record/replay is
+        // a fixed point, not just record-once
+        assert_eq!(events, replay_events, "feedback {feedback}: event streams diverged");
+    }
+}
+
+#[test]
+fn fleet_record_replay_roundtrip_is_bitwise_in_both_cil_modes() {
+    let meta = meta();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let topo = TopologySpec::new(vec![
+            RegionSettings::new("near", 5.0),
+            RegionSettings::new("far", 45.0).with_price_mult(1.15),
+        ])
+        .with_cross_penalty_ms(25.0)
+        .with_cil_mode(cil);
+        let fs = FleetSettings::new(8)
+            .with_seed(91)
+            .with_duration_ms(8_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_topology(topo);
+        let orig = fleet::run(&meta, &fs.clone().with_recording(true)).unwrap();
+        assert!(!orig.events.is_empty(), "{cil:?}: recording produced no events");
+        let rows = extract_arrivals(&orig.events).unwrap();
+        assert_eq!(rows.len(), orig.summary.n_tasks, "{cil:?}: one trace row per task");
+        let replay = fs.clone().with_replay_trace(Arc::new(rows));
+        let re = fleet::run(&meta, &replay).unwrap();
+        assert_records_identical(&orig, &re, &format!("{cil:?} replay"));
+        // replay of the replay's own recording converges too: the streams
+        // are identical except the run-start phase marker, which names the
+        // driving scenario ("poisson" vs "replay(recorded trace)")
+        let re_rec = fleet::run(&meta, &replay.with_recording(true)).unwrap();
+        assert_eq!(orig.summary.fingerprint, re_rec.summary.fingerprint);
+        let strip = |evs: &[TaskEvent]| -> Vec<&TaskEvent> {
+            evs.iter().filter(|e| e.kind() != "phase").collect()
+        };
+        let (a, b) = (strip(&orig.events), strip(&re_rec.events));
+        assert_eq!(a.len(), b.len(), "{cil:?}: stream length");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y, "{cil:?}: replay recorded a different stream");
+        }
+    }
+}
+
+// ------------------------------------- recording observes, never changes
+
+/// A capped two-region fleet with queue throttling and failover: dense
+/// enough to emit every resilience event kind (denial, hop, queue wait,
+/// rejection).
+fn resilience_fleet() -> FleetSettings {
+    let mut topo = TopologySpec::new(vec![
+        RegionSettings::new("a", 5.0).with_max_concurrent(2),
+        RegionSettings::new("b", 45.0).with_price_mult(1.2).with_max_concurrent(2),
+    ])
+    .with_cross_penalty_ms(25.0);
+    topo.failover = true;
+    topo.throttle = ThrottlePolicy::Queue { max_wait_ms: 1_500.0 };
+    FleetSettings::new(10)
+        .with_seed(4242)
+        .with_duration_ms(8_000.0)
+        .with_epoch_ms(2_000.0)
+        .with_scenario(FleetScenario::Poisson)
+        .with_app_mix(vec![("fd".to_string(), 1.0)])
+        .with_topology(topo)
+}
+
+#[test]
+fn recording_changes_no_outcome_and_off_is_the_default_path() {
+    let meta = meta();
+    let fs = resilience_fleet();
+    let base = fleet::run(&meta, &fs).unwrap();
+    assert!(base.events.is_empty(), "default path must not record");
+    let rec = fleet::run(&meta, &fs.clone().with_recording(true)).unwrap();
+    assert!(!rec.events.is_empty());
+    // bitwise: turning the recorder on only *observes* the stepper; the
+    // printed fingerprint only folds the event count in at the CLI layer
+    assert_records_identical(&base, &rec, "recording on vs off");
+}
+
+#[test]
+fn recorded_stream_is_ordered_complete_and_conserves_stage_latency() {
+    let meta = meta();
+    let o = fleet::run(&meta, &resilience_fleet().with_recording(true)).unwrap();
+    let s = &o.summary;
+    assert!(s.rejected_count > 0, "fleet not saturated enough to reject");
+    assert!(s.failover_hops_total > 0, "no failover hops recorded");
+
+    // canonical total order, as recorded
+    for w in o.events.windows(2) {
+        assert_ne!(
+            TaskEvent::canonical_cmp(&w[0], &w[1]),
+            std::cmp::Ordering::Greater,
+            "stream out of canonical order"
+        );
+    }
+
+    // lifecycle completeness: every task arrives and decides exactly once,
+    // and either completes or is rejected
+    let count = |k: &str| o.events.iter().filter(|e| e.kind() == k).count();
+    assert_eq!(count("arrival"), s.n_tasks);
+    assert_eq!(count("decision"), s.n_tasks);
+    assert_eq!(count("completion") + count("rejection"), s.n_tasks);
+    assert_eq!(count("rejection"), s.rejected_count);
+    assert_eq!(count("failover") as u64, s.failover_hops_total);
+    assert!(count("denied") >= count("rejection"), "every rejection was denied first");
+    assert!(count("queue_wait") > 0, "queue throttle never queued anyone");
+
+    // conservation, extended from records to events: the per-stage
+    // decomposition of every completion sums to its end-to-end latency
+    // (1e-6 relative: the stages were accumulated in a different order)
+    for ev in &o.events {
+        if let TaskEvent::Completion { e2e_ms, stages, .. } = ev {
+            let total = stages.total();
+            assert!(
+                (total - e2e_ms).abs() <= 1e-6 * e2e_ms.max(1.0),
+                "stage sum {total} != e2e {e2e_ms}"
+            );
+        }
+    }
+
+    // completion events carry exactly the record stream's latencies
+    let mut from_events: Vec<f64> = o
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TaskEvent::Completion { e2e_ms, .. } => Some(*e2e_ms),
+            _ => None,
+        })
+        .collect();
+    let mut from_records: Vec<f64> =
+        o.records.iter().flatten().filter(|r| r.is_served()).map(|r| r.actual_e2e_ms).collect();
+    from_events.sort_by(f64::total_cmp);
+    from_records.sort_by(f64::total_cmp);
+    assert_eq!(from_events.len(), from_records.len());
+    for (a, b) in from_events.iter().zip(&from_records) {
+        assert_eq!(a.to_bits(), b.to_bits(), "event e2e diverged from record e2e");
+    }
+}
+
+#[test]
+fn prop_canonical_order_is_total() {
+    check("canonical-order-total", 60, |g| {
+        let mut events = Vec::new();
+        for _ in 0..40 {
+            // coarse times force plenty of ties so the tiebreaks are hit
+            let t = g.usize_range(0, 6) as f64;
+            let device = g.usize_range(0, 3);
+            let seq = g.usize_range(0, 2) as u64;
+            let task = g.usize_range(0, 4);
+            let meta = EventMeta::new(t, device, "ir", seq, task);
+            events.push(match g.usize_range(0, 3) {
+                0 => TaskEvent::Arrival { meta, bytes: 1.0, home: None },
+                1 => TaskEvent::QueueWait { meta, region: 0, waited_ms: 1.0 },
+                2 => TaskEvent::Observation { meta, region: 0, warm: g.bool() },
+                _ => TaskEvent::EpochBarrier { t_ms: t, epoch: seq },
+            });
+        }
+        // antisymmetry: cmp(a, b) is always the reverse of cmp(b, a)
+        for a in &events {
+            for b in &events {
+                let ab = TaskEvent::canonical_cmp(a, b);
+                let ba = TaskEvent::canonical_cmp(b, a);
+                prop_assert!(ab == ba.reverse(), "cmp not antisymmetric: {ab:?} vs {ba:?}");
+            }
+        }
+        // sorting yields a totally ordered stream: no later element may
+        // compare below an earlier one (a transitivity violation would)
+        events.sort_by(TaskEvent::canonical_cmp);
+        for (i, a) in events.iter().enumerate() {
+            for b in &events[i + 1..] {
+                prop_assert!(
+                    TaskEvent::canonical_cmp(a, b) != std::cmp::Ordering::Greater,
+                    "sorted stream not totally ordered"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- streaming
+
+#[test]
+fn streaming_summaries_match_the_retained_oracle() {
+    let meta = meta();
+    let fs = FleetSettings::new(12).with_seed(17).with_duration_ms(8_000.0);
+    let retained = fleet::run(&meta, &fs).unwrap();
+    let streaming = fleet::run(&meta, &fs.clone().with_stream_metrics(true)).unwrap();
+
+    // the accounting hook: streaming mode retains zero per-task records
+    // anywhere (O(devices + sketch) state only), the retained path keeps
+    // them all
+    assert_eq!(streaming.retained_records(), 0, "streaming mode retained records");
+    assert!(streaming.device_summaries.is_empty());
+    assert_eq!(retained.retained_records(), 2 * retained.summary.n_tasks, "run + per-device copy");
+
+    // counts match exactly (and pct, computed by the identical formula)
+    let (rs, ss) = (&retained.summary, &streaming.summary);
+    assert_eq!(rs.n_tasks, ss.n_tasks);
+    assert_eq!(rs.n_devices, ss.n_devices);
+    assert_eq!(rs.edge_count, ss.edge_count);
+    assert_eq!(rs.cloud_count, ss.cloud_count);
+    assert_eq!(rs.rejected_count, ss.rejected_count);
+    assert_eq!(rs.failover_hops_total, ss.failover_hops_total);
+    assert_eq!(rs.cloud_actual_warm, ss.cloud_actual_warm);
+    assert_eq!(rs.cloud_actual_cold, ss.cloud_actual_cold);
+    assert_eq!(rs.warm_cold_mismatches, ss.warm_cold_mismatches);
+    assert_eq!(rs.deadline_violation_pct.to_bits(), ss.deadline_violation_pct.to_bits());
+    assert_eq!(rs.max_pool_high_water, ss.max_pool_high_water);
+    assert_eq!(rs.peak_edge_queue, ss.peak_edge_queue);
+
+    // the exact oracle: served latencies from the retained records
+    let mut e2e: Vec<f64> = retained
+        .records
+        .iter()
+        .flatten()
+        .filter(|r: &&TaskRecord| r.is_served())
+        .map(|r| r.actual_e2e_ms)
+        .collect();
+    e2e.sort_by(f64::total_cmp);
+    assert!(e2e.len() > 100, "fleet too small to exercise the sketch");
+
+    let st = streaming.stream.as_ref().expect("stream-metrics outcome carries the fold");
+    assert_eq!(st.n as usize, rs.n_tasks);
+    // min/max: exact, bitwise
+    assert_eq!(st.e2e.min().to_bits(), e2e[0].to_bits());
+    assert_eq!(st.e2e.max().to_bits(), e2e[e2e.len() - 1].to_bits());
+    // count/sum: the streaming sum is correctly rounded (ExactSum), the
+    // oracle is a naive left fold — equal to rounding
+    assert_eq!(st.e2e.count() as usize, e2e.len());
+    let naive: f64 = e2e.iter().sum();
+    assert!((st.e2e.sum() - naive).abs() <= 1e-9 * naive, "sum drifted past rounding");
+    assert!(
+        (rs.total_actual_cost - ss.total_actual_cost).abs() <= 1e-12 * rs.total_actual_cost,
+        "cost totals diverged"
+    );
+
+    // sketch percentiles vs the exact order statistic at rank ceil(q·N):
+    // within the sketch's documented relative bound (SKETCH_ALPHA)
+    for q in [0.50, 0.95, 0.99] {
+        let rank = ((q * e2e.len() as f64).ceil() as usize).max(1);
+        let exact = e2e[rank - 1];
+        let sk = st.sketch.quantile(q);
+        assert!(
+            (sk - exact).abs() <= exact * SKETCH_ALPHA * 1.05,
+            "p{:.0} sketch {sk} vs exact {exact} beyond the {SKETCH_ALPHA} bound",
+            q * 100.0
+        );
+    }
+
+    // the reported tail is the sketch's
+    let lat = ss.latency.expect("streaming latency tail");
+    assert_eq!(lat.p50, st.sketch.quantile(0.50));
+    assert_eq!(lat.p99, st.sketch.quantile(0.99));
+}
+
+// -------------------------------------------------------------- importer
+
+#[test]
+fn azure_sample_imports_and_replays_deterministically() {
+    let meta = meta();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/azure_sample.csv");
+    // 500 ms per trace minute: a compressed 3-second "day"
+    let rows = import_azure_file(path, &["ir", "fd", "stt"], 500.0).unwrap();
+    assert_eq!(rows.len(), 16, "sample has 16 invocations across 3 functions");
+    assert_eq!(rows.iter().map(|r| r.device).max(), Some(2), "one device per CSV row");
+    // trace text round-trips exactly
+    let text = obs::trace_to_string(&rows);
+    assert_eq!(obs::trace_from_str(&text).unwrap(), rows);
+
+    let fs = FleetSettings::new(3)
+        .with_seed(5)
+        .with_duration_ms(3_000.0)
+        .with_replay_trace(Arc::new(rows));
+    let a = fleet::run(&meta, &fs).unwrap();
+    assert_eq!(a.summary.n_tasks, 16, "every imported arrival became a task");
+    // the trace names each device's app (round-robin over the mix)
+    let apps: Vec<&str> = a.device_summaries.iter().map(|d| d.app.as_str()).collect();
+    assert_eq!(apps, vec!["ir", "fd", "stt"]);
+    let b = fleet::run(&meta, &fs).unwrap();
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint, "imported replay not deterministic");
+}
