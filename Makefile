@@ -3,7 +3,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts verify soak record-replay
+.PHONY: artifacts test-python clean-artifacts verify soak record-replay analyze-demo
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
@@ -37,6 +37,20 @@ record-replay:
 	b=$$(grep '^fingerprint' /tmp/skedge-replay.out); \
 	if [ "$$a" = "$$b" ]; then echo "record-replay: round trip reproduced ($$a)"; \
 	else echo "record-replay: MISMATCH: recorded '$$a' vs replayed '$$b'" >&2; exit 1; fi
+
+# Record → analyze loop through the CLI: record a small fleet's event
+# stream (plus its windowed metrics series), run the offline analyzer on
+# the recording, and require a non-empty prediction audit — every decision
+# paired with its completion. Assumes `make artifacts` has run.
+analyze-demo:
+	cd rust && cargo run --release --quiet -- fleet --devices 8 --duration-s 6 \
+		--scenario poisson --record /tmp/skedge-analyze.jsonl \
+		--metrics /tmp/skedge-metrics.jsonl
+	cd rust && cargo run --release --quiet -- analyze --input /tmp/skedge-analyze.jsonl \
+		| tee /tmp/skedge-analyze.out
+	@n=$$(sed -n 's/^audited decisions: //p' /tmp/skedge-analyze.out); \
+	if [ -n "$$n" ] && [ "$$n" -gt 0 ]; then echo "analyze-demo: audited $$n decisions"; \
+	else echo "analyze-demo: empty prediction audit" >&2; exit 1; fi
 
 test-python:
 	cd python && python3 -m pytest -q tests

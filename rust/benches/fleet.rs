@@ -24,6 +24,9 @@ fn main() -> anyhow::Result<()> {
     ));
 
     let mut rows = Vec::new();
+    // harness self-profile of the final (largest) sweep run: per-shard
+    // busy/wait split and coordinator merge time, emitted into the JSON
+    let mut profile: Option<skedge::obs::RunProfile> = None;
     for devices in DEVICE_SWEEP {
         let fs = FleetSettings::new(devices)
             .with_duration_ms(DURATION_MS)
@@ -36,8 +39,10 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..runs {
             let inits = inits.clone();
             let t0 = Instant::now();
-            black_box(shard::run_fleet(&meta, inits, &fs)?);
+            let o = shard::run_fleet(&meta, inits, &fs)?;
             per_run.push(t0.elapsed().as_secs_f64());
+            profile = Some(o.profile.clone());
+            black_box(o);
         }
         per_run.sort_by(f64::total_cmp);
         // lower median: with 2 runs this takes the faster one (standard
@@ -99,6 +104,30 @@ fn main() -> anyhow::Result<()> {
         ));
     }
     json.push_str("  ],\n");
+    if let Some(p) = &profile {
+        println!();
+        print!("{}", p.render());
+        json.push_str(&format!("  \"profile_devices\": {},\n", DEVICE_SWEEP.last().unwrap()));
+        json.push_str("  \"profile\": {\n");
+        json.push_str(&format!("    \"wall_s\": {:.3},\n", p.wall_s));
+        json.push_str(&format!("    \"merge_s\": {:.3},\n", p.merge_s));
+        json.push_str(&format!("    \"events_total\": {},\n", p.events_total()));
+        json.push_str(&format!("    \"tasks_per_s\": {:.1},\n", p.tasks_per_s()));
+        json.push_str("    \"shards\": [\n");
+        for (i, s) in p.shards.iter().enumerate() {
+            let comma = if i + 1 < p.shards.len() { "," } else { "" };
+            json.push_str(&format!(
+                "      {{\"shard\": {}, \"busy_s\": {:.3}, \"wait_s\": {:.3}, \"busy_frac\": {:.3}, \"mean_batch\": {:.1}}}{comma}\n",
+                s.shard,
+                s.busy_s,
+                s.wait_s,
+                s.busy_frac(),
+                s.mean_batch()
+            ));
+        }
+        json.push_str("    ]\n");
+        json.push_str("  },\n");
+    }
     json.push_str(&format!("  \"aggregation_devices\": {devices},\n"));
     json.push_str("  \"aggregation\": [\n");
     for (i, (label, tasks, tps)) in agg_rows.iter().enumerate() {

@@ -155,6 +155,13 @@ pub struct FleetSettings {
     /// the arrival trace driving `FleetScenario::Replay` (canonical order;
     /// shared cheaply across shards)
     pub replay_trace: Option<std::sync::Arc<Vec<crate::obs::replay::ReplayArrival>>>,
+    /// the mobility moves re-driven by `FleetScenario::Replay` (canonical
+    /// order); when present they replace seed-generated mobility wholesale
+    pub replay_moves: Option<std::sync::Arc<Vec<crate::obs::replay::ReplayMove>>>,
+    /// collect the windowed telemetry series during the run (`--metrics`)
+    pub metrics: bool,
+    /// telemetry window length override (ms); None = the epoch length
+    pub metrics_window_ms: Option<f64>,
 }
 
 impl FleetSettings {
@@ -181,6 +188,9 @@ impl FleetSettings {
             record_events: false,
             stream_metrics: false,
             replay_trace: None,
+            replay_moves: None,
+            metrics: false,
+            metrics_window_ms: None,
         }
     }
 
@@ -207,6 +217,27 @@ impl FleetSettings {
     ) -> Self {
         self.scenario = FleetScenario::Replay;
         self.replay_trace = Some(rows);
+        self
+    }
+
+    /// Re-drive recorded mobility moves under `FleetScenario::Replay`.
+    pub fn with_replay_moves(
+        mut self,
+        moves: std::sync::Arc<Vec<crate::obs::replay::ReplayMove>>,
+    ) -> Self {
+        self.replay_moves = Some(moves);
+        self
+    }
+
+    /// Collect the windowed telemetry series (`--metrics`).
+    pub fn with_metrics(mut self, on: bool) -> Self {
+        self.metrics = on;
+        self
+    }
+
+    /// Override the telemetry window length (default: the epoch length).
+    pub fn with_metrics_window_ms(mut self, w: f64) -> Self {
+        self.metrics_window_ms = Some(w);
         self
     }
 

@@ -363,7 +363,15 @@ impl<'a> Device<'a> {
     /// preserving by construction.
     pub fn ingest_raw(&mut self, task: &Task, now: f64, raw: &RawPrediction) -> Result<Dispatch> {
         let a = &task.actuals;
-        self.router.apply_moves(now);
+        let applied = self.router.apply_moves(now);
+        if self.recording {
+            // record at the move's *scheduled* time, so replay re-drives it
+            // at the exact same virtual instant
+            for i in applied {
+                let (at_ms, to) = self.router.move_entry(i);
+                self.events.push(TaskEvent::DeviceMove { t_ms: at_ms, device: self.profile.id, to });
+            }
+        }
         let pred = self.router.assemble(&self.predictor, raw, now);
         let decision = self.engine.decide(&pred, self.edge.predicted_wait(now));
         self.router.note_placement(decision.placement, &pred, now);

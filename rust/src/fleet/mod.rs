@@ -87,6 +87,13 @@ pub struct FleetOutcome {
     /// per-region admissions that had to queue for a slot
     /// (`ThrottlePolicy::Queue` only)
     pub region_queued: Vec<u64>,
+    /// the windowed telemetry series (`--metrics` only): per-window ×
+    /// region × app aggregates, shard-invariant by construction
+    pub telemetry: Option<crate::obs::telemetry::Telemetry>,
+    /// harness self-profile: per-shard busy/wait split, batch shapes, and
+    /// coordinator wall/merge time — observational only, never part of
+    /// fingerprints
+    pub profile: crate::obs::profile::RunProfile,
     /// virtual time at which the last event fired
     pub sim_end_ms: f64,
 }

@@ -382,6 +382,15 @@ pub fn build_fleet(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceInit>> {
         }
         _ => None,
     };
+    // replayed mobility: recorded moves replace seed-generated mobility
+    // wholesale (a recorded stream captures exactly the moves that were
+    // applied, so regeneration would double-apply them)
+    let replay_moves: Option<Vec<Vec<(f64, usize)>>> = match (&fs.scenario, &fs.replay_moves) {
+        (FleetScenario::Replay, Some(moves)) => {
+            Some(crate::obs::replay::per_device_moves(moves, fs.devices)?)
+        }
+        _ => None,
+    };
     let mut inits = Vec::with_capacity(profiles.len());
     for mut profile in profiles {
         if let Some((_, apps)) = &replay {
@@ -398,7 +407,10 @@ pub fn build_fleet(meta: &Meta, fs: &FleetSettings) -> Result<Vec<DeviceInit>> {
         let dseed = device_seed(fs.seed, profile.id);
         let home = homes[profile.id];
         let phase = device_phase_ms(fs, profile.id, home);
-        let region = build_region_init(fs, profile.id, home);
+        let mut region = build_region_init(fs, profile.id, home);
+        if let Some(moves) = &replay_moves {
+            region.moves = moves[profile.id].clone();
+        }
         let times = match &replay {
             Some((times, _)) => times[profile.id].clone(),
             None => arrival_times(fs, app.arrival_rate_per_s, dseed, phase),

@@ -44,6 +44,7 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -51,14 +52,16 @@ use crate::config::{CilMode, FeedbackMode, FleetSettings, Meta, PredictorBackend
 use crate::metrics::TaskRecord;
 use crate::models::{NativeModels, RawPrediction};
 use crate::predictor::cil::Cil;
-use crate::predictor::Backend;
+use crate::predictor::{Backend, Placement};
 use crate::region::{DeviceRouter, RegionTopology, ResolvedTopology};
 use crate::runtime::{RunOutcome, XlaEngine};
 use crate::sim::events::{Event, EventQueue};
 
 use crate::obs::event::{EventMeta, Stages, TaskEvent};
+use crate::obs::profile::{RunProfile, ShardProfile};
 use crate::obs::sink::Recorder;
 use crate::obs::stream::StreamingSummary;
+use crate::obs::telemetry::{Telemetry, TelemetryCfg};
 use crate::platform::admission::Admission;
 use crate::platform::containers::StartKind;
 
@@ -132,6 +135,8 @@ struct DeviceRun<'a> {
     /// effective deadline δ — the streaming fold counts per-device
     /// deadline violations shard-side
     deadline_ms: f64,
+    /// index into the telemetry app table (0 when telemetry is off)
+    app_idx: usize,
 }
 
 impl<'a> DeviceRun<'a> {
@@ -143,6 +148,7 @@ impl<'a> DeviceRun<'a> {
             }
             let (now, ev) = self.queue.pop().expect("peeked event present");
             out.last_event_ms = out.last_event_ms.max(now);
+            out.events_popped += 1;
             match ev {
                 Event::Arrival { id } => {
                     self.arrivals_left -= 1;
@@ -154,6 +160,13 @@ impl<'a> DeviceRun<'a> {
                         Dispatch::Edge(e) => {
                             self.queue.schedule(e.comp_end_ms, Event::EdgeCompDone { id });
                             self.queue.schedule(e.stored_ms, Event::EdgeStored { id });
+                            // edge placements fold into the windowed
+                            // telemetry shard-side; cloud placements fold
+                            // coordinator-side in `Collector::put`, so no
+                            // record is ever counted twice
+                            if let Some(t) = &mut out.telemetry {
+                                t.fold(&e.record, self.app_idx, self.deadline_ms);
+                            }
                             // streaming mode folds the record here and
                             // drops it — the shard never retains records
                             match &mut out.stream {
@@ -193,11 +206,17 @@ struct EpochOutput {
     /// this epoch's shard-side streaming fold (`--stream-metrics` only);
     /// boxed to keep the per-epoch message small in retained mode
     stream: Option<Box<StreamingSummary>>,
+    /// this epoch's shard-side windowed-telemetry fold (`--metrics` only)
+    telemetry: Option<Box<Telemetry>>,
+    /// device-stepper events popped this epoch (profiling)
+    events_popped: u64,
+    /// cumulative self-profile snapshot of the reporting shard
+    profile: Option<ShardProfile>,
 }
 
 impl EpochOutput {
     /// `stream_dims` is `Some((n_regions, n_configs))` in streaming mode.
-    fn new(stream_dims: Option<(usize, usize)>) -> Self {
+    fn new(stream_dims: Option<(usize, usize)>, telem: Option<&TelemetryCfg>) -> Self {
         EpochOutput {
             edge_records: Vec::new(),
             requests: Vec::new(),
@@ -207,6 +226,9 @@ impl EpochOutput {
             last_event_ms: 0.0,
             events: Vec::new(),
             stream: stream_dims.map(|(r, c)| Box::new(StreamingSummary::new(r, c))),
+            telemetry: telem.map(|c| Box::new(c.new_telemetry())),
+            events_popped: 0,
+            profile: None,
         }
     }
 }
@@ -219,7 +241,12 @@ impl EpochOutput {
 /// was built). Raw predictions are pure functions of input size, so the
 /// path is outcome-identical to per-task scoring (pinned by
 /// `ingest_raw_matches_per_task_scoring` and the batched-fleet tests).
-fn score_epoch(runs: &mut [DeviceRun], bank: &ModelBank, epoch_end: f64) -> Result<()> {
+fn score_epoch(
+    runs: &mut [DeviceRun],
+    bank: &ModelBank,
+    epoch_end: f64,
+    prof: &mut ShardProfile,
+) -> Result<()> {
     type Group = (Vec<f64>, Vec<(usize, usize)>);
     let mut groups: BTreeMap<(String, PredictorBackendKind), Group> = BTreeMap::new();
     for (ri, run) in runs.iter_mut().enumerate() {
@@ -244,6 +271,9 @@ fn score_epoch(runs: &mut [DeviceRun], bank: &ModelBank, epoch_end: f64) -> Resu
     }
     for (key, (sizes, slots)) in groups {
         let Some(backend) = bank.get(&key) else { continue };
+        prof.scored_batches += 1;
+        prof.scored_tasks += sizes.len() as u64;
+        prof.max_batch = prof.max_batch.max(sizes.len() as u64);
         let raws = backend.raw_batch(&sizes).with_context(|| {
             format!("bulk-scoring {} arrivals for app `{}`", sizes.len(), key.0)
         })?;
@@ -296,6 +326,7 @@ fn build_run<'a>(
         next_unscored: 0,
         batched,
         deadline_ms,
+        app_idx: 0,
     })
 }
 
@@ -313,6 +344,8 @@ fn worker_loop(
     results: Sender<Result<EpochOutput, String>>,
     record: bool,
     stream_dims: Option<(usize, usize)>,
+    shard_idx: usize,
+    telem: Option<Arc<TelemetryCfg>>,
 ) {
     let mut runs: Vec<DeviceRun> = Vec::with_capacity(inits.len());
     for init in inits {
@@ -320,6 +353,9 @@ fn worker_loop(
         match build_run(meta, &topo, mode, &bank, init) {
             Ok(mut run) => {
                 run.device.recording = record;
+                if let Some(cfg) = &telem {
+                    run.app_idx = cfg.app_idx.get(dev_id).copied().unwrap_or(0);
+                }
                 runs.push(run);
             }
             Err(e) => {
@@ -334,7 +370,17 @@ fn worker_loop(
         .enumerate()
         .map(|(i, r)| (r.device.profile.id, i))
         .collect();
-    while let Ok(cmd) = commands.recv() {
+    // cumulative self-profile; wall times are observational only and never
+    // enter any outcome or fingerprint
+    let mut prof = ShardProfile { shard: shard_idx, ..Default::default() };
+    loop {
+        let wait_t = Instant::now();
+        let cmd = match commands.recv() {
+            Ok(cmd) => cmd,
+            Err(_) => return, // command channel closed: run over
+        };
+        prof.wait_s += wait_t.elapsed().as_secs_f64();
+        let busy_t = Instant::now();
         if let Some(hub) = &cmd.hub {
             for run in &mut runs {
                 run.device.router.refresh_from_hub(hub);
@@ -347,11 +393,11 @@ fn worker_loop(
                 runs[ri].device.observe_cloud(ob);
             }
         }
-        if let Err(e) = score_epoch(&mut runs, &bank, cmd.epoch_end) {
+        if let Err(e) = score_epoch(&mut runs, &bank, cmd.epoch_end, &mut prof) {
             let _ = results.send(Err(format!("epoch bulk scoring: {e:#}")));
             return;
         }
-        let mut out = EpochOutput::new(stream_dims);
+        let mut out = EpochOutput::new(stream_dims, telem.as_deref());
         for run in &mut runs {
             if let Err(e) = run.step_until(cmd.epoch_end, &mut out) {
                 let _ = results
@@ -366,6 +412,10 @@ fn worker_loop(
         out.events_left = runs.iter().map(|r| r.queue.len()).sum();
         out.peak_edge_queue =
             runs.iter().map(|r| r.device.peak_edge_queue).max().unwrap_or(0);
+        prof.epochs += 1;
+        prof.events += out.events_popped;
+        prof.busy_s += busy_t.elapsed().as_secs_f64();
+        out.profile = Some(prof);
         if results.send(Ok(out)).is_err() {
             return; // coordinator gone
         }
@@ -383,10 +433,23 @@ struct Collector {
     deadlines: Vec<f64>,
     apps: Vec<String>,
     recorder: Option<Recorder>,
+    /// the merged windowed series (`--metrics` only); coordinator-side
+    /// cloud folds land here directly, shard-side edge folds merge in at
+    /// the barrier
+    telemetry: Option<Telemetry>,
+    /// device id → telemetry app index (empty when telemetry is off)
+    app_idx: Vec<usize>,
 }
 
 impl Collector {
     fn put(&mut self, dev: usize, task: usize, rec: TaskRecord) {
+        if let Some(t) = &mut self.telemetry {
+            // cloud placements (incl. rejections) reach the collector from
+            // `merge_ready`; edge placements were already folded shard-side
+            if matches!(rec.placement, Placement::Cloud(_)) {
+                t.fold(&rec, self.app_idx[dev], self.deadlines[dev]);
+            }
+        }
         match &mut self.stream {
             Some(s) => s.fold(&rec, self.deadlines[dev]),
             None => self.slots[dev][task] = Some(rec),
@@ -424,6 +487,7 @@ fn barrier(
     fresh: &mut Vec<CloudRequest>,
     peak_edge_queue: &mut usize,
     sim_end: &mut f64,
+    prof: &mut RunProfile,
 ) -> Result<(usize, usize)> {
     // observations are partitioned exactly like the devices were (round
     // robin by id), preserving their canonical merge order per shard
@@ -459,6 +523,17 @@ fn barrier(
         if let Some(s) = out.stream {
             if let Some(cs) = &mut col.stream {
                 cs.merge(&s);
+            }
+        }
+        if let Some(t) = out.telemetry {
+            if let Some(ct) = &mut col.telemetry {
+                ct.merge(&t);
+            }
+        }
+        if let Some(sp) = out.profile {
+            // snapshots are cumulative, so the latest one wins
+            if let Some(slot) = prof.shards.get_mut(sp.shard) {
+                *slot = sp;
             }
         }
         if let Some(r) = &mut col.recorder {
@@ -801,6 +876,26 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
     let recording = fs.record_events;
     let region_names = topo.names();
     let n_regions = region_names.len();
+    // `--metrics`: one shared telemetry wiring for every shard and the
+    // coordinator; the window defaults to the epoch length so each barrier
+    // closes exactly one window
+    let telem_cfg: Option<Arc<TelemetryCfg>> = fs.metrics.then(|| {
+        let mut app_names = apps.clone();
+        app_names.sort();
+        app_names.dedup();
+        let app_idx: Vec<usize> = apps
+            .iter()
+            .map(|a| app_names.binary_search(a).expect("own app is in the sorted table"))
+            .collect();
+        let window_ms = fs.metrics_window_ms.filter(|w| *w > 0.0).unwrap_or(epoch_ms);
+        Arc::new(TelemetryCfg {
+            window_ms,
+            n_configs,
+            apps: Arc::new(app_names),
+            regions: Arc::new(region_names.clone()),
+            app_idx: Arc::new(app_idx),
+        })
+    });
     // streaming mode never allocates the per-task slot table — the whole
     // point is O(devices + sketch) collector state
     let slots: Vec<Vec<Option<TaskRecord>>> = if streaming {
@@ -814,6 +909,8 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         deadlines: deadlines.clone(),
         apps: apps.clone(),
         recorder: recording.then(Recorder::new),
+        telemetry: telem_cfg.as_ref().map(|c| c.new_telemetry()),
+        app_idx: telem_cfg.as_ref().map(|c| c.app_idx.to_vec()).unwrap_or_default(),
     };
     col.record(TaskEvent::ScenarioPhase { t_ms: 0.0, label: fs.scenario.label() });
 
@@ -830,18 +927,24 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
     let mut peak_edge_queue = 0usize;
 
     let stream_dims = streaming.then_some((n_regions, n_configs));
+    let mut profile = RunProfile::new(n_shards);
+    let wall_t = Instant::now();
     std::thread::scope(|scope| -> Result<()> {
         let mut cmd_txs = Vec::with_capacity(n_shards);
         let (res_tx, res_rx) =
             std::sync::mpsc::channel::<Result<EpochOutput, String>>();
-        for part in parts {
+        for (si, part) in parts.into_iter().enumerate() {
             let (tx, rx) = std::sync::mpsc::channel::<EpochCmd>();
             cmd_txs.push(tx);
             let res_tx = res_tx.clone();
             let topo = resolved.clone();
             let bank = bank.clone();
+            let telem = telem_cfg.clone();
             scope.spawn(move || {
-                worker_loop(meta, topo, mode, bank, part, rx, res_tx, recording, stream_dims)
+                worker_loop(
+                    meta, topo, mode, bank, part, rx, res_tx, recording, stream_dims, si,
+                    telem,
+                )
             });
         }
         drop(res_tx);
@@ -860,16 +963,24 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
             let (arrivals_left, events_left) = barrier(
                 &cmd_txs, &res_rx, epoch_end, snapshots(&topo),
                 std::mem::take(&mut carry_obs), &mut col,
-                &mut fresh, &mut peak_edge_queue, &mut sim_end,
+                &mut fresh, &mut peak_edge_queue, &mut sim_end, &mut profile,
             )?;
             if hub_mode {
                 absorb_into_hubs(&mut fresh, &mut topo);
             }
             pending.extend(fresh.into_iter().map(PendingServe::new));
+            let merge_t = Instant::now();
             merge_ready(
                 &mut pending, epoch_end, &mut topo, &mut col, &mut sim_end,
                 feedback, hub_mode, &mut carry_obs,
             );
+            profile.merge_s += merge_t.elapsed().as_secs_f64();
+            if let Some(t) = &mut col.telemetry {
+                // admission-queue depth still pending after this epoch's
+                // merge, attributed to the last window the epoch closed
+                let w = ((epoch_end / t.window_ms).ceil() as u64).saturating_sub(1);
+                t.note_queue_depth(w, pending.len() as u64);
+            }
             col.record(TaskEvent::EpochBarrier { t_ms: epoch_end, epoch: epoch_idx });
             epoch_idx += 1;
             if arrivals_left == 0 {
@@ -880,21 +991,27 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
                     barrier(
                         &cmd_txs, &res_rx, f64::INFINITY, snapshots(&topo),
                         std::mem::take(&mut carry_obs), &mut col,
-                        &mut fresh, &mut peak_edge_queue, &mut sim_end,
+                        &mut fresh, &mut peak_edge_queue, &mut sim_end, &mut profile,
                     )?;
                     pending.extend(fresh.into_iter().map(PendingServe::new));
                 }
+                let merge_t = Instant::now();
                 merge_ready(
                     &mut pending, f64::INFINITY, &mut topo, &mut col, &mut sim_end,
                     feedback, hub_mode, &mut carry_obs,
                 );
+                profile.merge_s += merge_t.elapsed().as_secs_f64();
                 break;
             }
             epoch_end += epoch_ms;
         }
+        profile.epochs = epoch_idx;
         drop(cmd_txs); // workers observe the closed channel and exit
         Ok(())
     })?;
+    profile.wall_s = wall_t.elapsed().as_secs_f64();
+    profile.tasks = expected_tasks as u64;
+    let telemetry = col.telemetry.take();
 
     // the canonical-order recorded event stream (empty unless `--record`);
     // the stable sort here is what makes recording shard-invariant
@@ -940,6 +1057,8 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
             hub_retractions,
             region_rejections,
             region_queued,
+            telemetry,
+            profile,
             sim_end_ms: sim_end,
         });
     }
@@ -985,6 +1104,8 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         hub_retractions,
         region_rejections,
         region_queued,
+        telemetry,
+        profile,
         sim_end_ms: sim_end,
     })
 }
@@ -1190,6 +1311,48 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn run_profile_is_always_collected() {
+        let meta = meta();
+        let fs = FleetSettings::new(3).with_seed(4).with_duration_ms(3_000.0).with_shards(2);
+        let out = run(&meta, &fs);
+        assert_eq!(out.profile.shards.len(), 2);
+        assert!(out.profile.epochs > 0);
+        assert_eq!(out.profile.tasks as usize, out.summary.n_tasks);
+        assert!(out.profile.events_total() > 0, "stepper events are counted");
+        assert!(out.telemetry.is_none(), "telemetry is off by default");
+    }
+
+    #[test]
+    fn telemetry_conserves_and_is_shard_invariant() {
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(17)
+            .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_metrics(true);
+        let base = run(&meta, &fs.clone().with_shards(1));
+        let t = base.telemetry.as_ref().expect("--metrics fills the series");
+        assert_eq!(t.total_arrivals() as usize, base.summary.n_tasks,
+                   "every task folds into exactly one window cell");
+        let jsonl = t.to_jsonl();
+        for shards in [2, 3] {
+            let other = run(&meta, &fs.clone().with_shards(shards));
+            assert_eq!(other.telemetry.unwrap().to_jsonl(), jsonl,
+                       "{shards} shards diverged (metrics series)");
+        }
+    }
+
+    #[test]
+    fn metrics_do_not_change_the_outcome() {
+        let meta = meta();
+        let fs = FleetSettings::new(4).with_seed(9).with_duration_ms(4_000.0).with_shards(2);
+        let base = run(&meta, &fs);
+        let with = run(&meta, &fs.clone().with_metrics(true));
+        assert_eq!(base.summary.fingerprint, with.summary.fingerprint);
     }
 
     #[test]

@@ -21,9 +21,12 @@
 //!           [--throttle reject|queue[:WAIT_S]] [--failover]
 //!           [--outage name:START_S-END_S,...]
 //!           [--record PATH|off] [--replay PATH] [--stream-metrics]
+//!           [--metrics PATH] [--metrics-prom PATH] [--metrics-window-ms W]
+//!           [--profile]
 //!   live    --app <ir|fd|stt> [--set ...] [--n N] [--scale 0.05]
 //!           [--runs R] [--backend xla|native] [--feedback off|observe]
 //!           [--record PATH]
+//!   analyze --input PATH [--window-ms W] [--deadline MS]
 //!   report                       # run every experiment in order
 //!
 //! `--xla` / `--backend xla` put the AOT-compiled artifact (PJRT) on the
@@ -100,6 +103,7 @@ fn main() -> Result<()> {
                 (Some(t), Some(_)) => sim::run_recorded_with_arrivals(&meta, &settings, t)?,
             };
             print_run_summary(&meta, &settings, &o.summary, &o.records);
+            write_run_metrics(&meta, &settings, &o.records, &args)?;
             write_recording(record_path.as_deref(), &events)?;
             Ok(())
         }
@@ -109,6 +113,14 @@ fn main() -> Result<()> {
             let record_path = record_path_arg(&args);
             fs = fs.with_recording(record_path.is_some());
             fs = fs.with_stream_metrics(args.has_switch("stream-metrics"));
+            let metrics_path = args.get("metrics").map(str::to_string);
+            let prom_path = args.get("metrics-prom").map(str::to_string);
+            if metrics_path.is_some() || prom_path.is_some() {
+                fs = fs.with_metrics(true);
+            }
+            if let Some(w) = args.f64("metrics-window-ms")? {
+                fs = fs.with_metrics_window_ms(w);
+            }
             if let Some(path) = args.get("replay") {
                 match args.get("scenario") {
                     None | Some("replay") => {}
@@ -116,12 +128,15 @@ fn main() -> Result<()> {
                         "--replay drives arrivals from the trace; `--scenario {s}` conflicts"
                     ),
                 }
-                let rows = skedge::obs::read_arrivals(path)?;
+                let (rows, moves) = skedge::obs::read_replay(path)?;
                 if args.get("devices").is_none() {
                     // size the fleet to the trace unless told otherwise
                     fs.devices = rows.iter().map(|r| r.device + 1).max().unwrap_or(1);
                 }
                 fs = fs.with_replay_trace(std::sync::Arc::new(rows));
+                if !moves.is_empty() {
+                    fs = fs.with_replay_moves(std::sync::Arc::new(moves));
+                }
             }
             // time only the sharded run, not single-threaded workload
             // generation, so the printed tasks/s reflects threading
@@ -132,7 +147,46 @@ fn main() -> Result<()> {
                 o.summary.fold_recorded_events(o.events.len() as u64);
             }
             print_fleet_summary(&fs, &o, t0.elapsed().as_secs_f64());
+            if let Some(t) = &o.telemetry {
+                if let Some(path) = &metrics_path {
+                    t.write_file(path)?;
+                    println!("metrics        : {} window cells -> {path}", t.n_cells());
+                }
+                if let Some(path) = &prom_path {
+                    std::fs::write(path, t.to_prometheus())
+                        .map_err(|e| anyhow::anyhow!("cannot write `{path}`: {e}"))?;
+                    println!("metrics        : prometheus snapshot -> {path}");
+                }
+            }
+            if args.has_switch("profile") {
+                print!("{}", o.profile.render());
+            }
             write_recording(record_path.as_deref(), &o.events)?;
+            Ok(())
+        }
+        "analyze" => {
+            let path = args.req("input")?;
+            let events = skedge::obs::read_events_file(path)?;
+            let mut opts = skedge::obs::AnalyzeOptions::default();
+            if let Some(w) = args.f64("window-ms")? {
+                opts.window_ms = w;
+            }
+            // SLO deadlines: artifact metadata when available; --deadline
+            // overrides every app seen in the stream (and is the only
+            // source when no artifacts are around)
+            if let Ok(meta) = Meta::load(&artifact_dir) {
+                for (name, app) in &meta.apps {
+                    opts.deadlines.insert(name.clone(), app.deadline_ms);
+                }
+            }
+            if let Some(d) = args.f64("deadline")? {
+                let apps: std::collections::BTreeSet<String> =
+                    events.iter().filter_map(|e| e.meta().map(|m| m.app.clone())).collect();
+                for app in apps {
+                    opts.deadlines.insert(app, d);
+                }
+            }
+            print!("{}", skedge::obs::render_report(&events, &opts));
             Ok(())
         }
         "live" => {
@@ -167,6 +221,12 @@ fn main() -> Result<()> {
                     None => println!("wall tail      : n/a (no tasks measured)"),
                 }
                 print_run_summary(&meta, &settings, &o.summary, &o.records);
+                if let Some(mpath) = args.get("metrics") {
+                    // one series per run, mirroring the recording suffix
+                    let mpath =
+                        if runs > 1 { format!("{mpath}.run{}", r + 1) } else { mpath.to_string() };
+                    write_run_metrics_path(&meta, &settings, &o.records, &args, &mpath)?;
+                }
                 if let Some(path) = &record_path {
                     // one stream per run so repeats don't clobber each other
                     let path =
@@ -308,6 +368,43 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
 /// `--record PATH`; the explicit `off` sentinel disables recording.
 fn record_path_arg(args: &Args) -> Option<String> {
     args.get("record").filter(|p| *p != "off").map(str::to_string)
+}
+
+/// `--metrics PATH` for the single-device runners (sim/live): build the
+/// windowed series from the retained records — one device, one "cloud"
+/// region — and write the JSONL file.
+fn write_run_metrics(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+    records: &[skedge::metrics::TaskRecord],
+    args: &Args,
+) -> Result<()> {
+    match args.get("metrics") {
+        Some(path) => write_run_metrics_path(meta, settings, records, args, path),
+        None => Ok(()),
+    }
+}
+
+fn write_run_metrics_path(
+    meta: &Meta,
+    settings: &ExperimentSettings,
+    records: &[skedge::metrics::TaskRecord],
+    args: &Args,
+    path: &str,
+) -> Result<()> {
+    let window_ms = args.f64("metrics-window-ms")?.filter(|w| *w > 0.0).unwrap_or(5_000.0);
+    let cfg = skedge::obs::TelemetryCfg {
+        window_ms,
+        n_configs: meta.memory_configs_mb.len(),
+        apps: std::sync::Arc::new(vec![settings.app.clone()]),
+        regions: std::sync::Arc::new(vec!["cloud".to_string()]),
+        app_idx: std::sync::Arc::new(vec![0]),
+    };
+    let deadline = settings.deadline_ms.unwrap_or(meta.app(&settings.app).deadline_ms);
+    let t = skedge::obs::Telemetry::from_records(&cfg, records, |_| 0, |_| deadline);
+    t.write_file(path)?;
+    println!("metrics        : {} window cells -> {path}", t.n_cells());
+    Ok(())
 }
 
 /// Write a recorded event stream to disk (no-op when recording is off).
@@ -558,6 +655,8 @@ USAGE:
                  [--throttle reject|queue[:WAIT_S]] [--failover]
                  [--outage name:START_S-END_S,...]
                  [--record PATH|off] [--replay PATH] [--stream-metrics]
+                 [--metrics PATH] [--metrics-prom PATH]
+                 [--metrics-window-ms W] [--profile]
 
 Region resilience: --region-cap / --region-rps bound each region's ground
 truth (concurrent executions / admissions per second); --throttle picks what
@@ -567,7 +666,8 @@ recorded as failover hops + added routing); --outage blacks out regions for
 scheduled windows; --scenario outage darkens correlated device groups.
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
                  [--backend xla|native] [--feedback off|observe]
-                 [--record PATH]
+                 [--record PATH] [--metrics PATH]
+  skedge analyze --input PATH [--window-ms W] [--deadline MS]
 
 `--feedback observe` closes the warm/cold loop: realized start kinds flow
 back into the working CILs (sim: at response time; live: when the worker
@@ -575,11 +675,25 @@ reports; fleet: at the next epoch barrier, hubs included in --cil hub).
 
 Observability: --record PATH writes the typed task-event stream (JSONL,
 canonical (time, device, seq) order, shard-invariant); --replay PATH
-re-drives arrivals from a recorded or imported trace — same seed + settings
-reproduces the original run bitwise; --stream-metrics folds records into
-mergeable online summaries (exact count/sum/min/max + quantile sketch)
-instead of retaining them. Recording never changes outcomes; the printed
-fleet fingerprint folds in the event count only when recording is on.
+re-drives arrivals (and recorded device moves) from a recorded or imported
+trace — same seed + settings reproduces the original run bitwise;
+--stream-metrics folds records into mergeable online summaries (exact
+count/sum/min/max + quantile sketch) instead of retaining them. Recording
+never changes outcomes; the printed fleet fingerprint folds in the event
+count only when recording is on. --record composes with --stream-metrics:
+the event stream is the full-fidelity disk spill while the in-memory side
+stays O(devices + sketch).
+
+Telemetry & analysis: --metrics PATH emits the windowed time-series
+(skedge.metrics JSONL: per-window x region x app arrival/warm/denial/
+latency/cost aggregates, window defaulting to the epoch length;
+--metrics-window-ms overrides); --metrics-prom PATH adds a final
+Prometheus-text snapshot; --profile prints the harness self-profile
+(per-shard busy vs barrier-wait, scoring batch shapes, events/s).
+`skedge analyze --input REC` reads any --record file offline and reports
+stage attribution, the prediction audit (predicted vs realized latency and
+cost, rolling error percentiles), and SLO root-cause (the first stage that
+made each deadline violation unsalvageable).
 
 Experiments: table1 table2 fig3 fig4 table3 fig5 table4 fig6 table5
              edgeonly baselines tidl configsel ablations fleet_scaling

@@ -1,0 +1,453 @@
+//! Offline recording analyzer: turn any `--record` event stream into
+//! (a) per-stage latency attribution — which stage dominates e2e, per
+//! app × region × placement; (b) a prediction audit — predicted vs
+//! realized latency/cost per decision with per-window error percentiles,
+//! so the paper's Table-V "<6% error" claim becomes a curve over the run;
+//! and (c) SLO root-cause — for each deadline violation, the first
+//! lifecycle stage whose cumulative latency made the deadline
+//! unsalvageable.
+//!
+//! Everything is computed from the typed events alone (no simulator
+//! state), so the analyzer works on any recording: sim, live, fleet, or
+//! region mode. The text report is deterministic and golden-pinned in
+//! `rust/tests/telemetry.rs`.
+
+use std::collections::BTreeMap;
+
+use super::event::{Stages, TaskEvent};
+
+/// Region key used for edge placements in attribution/root-cause maps
+/// (sorts after every cloud region; printed as `edge`).
+const EDGE_KEY: usize = usize::MAX;
+
+/// Cloud lifecycle stages in causal order (the order latency accumulates).
+const CLOUD_STAGES: [(&str, fn(&Stages) -> f64); 7] = [
+    ("upld", |s| s.upld),
+    ("routing", |s| s.routing),
+    ("extra_routing", |s| s.extra_routing),
+    ("queue_wait", |s| s.queue_wait),
+    ("start", |s| s.start),
+    ("comp", |s| s.comp),
+    ("store", |s| s.store),
+];
+
+/// Edge lifecycle stages in causal order.
+const EDGE_STAGES: [(&str, fn(&Stages) -> f64); 4] = [
+    ("edge_wait", |s| s.edge_wait),
+    ("edge_comp", |s| s.edge_comp),
+    ("iotup", |s| s.iotup),
+    ("edge_store", |s| s.edge_store),
+];
+
+/// Analyzer knobs: the audit window length and per-app SLO deadlines.
+#[derive(Debug, Clone)]
+pub struct AnalyzeOptions {
+    pub window_ms: f64,
+    /// app → deadline δ (ms); apps absent here are never counted as
+    /// violating
+    pub deadlines: BTreeMap<String, f64>,
+}
+
+impl Default for AnalyzeOptions {
+    fn default() -> Self {
+        AnalyzeOptions { window_ms: 5_000.0, deadlines: BTreeMap::new() }
+    }
+}
+
+// ------------------------------------------------------- stage attribution
+
+/// Accumulated stage sums of one `(app, region)` group.
+#[derive(Debug, Clone, Default)]
+pub struct StageGroup {
+    pub count: u64,
+    pub e2e_sum: f64,
+    /// stage name → summed latency, insertion in lifecycle order
+    pub sums: Vec<(&'static str, f64)>,
+}
+
+impl StageGroup {
+    /// The stage with the largest summed latency (`None` on empty).
+    pub fn dominant(&self) -> Option<&'static str> {
+        self.sums
+            .iter()
+            .filter(|(_, x)| *x > 0.0)
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(n, _)| *n)
+    }
+}
+
+/// Per-`(app, region)` stage attribution from the completion events.
+/// Edge completions key to the `edge` pseudo-region.
+pub fn stage_attribution(events: &[TaskEvent]) -> BTreeMap<(String, usize), StageGroup> {
+    let mut out: BTreeMap<(String, usize), StageGroup> = BTreeMap::new();
+    for ev in events {
+        let TaskEvent::Completion { meta, edge, region, e2e_ms, stages, .. } = ev else {
+            continue;
+        };
+        let key = if *edge { EDGE_KEY } else { region.unwrap_or(0) };
+        let g = out.entry((meta.app.clone(), key)).or_default();
+        if g.sums.is_empty() {
+            let table: &[(&'static str, fn(&Stages) -> f64)] =
+                if *edge { &EDGE_STAGES } else { &CLOUD_STAGES };
+            g.sums = table.iter().map(|(n, _)| (*n, 0.0)).collect();
+        }
+        g.count += 1;
+        g.e2e_sum += e2e_ms;
+        let table: &[(&'static str, fn(&Stages) -> f64)] =
+            if *edge { &EDGE_STAGES } else { &CLOUD_STAGES };
+        for (slot, (_, get)) in g.sums.iter_mut().zip(table.iter()) {
+            slot.1 += get(stages);
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------- prediction audit
+
+/// Exact error percentiles of one audit window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditWindow {
+    pub window: u64,
+    pub n: u64,
+    pub e2e_p50: f64,
+    pub e2e_p95: f64,
+    pub e2e_max: f64,
+    pub cost_p50: f64,
+    pub cost_p95: f64,
+    pub cost_max: f64,
+}
+
+/// Relative prediction error; when the realized value is zero the
+/// absolute error is reported instead (keeps edge costs, which are
+/// exactly zero, finite and meaningful).
+fn rel_err(predicted: f64, actual: f64) -> f64 {
+    let denom = if actual != 0.0 { actual.abs() } else { 1.0 };
+    (predicted - actual).abs() / denom
+}
+
+/// Exact q-th percentile of a sorted slice (rank ⌈q·n⌉, 1-based).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Pair each decision with its completion (by `(device, task)`) and
+/// report per-window error percentiles, windowed by decision time.
+pub fn prediction_audit(events: &[TaskEvent], window_ms: f64) -> Vec<AuditWindow> {
+    // (device, task) → (t_ms, predicted e2e, predicted cost)
+    let mut pending: BTreeMap<(usize, usize), (f64, f64, f64)> = BTreeMap::new();
+    // window → (e2e errors, cost errors)
+    let mut windows: BTreeMap<u64, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for ev in events {
+        match ev {
+            TaskEvent::Decision { meta, predicted_e2e_ms, predicted_cost, .. } => {
+                pending.insert(
+                    (meta.device, meta.task),
+                    (meta.t_ms, *predicted_e2e_ms, *predicted_cost),
+                );
+            }
+            TaskEvent::Completion { meta, e2e_ms, cost, .. } => {
+                let Some((t, pe, pc)) = pending.remove(&(meta.device, meta.task)) else {
+                    continue;
+                };
+                let w = (t / window_ms).floor() as u64;
+                let slot = windows.entry(w).or_default();
+                slot.0.push(rel_err(pe, *e2e_ms));
+                slot.1.push(rel_err(pc, *cost));
+            }
+            _ => {}
+        }
+    }
+    windows
+        .into_iter()
+        .map(|(window, (mut e2e, mut cost))| {
+            e2e.sort_by(f64::total_cmp);
+            cost.sort_by(f64::total_cmp);
+            AuditWindow {
+                window,
+                n: e2e.len() as u64,
+                e2e_p50: pct(&e2e, 0.50),
+                e2e_p95: pct(&e2e, 0.95),
+                e2e_max: pct(&e2e, 1.0),
+                cost_p50: pct(&cost, 0.50),
+                cost_p95: pct(&cost, 0.95),
+                cost_max: pct(&cost, 1.0),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------- SLO root-cause
+
+/// For every completion that violated its app's deadline, the first
+/// lifecycle stage whose cumulative latency crossed the deadline —
+/// aggregated as `(app, region, stage)` → violation count.
+pub fn slo_root_cause(
+    events: &[TaskEvent],
+    deadlines: &BTreeMap<String, f64>,
+) -> BTreeMap<(String, usize, &'static str), u64> {
+    let mut out: BTreeMap<(String, usize, &'static str), u64> = BTreeMap::new();
+    for ev in events {
+        let TaskEvent::Completion { meta, edge, region, e2e_ms, stages, .. } = ev else {
+            continue;
+        };
+        let Some(&deadline) = deadlines.get(&meta.app) else { continue };
+        if *e2e_ms <= deadline {
+            continue;
+        }
+        let table: &[(&'static str, fn(&Stages) -> f64)] =
+            if *edge { &EDGE_STAGES } else { &CLOUD_STAGES };
+        let mut cum = 0.0;
+        let mut culprit = table[table.len() - 1].0;
+        for (name, get) in table {
+            cum += get(stages);
+            if cum > deadline {
+                culprit = name;
+                break;
+            }
+        }
+        let key = if *edge { EDGE_KEY } else { region.unwrap_or(0) };
+        *out.entry((meta.app.clone(), key, culprit)).or_insert(0) += 1;
+    }
+    out
+}
+
+// ------------------------------------------------------------- text report
+
+fn region_label(key: usize) -> String {
+    if key == EDGE_KEY {
+        "edge".to_string()
+    } else {
+        format!("region {key}")
+    }
+}
+
+/// The full deterministic text report (golden-pinned).
+pub fn render_report(events: &[TaskEvent], opts: &AnalyzeOptions) -> String {
+    let mut arrivals = 0u64;
+    let mut completions = 0u64;
+    let mut rejections = 0u64;
+    for ev in events {
+        match ev {
+            TaskEvent::Arrival { .. } => arrivals += 1,
+            TaskEvent::Completion { .. } => completions += 1,
+            TaskEvent::Rejection { .. } => rejections += 1,
+            _ => {}
+        }
+    }
+    let mut out = format!(
+        "analyze: {} events, {arrivals} arrivals, {completions} completions, {rejections} rejections\n",
+        events.len()
+    );
+
+    out.push_str("\n== stage attribution ==\n");
+    let groups = stage_attribution(events);
+    if groups.is_empty() {
+        out.push_str("no completions\n");
+    }
+    for ((app, key), g) in &groups {
+        let mean = if g.count == 0 { 0.0 } else { g.e2e_sum / g.count as f64 };
+        out.push_str(&format!(
+            "app {app} @ {}: n={}, e2e mean {:.2} ms\n",
+            region_label(*key),
+            g.count,
+            mean
+        ));
+        for (name, sum) in &g.sums {
+            if *sum == 0.0 {
+                continue;
+            }
+            let stage_mean = sum / g.count as f64;
+            let share = if g.e2e_sum > 0.0 { 100.0 * sum / g.e2e_sum } else { 0.0 };
+            out.push_str(&format!("  {name:<14}{stage_mean:>10.2} ms  {share:>4.1}%\n"));
+        }
+        if let Some(d) = g.dominant() {
+            out.push_str(&format!("  dominant: {d}\n"));
+        }
+    }
+
+    out.push_str("\n== prediction audit ==\n");
+    let audit = prediction_audit(events, opts.window_ms);
+    let audited: u64 = audit.iter().map(|w| w.n).sum();
+    out.push_str(&format!("audited decisions: {audited}\n"));
+    for w in &audit {
+        out.push_str(&format!(
+            "window {} @ {} ms: n={}  e2e err p50 {:.4}  p95 {:.4}  max {:.4}  cost err p50 {:.4}  p95 {:.4}  max {:.4}\n",
+            w.window,
+            w.window as f64 * opts.window_ms,
+            w.n,
+            w.e2e_p50,
+            w.e2e_p95,
+            w.e2e_max,
+            w.cost_p50,
+            w.cost_p95,
+            w.cost_max,
+        ));
+    }
+
+    out.push_str("\n== slo root-cause ==\n");
+    let causes = slo_root_cause(events, &opts.deadlines);
+    let total: u64 = causes.values().sum();
+    out.push_str(&format!("deadline violations: {total}\n"));
+    for ((app, key, stage), n) in &causes {
+        out.push_str(&format!("app {app} @ {}: {stage} -> {n}\n", region_label(*key)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventMeta;
+
+    fn completion(
+        app: &str,
+        device: usize,
+        task: usize,
+        edge: bool,
+        e2e: f64,
+        stages: Stages,
+    ) -> TaskEvent {
+        TaskEvent::Completion {
+            meta: EventMeta::new(1000.0, device, app, 0, task),
+            edge,
+            region: if edge { None } else { Some(0) },
+            warm: if edge { None } else { Some(true) },
+            e2e_ms: e2e,
+            cost: 0.0,
+            stages,
+        }
+    }
+
+    #[test]
+    fn attribution_groups_and_dominates() {
+        let evs = vec![
+            completion(
+                "fd",
+                0,
+                0,
+                false,
+                100.0,
+                Stages { upld: 70.0, comp: 30.0, ..Default::default() },
+            ),
+            completion(
+                "fd",
+                1,
+                0,
+                true,
+                50.0,
+                Stages { edge_comp: 50.0, ..Default::default() },
+            ),
+        ];
+        let groups = stage_attribution(&evs);
+        assert_eq!(groups.len(), 2);
+        let cloud = &groups[&("fd".to_string(), 0)];
+        assert_eq!(cloud.count, 1);
+        assert_eq!(cloud.dominant(), Some("upld"));
+        let edge = &groups[&("fd".to_string(), EDGE_KEY)];
+        assert_eq!(edge.dominant(), Some("edge_comp"));
+    }
+
+    #[test]
+    fn audit_zero_when_predictions_exact() {
+        let meta = EventMeta::new(10.0, 0, "fd", 0, 0);
+        let evs = vec![
+            TaskEvent::Decision {
+                meta: meta.clone(),
+                edge: false,
+                region: Some(0),
+                mem_mb: 1024.0,
+                predicted_e2e_ms: 123.456,
+                predicted_cost: 0.5,
+                feasible: true,
+            },
+            TaskEvent::Completion {
+                meta,
+                edge: false,
+                region: Some(0),
+                warm: Some(true),
+                e2e_ms: 123.456,
+                cost: 0.5,
+                stages: Stages { comp: 123.456, ..Default::default() },
+            },
+        ];
+        let audit = prediction_audit(&evs, 5_000.0);
+        assert_eq!(audit.len(), 1);
+        assert_eq!(audit[0].e2e_max, 0.0);
+        assert_eq!(audit[0].cost_max, 0.0);
+    }
+
+    #[test]
+    fn audit_windows_by_decision_time() {
+        let mk = |t: f64, task: usize, pred: f64, act: f64| {
+            let meta = EventMeta::new(t, 0, "ir", 0, task);
+            vec![
+                TaskEvent::Decision {
+                    meta: meta.clone(),
+                    edge: true,
+                    region: None,
+                    mem_mb: 0.0,
+                    predicted_e2e_ms: pred,
+                    predicted_cost: 0.0,
+                    feasible: true,
+                },
+                TaskEvent::Completion {
+                    meta,
+                    edge: true,
+                    region: None,
+                    warm: None,
+                    e2e_ms: act,
+                    cost: 0.0,
+                    stages: Stages { edge_comp: act, ..Default::default() },
+                },
+            ]
+        };
+        let mut evs = mk(10.0, 0, 90.0, 100.0); // err 0.1 in window 0
+        evs.extend(mk(6_000.0, 1, 100.0, 100.0)); // err 0 in window 1
+        let audit = prediction_audit(&evs, 5_000.0);
+        assert_eq!(audit.len(), 2);
+        assert_eq!(audit[0].window, 0);
+        assert!((audit[0].e2e_max - 0.1).abs() < 1e-12);
+        assert_eq!(audit[1].window, 1);
+        assert_eq!(audit[1].e2e_max, 0.0);
+    }
+
+    #[test]
+    fn root_cause_names_first_unsalvageable_stage() {
+        let evs = vec![completion(
+            "fd",
+            0,
+            0,
+            false,
+            1_200.0,
+            Stages { upld: 300.0, start: 500.0, comp: 400.0, ..Default::default() },
+        )];
+        let mut deadlines = BTreeMap::new();
+        deadlines.insert("fd".to_string(), 700.0);
+        let causes = slo_root_cause(&evs, &deadlines);
+        assert_eq!(causes.len(), 1);
+        // cumulative: 300 (upld) → 800 (start) crosses 700 at `start`
+        assert_eq!(causes[&("fd".to_string(), 0, "start")], 1);
+        // no deadline registered → no violation
+        assert!(slo_root_cause(&evs, &BTreeMap::new()).is_empty());
+    }
+
+    #[test]
+    fn report_counts_header() {
+        let evs = vec![completion(
+            "fd",
+            0,
+            0,
+            true,
+            10.0,
+            Stages { edge_comp: 10.0, ..Default::default() },
+        )];
+        let text = render_report(&evs, &AnalyzeOptions::default());
+        assert!(text.starts_with("analyze: 1 events, 0 arrivals, 1 completions, 0 rejections\n"));
+        assert!(text.contains("audited decisions: 0"));
+        assert!(text.contains("deadline violations: 0"));
+    }
+}

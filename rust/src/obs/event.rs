@@ -23,7 +23,9 @@ use crate::util::json::Json;
 pub const SCHEMA_NAME: &str = "skedge.events";
 /// Bumped on any change to the serialized event shape; the reader rejects
 /// files it does not understand instead of misparsing them.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: added the `move` event (scenario mobility re-homings), so traces
+/// carry device moves alongside arrivals.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Fields shared by every task-scoped event.
 #[derive(Debug, Clone, PartialEq)]
@@ -170,6 +172,9 @@ pub enum TaskEvent {
     /// Closed-loop feedback: a denied placement's phantom belief was
     /// dropped from the rejecting region.
     Retraction { meta: EventMeta, region: usize },
+    /// A mobility move re-homed a device to a new region (recorded when
+    /// the router applies it, so replay can re-drive the same moves).
+    DeviceMove { t_ms: f64, device: usize, to: usize },
     /// The fleet coordinator crossed an epoch barrier.
     EpochBarrier { t_ms: f64, epoch: u64 },
     /// A region × config container pool reached a new high-water mark.
@@ -184,6 +189,7 @@ impl TaskEvent {
         match self {
             TaskEvent::EpochBarrier { t_ms, .. }
             | TaskEvent::PoolHighWater { t_ms, .. }
+            | TaskEvent::DeviceMove { t_ms, .. }
             | TaskEvent::ScenarioPhase { t_ms, .. } => *t_ms,
             _ => self.meta().unwrap().t_ms,
         }
@@ -221,6 +227,7 @@ impl TaskEvent {
             TaskEvent::Retraction { .. } => "retraction",
             TaskEvent::EpochBarrier { .. } => "epoch",
             TaskEvent::PoolHighWater { .. } => "pool_high_water",
+            TaskEvent::DeviceMove { .. } => "move",
             TaskEvent::ScenarioPhase { .. } => "phase",
         }
     }
@@ -242,6 +249,7 @@ impl TaskEvent {
             TaskEvent::Rejection { .. } => 10,
             TaskEvent::PoolHighWater { .. } => 11,
             TaskEvent::EpochBarrier { .. } => 12,
+            TaskEvent::DeviceMove { .. } => 13,
         }
     }
 
@@ -252,9 +260,16 @@ impl TaskEvent {
     /// collection order does, and this comparator erases that.
     pub fn canonical_cmp(a: &TaskEvent, b: &TaskEvent) -> Ordering {
         let key = |e: &TaskEvent| -> (f64, usize, u64, usize, u8) {
-            match e.meta() {
-                Some(m) => (m.t_ms, m.device, m.seq, m.task, e.kind_rank()),
-                None => (e.t_ms(), usize::MAX, u64::MAX, usize::MAX, e.kind_rank()),
+            match e {
+                // device-scoped but meta-less: sort with the device's task
+                // events at its scheduled time, after any of them tie-wise
+                TaskEvent::DeviceMove { t_ms, device, .. } => {
+                    (*t_ms, *device, u64::MAX, usize::MAX, e.kind_rank())
+                }
+                _ => match e.meta() {
+                    Some(m) => (m.t_ms, m.device, m.seq, m.task, e.kind_rank()),
+                    None => (e.t_ms(), usize::MAX, u64::MAX, usize::MAX, e.kind_rank()),
+                },
             }
         };
         let (ka, kb) = (key(a), key(b));
@@ -356,6 +371,11 @@ impl TaskEvent {
                 m.insert("region".into(), Json::Num(*region as f64));
                 m.insert("config".into(), Json::Num(*config as f64));
                 m.insert("live".into(), Json::Num(*live as f64));
+            }
+            TaskEvent::DeviceMove { t_ms, device, to } => {
+                m.insert("t_ms".into(), Json::Num(*t_ms));
+                m.insert("device".into(), Json::Num(*device as f64));
+                m.insert("to".into(), Json::Num(*to as f64));
             }
             TaskEvent::ScenarioPhase { t_ms, label } => {
                 m.insert("t_ms".into(), Json::Num(*t_ms));
@@ -462,6 +482,11 @@ impl TaskEvent {
                 config: req_f64(v, "config")? as usize,
                 live: req_f64(v, "live")? as usize,
             },
+            "move" => TaskEvent::DeviceMove {
+                t_ms: req_f64(v, "t_ms")?,
+                device: req_f64(v, "device")? as usize,
+                to: req_f64(v, "to")? as usize,
+            },
             "phase" => TaskEvent::ScenarioPhase {
                 t_ms: req_f64(v, "t_ms")?,
                 label: v
@@ -564,6 +589,7 @@ mod tests {
             TaskEvent::Retraction { meta: meta0(), region: 1 },
             TaskEvent::EpochBarrier { t_ms: 5000.0, epoch: 1 },
             TaskEvent::PoolHighWater { t_ms: 123.0, region: 1, config: 7, live: 3 },
+            TaskEvent::DeviceMove { t_ms: 2500.5, device: 4, to: 2 },
             TaskEvent::ScenarioPhase { t_ms: 0.0, label: "diurnal".into() },
         ];
         for ev in evs {
@@ -608,10 +634,13 @@ mod tests {
         let later = TaskEvent::Arrival { meta: EventMeta::new(2.0, 0, "ir", 0, 1), bytes: 1.0, home: None };
         let other_dev = TaskEvent::Arrival { meta: EventMeta::new(1.0, 1, "ir", 0, 0), bytes: 1.0, home: None };
         let barrier = TaskEvent::EpochBarrier { t_ms: 1.0, epoch: 0 };
+        let mv = TaskEvent::DeviceMove { t_ms: 1.0, device: 0, to: 1 };
         assert_eq!(TaskEvent::canonical_cmp(&a, &d), Ordering::Less, "arrival before decision");
         assert_eq!(TaskEvent::canonical_cmp(&a, &later), Ordering::Less);
         assert_eq!(TaskEvent::canonical_cmp(&a, &other_dev), Ordering::Less);
         assert_eq!(TaskEvent::canonical_cmp(&barrier, &a), Ordering::Greater, "run-level after tasks");
+        assert_eq!(TaskEvent::canonical_cmp(&a, &mv), Ordering::Less, "move after its device's task events");
+        assert_eq!(TaskEvent::canonical_cmp(&mv, &barrier), Ordering::Less, "move before run-level events");
     }
 
     #[test]

@@ -15,19 +15,38 @@
 //! * [`stream`] — `--stream-metrics` accumulators: exact order-invariant
 //!   sums, count/min/max per stage, and a mergeable quantile sketch, so
 //!   shards never retain per-task records.
+//! * [`telemetry`] — `--metrics PATH`: fixed virtual-time windows of
+//!   per-region × per-app aggregates, folded per shard and merged at the
+//!   epoch barrier (shard-invariant, bitwise deterministic), emitted as
+//!   versioned JSONL (`skedge.metrics`) plus an optional Prometheus-text
+//!   final snapshot.
+//! * [`analyze`] — the `analyze` subcommand: stage attribution,
+//!   prediction audit (per-window error percentiles), and SLO root-cause
+//!   from any recorded event stream.
+//! * [`profile`] — harness self-profiling (`--profile`): per-shard busy
+//!   vs barrier-wait time, scoring batch shapes, events/s.
 //! * [`import`] — Azure-Functions-style invocation-CSV → replay trace.
 
+pub mod analyze;
 pub mod event;
 pub mod import;
+pub mod profile;
 pub mod replay;
 pub mod sink;
 pub mod stream;
+pub mod telemetry;
 
+pub use analyze::{
+    prediction_audit, render_report, slo_root_cause, stage_attribution, AnalyzeOptions,
+    AuditWindow,
+};
 pub use event::{EventMeta, Stages, TaskEvent, SCHEMA_NAME, SCHEMA_VERSION};
 pub use import::{import_azure_csv, import_azure_file, MS_PER_MIN};
+pub use profile::{RunProfile, ShardProfile};
 pub use replay::{
-    extract_arrivals, per_device_apps, per_device_times, read_arrivals, read_trace, trace_from_str,
-    trace_to_string, write_trace, ReplayArrival, TRACE_SCHEMA,
+    extract_arrivals, extract_moves, per_device_apps, per_device_moves, per_device_times,
+    read_arrivals, read_replay, read_trace, trace_from_str, trace_from_str_full, trace_to_string,
+    trace_to_string_with_moves, write_trace, ReplayArrival, ReplayMove, TRACE_SCHEMA,
 };
 pub use sink::{
     read_events_file, read_events_str, write_events, write_events_file, EventSink, JsonlSink,
@@ -36,3 +55,4 @@ pub use sink::{
 pub use stream::{
     record_digest, QuantileSketch, RegionCounters, StageStats, StreamingSummary, SKETCH_ALPHA,
 };
+pub use telemetry::{Telemetry, TelemetryCfg, WindowCell, METRICS_SCHEMA, METRICS_VERSION};

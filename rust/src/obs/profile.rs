@@ -1,0 +1,155 @@
+//! Harness self-profiling: where does the fleet runner itself spend its
+//! time? Each worker keeps a cumulative [`ShardProfile`] — wall-clock
+//! split into *busy* (stepping devices, scoring batches) vs *wait*
+//! (blocked on the epoch-command channel, i.e. barrier wait) — plus batch
+//! shape counters; the coordinator collects the per-shard snapshots and
+//! its own merge time into a [`RunProfile`] on `FleetOutcome`.
+//!
+//! Profiles are observational only: wall times never feed fingerprints or
+//! outcomes, so `--profile` cannot perturb determinism. This is the
+//! measurement substrate the ROADMAP's million-device item (lock-free hot
+//! path) will be judged against.
+
+/// Cumulative self-measurements of one worker shard.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardProfile {
+    /// shard index
+    pub shard: usize,
+    /// seconds spent stepping devices / scoring / folding
+    pub busy_s: f64,
+    /// seconds blocked waiting for the next epoch command (barrier wait)
+    pub wait_s: f64,
+    /// epochs processed
+    pub epochs: u64,
+    /// device-stepper events popped
+    pub events: u64,
+    /// scoring batches executed
+    pub scored_batches: u64,
+    /// tasks scored across all batches
+    pub scored_tasks: u64,
+    /// largest single scoring batch
+    pub max_batch: u64,
+}
+
+impl ShardProfile {
+    /// Fraction of this shard's accounted time spent busy.
+    pub fn busy_frac(&self) -> f64 {
+        let total = self.busy_s + self.wait_s;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.busy_s / total
+        }
+    }
+
+    /// Mean scoring batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.scored_batches == 0 {
+            0.0
+        } else {
+            self.scored_tasks as f64 / self.scored_batches as f64
+        }
+    }
+}
+
+/// The whole-run profile reported on `FleetOutcome` and printed by
+/// `--profile`.
+#[derive(Debug, Clone, Default)]
+pub struct RunProfile {
+    /// one entry per shard, indexed by shard id
+    pub shards: Vec<ShardProfile>,
+    /// coordinator wall-clock for the whole run (seconds)
+    pub wall_s: f64,
+    /// coordinator time inside `merge_ready` (seconds)
+    pub merge_s: f64,
+    /// epochs driven
+    pub epochs: u64,
+    /// tasks completed
+    pub tasks: u64,
+}
+
+impl RunProfile {
+    pub fn new(n_shards: usize) -> Self {
+        let mut shards = vec![ShardProfile::default(); n_shards];
+        for (i, s) in shards.iter_mut().enumerate() {
+            s.shard = i;
+        }
+        RunProfile { shards, wall_s: 0.0, merge_s: 0.0, epochs: 0, tasks: 0 }
+    }
+
+    /// Total device-stepper events across shards.
+    pub fn events_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.events).sum()
+    }
+
+    /// Task throughput against coordinator wall-clock.
+    pub fn tasks_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tasks as f64 / self.wall_s
+        }
+    }
+
+    /// Human-readable report for `--profile`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "run profile: {:.3}s wall, {} epochs, {} tasks ({:.0} tasks/s), {} events, merge {:.3}s\n",
+            self.wall_s,
+            self.epochs,
+            self.tasks,
+            self.tasks_per_s(),
+            self.events_total(),
+            self.merge_s,
+        ));
+        for s in &self.shards {
+            out.push_str(&format!(
+                "  shard {}: busy {:.3}s  wait {:.3}s  ({:.0}% busy)  events {}  batches {} (mean {:.1}, max {})\n",
+                s.shard,
+                s.busy_s,
+                s.wait_s,
+                s.busy_frac() * 100.0,
+                s.events,
+                s.scored_batches,
+                s.mean_batch(),
+                s.max_batch,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_rates_guard_zero() {
+        let p = RunProfile::new(2);
+        assert_eq!(p.tasks_per_s(), 0.0);
+        assert_eq!(p.shards[0].busy_frac(), 0.0);
+        assert_eq!(p.shards[0].mean_batch(), 0.0);
+        assert_eq!(p.shards[1].shard, 1);
+    }
+
+    #[test]
+    fn render_reports_each_shard() {
+        let mut p = RunProfile::new(2);
+        p.wall_s = 2.0;
+        p.tasks = 100;
+        p.epochs = 4;
+        p.shards[0].busy_s = 1.5;
+        p.shards[0].wait_s = 0.5;
+        p.shards[0].events = 42;
+        p.shards[0].scored_batches = 3;
+        p.shards[0].scored_tasks = 12;
+        p.shards[0].max_batch = 6;
+        let text = p.render();
+        assert!(text.contains("100 tasks (50 tasks/s)"));
+        assert!(text.contains("shard 0: busy 1.500s  wait 0.500s  (75% busy)"));
+        assert!(text.contains("batches 3 (mean 4.0, max 6)"));
+        assert!(text.contains("shard 1:"));
+        assert_eq!(p.events_total(), 42);
+    }
+}

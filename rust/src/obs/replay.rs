@@ -69,6 +69,42 @@ impl ReplayArrival {
     }
 }
 
+/// One replayable mobility move: at `t_ms` the device re-homes to region
+/// `to`. Serialized as a trace row discriminated by `"kind":"move"`
+/// (arrival rows carry no `kind` key).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayMove {
+    pub device: usize,
+    /// scheduled move time, virtual ms
+    pub t_ms: f64,
+    /// destination region index
+    pub to: usize,
+}
+
+impl ReplayMove {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".into(), Json::Str("move".into()));
+        m.insert("device".into(), Json::Num(self.device as f64));
+        m.insert("t_ms".into(), Json::Num(self.t_ms));
+        m.insert("to".into(), Json::Num(self.to as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ReplayMove> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("move row missing numeric `{key}`"))
+        };
+        Ok(ReplayMove {
+            device: num("device")? as usize,
+            t_ms: num("t_ms")?,
+            to: num("to")? as usize,
+        })
+    }
+}
+
 /// Sort arrivals into canonical trace order and validate: times finite
 /// and non-negative, per-device times strictly increasing.
 pub fn canonicalize(mut rows: Vec<ReplayArrival>) -> Result<Vec<ReplayArrival>> {
@@ -95,11 +131,47 @@ pub fn canonicalize(mut rows: Vec<ReplayArrival>) -> Result<Vec<ReplayArrival>> 
     Ok(rows)
 }
 
+/// Sort moves into canonical `(t_ms, device)` order and validate: times
+/// finite and non-negative, per-device move times strictly increasing.
+pub fn canonicalize_moves(mut moves: Vec<ReplayMove>) -> Result<Vec<ReplayMove>> {
+    for m in &moves {
+        if !m.t_ms.is_finite() || m.t_ms < 0.0 {
+            bail!("trace move for device {} has bad time {}", m.device, m.t_ms);
+        }
+    }
+    moves.sort_by(|a, b| a.t_ms.total_cmp(&b.t_ms).then(a.device.cmp(&b.device)));
+    let mut last: std::collections::BTreeMap<usize, f64> = Default::default();
+    for m in &moves {
+        if let Some(&prev) = last.get(&m.device) {
+            if m.t_ms <= prev {
+                bail!(
+                    "device {} moves not strictly increasing ({} after {})",
+                    m.device,
+                    m.t_ms,
+                    prev
+                );
+            }
+        }
+        last.insert(m.device, m.t_ms);
+    }
+    Ok(moves)
+}
+
 /// Serialize a trace to JSONL text.
 pub fn trace_to_string(rows: &[ReplayArrival]) -> String {
+    trace_to_string_with_moves(rows, &[])
+}
+
+/// Serialize a trace with mobility moves: arrival rows first, then move
+/// rows (each section in its canonical order).
+pub fn trace_to_string_with_moves(rows: &[ReplayArrival], moves: &[ReplayMove]) -> String {
     let mut out = format!("{{\"schema\":\"{TRACE_SCHEMA}\",\"version\":{SCHEMA_VERSION}}}\n");
     for r in rows {
         out.push_str(&r.to_json().to_string());
+        out.push('\n');
+    }
+    for m in moves {
+        out.push_str(&m.to_json().to_string());
         out.push('\n');
     }
     out
@@ -111,20 +183,35 @@ pub fn write_trace(path: &str, rows: &[ReplayArrival]) -> Result<()> {
         .with_context(|| format!("cannot write trace `{path}`"))
 }
 
-/// Parse a trace from JSONL text (canonicalizing and validating).
+/// Parse the arrivals of a trace from JSONL text (canonicalizing and
+/// validating; move rows are skipped).
 pub fn trace_from_str(text: &str) -> Result<Vec<ReplayArrival>> {
+    trace_from_str_full(text).map(|(rows, _)| rows)
+}
+
+/// Parse a trace from JSONL text, returning both arrivals and mobility
+/// moves (each canonicalized and validated). Rows with `"kind":"move"`
+/// are moves; all other rows are arrivals.
+pub fn trace_from_str_full(text: &str) -> Result<(Vec<ReplayArrival>, Vec<ReplayMove>)> {
     let mut lines = text.lines();
     let header = lines.next().context("empty trace file")?;
     check_header(header, TRACE_SCHEMA)?;
     let mut rows = Vec::new();
+    let mut moves = Vec::new();
     for (i, line) in lines.enumerate() {
         if line.trim().is_empty() {
             continue;
         }
         let v = Json::parse(line).map_err(|e| anyhow!("trace line {}: {e}", i + 2))?;
-        rows.push(ReplayArrival::from_json(&v).with_context(|| format!("trace line {}", i + 2))?);
+        if v.get("kind").and_then(Json::as_str) == Some("move") {
+            moves.push(ReplayMove::from_json(&v).with_context(|| format!("trace line {}", i + 2))?);
+        } else {
+            rows.push(
+                ReplayArrival::from_json(&v).with_context(|| format!("trace line {}", i + 2))?,
+            );
+        }
     }
-    canonicalize(rows)
+    Ok((canonicalize(rows)?, canonicalize_moves(moves)?))
 }
 
 /// Read a trace file.
@@ -139,6 +226,13 @@ pub fn read_trace(path: &str) -> Result<Vec<ReplayArrival>> {
 /// arrival events extracted — so a `--record` output feeds straight back
 /// into `--replay` with no conversion step.
 pub fn read_arrivals(path: &str) -> Result<Vec<ReplayArrival>> {
+    read_replay(path).map(|(rows, _)| rows)
+}
+
+/// Read a full replay input — arrivals *and* mobility moves — from either
+/// file kind, sniffed off the schema header (recorded event streams carry
+/// moves as `move` events, traces as `"kind":"move"` rows).
+pub fn read_replay(path: &str) -> Result<(Vec<ReplayArrival>, Vec<ReplayMove>)> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("cannot open trace `{path}`"))?;
     let header = text.lines().next().context("empty trace file")?;
@@ -147,9 +241,10 @@ pub fn read_arrivals(path: &str) -> Result<Vec<ReplayArrival>> {
         .and_then(|v| v.get("schema").and_then(Json::as_str).map(str::to_string))
         .with_context(|| format!("`{path}` has no schema header line"))?;
     if schema == super::event::SCHEMA_NAME {
-        extract_arrivals(&super::sink::read_events_str(&text)?)
+        let events = super::sink::read_events_str(&text)?;
+        Ok((extract_arrivals(&events)?, extract_moves(&events)?))
     } else {
-        trace_from_str(&text)
+        trace_from_str_full(&text)
     }
 }
 
@@ -170,6 +265,33 @@ pub fn extract_arrivals(events: &[TaskEvent]) -> Result<Vec<ReplayArrival>> {
         })
         .collect();
     canonicalize(rows)
+}
+
+/// Extract the replayable mobility moves out of a recorded event stream.
+pub fn extract_moves(events: &[TaskEvent]) -> Result<Vec<ReplayMove>> {
+    let moves = events
+        .iter()
+        .filter_map(|ev| match ev {
+            TaskEvent::DeviceMove { t_ms, device, to } => {
+                Some(ReplayMove { device: *device, t_ms: *t_ms, to: *to })
+            }
+            _ => None,
+        })
+        .collect();
+    canonicalize_moves(moves)
+}
+
+/// Group canonical moves into per-device `(at_ms, to_region)` streams, the
+/// shape `DeviceRegionSpec::moves` consumes.
+pub fn per_device_moves(moves: &[ReplayMove], n_devices: usize) -> Result<Vec<Vec<(f64, usize)>>> {
+    let mut out = vec![Vec::new(); n_devices];
+    for m in moves {
+        if m.device >= n_devices {
+            bail!("trace move device {} out of range (fleet has {n_devices} devices)", m.device);
+        }
+        out[m.device].push((m.t_ms, m.to));
+    }
+    Ok(out)
 }
 
 /// Group a canonical trace into per-device arrival-time streams
@@ -277,6 +399,33 @@ mod tests {
         assert_eq!(read_arrivals(ev_path).unwrap(), rows);
         let _ = std::fs::remove_file(trace_path);
         let _ = std::fs::remove_file(ev_path);
+    }
+
+    #[test]
+    fn trace_with_moves_roundtrips_and_sniffs() {
+        let rows = canonicalize(vec![row(0, 1.5), row(1, 2.25)]).unwrap();
+        let moves = vec![
+            ReplayMove { device: 1, t_ms: 100.0, to: 2 },
+            ReplayMove { device: 0, t_ms: 50.5, to: 1 },
+        ];
+        let text = trace_to_string_with_moves(&rows, &moves);
+        let (back_rows, back_moves) = trace_from_str_full(&text).unwrap();
+        assert_eq!(back_rows, rows);
+        assert_eq!(back_moves[0], ReplayMove { device: 0, t_ms: 50.5, to: 1 }, "canonical order");
+        assert_eq!(back_moves.len(), 2);
+        // arrivals-only parse skips move rows
+        assert_eq!(trace_from_str(&text).unwrap(), rows);
+        // moves extract out of a recorded event stream too
+        let events = vec![
+            TaskEvent::DeviceMove { t_ms: 9.0, device: 0, to: 2 },
+            TaskEvent::EpochBarrier { t_ms: 5000.0, epoch: 1 },
+        ];
+        let ms = extract_moves(&events).unwrap();
+        assert_eq!(ms, vec![ReplayMove { device: 0, t_ms: 9.0, to: 2 }]);
+        let per = per_device_moves(&ms, 2).unwrap();
+        assert_eq!(per[0], vec![(9.0, 2)]);
+        assert!(per[1].is_empty());
+        assert!(per_device_moves(&ms, 0).is_err(), "device id out of range");
     }
 
     #[test]

@@ -207,8 +207,9 @@ mod tests {
     #[test]
     fn reader_rejects_wrong_schema() {
         assert!(read_events_str("").is_err());
-        assert!(read_events_str("{\"schema\":\"nope\",\"version\":1}\n").is_err());
-        assert!(read_events_str("{\"schema\":\"skedge.events\",\"version\":2}\n").is_err());
+        assert!(read_events_str("{\"schema\":\"nope\",\"version\":2}\n").is_err());
+        assert!(read_events_str("{\"schema\":\"skedge.events\",\"version\":1}\n").is_err());
+        assert!(read_events_str("{\"schema\":\"skedge.events\",\"version\":99}\n").is_err());
     }
 
     #[test]

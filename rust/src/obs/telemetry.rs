@@ -1,0 +1,464 @@
+//! Windowed telemetry: fixed virtual-time windows of per-region × per-app
+//! aggregates, built from the same [`TaskRecord`] stream everything else
+//! consumes.
+//!
+//! Each served/rejected task folds into exactly one
+//! `(window, region, app)` cell keyed by its *arrival* time — so window
+//! totals are conserved against the whole-run summary counters (pinned in
+//! `rust/tests/telemetry.rs`). Cells hold only mergeable state (u64
+//! counters, [`StageStats`] with exact order-invariant sums, and a
+//! [`QuantileSketch`]), which makes the series shard-invariant: shards
+//! fold their local records, the coordinator merges at the epoch barrier,
+//! and the merged result is independent of the partition.
+//!
+//! The emitted form is versioned JSONL (`skedge.metrics`): one header
+//! line, one `"kind":"window"` line per cell in deterministic
+//! `(window, region, app)` order, then `"kind":"gauge"` lines (currently
+//! the per-window admission-queue depth high-water). Quantiles are
+//! sketch-approximate and rounded to 0.1 before emission; counters and
+//! sums are exact. A final Prometheus-text snapshot (totals across all
+//! windows) is available for scraping-shaped consumers.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::metrics::TaskRecord;
+use crate::predictor::Placement;
+use crate::util::json::Json;
+
+use super::stream::{QuantileSketch, StageStats};
+
+/// Schema identifier written in the header line of every metrics file.
+pub const METRICS_SCHEMA: &str = "skedge.metrics";
+/// Bumped on any change to the serialized metrics shape.
+pub const METRICS_VERSION: u64 = 1;
+
+/// Region key of the edge pseudo-region (sorts after every cloud region;
+/// serialized as `"edge"`).
+pub const EDGE_KEY: usize = usize::MAX;
+
+/// Immutable telemetry wiring shared by every shard of a run: the window
+/// size, the region-flattening factor, and the app/region name tables the
+/// emitter needs. Built once by the runner, passed as an `Arc`.
+#[derive(Debug, Clone)]
+pub struct TelemetryCfg {
+    /// window length, virtual ms (default: the epoch length)
+    pub window_ms: f64,
+    /// configs per region (flattened cloud placement → region index)
+    pub n_configs: usize,
+    /// sorted unique app names; cell app indices point here
+    pub apps: Arc<Vec<String>>,
+    /// region display names, indexed by region
+    pub regions: Arc<Vec<String>>,
+    /// device id → index into `apps`
+    pub app_idx: Arc<Vec<usize>>,
+}
+
+impl TelemetryCfg {
+    pub fn new_telemetry(&self) -> Telemetry {
+        Telemetry {
+            window_ms: self.window_ms,
+            n_configs: self.n_configs,
+            apps: Arc::clone(&self.apps),
+            regions: Arc::clone(&self.regions),
+            cells: BTreeMap::new(),
+            queue_depth: BTreeMap::new(),
+        }
+    }
+}
+
+/// One `(window, region, app)` cell of mergeable aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct WindowCell {
+    /// tasks that arrived in the window and were placed here (served or
+    /// finally rejected)
+    pub arrivals: u64,
+    pub rejected: u64,
+    /// admission denials suffered: one per failover hop, plus the final
+    /// denial of a rejected task
+    pub denials: u64,
+    pub failover_hops: u64,
+    pub warm: u64,
+    pub cold: u64,
+    pub deadline_violations: u64,
+    pub e2e: StageStats,
+    pub queue_wait: StageStats,
+    pub edge_wait: StageStats,
+    pub cost: StageStats,
+    pub predicted_e2e: StageStats,
+    pub predicted_cost: StageStats,
+    pub e2e_sketch: QuantileSketch,
+}
+
+impl WindowCell {
+    pub fn merge(&mut self, other: &WindowCell) {
+        self.arrivals += other.arrivals;
+        self.rejected += other.rejected;
+        self.denials += other.denials;
+        self.failover_hops += other.failover_hops;
+        self.warm += other.warm;
+        self.cold += other.cold;
+        self.deadline_violations += other.deadline_violations;
+        self.e2e.merge(&other.e2e);
+        self.queue_wait.merge(&other.queue_wait);
+        self.edge_wait.merge(&other.edge_wait);
+        self.cost.merge(&other.cost);
+        self.predicted_e2e.merge(&other.predicted_e2e);
+        self.predicted_cost.merge(&other.predicted_cost);
+        self.e2e_sketch.merge(&other.e2e_sketch);
+    }
+}
+
+/// The windowed series of one run (or one shard's partial, pre-merge).
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    pub window_ms: f64,
+    n_configs: usize,
+    apps: Arc<Vec<String>>,
+    regions: Arc<Vec<String>>,
+    /// `(window, region_key, app_idx)` → aggregates; `BTreeMap` iteration
+    /// is the canonical emission order
+    cells: BTreeMap<(u64, usize, usize), WindowCell>,
+    /// per-window admission-queue depth high-water (coordinator-observed)
+    queue_depth: BTreeMap<u64, u64>,
+}
+
+impl Telemetry {
+    /// The window an arrival time falls in.
+    pub fn window_of(&self, t_ms: f64) -> u64 {
+        (t_ms / self.window_ms).floor() as u64
+    }
+
+    /// Fold one finished task into its `(window, region, app)` cell. The
+    /// split of what counts where mirrors `StreamingSummary::fold` exactly
+    /// so window totals conserve against the whole-run summary.
+    pub fn fold(&mut self, r: &TaskRecord, app_idx: usize, deadline_ms: f64) {
+        let w = self.window_of(r.arrive_ms);
+        let region_key = match r.placement {
+            Placement::Edge => EDGE_KEY,
+            Placement::Cloud(flat) => flat / self.n_configs,
+        };
+        let cell = self.cells.entry((w, region_key, app_idx)).or_default();
+        cell.arrivals += 1;
+        cell.failover_hops += r.failover_hops as u64;
+        cell.denials += r.failover_hops as u64;
+        if r.rejected {
+            cell.rejected += 1;
+            cell.denials += 1;
+            return;
+        }
+        match r.warm_actual {
+            Some(true) => cell.warm += 1,
+            Some(false) => cell.cold += 1,
+            None => {}
+        }
+        cell.e2e.push(r.actual_e2e_ms);
+        cell.e2e_sketch.push(r.actual_e2e_ms);
+        cell.cost.push(r.actual_cost);
+        cell.predicted_e2e.push(r.predicted_e2e_ms);
+        cell.predicted_cost.push(r.predicted_cost);
+        match r.placement {
+            Placement::Edge => cell.edge_wait.push(r.edge_wait_ms),
+            Placement::Cloud(_) => cell.queue_wait.push(r.throttle_wait_ms),
+        }
+        if r.actual_e2e_ms > deadline_ms {
+            cell.deadline_violations += 1;
+        }
+    }
+
+    /// Record an admission-queue depth observation for a window (the
+    /// per-window max is kept).
+    pub fn note_queue_depth(&mut self, window: u64, depth: u64) {
+        let slot = self.queue_depth.entry(window).or_insert(0);
+        if depth > *slot {
+            *slot = depth;
+        }
+    }
+
+    /// Merge another partial in (cell-wise; order-invariant).
+    pub fn merge(&mut self, other: &Telemetry) {
+        for (k, v) in &other.cells {
+            self.cells.entry(*k).or_default().merge(v);
+        }
+        for (&w, &d) in &other.queue_depth {
+            self.note_queue_depth(w, d);
+        }
+    }
+
+    /// Total task count across all cells (conservation checks).
+    pub fn total_arrivals(&self) -> u64 {
+        self.cells.values().map(|c| c.arrivals).sum()
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Visit every cell in canonical order.
+    pub fn for_each_cell(&self, mut f: impl FnMut(u64, usize, usize, &WindowCell)) {
+        for (&(w, region, app), cell) in &self.cells {
+            f(w, region, app, cell);
+        }
+    }
+
+    fn region_name(&self, key: usize) -> String {
+        if key == EDGE_KEY {
+            "edge".to_string()
+        } else {
+            self.regions.get(key).cloned().unwrap_or_else(|| format!("r{key}"))
+        }
+    }
+
+    /// The versioned JSONL form: header, `window` lines in canonical
+    /// order, then `gauge` lines. Bitwise deterministic.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = format!(
+            "{{\"schema\":\"{METRICS_SCHEMA}\",\"version\":{METRICS_VERSION},\"window_ms\":{}}}\n",
+            Json::Num(self.window_ms)
+        );
+        for (&(w, region, app), cell) in &self.cells {
+            let mut m = BTreeMap::new();
+            m.insert("kind".into(), Json::Str("window".into()));
+            m.insert("window".into(), Json::Num(w as f64));
+            m.insert("t_ms".into(), Json::Num(w as f64 * self.window_ms));
+            m.insert("region".into(), Json::Str(self.region_name(region)));
+            m.insert(
+                "app".into(),
+                Json::Str(self.apps.get(app).cloned().unwrap_or_else(|| format!("a{app}"))),
+            );
+            m.insert("arrivals".into(), Json::Num(cell.arrivals as f64));
+            m.insert("rejected".into(), Json::Num(cell.rejected as f64));
+            m.insert("denials".into(), Json::Num(cell.denials as f64));
+            m.insert("failover_hops".into(), Json::Num(cell.failover_hops as f64));
+            m.insert("warm".into(), Json::Num(cell.warm as f64));
+            m.insert("cold".into(), Json::Num(cell.cold as f64));
+            m.insert(
+                "deadline_violations".into(),
+                Json::Num(cell.deadline_violations as f64),
+            );
+            m.insert("e2e_mean".into(), Json::Num(cell.e2e.mean()));
+            m.insert("e2e_max".into(), Json::Num(cell.e2e.max()));
+            m.insert("e2e_p50".into(), Json::Num(round_q(cell.e2e_sketch.quantile(0.50))));
+            m.insert("e2e_p95".into(), Json::Num(round_q(cell.e2e_sketch.quantile(0.95))));
+            m.insert("e2e_p99".into(), Json::Num(round_q(cell.e2e_sketch.quantile(0.99))));
+            m.insert("queue_wait_mean".into(), Json::Num(cell.queue_wait.mean()));
+            m.insert("edge_wait_mean".into(), Json::Num(cell.edge_wait.mean()));
+            m.insert("cost".into(), Json::Num(cell.cost.sum()));
+            m.insert("predicted_e2e_mean".into(), Json::Num(cell.predicted_e2e.mean()));
+            m.insert("predicted_cost".into(), Json::Num(cell.predicted_cost.sum()));
+            out.push_str(&Json::Obj(m).to_string());
+            out.push('\n');
+        }
+        for (&w, &depth) in &self.queue_depth {
+            let mut m = BTreeMap::new();
+            m.insert("kind".into(), Json::Str("gauge".into()));
+            m.insert("name".into(), Json::Str("queue_depth".into()));
+            m.insert("window".into(), Json::Num(w as f64));
+            m.insert("t_ms".into(), Json::Num(w as f64 * self.window_ms));
+            m.insert("value".into(), Json::Num(depth as f64));
+            out.push_str(&Json::Obj(m).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the JSONL series to a file.
+    pub fn write_file(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("cannot write metrics `{path}`: {e}"))
+    }
+
+    /// A final Prometheus-text snapshot: totals per `(region, app)` across
+    /// all windows, in deterministic order.
+    pub fn to_prometheus(&self) -> String {
+        // aggregate across windows
+        let mut totals: BTreeMap<(usize, usize), WindowCell> = BTreeMap::new();
+        for (&(_, region, app), cell) in &self.cells {
+            totals.entry((region, app)).or_default().merge(cell);
+        }
+        let mut out = String::new();
+        let counter = |out: &mut String, name: &str, help: &str| {
+            out.push_str(&format!("# HELP skedge_{name} {help}\n# TYPE skedge_{name} counter\n"));
+        };
+        counter(&mut out, "tasks_total", "tasks placed, by region and app");
+        for (&(region, app), cell) in &totals {
+            out.push_str(&format!(
+                "skedge_tasks_total{{region=\"{}\",app=\"{}\"}} {}\n",
+                self.region_name(region),
+                self.apps.get(app).cloned().unwrap_or_default(),
+                cell.arrivals
+            ));
+        }
+        counter(&mut out, "rejected_total", "tasks denied everywhere they were tried");
+        for (&(region, app), cell) in &totals {
+            out.push_str(&format!(
+                "skedge_rejected_total{{region=\"{}\",app=\"{}\"}} {}\n",
+                self.region_name(region),
+                self.apps.get(app).cloned().unwrap_or_default(),
+                cell.rejected
+            ));
+        }
+        counter(&mut out, "warm_starts_total", "warm container starts");
+        for (&(region, app), cell) in &totals {
+            out.push_str(&format!(
+                "skedge_warm_starts_total{{region=\"{}\",app=\"{}\"}} {}\n",
+                self.region_name(region),
+                self.apps.get(app).cloned().unwrap_or_default(),
+                cell.warm
+            ));
+        }
+        counter(&mut out, "cost_usd_total", "realized execution cost");
+        for (&(region, app), cell) in &totals {
+            out.push_str(&format!(
+                "skedge_cost_usd_total{{region=\"{}\",app=\"{}\"}} {}\n",
+                self.region_name(region),
+                self.apps.get(app).cloned().unwrap_or_default(),
+                Json::Num(cell.cost.sum())
+            ));
+        }
+        out
+    }
+
+    /// Build a series directly from retained records (the sim/live path,
+    /// where no shard fold exists). `app_idx` maps device id → app index;
+    /// records are attributed by `device_of(record_index)`.
+    pub fn from_records(
+        cfg: &TelemetryCfg,
+        records: &[TaskRecord],
+        device_of: impl Fn(usize) -> usize,
+        deadline_of: impl Fn(usize) -> f64,
+    ) -> Telemetry {
+        let mut t = cfg.new_telemetry();
+        for (i, r) in records.iter().enumerate() {
+            let dev = device_of(i);
+            t.fold(r, cfg.app_idx.get(dev).copied().unwrap_or(0), deadline_of(dev));
+        }
+        t
+    }
+}
+
+/// Round a sketch-approximate quantile to 0.1 before emission: the sketch
+/// is only α-accurate, and a fixed precision keeps the golden file
+/// hand-checkable.
+fn round_q(x: f64) -> f64 {
+    (x * 10.0).round() / 10.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TelemetryCfg {
+        TelemetryCfg {
+            window_ms: 5_000.0,
+            n_configs: 3,
+            apps: Arc::new(vec!["fd".into(), "ir".into()]),
+            regions: Arc::new(vec!["r0".into(), "r1".into()]),
+            app_idx: Arc::new(vec![0, 1]),
+        }
+    }
+
+    fn served_edge(arrive_ms: f64) -> TaskRecord {
+        TaskRecord {
+            id: 0,
+            arrive_ms,
+            placement: Placement::Edge,
+            predicted_e2e_ms: 100.0,
+            actual_e2e_ms: 100.0,
+            predicted_cost: 0.0,
+            actual_cost: 0.0,
+            allowed_cost: f64::INFINITY,
+            feasible_found: true,
+            warm_predicted: None,
+            warm_actual: None,
+            edge_wait_ms: 1.5,
+            rejected: false,
+            failover_hops: 0,
+            failover_routing_ms: 0.0,
+            throttle_wait_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn fold_buckets_by_window_region_app() {
+        let c = cfg();
+        let mut t = c.new_telemetry();
+        t.fold(&served_edge(1.0), 0, f64::INFINITY);
+        t.fold(&served_edge(4_999.0), 0, f64::INFINITY);
+        t.fold(&served_edge(5_000.0), 0, f64::INFINITY); // next window
+        let mut cloud = served_edge(2.0);
+        cloud.placement = Placement::Cloud(4); // region 1 at 3 configs
+        cloud.warm_actual = Some(true);
+        t.fold(&cloud, 1, f64::INFINITY);
+        assert_eq!(t.n_cells(), 3);
+        assert_eq!(t.total_arrivals(), 4);
+        let mut seen = Vec::new();
+        t.for_each_cell(|w, region, app, cell| seen.push((w, region, app, cell.arrivals)));
+        assert_eq!(
+            seen,
+            vec![(0, 1, 1, 1), (0, EDGE_KEY, 0, 2), (1, EDGE_KEY, 0, 1)],
+            "canonical (window, region, app) order with edge last"
+        );
+    }
+
+    #[test]
+    fn merge_is_partition_invariant() {
+        let c = cfg();
+        let recs: Vec<TaskRecord> = (0..10).map(|i| served_edge(i as f64 * 900.0)).collect();
+        let mut whole = c.new_telemetry();
+        for r in &recs {
+            whole.fold(r, 0, f64::INFINITY);
+        }
+        let mut a = c.new_telemetry();
+        let mut b = c.new_telemetry();
+        for (i, r) in recs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.fold(r, 0, f64::INFINITY);
+            } else {
+                b.fold(r, 0, f64::INFINITY);
+            }
+        }
+        b.merge(&a);
+        assert_eq!(whole.to_jsonl(), b.to_jsonl(), "merged partials ≡ whole fold, bitwise");
+    }
+
+    #[test]
+    fn rejected_tasks_count_denials_not_latency() {
+        let c = cfg();
+        let mut t = c.new_telemetry();
+        let mut r = served_edge(1.0);
+        r.placement = Placement::Cloud(0);
+        r.rejected = true;
+        r.failover_hops = 2;
+        t.fold(&r, 0, f64::INFINITY);
+        t.for_each_cell(|_, _, _, cell| {
+            assert_eq!(cell.rejected, 1);
+            assert_eq!(cell.denials, 3, "one per hop + the final denial");
+            assert_eq!(cell.e2e.count(), 0, "rejected excluded from latency");
+        });
+    }
+
+    #[test]
+    fn queue_gauge_keeps_window_max() {
+        let c = cfg();
+        let mut t = c.new_telemetry();
+        t.note_queue_depth(0, 3);
+        t.note_queue_depth(0, 7);
+        t.note_queue_depth(0, 5);
+        t.note_queue_depth(2, 1);
+        let text = t.to_jsonl();
+        assert!(text.contains("\"name\":\"queue_depth\",\"t_ms\":0,\"value\":7,\"window\":0"));
+        assert!(text.contains("\"value\":1,\"window\":2"));
+    }
+
+    #[test]
+    fn prometheus_snapshot_totals_across_windows() {
+        let c = cfg();
+        let mut t = c.new_telemetry();
+        t.fold(&served_edge(1.0), 0, f64::INFINITY);
+        t.fold(&served_edge(5_001.0), 0, f64::INFINITY);
+        let prom = t.to_prometheus();
+        assert!(prom.contains("skedge_tasks_total{region=\"edge\",app=\"fd\"} 2"));
+        assert!(prom.contains("# TYPE skedge_tasks_total counter"));
+    }
+}

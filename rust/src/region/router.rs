@@ -102,18 +102,25 @@ impl DeviceRouter {
 
     /// Apply every mobility event due at or before `now`. Called at each
     /// decision, so re-homing lands at exact virtual times regardless of
-    /// shard count or epoch length.
-    pub fn apply_moves(&mut self, now: f64) {
-        let mut moved = false;
+    /// shard count or epoch length. Returns the index range of the moves
+    /// applied by this call (empty when nothing was due) so callers can
+    /// record them via [`DeviceRouter::move_entry`].
+    pub fn apply_moves(&mut self, now: f64) -> std::ops::Range<usize> {
+        let start = self.next_move;
         while self.next_move < self.moves.len() && self.moves[self.next_move].0 <= now {
             self.home = self.moves[self.next_move].1;
             self.next_move += 1;
             self.moves_applied += 1;
-            moved = true;
         }
-        if moved {
+        if self.next_move > start {
             self.recompute_routing();
         }
+        start..self.next_move
+    }
+
+    /// The `(scheduled at_ms, destination region)` of one mobility move.
+    pub fn move_entry(&self, i: usize) -> (f64, usize) {
+        self.moves[i]
     }
 
     /// Hub mode: replace every working CIL with the latest per-region hub

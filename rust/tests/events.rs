@@ -96,6 +96,7 @@ fn golden_events() -> Vec<TaskEvent> {
                 ..Default::default()
             },
         },
+        TaskEvent::DeviceMove { t_ms: 2500.5, device: 0, to: 1 },
         TaskEvent::EpochBarrier { t_ms: 5000.0, epoch: 1 },
     ]
 }

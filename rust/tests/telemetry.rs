@@ -1,0 +1,368 @@
+//! Telemetry, analyzer, and profiler pins — the PR 7 guarantees:
+//!
+//!  1. **Metrics golden** — the serialized JSONL of a hand-folded series
+//!     matches `tests/data/metrics_golden.jsonl` byte for byte, so any
+//!     drift in keys, ordering, or number formatting fails loudly.
+//!  2. **Shard invariance + conservation** — the fleet metrics series is
+//!     bitwise identical for any shard count, and its window totals sum
+//!     to the whole-run summary counters.
+//!  3. **Analyzer golden** — `render_report` over the recorded-events
+//!     golden reproduces `tests/data/analyze_golden.txt` byte for byte,
+//!     and the prediction audit is exactly zero on a noise-free stream.
+//!  4. **Composition** — `--record` with `--stream-metrics` produces the
+//!     bitwise-identical event stream while retaining zero per-task
+//!     records (recording as full-fidelity disk spill).
+//!  5. **Mobility replay** — recorded `DeviceMove` events re-drive the
+//!     same migrations, so record → replay is bitwise even with mobility
+//!     on; re-recording equality extends to resilience + hub-CIL mode.
+
+use std::sync::Arc;
+
+use skedge::config::{
+    default_artifact_dir, CilMode, FleetScenario, FleetSettings, Meta, RegionSettings,
+    ThrottlePolicy, TopologySpec,
+};
+use skedge::fleet::{self, FleetOutcome};
+use skedge::metrics::TaskRecord;
+use skedge::obs::{
+    extract_arrivals, extract_moves, prediction_audit, read_events_str, render_report,
+    AnalyzeOptions, EventMeta, Stages, TaskEvent, TelemetryCfg,
+};
+use skedge::predictor::Placement;
+
+fn meta() -> Meta {
+    Meta::load(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+fn assert_records_identical(a: &FleetOutcome, b: &FleetOutcome, what: &str) {
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint, "{what}: fingerprint");
+    assert_eq!(a.sim_end_ms, b.sim_end_ms, "{what}: sim end");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: device count");
+    for (da, db) in a.records.iter().zip(&b.records) {
+        assert_eq!(da.len(), db.len(), "{what}: task count");
+        for (x, y) in da.iter().zip(db) {
+            assert_eq!(x.placement, y.placement, "{what}: task {}", x.id);
+            assert_eq!(x.actual_e2e_ms.to_bits(), y.actual_e2e_ms.to_bits(), "{what}: e2e");
+            assert_eq!(x.actual_cost.to_bits(), y.actual_cost.to_bits(), "{what}: cost");
+            assert_eq!(x.warm_actual, y.warm_actual, "{what}: warm");
+            assert_eq!(x.rejected, y.rejected, "{what}: rejected");
+            assert_eq!(x.failover_hops, y.failover_hops, "{what}: hops");
+        }
+    }
+}
+
+/// A capped two-region fleet with queue throttling and failover — dense
+/// enough that the metrics series carries denials, hops, queue waits, and
+/// rejections (same shape as the resilience fleet in `events.rs`).
+fn resilience_fleet(cil: CilMode) -> FleetSettings {
+    let mut topo = TopologySpec::new(vec![
+        RegionSettings::new("a", 5.0).with_max_concurrent(2),
+        RegionSettings::new("b", 45.0).with_price_mult(1.2).with_max_concurrent(2),
+    ])
+    .with_cross_penalty_ms(25.0)
+    .with_cil_mode(cil);
+    topo.failover = true;
+    topo.throttle = ThrottlePolicy::Queue { max_wait_ms: 1_500.0 };
+    FleetSettings::new(10)
+        .with_seed(4242)
+        .with_duration_ms(8_000.0)
+        .with_epoch_ms(2_000.0)
+        .with_scenario(FleetScenario::Poisson)
+        .with_app_mix(vec![("fd".to_string(), 1.0)])
+        .with_topology(topo)
+}
+
+// ----------------------------------------------------------- metrics golden
+
+/// The hand-built twin of `tests/data/metrics_golden.jsonl`: one served
+/// cloud task (warm), one served edge task, one rejected failover task in
+/// the next window, and a queue-depth gauge. Values are chosen so every
+/// emitted number is hand-checkable (integers, halves, and the two
+/// sketch quantiles verified against the bucket-midpoint formula).
+fn golden_record(arrive_ms: f64) -> TaskRecord {
+    TaskRecord {
+        id: 0,
+        arrive_ms,
+        placement: Placement::Edge,
+        predicted_e2e_ms: 50.0,
+        actual_e2e_ms: 50.0,
+        predicted_cost: 0.0,
+        actual_cost: 0.0,
+        allowed_cost: f64::INFINITY,
+        feasible_found: true,
+        warm_predicted: None,
+        warm_actual: None,
+        edge_wait_ms: 1.5,
+        rejected: false,
+        failover_hops: 0,
+        failover_routing_ms: 0.0,
+        throttle_wait_ms: 0.0,
+    }
+}
+
+#[test]
+fn metrics_golden_pins_the_serialized_schema() {
+    let cfg = TelemetryCfg {
+        window_ms: 5_000.0,
+        n_configs: 3,
+        apps: Arc::new(vec!["fd".to_string()]),
+        regions: Arc::new(vec!["near".to_string(), "far".to_string()]),
+        app_idx: Arc::new(vec![0]),
+    };
+    let mut t = cfg.new_telemetry();
+    // window 0, region "near" (flat 1 / 3 configs = region 0): warm cloud
+    let mut cloud = golden_record(1_000.0);
+    cloud.placement = Placement::Cloud(1);
+    cloud.predicted_e2e_ms = 90.0;
+    cloud.actual_e2e_ms = 100.0;
+    cloud.predicted_cost = 0.0000125;
+    cloud.actual_cost = 0.0000125;
+    cloud.warm_actual = Some(true);
+    cloud.edge_wait_ms = 0.0;
+    t.fold(&cloud, 0, f64::INFINITY);
+    // window 0, edge pseudo-region
+    t.fold(&golden_record(2_000.0), 0, f64::INFINITY);
+    // window 1, region "far" (flat 5 / 3 = region 1): rejected after one hop
+    let mut rej = golden_record(6_000.0);
+    rej.placement = Placement::Cloud(5);
+    rej.rejected = true;
+    rej.failover_hops = 1;
+    t.fold(&rej, 0, f64::INFINITY);
+    t.note_queue_depth(0, 2);
+
+    assert_eq!(t.n_cells(), 3);
+    assert_eq!(t.total_arrivals(), 3);
+    let golden = include_str!("data/metrics_golden.jsonl");
+    assert_eq!(t.to_jsonl(), golden, "metrics series drifted from tests/data/metrics_golden.jsonl");
+
+    // the Prometheus snapshot totals the same cells across windows
+    let prom = t.to_prometheus();
+    assert!(prom.contains("# TYPE skedge_tasks_total counter"));
+    assert!(prom.contains("skedge_tasks_total{region=\"near\",app=\"fd\"} 1"));
+    assert!(prom.contains("skedge_tasks_total{region=\"edge\",app=\"fd\"} 1"));
+    assert!(prom.contains("skedge_rejected_total{region=\"far\",app=\"fd\"} 1"));
+    assert!(prom.contains("skedge_warm_starts_total{region=\"near\",app=\"fd\"} 1"));
+    assert!(prom.contains("skedge_cost_usd_total{region=\"near\",app=\"fd\"} 0.0000125"));
+}
+
+// ---------------------------------------- shard invariance + conservation
+
+#[test]
+fn fleet_metrics_are_shard_invariant_and_conserve_summary_counters() {
+    let meta = meta();
+    let fs = resilience_fleet(CilMode::Private).with_metrics(true);
+    let outcomes: Vec<FleetOutcome> = [1usize, 2, 3]
+        .iter()
+        .map(|&n| fleet::run(&meta, &fs.clone().with_shards(n)).unwrap())
+        .collect();
+
+    // the emitted series is bitwise identical for any shard partition
+    let series: Vec<String> =
+        outcomes.iter().map(|o| o.telemetry.as_ref().expect("--metrics series").to_jsonl()).collect();
+    assert!(series[0].contains("\"kind\":\"window\""));
+    assert_eq!(series[0], series[1], "1-shard vs 2-shard metrics diverged");
+    assert_eq!(series[0], series[2], "1-shard vs 3-shard metrics diverged");
+    assert_eq!(
+        outcomes[0].summary.fingerprint, outcomes[1].summary.fingerprint,
+        "metrics must not perturb the determinism fingerprint"
+    );
+
+    // conservation: window totals ≡ whole-run summary counters
+    let o = &outcomes[0];
+    let t = o.telemetry.as_ref().unwrap();
+    let s = &o.summary;
+    assert!(s.rejected_count > 0, "fleet not saturated enough to reject");
+    assert!(s.failover_hops_total > 0, "no failover hops to conserve");
+    let (mut arrivals, mut rejected, mut hops, mut warm, mut cold) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut cost = 0.0f64;
+    t.for_each_cell(|_, _, _, cell| {
+        arrivals += cell.arrivals;
+        rejected += cell.rejected;
+        hops += cell.failover_hops;
+        warm += cell.warm;
+        cold += cell.cold;
+        cost += cell.cost.sum();
+    });
+    assert_eq!(arrivals as usize, s.n_tasks, "every task folds into exactly one cell");
+    assert_eq!(rejected as usize, s.rejected_count);
+    assert_eq!(hops, s.failover_hops_total);
+    assert_eq!(warm as usize, s.cloud_actual_warm);
+    assert_eq!(cold as usize, s.cloud_actual_cold);
+    assert!(
+        (cost - s.total_actual_cost).abs() <= 1e-9 * s.total_actual_cost.max(1e-30),
+        "cell cost sum {cost} vs summary {}",
+        s.total_actual_cost
+    );
+
+    // the default window is the epoch length
+    assert_eq!(t.window_ms, 2_000.0);
+}
+
+#[test]
+fn metrics_window_override_rebuckets_but_conserves() {
+    let meta = meta();
+    let fs = resilience_fleet(CilMode::Private).with_metrics(true).with_metrics_window_ms(1_000.0);
+    let o = fleet::run(&meta, &fs).unwrap();
+    let t = o.telemetry.as_ref().unwrap();
+    assert_eq!(t.window_ms, 1_000.0);
+    assert_eq!(t.total_arrivals() as usize, o.summary.n_tasks);
+}
+
+// -------------------------------------------------------- analyzer golden
+
+#[test]
+fn analyzer_report_matches_golden() {
+    let events = read_events_str(include_str!("data/events_golden.jsonl")).unwrap();
+    let mut opts = AnalyzeOptions { window_ms: 5_000.0, ..Default::default() };
+    opts.deadlines.insert("fd".to_string(), 1_000.0);
+    assert_eq!(
+        render_report(&events, &opts),
+        include_str!("data/analyze_golden.txt"),
+        "analyzer report drifted from tests/data/analyze_golden.txt"
+    );
+}
+
+#[test]
+fn prediction_audit_is_exactly_zero_on_a_noise_free_stream() {
+    // decision/completion pairs where predictions equal outcomes, spread
+    // over three windows — the audit must report identically zero error
+    let pair = |t: f64, task: usize, e2e: f64, cost: f64| {
+        let meta = EventMeta::new(t, 0, "fd", 0, task);
+        vec![
+            TaskEvent::Decision {
+                meta: meta.clone(),
+                edge: false,
+                region: Some(0),
+                mem_mb: 1_024.0,
+                predicted_e2e_ms: e2e,
+                predicted_cost: cost,
+                feasible: true,
+            },
+            TaskEvent::Completion {
+                meta,
+                edge: false,
+                region: Some(0),
+                warm: Some(true),
+                e2e_ms: e2e,
+                cost,
+                stages: Stages { comp: e2e, ..Default::default() },
+            },
+        ]
+    };
+    let mut events = Vec::new();
+    for (i, t) in [100.0, 1_900.0, 5_100.0, 7_300.0, 11_000.0].iter().enumerate() {
+        events.extend(pair(*t, i, 120.25 + i as f64, 0.0000125 * (i + 1) as f64));
+    }
+    let audit = prediction_audit(&events, 5_000.0);
+    assert_eq!(audit.len(), 3, "three windows audited");
+    assert_eq!(audit.iter().map(|w| w.n).sum::<u64>(), 5);
+    for w in &audit {
+        assert_eq!(w.e2e_p50, 0.0);
+        assert_eq!(w.e2e_p95, 0.0);
+        assert_eq!(w.e2e_max, 0.0, "window {}: e2e error must be exactly zero", w.window);
+        assert_eq!(w.cost_p50, 0.0);
+        assert_eq!(w.cost_p95, 0.0);
+        assert_eq!(w.cost_max, 0.0, "window {}: cost error must be exactly zero", w.window);
+    }
+    let report = render_report(&events, &AnalyzeOptions::default());
+    assert!(report.contains("audited decisions: 5"));
+}
+
+// ---------------------------------------------- record + stream composition
+
+#[test]
+fn recording_composes_with_stream_metrics_as_disk_spill() {
+    let meta = meta();
+    let fs = resilience_fleet(CilMode::Private);
+    let retained = fleet::run(&meta, &fs.clone().with_recording(true)).unwrap();
+    let combo = fleet::run(&meta, &fs.clone().with_stream_metrics(true).with_recording(true)).unwrap();
+    let streaming = fleet::run(&meta, &fs.clone().with_stream_metrics(true)).unwrap();
+
+    // the spill: the combined mode emits the bitwise-identical event
+    // stream while retaining zero per-task records in memory
+    assert!(!combo.events.is_empty());
+    assert_eq!(combo.events, retained.events, "record+stream event stream diverged");
+    assert_eq!(combo.retained_records(), 0, "stream mode must not retain records");
+    assert!(combo.stream.is_some(), "stream fold missing");
+
+    // recording stays observational in streaming mode too (streaming
+    // fingerprints are their own domain — compare within it)
+    assert_eq!(combo.summary.fingerprint, streaming.summary.fingerprint);
+    assert_eq!(combo.summary.n_tasks, retained.summary.n_tasks);
+    assert_eq!(combo.summary.rejected_count, retained.summary.rejected_count);
+    assert_eq!(combo.summary.failover_hops_total, retained.summary.failover_hops_total);
+}
+
+// ------------------------------------------------------- mobility replay
+
+#[test]
+fn mobility_record_replay_roundtrip_is_bitwise() {
+    let meta = meta();
+    let topo = TopologySpec::new(vec![
+        RegionSettings::new("near", 5.0),
+        RegionSettings::new("far", 45.0).with_price_mult(1.15),
+    ])
+    .with_cross_penalty_ms(25.0)
+    .with_mobility(1.0, 4_000.0);
+    let fs = FleetSettings::new(6)
+        .with_seed(91)
+        .with_duration_ms(8_000.0)
+        .with_epoch_ms(2_000.0)
+        .with_scenario(FleetScenario::Poisson)
+        .with_topology(topo);
+    let orig = fleet::run(&meta, &fs.clone().with_recording(true)).unwrap();
+    let n_moves = orig.events.iter().filter(|e| e.kind() == "move").count();
+    assert!(n_moves > 0, "mobility fraction 1.0 recorded no moves");
+
+    // replay re-drives both the arrivals and the recorded migrations
+    let rows = extract_arrivals(&orig.events).unwrap();
+    let moves = extract_moves(&orig.events).unwrap();
+    assert_eq!(moves.len(), n_moves);
+    let replay = fs
+        .clone()
+        .with_replay_trace(Arc::new(rows))
+        .with_replay_moves(Arc::new(moves));
+    let re = fleet::run(&meta, &replay.clone()).unwrap();
+    assert_records_identical(&orig, &re, "mobility replay");
+
+    // the re-recording converges: identical stream modulo the run-start
+    // phase marker (which names the driving scenario)
+    let re_rec = fleet::run(&meta, &replay.with_recording(true)).unwrap();
+    let strip = |evs: &[TaskEvent]| -> Vec<&TaskEvent> {
+        evs.iter().filter(|e| e.kind() != "phase").collect()
+    };
+    assert_eq!(strip(&orig.events), strip(&re_rec.events), "mobility re-record diverged");
+}
+
+#[test]
+fn rerecord_equality_extends_to_resilience_hub_mode() {
+    let meta = meta();
+    let fs = resilience_fleet(CilMode::Hub);
+    let orig = fleet::run(&meta, &fs.clone().with_recording(true)).unwrap();
+    assert!(orig.summary.rejected_count > 0, "hub fleet not saturated");
+    let rows = extract_arrivals(&orig.events).unwrap();
+    let replay = fs.clone().with_replay_trace(Arc::new(rows));
+    let re = fleet::run(&meta, &replay.clone()).unwrap();
+    assert_records_identical(&orig, &re, "hub resilience replay");
+    let re_rec = fleet::run(&meta, &replay.with_recording(true)).unwrap();
+    let strip = |evs: &[TaskEvent]| -> Vec<&TaskEvent> {
+        evs.iter().filter(|e| e.kind() != "phase").collect()
+    };
+    assert_eq!(strip(&orig.events), strip(&re_rec.events), "hub re-record diverged");
+}
+
+// ------------------------------------------------------------- profiler
+
+#[test]
+fn run_profile_reports_shard_work_and_renders() {
+    let meta = meta();
+    let o = fleet::run(&meta, &resilience_fleet(CilMode::Private).with_shards(2)).unwrap();
+    let p = &o.profile;
+    assert_eq!(p.shards.len(), 2);
+    assert!(p.epochs > 0);
+    assert_eq!(p.tasks as usize, o.summary.n_tasks);
+    assert!(p.events_total() > 0, "shards processed no events");
+    assert!(p.shards.iter().all(|s| s.epochs > 0), "every shard ran every epoch");
+    let text = p.render();
+    assert!(text.contains("shard"), "render missing per-shard lines: {text}");
+}
