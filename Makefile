@@ -3,7 +3,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts verify soak record-replay analyze-demo
+.PHONY: artifacts test-python clean-artifacts verify soak record-replay analyze-demo lint
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
@@ -15,6 +15,16 @@ artifacts:
 # `make artifacts` has run.
 verify:
 	cd rust && cargo build --release && cargo test -q
+
+# Static determinism & panic-safety pass (rust/detlint) plus clippy's
+# disallowed-methods layer (rust/clippy.toml). detlint prints the
+# suppression summary table on green runs too, so the inline allowlist
+# stays visible; any unsuppressed finding fails the target. Needs no
+# artifacts — it only reads source.
+lint:
+	cd rust && cargo run --release -p detlint
+	cd rust && cargo clippy --all-targets -- -D warnings
+	cd rust && cargo clippy -p detlint --all-targets -- -D warnings
 
 # Long-soak nondeterminism smoke: the 10-epoch outage storm (caps + rate
 # limits + queueing + failover + region blackouts + correlated device

@@ -1,0 +1,296 @@
+//! A minimal Rust lexer: just enough structure to walk a token stream for
+//! rule matching — identifiers, punctuation, line numbers, comment capture.
+//! String/char-literal and comment *content* is skipped entirely, so a rule
+//! token inside a doc comment or a format string can never fire.
+//!
+//! This is deliberately not a parser. The offline crate registry has no
+//! `syn`, so detlint makes the same hand-rolled-substrate tradeoff the main
+//! crate makes for JSON/CSV/RNG: a small, dependency-free scanner whose
+//! fidelity is "valid Rust in, correct token stream out". The rules it
+//! feeds (see `rules.rs`) only need token-sequence matching, not syntax
+//! trees.
+
+/// One lexical token: an identifier word or a single punctuation char.
+/// Numbers, literals, and comments are consumed but never emitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Punct(char),
+}
+
+/// A token tagged with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub line: u32,
+    pub tok: Tok,
+}
+
+impl Token {
+    /// The identifier text, if this token is one.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(w) => Some(w),
+            Tok::Punct(_) => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+}
+
+/// Lexer output: the token stream, every `//` comment (for `detlint:`
+/// directives), and the set of lines carrying at least one token — which
+/// lets a comment-only line be told apart from a trailing comment when
+/// deciding which line an allow directive targets.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<(u32, String)>,
+    pub code_lines: std::collections::BTreeSet<u32>,
+}
+
+/// Tokenize `src`. Assumes syntactically valid Rust; on malformed input it
+/// degrades to consuming the rest of the file rather than panicking.
+pub fn lex(src: &str) -> Lexed {
+    let c: Vec<char> = src.chars().collect();
+    let n = c.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let ch = c[i];
+        if ch == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if ch.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment — captured verbatim for directive parsing
+        if ch == '/' && i + 1 < n && c[i + 1] == '/' {
+            let start = i;
+            while i < n && c[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push((line, c[start..i].iter().collect()));
+            continue;
+        }
+        // block comment — nested, content discarded
+        if ch == '/' && i + 1 < n && c[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if c[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if c[i] == '/' && i + 1 < n && c[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if c[i] == '*' && i + 1 < n && c[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // identifier / keyword — or a raw/byte string prefix
+        if ch.is_ascii_alphabetic() || ch == '_' {
+            let start = i;
+            while i < n && (c[i].is_ascii_alphanumeric() || c[i] == '_') {
+                i += 1;
+            }
+            let word: String = c[start..i].iter().collect();
+            if matches!(word.as_str(), "r" | "b" | "br" | "c" | "cr") {
+                let mut j = i;
+                let mut hashes = 0usize;
+                while j < n && c[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && c[j] == '"' {
+                    // r"..." / b"..." / br#"..."# etc: a literal, not an ident
+                    let raw = word.contains('r');
+                    out.code_lines.insert(line);
+                    i = j + 1;
+                    skip_string(&c, &mut i, &mut line, raw, hashes);
+                    continue;
+                }
+            }
+            out.code_lines.insert(line);
+            out.tokens.push(Token { line, tok: Tok::Ident(word) });
+            continue;
+        }
+        // number literal — consumed, never emitted (method calls like
+        // `1.max(2)` survive because `.` before a non-digit stops the scan)
+        if ch.is_ascii_digit() {
+            out.code_lines.insert(line);
+            i += 1;
+            while i < n && (c[i].is_ascii_alphanumeric() || c[i] == '_') {
+                i += 1;
+            }
+            if i + 1 < n && c[i] == '.' && c[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (c[i].is_ascii_alphanumeric() || c[i] == '_') {
+                    i += 1;
+                }
+            }
+            // exponent sign: `1e-3`, `2.5E+9` (the e/E was consumed above)
+            if i < n && (c[i] == '-' || c[i] == '+') && matches!(c[i - 1], 'e' | 'E') {
+                i += 1;
+                while i < n && c[i].is_ascii_digit() {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if ch == '"' {
+            out.code_lines.insert(line);
+            i += 1;
+            skip_string(&c, &mut i, &mut line, false, 0);
+            continue;
+        }
+        if ch == '\'' {
+            // lifetime vs char literal
+            out.code_lines.insert(line);
+            let next = if i + 1 < n { c[i + 1] } else { ' ' };
+            if next.is_ascii_alphabetic() || next == '_' {
+                let mut j = i + 1;
+                while j < n && (c[j].is_ascii_alphanumeric() || c[j] == '_') {
+                    j += 1;
+                }
+                if j == i + 2 && j < n && c[j] == '\'' {
+                    i = j + 1; // 'a' — single-char literal
+                } else {
+                    i = j; // 'static — lifetime, consumed silently
+                }
+            } else if next == '\\' {
+                i += 3; // quote, backslash, escaped char
+                while i < n && c[i] != '\'' {
+                    i += 1; // \u{...} tails
+                }
+                i += 1;
+            } else {
+                i += 2; // quote + the char itself (covers '"' and '{')
+                if i < n && c[i] == '\'' {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        out.code_lines.insert(line);
+        out.tokens.push(Token { line, tok: Tok::Punct(ch) });
+        i += 1;
+    }
+    out
+}
+
+/// Consume string content up to (and including) the closing quote.
+/// `raw` disables backslash escapes; `hashes` is the raw-string `#` count.
+fn skip_string(c: &[char], i: &mut usize, line: &mut u32, raw: bool, hashes: usize) {
+    let n = c.len();
+    while *i < n {
+        let ch = c[*i];
+        if ch == '\n' {
+            *line += 1;
+            *i += 1;
+            continue;
+        }
+        if !raw && ch == '\\' {
+            *i += 2;
+            continue;
+        }
+        if ch == '"' {
+            let mut k = 0usize;
+            while k < hashes && *i + 1 + k < n && c[*i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                *i += 1 + hashes;
+                return;
+            }
+            *i += 1;
+            continue;
+        }
+        *i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.ident().map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_emit_no_tokens() {
+        let src = concat!(
+            "// unwrap panic!\n",
+            "/* partial_cmp /* nested */ */\n",
+            "let s = \"Instant::now()\";\n",
+        );
+        assert_eq!(idents(src), vec!["let", "s"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_literals_not_idents() {
+        let src = concat!(
+            "let a = r#\"unwrap \" quote\"#;\n",
+            "let b = b\"panic!\";\n",
+            "let c = br##\"x\"# still\"##;\n",
+        );
+        assert_eq!(idents(src), vec!["let", "a", "let", "b", "let", "c"]);
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        // the '"' char literal must not swallow the rest of the file
+        let src = "let q = '\"'; let e = '\\''; let u = '\\u{41}'; x.unwrap();\n";
+        let expect = vec!["let", "q", "let", "e", "let", "u", "x", "unwrap"];
+        assert_eq!(idents(src), expect);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str, y: &'static u8) -> &'a str { x }\n";
+        let words = idents(src);
+        // lifetimes are consumed silently; the stream keeps going after them
+        assert!(!words.contains(&"static".to_string()));
+        assert_eq!(words.last().map(String::as_str), Some("x"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_calls() {
+        let src = "let x = 1.max(2) + 3.5e-2 + 0xFFu32; y.0.total_cmp(&z);\n";
+        let words = idents(src);
+        assert!(words.contains(&"max".to_string()));
+        assert!(words.contains(&"total_cmp".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_and_code_lines() {
+        let src = "let a = 1;\n// only a comment\nlet b = 2; // trailing\n";
+        let lx = lex(src);
+        let b_line = lx
+            .tokens
+            .iter()
+            .find(|t| t.ident() == Some("b"))
+            .map(|t| t.line);
+        assert_eq!(b_line, Some(3));
+        assert!(lx.code_lines.contains(&1));
+        assert!(!lx.code_lines.contains(&2), "comment-only line has no code");
+        assert!(lx.code_lines.contains(&3));
+        assert_eq!(lx.comments.len(), 2);
+        assert_eq!(lx.comments[0].0, 2);
+    }
+}

@@ -1,0 +1,279 @@
+//! detlint — determinism & panic-safety static analysis for `skedge`.
+//!
+//! Every claim this reproduction makes (Eqn.-1 scoring parity,
+//! shard-invariant merges, bitwise record→replay round trips) rests on
+//! determinism invariants that runtime tests can only spot-check. detlint
+//! enforces them statically over every file under `rust/src/`:
+//!
+//! - `hash-order` — no `HashMap`/`HashSet` in deterministic modules
+//! - `float-cmp` — no `partial_cmp`; float ordering goes through `total_cmp`
+//! - `wall-clock` — no `Instant::now`/`SystemTime` outside wall-clock modules
+//! - `unseeded-rng` — no `thread_rng`/`rand::random`; seeded streams only
+//! - `panic-path` — no `unwrap`/`expect`/`panic!` in library code
+//!
+//! Intentional exceptions carry an inline reasoned directive, either
+//! trailing the offending line or on a comment-only line directly above it
+//! (the usual spot when the offender is a long signature):
+//!
+//! ```text
+//! // detlint: allow(float-cmp) — trait boilerplate delegating to Ord
+//! ```
+//!
+//! A directive without a reason, or naming an unknown rule, is itself a
+//! finding (`allow-syntax`) — suppression is never free. Directives that
+//! match no finding are reported as warnings so stale allows get cleaned
+//! up.
+//!
+//! The scanner is lexer-based (`lex.rs`), not `syn`-based: the offline
+//! registry has no `syn`, and token-sequence matching is enough for these
+//! rules. The tradeoff is documented per-rule in `rules.rs`.
+
+pub mod lex;
+pub mod policy;
+pub mod report;
+pub mod rules;
+
+pub use policy::Policy;
+
+use std::path::{Path, PathBuf};
+
+/// An unsuppressed rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// path relative to the scan root, `/`-separated
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A finding that an inline allow directive suppressed, kept for the
+/// audit table.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub path: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub reason: String,
+}
+
+/// Everything one scan produced. `findings` non-empty ⇒ the tool fails.
+#[derive(Debug, Default)]
+pub struct ScanOutcome {
+    pub files: usize,
+    pub findings: Vec<Finding>,
+    pub suppressions: Vec<Suppression>,
+    /// non-fatal: unused allow directives
+    pub warnings: Vec<String>,
+}
+
+/// A parsed `// detlint: allow(<rule>) — <reason>` directive.
+#[derive(Debug)]
+struct Allow {
+    /// line the directive suppresses (the directive's own line if it
+    /// trails code, otherwise the line below the comment-only line)
+    target: u32,
+    /// line the directive itself sits on (for unused-allow warnings)
+    at: u32,
+    rule: &'static str,
+    reason: String,
+    used: bool,
+}
+
+/// Scan one file's source text, appending results to `out`.
+pub fn scan_source(rel: &str, src: &str, policy: &Policy, out: &mut ScanOutcome) {
+    let lx = lex::lex(src);
+    let raw = rules::check(rel, &lx, policy);
+    let mut allows = parse_allows(rel, &lx, out);
+    for f in raw {
+        let slot = allows
+            .iter_mut()
+            .find(|a| a.target == f.line && a.rule == f.rule);
+        match slot {
+            Some(a) => {
+                a.used = true;
+                out.suppressions.push(Suppression {
+                    path: rel.to_string(),
+                    line: f.line,
+                    rule: f.rule,
+                    reason: a.reason.clone(),
+                });
+            }
+            None => out.findings.push(Finding {
+                path: rel.to_string(),
+                line: f.line,
+                rule: f.rule,
+                message: f.message,
+            }),
+        }
+    }
+    for a in allows.iter().filter(|a| !a.used) {
+        out.warnings.push(format!(
+            "{rel}:{}: unused allow({}) — directive matched no finding",
+            a.at, a.rule
+        ));
+    }
+}
+
+/// Extract allow directives from a file's comments. Malformed directives
+/// become `allow-syntax` findings on the spot.
+fn parse_allows(rel: &str, lx: &lex::Lexed, out: &mut ScanOutcome) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for (cline, text) in &lx.comments {
+        let Some(pos) = text.find("detlint:") else {
+            continue;
+        };
+        let rest = text[pos + "detlint:".len()..].trim_start();
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            let msg = "malformed directive — expected `allow(<rule>) — <reason>`";
+            bad_allow(out, rel, *cline, msg);
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            bad_allow(out, rel, *cline, "malformed directive — missing `)` after rule name");
+            continue;
+        };
+        let rule_name = inner[..close].trim();
+        let Some(rule) = rules::SUPPRESSIBLE.iter().copied().find(|r| *r == rule_name) else {
+            let msg = format!("unknown rule `{rule_name}` in allow directive");
+            bad_allow(out, rel, *cline, &msg);
+            continue;
+        };
+        let reason = inner[close + 1..]
+            .trim_start()
+            .trim_start_matches(&['-', '—', '–', ':'][..])
+            .trim();
+        if reason.is_empty() {
+            bad_allow(out, rel, *cline, "allow directive without a reason — justify it");
+            continue;
+        }
+        // a trailing comment suppresses its own line; a comment-only line
+        // suppresses the line directly below it
+        let target = if lx.code_lines.contains(cline) {
+            *cline
+        } else {
+            cline + 1
+        };
+        allows.push(Allow {
+            target,
+            at: *cline,
+            rule,
+            reason: reason.to_string(),
+            used: false,
+        });
+    }
+    allows
+}
+
+fn bad_allow(out: &mut ScanOutcome, rel: &str, line: u32, message: &str) {
+    out.findings.push(Finding {
+        path: rel.to_string(),
+        line,
+        rule: rules::ALLOW_SYNTAX,
+        message: message.to_string(),
+    });
+}
+
+/// Scan every `.rs` file under `root` (sorted walk, so output order is
+/// stable across platforms).
+pub fn scan_tree(root: &Path, policy: &Policy) -> std::io::Result<ScanOutcome> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = ScanOutcome::default();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let rel: PathBuf = f.strip_prefix(root).unwrap_or(f).to_path_buf();
+        let rel = rel
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        scan_source(&rel, &src, policy, &mut out);
+        out.files += 1;
+    }
+    out.findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    out.suppressions.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    out.warnings.sort();
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, files: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, files)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, src: &str) -> ScanOutcome {
+        let mut out = ScanOutcome::default();
+        scan_source(rel, src, &Policy::skedge(), &mut out);
+        out
+    }
+
+    #[test]
+    fn trailing_allow_suppresses_its_own_line() {
+        let src = "let v = x.unwrap(); // detlint: allow(panic-path) — test helper seam\n";
+        let out = scan("util/json.rs", src);
+        assert!(out.findings.is_empty());
+        assert_eq!(out.suppressions.len(), 1);
+        assert_eq!(out.suppressions[0].reason, "test helper seam");
+        assert!(out.warnings.is_empty());
+    }
+
+    #[test]
+    fn comment_line_above_suppresses_the_next_line() {
+        let src = concat!(
+            "// detlint: allow(panic-path) — infallible by construction\n",
+            "let v = x.unwrap();\n",
+        );
+        let out = scan("util/json.rs", src);
+        assert!(out.findings.is_empty());
+        assert_eq!(out.suppressions.len(), 1);
+        assert_eq!(out.suppressions[0].line, 2, "suppression reports the code line");
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let src = "let v = x.unwrap(); // detlint: allow(float-cmp) — wrong rule\n";
+        let out = scan("util/json.rs", src);
+        assert_eq!(out.findings.len(), 1);
+        assert_eq!(out.findings[0].rule, rules::PANIC_PATH);
+        assert_eq!(out.warnings.len(), 1, "the mismatched allow is reported unused");
+    }
+
+    #[test]
+    fn reasonless_allow_is_a_finding() {
+        let src = "let v = x.unwrap(); // detlint: allow(panic-path)\n";
+        let out = scan("util/json.rs", src);
+        let rules_hit: Vec<&str> = out.findings.iter().map(|f| f.rule).collect();
+        assert!(rules_hit.contains(&rules::ALLOW_SYNTAX));
+        assert!(rules_hit.contains(&rules::PANIC_PATH), "violation stays unsuppressed");
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_a_finding() {
+        let src = "// detlint: allow(no-such-rule) — whatever\nlet a = 1;\n";
+        let out = scan("util/json.rs", src);
+        assert_eq!(out.findings.len(), 1);
+        assert_eq!(out.findings[0].rule, rules::ALLOW_SYNTAX);
+    }
+
+    #[test]
+    fn unused_allow_warns() {
+        let src = "// detlint: allow(wall-clock) — stale\nlet a = 1;\n";
+        let out = scan("util/json.rs", src);
+        assert!(out.findings.is_empty());
+        assert_eq!(out.warnings.len(), 1);
+        assert!(out.warnings[0].contains("unused allow(wall-clock)"));
+    }
+}

@@ -1,0 +1,89 @@
+//! CLI entry point: scan a source tree, print the report, exit nonzero on
+//! any unsuppressed finding.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const HELP: &str = "\
+detlint — determinism & panic-safety static analysis for skedge
+
+USAGE:
+    detlint [--root <dir>] [--quiet]
+
+OPTIONS:
+    --root <dir>   source tree to scan (default: the sibling rust/src tree)
+    --quiet        print findings and the tally only, no suppression table
+    -h, --help     this message
+
+EXIT CODES:
+    0   clean (suppressions and unused-allow warnings do not fail the run)
+    1   at least one unsuppressed finding
+    2   usage or I/O error";
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("detlint: --root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--quiet" => quiet = true,
+            "-h" | "--help" => {
+                println!("{HELP}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("detlint: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let Some(root) = root.or_else(default_root) else {
+        eprintln!("detlint: could not locate a source tree to scan (pass --root <dir>)");
+        return ExitCode::from(2);
+    };
+    let policy = detlint::Policy::skedge();
+    match detlint::scan_tree(&root, &policy) {
+        Ok(out) => {
+            let text = if quiet {
+                detlint::report::render_quiet(&out)
+            } else {
+                detlint::report::render(&out)
+            };
+            print!("{text}");
+            if out.findings.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("detlint: scanning {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Default scan root: `../src` relative to this crate when built inside
+/// the workspace, else `src` / `rust/src` under the working directory.
+fn default_root() -> Option<PathBuf> {
+    if let Some(manifest) = std::env::var_os("CARGO_MANIFEST_DIR") {
+        let p = PathBuf::from(manifest).join("..").join("src");
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    for cand in ["src", "rust/src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    None
+}

@@ -1,0 +1,104 @@
+//! The module-scoped determinism policy for the `skedge` crate: which
+//! modules must be deterministic, which are allowed to read the wall
+//! clock, and which are exempt from the panic-path rule.
+//!
+//! Paths are relative to the scanned source root (`rust/src/`), with `/`
+//! separators. An entry matches a file exactly (`obs/profile.rs`,
+//! `benchkit.rs`) or as a directory prefix (`fleet` matches
+//! `fleet/shard.rs`).
+
+/// Scan policy: three path lists consulted by the rules in `rules.rs`.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    /// Modules whose outputs feed fingerprints: hash-order (R1) applies
+    /// only here. float-cmp (R2) and unseeded-rng (R4) apply everywhere.
+    pub deterministic: Vec<String>,
+    /// Modules allowed to read `Instant::now` / `SystemTime` (R3).
+    pub wall_clock_ok: Vec<String>,
+    /// Files exempt from the panic-path rule (R5), in addition to test
+    /// code, which is always exempt.
+    pub panic_exempt: Vec<String>,
+}
+
+impl Policy {
+    /// The policy for this repository, mirroring the table in README.md.
+    pub fn skedge() -> Policy {
+        Policy {
+            deterministic: owned(&[
+                "fleet",
+                "region",
+                "sim",
+                "predictor",
+                "platform",
+                "obs",
+                "engine",
+            ]),
+            wall_clock_ok: owned(&["live", "obs/profile.rs", "benchkit.rs"]),
+            panic_exempt: owned(&["main.rs"]),
+        }
+    }
+
+    /// Is `rel` inside a module that must be deterministic?
+    pub fn is_deterministic(&self, rel: &str) -> bool {
+        hit(&self.deterministic, rel)
+    }
+
+    /// May `rel` read the wall clock?
+    pub fn wall_clock_ok(&self, rel: &str) -> bool {
+        hit(&self.wall_clock_ok, rel)
+    }
+
+    /// Is `rel` exempt from the panic-path rule?
+    pub fn panic_exempt(&self, rel: &str) -> bool {
+        hit(&self.panic_exempt, rel)
+    }
+}
+
+/// `entry` matches `rel` exactly, or as a directory prefix (`fleet` →
+/// `fleet/shard.rs`).
+fn hit(list: &[String], rel: &str) -> bool {
+    list.iter().any(|entry| {
+        if rel == entry {
+            return true;
+        }
+        rel.len() > entry.len()
+            && rel.as_bytes()[entry.len()] == b'/'
+            && rel.starts_with(entry.as_str())
+    })
+}
+
+fn owned(items: &[&str]) -> Vec<String> {
+    items.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_matches_are_directory_scoped() {
+        let p = Policy::skedge();
+        assert!(p.is_deterministic("fleet/shard.rs"));
+        assert!(p.is_deterministic("sim/events.rs"));
+        assert!(!p.is_deterministic("util/json.rs"));
+        // `fleet` must not match a sibling file that merely shares the prefix
+        assert!(!p.is_deterministic("fleety.rs"));
+    }
+
+    #[test]
+    fn wall_clock_allowlist() {
+        let p = Policy::skedge();
+        assert!(p.wall_clock_ok("live/mod.rs"));
+        assert!(p.wall_clock_ok("obs/profile.rs"));
+        assert!(p.wall_clock_ok("benchkit.rs"));
+        assert!(!p.wall_clock_ok("obs/event.rs"));
+        assert!(!p.wall_clock_ok("sim/mod.rs"));
+    }
+
+    #[test]
+    fn panic_exemptions() {
+        let p = Policy::skedge();
+        assert!(p.panic_exempt("main.rs"));
+        assert!(!p.panic_exempt("lib.rs"));
+    }
+}

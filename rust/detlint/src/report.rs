@@ -1,0 +1,116 @@
+//! Rendering of scan results: findings as `file:line: rule — message`
+//! lines (the format CI and editors key on), unused-allow warnings, a
+//! one-line tally, and the suppression summary table that keeps every
+//! inline allow auditable per PR.
+
+use crate::{ScanOutcome, Suppression};
+
+/// Render the full report. Findings come first so a failing CI log leads
+/// with the actionable lines; the suppression table is printed on green
+/// runs too, so allowlist drift shows up in build logs every PR.
+pub fn render(out: &ScanOutcome) -> String {
+    render_inner(out, true)
+}
+
+/// The `--quiet` variant: findings, warnings, and the tally, no table.
+pub fn render_quiet(out: &ScanOutcome) -> String {
+    render_inner(out, false)
+}
+
+fn render_inner(out: &ScanOutcome, with_table: bool) -> String {
+    let mut s = String::new();
+    for f in &out.findings {
+        s.push_str(&format!("{}:{}: {} — {}\n", f.path, f.line, f.rule, f.message));
+    }
+    for w in &out.warnings {
+        s.push_str(&format!("warning: {w}\n"));
+    }
+    s.push_str(&format!(
+        "detlint: {} files scanned, {} unsuppressed finding(s), {} suppression(s), {} warning(s)\n",
+        out.files,
+        out.findings.len(),
+        out.suppressions.len(),
+        out.warnings.len(),
+    ));
+    if with_table && !out.suppressions.is_empty() {
+        s.push_str(&render_suppressions(&out.suppressions));
+    }
+    s
+}
+
+/// The suppression summary table on its own — CI publishes this block as
+/// the build-log audit trail.
+pub fn render_suppressions(sups: &[Suppression]) -> String {
+    let mut s = String::from("suppressions (inline `detlint: allow`):\n");
+    let site_w = sups
+        .iter()
+        .map(|p| p.path.len() + digits(p.line) + 1)
+        .max()
+        .unwrap_or(0);
+    let rule_w = sups.iter().map(|p| p.rule.len()).max().unwrap_or(0);
+    for p in sups {
+        let site = format!("{}:{}", p.path, p.line);
+        s.push_str(&format!(
+            "  {site:<site_w$}  {rule:<rule_w$}  — {reason}\n",
+            rule = p.rule,
+            reason = p.reason,
+        ));
+    }
+    s
+}
+
+fn digits(mut n: u32) -> usize {
+    let mut d = 1;
+    while n >= 10 {
+        n /= 10;
+        d += 1;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Finding;
+
+    #[test]
+    fn report_lists_findings_then_tally_then_table() {
+        let out = ScanOutcome {
+            files: 3,
+            findings: vec![Finding {
+                path: "sim/mod.rs".into(),
+                line: 10,
+                rule: "wall-clock",
+                message: "`Instant::now` outside a wall-clock module".into(),
+            }],
+            suppressions: vec![Suppression {
+                path: "sim/events.rs".into(),
+                line: 52,
+                rule: "float-cmp",
+                reason: "trait boilerplate".into(),
+            }],
+            warnings: vec!["x.rs:1: unused allow(float-cmp)".into()],
+        };
+        let text = render(&out);
+        assert!(text.starts_with("sim/mod.rs:10: wall-clock — "));
+        assert!(text.contains("warning: x.rs:1: unused allow"));
+        assert!(text.contains("3 files scanned, 1 unsuppressed finding(s), 1 suppression(s)"));
+        assert!(text.contains("sim/events.rs:52  float-cmp  — trait boilerplate"));
+    }
+
+    #[test]
+    fn clean_run_still_prints_the_tally() {
+        let out = ScanOutcome::default();
+        let text = render(&out);
+        assert!(text.contains("0 unsuppressed finding(s)"));
+        assert!(!text.contains("suppressions ("));
+    }
+
+    #[test]
+    fn digit_widths() {
+        assert_eq!(digits(1), 1);
+        assert_eq!(digits(9), 1);
+        assert_eq!(digits(10), 2);
+        assert_eq!(digits(1234), 4);
+    }
+}

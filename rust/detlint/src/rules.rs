@@ -1,0 +1,338 @@
+//! The five determinism/panic-safety rules, as token-sequence matchers
+//! over the stream produced by `lex.rs`.
+//!
+//! | rule          | matches                                             | scope                      |
+//! |---------------|-----------------------------------------------------|----------------------------|
+//! | `hash-order`  | `HashMap` / `HashSet`                               | deterministic modules only |
+//! | `float-cmp`   | `partial_cmp`                                       | everywhere                 |
+//! | `wall-clock`  | `Instant::now`, `SystemTime`                        | outside wall-clock modules |
+//! | `unseeded-rng`| `thread_rng`, `rand::random`, `OsRng`, `from_entropy` | everywhere               |
+//! | `panic-path`  | `.unwrap(`, `.expect(`, `panic!`, `todo!`, `unimplemented!` | library code only  |
+//!
+//! `panic-path` skips test code (`#[cfg(test)]` modules, `#[test]` fns —
+//! see [`test_mask`]) and the files in `Policy::panic_exempt`. The other
+//! rules apply to test code too: a test that iterates a `HashMap` or reads
+//! the wall clock can produce flaky assertions just as easily as library
+//! code can produce flaky fingerprints.
+
+use crate::lex::{Lexed, Tok, Token};
+use crate::policy::Policy;
+
+pub const HASH_ORDER: &str = "hash-order";
+pub const FLOAT_CMP: &str = "float-cmp";
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const UNSEEDED_RNG: &str = "unseeded-rng";
+pub const PANIC_PATH: &str = "panic-path";
+/// Meta-rule: a malformed `detlint:` directive is itself a finding, so a
+/// reason-less allow can never silently disable enforcement.
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// The rule names an allow directive may name.
+pub const SUPPRESSIBLE: [&str; 5] = [HASH_ORDER, FLOAT_CMP, WALL_CLOCK, UNSEEDED_RNG, PANIC_PATH];
+
+/// A raw rule hit, before allow-directive processing.
+#[derive(Debug, Clone)]
+pub struct RawFinding {
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Run every rule over one file's token stream.
+pub fn check(rel: &str, lx: &Lexed, policy: &Policy) -> Vec<RawFinding> {
+    let toks = &lx.tokens;
+    let tests = test_mask(toks);
+    let deterministic = policy.is_deterministic(rel);
+    let wall_clock_ok = policy.wall_clock_ok(rel);
+    let panic_exempt = policy.panic_exempt(rel);
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        let word = match t.ident() {
+            Some(w) => w,
+            None => continue,
+        };
+        match word {
+            "HashMap" | "HashSet" if deterministic => out.push(RawFinding {
+                line: t.line,
+                rule: HASH_ORDER,
+                message: format!(
+                    "`{word}` in a deterministic module — iteration order leaks; \
+                     use BTreeMap/BTreeSet or sort before iterating"
+                ),
+            }),
+            "partial_cmp" => out.push(RawFinding {
+                line: t.line,
+                rule: FLOAT_CMP,
+                message: "`partial_cmp` is not total on floats — use `f64::total_cmp`"
+                    .to_string(),
+            }),
+            "Instant" if !wall_clock_ok && followed_by(toks, i, &["::", "now"]) => {
+                out.push(RawFinding {
+                    line: t.line,
+                    rule: WALL_CLOCK,
+                    message: "`Instant::now` outside a wall-clock module — \
+                              use `obs::profile::Stopwatch` or virtual time"
+                        .to_string(),
+                })
+            }
+            "SystemTime" if !wall_clock_ok => out.push(RawFinding {
+                line: t.line,
+                rule: WALL_CLOCK,
+                message: "`SystemTime` outside a wall-clock module".to_string(),
+            }),
+            "thread_rng" | "OsRng" | "from_entropy" => out.push(RawFinding {
+                line: t.line,
+                rule: UNSEEDED_RNG,
+                message: format!("`{word}` is unseeded — use `util::rng` seeded streams"),
+            }),
+            "random" if preceded_by(toks, i, &["rand", "::"]) => out.push(RawFinding {
+                line: t.line,
+                rule: UNSEEDED_RNG,
+                message: "`rand::random` is unseeded — use `util::rng` seeded streams"
+                    .to_string(),
+            }),
+            "unwrap" | "expect"
+                if !panic_exempt
+                    && !tests[i]
+                    && i > 0
+                    && toks[i - 1].is_punct('.')
+                    && next_is_punct(toks, i, '(') =>
+            {
+                out.push(RawFinding {
+                    line: t.line,
+                    rule: PANIC_PATH,
+                    message: format!(
+                        "`.{word}()` in library code — propagate the error instead"
+                    ),
+                })
+            }
+            "panic" | "todo" | "unimplemented"
+                if !panic_exempt && !tests[i] && next_is_punct(toks, i, '!') =>
+            {
+                out.push(RawFinding {
+                    line: t.line,
+                    rule: PANIC_PATH,
+                    message: format!("`{word}!` in library code — return an error instead"),
+                })
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// True when the tokens after `i` spell out `pattern`, where each pattern
+/// element is either an ident word or a run of punctuation chars (`"::"`).
+fn followed_by(toks: &[Token], i: usize, pattern: &[&str]) -> bool {
+    let mut j = i + 1;
+    for part in pattern {
+        if part.chars().all(|c| c.is_ascii_punctuation()) {
+            for ch in part.chars() {
+                if j >= toks.len() || !toks[j].is_punct(ch) {
+                    return false;
+                }
+                j += 1;
+            }
+        } else {
+            if j >= toks.len() || toks[j].ident() != Some(part) {
+                return false;
+            }
+            j += 1;
+        }
+    }
+    true
+}
+
+/// True when the tokens before `i` spell out `pattern` (same element
+/// grammar as [`followed_by`]), ending immediately at `i`.
+fn preceded_by(toks: &[Token], i: usize, pattern: &[&str]) -> bool {
+    let mut want: Vec<Tok> = Vec::new();
+    for part in pattern {
+        if part.chars().all(|c| c.is_ascii_punctuation()) {
+            want.extend(part.chars().map(Tok::Punct));
+        } else {
+            want.push(Tok::Ident(part.to_string()));
+        }
+    }
+    if i < want.len() {
+        return false;
+    }
+    toks[i - want.len()..i]
+        .iter()
+        .zip(&want)
+        .all(|(t, w)| &t.tok == w)
+}
+
+fn next_is_punct(toks: &[Token], i: usize, c: char) -> bool {
+    toks.get(i + 1).is_some_and(|t| t.is_punct(c))
+}
+
+/// Mark every token that lives under a `test`-gated item: `#[test]` fns,
+/// `#[cfg(test)]` / `#[cfg(all(test, ...))]` modules, `#[cfg_attr(test,
+/// ...)]` items. The attribute's own tokens, the item header, and the full
+/// brace-matched body are all marked.
+pub fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let n = toks.len();
+    let mut mask = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if !toks[i].is_punct('#') {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        let inner = j < n && toks[j].is_punct('!');
+        if inner {
+            j += 1;
+        }
+        if j >= n || !toks[j].is_punct('[') {
+            i += 1;
+            continue;
+        }
+        let (attr_end, has_test) = scan_attr(toks, j);
+        if !has_test || inner {
+            i = attr_end + 1;
+            continue;
+        }
+        // a test-gating outer attribute: swallow any further attributes on
+        // the same item, then the item through its body (or a `;` for
+        // body-less items like gated `use` declarations)
+        let mut m = attr_end + 1;
+        while m < n && toks[m].is_punct('#') {
+            let mut k = m + 1;
+            if k < n && toks[k].is_punct('!') {
+                k += 1;
+            }
+            if k < n && toks[k].is_punct('[') {
+                m = scan_attr(toks, k).0 + 1;
+            } else {
+                break;
+            }
+        }
+        while m < n && !toks[m].is_punct('{') && !toks[m].is_punct(';') {
+            m += 1;
+        }
+        if m < n && toks[m].is_punct('{') {
+            let mut depth = 0i32;
+            while m < n {
+                if toks[m].is_punct('{') {
+                    depth += 1;
+                } else if toks[m].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                m += 1;
+            }
+        }
+        let end = m.min(n.saturating_sub(1));
+        for slot in &mut mask[i..=end] {
+            *slot = true;
+        }
+        i = m + 1;
+    }
+    mask
+}
+
+/// From the opening `[` of an attribute, find its matching `]` and report
+/// whether any ident inside is exactly `test`.
+fn scan_attr(toks: &[Token], open: usize) -> (usize, bool) {
+    let mut depth = 0i32;
+    let mut has_test = false;
+    let mut k = open;
+    while k < toks.len() {
+        match &toks[k].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return (k, has_test);
+                }
+            }
+            Tok::Ident(w) if w == "test" => has_test = true,
+            _ => {}
+        }
+        k += 1;
+    }
+    (toks.len().saturating_sub(1), has_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::lex;
+
+    fn run(rel: &str, src: &str) -> Vec<RawFinding> {
+        check(rel, &lex(src), &Policy::skedge())
+    }
+
+    #[test]
+    fn hash_order_is_module_scoped() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(run("fleet/shard.rs", src).len(), 1);
+        assert_eq!(run("fleet/shard.rs", src)[0].rule, HASH_ORDER);
+        assert!(run("util/json.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_needs_the_full_instant_now_path() {
+        assert_eq!(run("sim/mod.rs", "let t = Instant::now();\n")[0].rule, WALL_CLOCK);
+        // `Instant` as a type name alone (no `::now`) is fine
+        assert!(run("sim/mod.rs", "fn f(t: Instant) {}\n").is_empty());
+        assert!(run("live/mod.rs", "let t = Instant::now();\n").is_empty());
+        assert_eq!(run("sim/mod.rs", "let t = SystemTime::now();\n")[0].rule, WALL_CLOCK);
+    }
+
+    #[test]
+    fn rng_rule_catches_rand_random_but_not_other_randoms() {
+        assert_eq!(run("util/rng.rs", "let x = rand::random::<f64>();\n")[0].rule, UNSEEDED_RNG);
+        assert!(run("util/rng.rs", "let x = rng.random();\n").is_empty());
+        assert_eq!(run("workload/mod.rs", "let mut r = thread_rng();\n")[0].rule, UNSEEDED_RNG);
+    }
+
+    #[test]
+    fn panic_path_matchers() {
+        assert_eq!(run("util/json.rs", "let v = x.unwrap();\n")[0].rule, PANIC_PATH);
+        assert_eq!(run("util/json.rs", "let v = x.expect(\"msg\");\n")[0].rule, PANIC_PATH);
+        assert_eq!(run("util/json.rs", "panic!(\"boom\");\n")[0].rule, PANIC_PATH);
+        // `unwrap_or_else` / `expect_err`-style neighbours must not fire
+        assert!(run("util/json.rs", "let v = x.unwrap_or_else(|| 0);\n").is_empty());
+        assert!(run("util/json.rs", "let v = x.unwrap_or(0);\n").is_empty());
+        // `main.rs` is exempt
+        assert!(run("main.rs", "let v = x.unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt_from_panic_path_only() {
+        let src = concat!(
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { x.unwrap(); let m: HashMap<u8, u8> = HashMap::new(); }\n",
+            "}\n",
+        );
+        let hits = run("fleet/shard.rs", src);
+        // both HashMap mentions still fire; the unwrap does not
+        assert_eq!(hits.len(), 2);
+        assert!(hits.iter().all(|h| h.rule == HASH_ORDER));
+    }
+
+    #[test]
+    fn cfg_all_test_blocks_are_test_code() {
+        let src = concat!(
+            "#[cfg(all(test, feature = \"xla\"))]\n",
+            "mod xla_tests { fn t() { x.unwrap(); } }\n",
+            "fn lib() { y.unwrap(); }\n",
+        );
+        let hits = run("runtime/xla.rs", src);
+        assert_eq!(hits.len(), 1, "only the library-path unwrap fires");
+        assert_eq!(hits[0].line, 3);
+    }
+
+    #[test]
+    fn attribute_without_test_does_not_mask() {
+        let src = "#[derive(Debug)]\nstruct S;\nfn f() { x.unwrap(); }\n";
+        assert_eq!(run("util/json.rs", src).len(), 1);
+    }
+}

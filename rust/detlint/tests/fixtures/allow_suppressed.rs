@@ -1,0 +1,13 @@
+//! Fixture: one violation per directive placement form, both suppressed
+//! with reasoned allow comments — zero unsuppressed findings, two
+//! suppressions in the audit table.
+
+pub fn trailing(x: Option<u32>) -> u32 {
+    x.unwrap() // detlint: allow(panic-path) — fixture: trailing-form directive
+}
+
+pub fn line_above(x: Option<u32>) -> u32 {
+    x
+        // detlint: allow(panic-path) — fixture: line-above-form directive
+        .unwrap()
+}

@@ -1,0 +1,9 @@
+//! Fixture: exactly one `hash-order` violation when scanned under a
+//! deterministic module path, nothing else.
+
+use std::collections::HashMap;
+
+pub fn build() -> usize {
+    let m: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
+    m.len()
+}

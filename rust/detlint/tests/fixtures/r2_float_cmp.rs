@@ -1,0 +1,15 @@
+//! Fixture: exactly one `float-cmp` violation, nothing else.
+
+pub fn sloppy_max(xs: &[f64]) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for x in xs {
+        let better = match best {
+            Some(b) => matches!(x.partial_cmp(&b), Some(std::cmp::Ordering::Greater)),
+            None => true,
+        };
+        if better {
+            best = Some(*x);
+        }
+    }
+    best
+}

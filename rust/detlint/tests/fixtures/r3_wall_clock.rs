@@ -1,0 +1,10 @@
+//! Fixture: exactly one `wall-clock` violation when scanned outside the
+//! wall-clock allowlist, nothing else. (The `use` line mentions `Instant`
+//! without `::now`, which must NOT fire.)
+
+use std::time::Instant;
+
+pub fn stamp() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,8 @@
+//! Fixture: exactly one `unseeded-rng` violation, nothing else. (The
+//! `rng.random()` method call must NOT fire — only `rand::random` does.)
+
+pub fn roll(rng: &mut dyn FnMut() -> u64) -> u64 {
+    let seeded = rng();
+    let unseeded = thread_rng();
+    seeded ^ unseeded
+}

@@ -1,0 +1,7 @@
+//! Fixture: exactly one `panic-path` violation, nothing else. (The
+//! `unwrap_or` neighbour must NOT fire.)
+
+pub fn head(xs: &[u32]) -> u32 {
+    let fallback = xs.last().copied().unwrap_or(0);
+    xs.first().copied().unwrap() + fallback
+}

@@ -1,0 +1,28 @@
+//! Fixture: panic-path tokens live only inside test code, so the scan
+//! must come back clean — `#[test]` fns and `#[cfg(test)]` / `#[cfg(all(
+//! test, ...))]` modules are exempt from `panic-path`.
+
+pub fn lib_code() -> u32 {
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t() {
+        let v: Option<u32> = Some(lib_code());
+        assert_eq!(v.unwrap(), 7);
+    }
+}
+
+#[cfg(all(test, feature = "extra"))]
+mod gated_tests {
+    #[test]
+    fn g() {
+        let v: Option<u32> = None;
+        v.expect("fine in tests");
+        panic!("also fine in tests");
+    }
+}

@@ -1,0 +1,106 @@
+//! Integration tests: each seeded fixture triggers exactly its intended
+//! rule (and nothing else), directives suppress cleanly, and — the one
+//! that matters — the real `rust/src/` tree scans with zero unsuppressed
+//! findings.
+
+use detlint::{rules, scan_source, scan_tree, Policy, ScanOutcome};
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    match std::fs::read_to_string(&p) {
+        Ok(s) => s,
+        Err(e) => panic!("reading fixture {}: {e}", p.display()),
+    }
+}
+
+fn scan_as(rel: &str, src: &str) -> ScanOutcome {
+    let mut out = ScanOutcome::default();
+    scan_source(rel, src, &Policy::skedge(), &mut out);
+    out
+}
+
+/// The fixture under `rel` must produce exactly one finding, of `rule`.
+fn assert_exactly(rel: &str, src: &str, rule: &str) {
+    let out = scan_as(rel, src);
+    let got: Vec<&str> = out.findings.iter().map(|f| f.rule).collect();
+    assert_eq!(got, vec![rule], "{rel}: expected exactly one {rule} finding");
+    assert!(out.suppressions.is_empty());
+    assert!(out.warnings.is_empty());
+}
+
+#[test]
+fn r1_fixture_fires_hash_order_in_deterministic_modules_only() {
+    let src = fixture("r1_hash_order.rs");
+    assert_exactly("fleet/fixture.rs", &src, rules::HASH_ORDER);
+    assert_exactly("sim/fixture.rs", &src, rules::HASH_ORDER);
+    // outside the deterministic set the same file is clean
+    assert!(scan_as("util/fixture.rs", &src).findings.is_empty());
+}
+
+#[test]
+fn r2_fixture_fires_float_cmp() {
+    assert_exactly("util/fixture.rs", &fixture("r2_float_cmp.rs"), rules::FLOAT_CMP);
+}
+
+#[test]
+fn r3_fixture_fires_wall_clock_outside_the_allowlist() {
+    let src = fixture("r3_wall_clock.rs");
+    assert_exactly("sim/fixture.rs", &src, rules::WALL_CLOCK);
+    assert!(scan_as("live/fixture.rs", &src).findings.is_empty());
+    assert!(scan_as("benchkit.rs", &src).findings.is_empty());
+}
+
+#[test]
+fn r4_fixture_fires_unseeded_rng() {
+    assert_exactly("workload/fixture.rs", &fixture("r4_unseeded_rng.rs"), rules::UNSEEDED_RNG);
+}
+
+#[test]
+fn r5_fixture_fires_panic_path_except_in_exempt_files() {
+    let src = fixture("r5_panic_path.rs");
+    assert_exactly("util/fixture.rs", &src, rules::PANIC_PATH);
+    assert!(scan_as("main.rs", &src).findings.is_empty());
+}
+
+#[test]
+fn test_gated_code_is_exempt() {
+    let out = scan_as("util/fixture.rs", &fixture("test_exempt.rs"));
+    assert!(out.findings.is_empty(), "test-gated panics must not fire: {:?}", out.findings);
+}
+
+#[test]
+fn allow_fixture_suppresses_both_directive_forms() {
+    let out = scan_as("util/fixture.rs", &fixture("allow_suppressed.rs"));
+    assert!(out.findings.is_empty(), "unsuppressed: {:?}", out.findings);
+    assert_eq!(out.suppressions.len(), 2);
+    assert!(out.suppressions.iter().all(|s| s.rule == rules::PANIC_PATH));
+    assert!(out.suppressions.iter().all(|s| !s.reason.is_empty()));
+    assert!(out.warnings.is_empty(), "no directive may go unused: {:?}", out.warnings);
+}
+
+/// The acceptance gate: the real source tree passes with zero
+/// unsuppressed findings, and every suppression carries a reason.
+#[test]
+fn real_source_tree_is_clean() {
+    let root: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let out = match scan_tree(&root, &Policy::skedge()) {
+        Ok(out) => out,
+        Err(e) => panic!("scanning {}: {e}", root.display()),
+    };
+    assert!(out.files > 30, "expected the full tree, scanned {} files", out.files);
+    assert!(
+        out.findings.is_empty(),
+        "unsuppressed findings in rust/src:\n{}",
+        detlint::report::render(&out),
+    );
+    assert!(!out.suppressions.is_empty(), "the known allowlist should be visible");
+    assert!(out.suppressions.iter().all(|s| !s.reason.is_empty()));
+    assert!(
+        out.warnings.is_empty(),
+        "stale allow directives:\n{}",
+        out.warnings.join("\n"),
+    );
+}

@@ -6,7 +6,7 @@
 //! deterministic iteration counts so before/after comparisons in
 //! EXPERIMENTS.md §Perf are stable.
 
-use std::time::Instant;
+use crate::obs::profile::Stopwatch;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -41,11 +41,11 @@ pub fn bench_n<F: FnMut()>(name: &str, iters: u64, runs: usize, mut f: F) -> Ben
     }
     let mut per_run = Vec::with_capacity(runs);
     for _ in 0..runs {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         for _ in 0..iters {
             f();
         }
-        per_run.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        per_run.push(t0.elapsed_s() * 1e9 / iters as f64);
     }
     per_run.sort_by(f64::total_cmp);
     let ns = per_run[per_run.len() / 2];
@@ -62,9 +62,9 @@ pub fn bench_n<F: FnMut()>(name: &str, iters: u64, runs: usize, mut f: F) -> Ben
 /// Bench with auto-chosen iteration count targeting ~0.3 s per run.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     // calibrate
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     f();
-    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let once = t0.elapsed_s().max(1e-9);
     let iters = ((0.3 / once) as u64).clamp(1, 1_000_000);
     bench_n(name, iters, 5, f)
 }

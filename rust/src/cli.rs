@@ -32,8 +32,8 @@ impl Args {
             };
             if let Some((k, v)) = stripped.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
-            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                flags.insert(stripped.to_string(), it.next().unwrap());
+            } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                flags.insert(stripped.to_string(), v);
             } else {
                 switches.push(stripped.to_string());
             }

@@ -190,6 +190,7 @@ impl Meta {
     pub fn app(&self, name: &str) -> &AppMeta {
         self.apps
             .get(name)
+            // detlint: allow(panic-path) — schema accessor: app names are validated at the CLI/settings boundary
             .unwrap_or_else(|| panic!("unknown app `{name}` (have: {:?})", self.apps.keys()))
     }
 

@@ -3,7 +3,7 @@
 //! the average end-to-end latency is 2404 s ... compared to 1.71 s with
 //! cloud offload").
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{ExperimentSettings, Meta, Objective};
 use crate::platform::greengrass::EdgeExecutor;
@@ -40,7 +40,7 @@ pub fn edge_only(meta: &Meta) -> Result<String> {
             app.to_uppercase(),
             render::f(avg, 2),
             render::f(sorted[sorted.len() / 2], 2),
-            render::f(*sorted.last().unwrap(), 2),
+            render::f(sorted.last().copied().unwrap_or(f64::NAN), 2),
             render::f(fw, 3),
             format!("{:.0}×", avg / fw),
         ]);
@@ -80,7 +80,9 @@ pub fn comparison(meta: &Meta) -> Result<String> {
         // static cloud-only at three fixed configs (always offload)
         let tasks = build_workload(meta, app, am.n_eval, true, 2020)?;
         for mem in [640.0, 1536.0, 2944.0] {
-            let j = meta.config_index(mem).unwrap();
+            let j = meta
+                .config_index(mem)
+                .ok_or_else(|| anyhow!("memory config {mem} MB missing from meta.json"))?;
             let mut e2e = Vec::new();
             let mut cost = 0.0;
             for task in &tasks {
@@ -107,7 +109,9 @@ pub fn comparison(meta: &Meta) -> Result<String> {
             let mut best = a.edge_e2e();
             let mut best_cost = 0.0;
             for &mem in &set {
-                let j = meta.config_index(mem).unwrap();
+                let j = meta
+                    .config_index(mem)
+                    .ok_or_else(|| anyhow!("memory config {mem} MB missing from meta.json"))?;
                 let c = a.cloud_e2e(j, false);
                 if c < best {
                     best = c;

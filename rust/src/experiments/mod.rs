@@ -43,6 +43,7 @@ pub fn costmin_sets(app: &str) -> Vec<Vec<f64>> {
             &[640.0, 768.0, 896.0, 1280.0, 1664.0],
             &[640.0, 896.0, 1152.0, 1664.0],
         ],
+        // detlint: allow(panic-path) — fixed paper-table lookup; apps are validated upstream
         _ => panic!("unknown app {app}"),
     };
     sets.iter().map(|s| s.to_vec()).collect()
@@ -69,6 +70,7 @@ pub fn latmin_sets(app: &str) -> Vec<Vec<f64>> {
             &[1024.0, 1280.0, 1664.0],
             &[1024.0, 1152.0, 1280.0, 1664.0],
         ],
+        // detlint: allow(panic-path) — fixed paper-table lookup; apps are validated upstream
         _ => panic!("unknown app {app}"),
     };
     sets.iter().map(|s| s.to_vec()).collect()

@@ -1,7 +1,7 @@
 //! Table I (component means), Table II (model MAPE) and Figs. 3/4
 //! (predicted vs actual end-to-end latency scatter data).
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::Meta;
 use crate::models::NativeModels;
@@ -112,7 +112,9 @@ fn recompute_mape(meta: &Meta, app: &str) -> Result<(f64, f64)> {
 /// Figs. 3 and 4: predicted vs actual end-to-end latency series for FD and
 /// STT (cloud @1536 MB warm for Fig. 3, edge for Fig. 4), as CSV blocks.
 pub fn fig_pred_vs_actual(meta: &Meta, cloud: bool) -> Result<String> {
-    let j1536 = meta.config_index(1536.0).expect("1536 MB config");
+    let j1536 = meta
+        .config_index(1536.0)
+        .ok_or_else(|| anyhow!("1536 MB config missing from meta.json"))?;
     let mut out = String::new();
     let (figno, what) = if cloud { (3, "cloud pipeline, 1536 MB, warm starts") } else { (4, "edge pipeline") };
     out.push_str(&format!(

@@ -280,7 +280,7 @@ impl<'a> Device<'a> {
         profile: DeviceProfile,
     ) -> Result<Device<'a>> {
         let tidl = settings.tidl_belief_ms.unwrap_or(meta.tidl_mean_ms);
-        let router = DeviceRouter::single(meta.memory_configs_mb.len(), tidl);
+        let router = DeviceRouter::single(meta.memory_configs_mb.len(), tidl)?;
         Self::build(meta, settings, profile, None, router)
     }
 

@@ -44,7 +44,6 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -58,7 +57,7 @@ use crate::runtime::{RunOutcome, XlaEngine};
 use crate::sim::events::{Event, EventQueue};
 
 use crate::obs::event::{EventMeta, Stages, TaskEvent};
-use crate::obs::profile::{RunProfile, ShardProfile};
+use crate::obs::profile::{RunProfile, ShardProfile, Stopwatch};
 use crate::obs::sink::Recorder;
 use crate::obs::stream::StreamingSummary;
 use crate::obs::telemetry::{Telemetry, TelemetryCfg};
@@ -142,11 +141,7 @@ struct DeviceRun<'a> {
 impl<'a> DeviceRun<'a> {
     /// Step this device's event queue up to (exclusive) `epoch_end`.
     fn step_until(&mut self, epoch_end: f64, out: &mut EpochOutput) -> Result<()> {
-        while let Some((t, _)) = self.queue.peek() {
-            if t >= epoch_end {
-                break;
-            }
-            let (now, ev) = self.queue.pop().expect("peeked event present");
+        while let Some((now, ev)) = self.queue.pop_if_before(epoch_end) {
             out.last_event_ms = out.last_event_ms.max(now);
             out.events_popped += 1;
             match ev {
@@ -374,13 +369,13 @@ fn worker_loop(
     // enter any outcome or fingerprint
     let mut prof = ShardProfile { shard: shard_idx, ..Default::default() };
     loop {
-        let wait_t = Instant::now();
+        let wait_t = Stopwatch::start();
         let cmd = match commands.recv() {
             Ok(cmd) => cmd,
             Err(_) => return, // command channel closed: run over
         };
-        prof.wait_s += wait_t.elapsed().as_secs_f64();
-        let busy_t = Instant::now();
+        prof.wait_s += wait_t.elapsed_s();
+        let busy_t = Stopwatch::start();
         if let Some(hub) = &cmd.hub {
             for run in &mut runs {
                 run.device.router.refresh_from_hub(hub);
@@ -414,7 +409,7 @@ fn worker_loop(
             runs.iter().map(|r| r.device.peak_edge_queue).max().unwrap_or(0);
         prof.epochs += 1;
         prof.events += out.events_popped;
-        prof.busy_s += busy_t.elapsed().as_secs_f64();
+        prof.busy_s += busy_t.elapsed_s();
         out.profile = Some(prof);
         if results.send(Ok(out)).is_err() {
             return; // coordinator gone
@@ -885,6 +880,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         app_names.dedup();
         let app_idx: Vec<usize> = apps
             .iter()
+            // detlint: allow(panic-path) — app_names is a sorted+deduped copy of apps
             .map(|a| app_names.binary_search(a).expect("own app is in the sorted table"))
             .collect();
         let window_ms = fs.metrics_window_ms.filter(|w| *w > 0.0).unwrap_or(epoch_ms);
@@ -928,7 +924,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
 
     let stream_dims = streaming.then_some((n_regions, n_configs));
     let mut profile = RunProfile::new(n_shards);
-    let wall_t = Instant::now();
+    let wall_t = Stopwatch::start();
     std::thread::scope(|scope| -> Result<()> {
         let mut cmd_txs = Vec::with_capacity(n_shards);
         let (res_tx, res_rx) =
@@ -969,12 +965,12 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
                 absorb_into_hubs(&mut fresh, &mut topo);
             }
             pending.extend(fresh.into_iter().map(PendingServe::new));
-            let merge_t = Instant::now();
+            let merge_t = Stopwatch::start();
             merge_ready(
                 &mut pending, epoch_end, &mut topo, &mut col, &mut sim_end,
                 feedback, hub_mode, &mut carry_obs,
             );
-            profile.merge_s += merge_t.elapsed().as_secs_f64();
+            profile.merge_s += merge_t.elapsed_s();
             if let Some(t) = &mut col.telemetry {
                 // admission-queue depth still pending after this epoch's
                 // merge, attributed to the last window the epoch closed
@@ -995,12 +991,12 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
                     )?;
                     pending.extend(fresh.into_iter().map(PendingServe::new));
                 }
-                let merge_t = Instant::now();
+                let merge_t = Stopwatch::start();
                 merge_ready(
                     &mut pending, f64::INFINITY, &mut topo, &mut col, &mut sim_end,
                     feedback, hub_mode, &mut carry_obs,
                 );
-                profile.merge_s += merge_t.elapsed().as_secs_f64();
+                profile.merge_s += merge_t.elapsed_s();
                 break;
             }
             epoch_end += epoch_ms;
@@ -1009,7 +1005,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         drop(cmd_txs); // workers observe the closed channel and exit
         Ok(())
     })?;
-    profile.wall_s = wall_t.elapsed().as_secs_f64();
+    profile.wall_s = wall_t.elapsed_s();
     profile.tasks = expected_tasks as u64;
     let telemetry = col.telemetry.take();
 

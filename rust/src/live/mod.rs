@@ -35,7 +35,7 @@
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -44,6 +44,7 @@ use crate::fleet::device::{self, CloudObservation, Device, DeviceProfile, Dispat
 use crate::fleet::scenario::TIDL_SALT;
 use crate::metrics::TaskRecord;
 use crate::obs::event::{EventMeta, Stages, TaskEvent};
+use crate::obs::profile::Stopwatch;
 use crate::obs::sink::Recorder;
 use crate::platform::containers::StartKind;
 use crate::platform::lambda::CloudPlatform;
@@ -102,7 +103,7 @@ struct EdgeJob {
     comp_ms: f64,
     /// iotup + store: I/O after compute; part of latency, not of the FIFO
     tail_ms: f64,
-    dispatched: Instant,
+    dispatched: Stopwatch,
 }
 
 /// What a worker reports back to the ingest thread.
@@ -193,7 +194,7 @@ fn run_inner(
         while let Ok(job) = edge_rx.recv() {
             scaled_sleep(job.comp_ms, scale); // FIFO: serialized compute
             let measured_ms =
-                job.dispatched.elapsed().as_secs_f64() * 1000.0 / scale + job.tail_ms;
+                job.dispatched.elapsed_s() * 1000.0 / scale + job.tail_ms;
             if edge_done
                 .send(Completion {
                     record: job.record,
@@ -209,8 +210,8 @@ fn run_inner(
     });
 
     // ---- ingest / decision loop ------------------------------------------
-    let t0 = Instant::now();
-    let virtual_now = |t0: &Instant| t0.elapsed().as_secs_f64() * 1000.0 / scale;
+    let t0 = Stopwatch::start();
+    let virtual_now = |t0: &Stopwatch| t0.elapsed_s() * 1000.0 / scale;
     let mut cloud_handles = Vec::new();
     let gap_ms = 1000.0 / app.arrival_rate_per_s;
     let mut slots: Vec<Option<TaskRecord>> = vec![None; n];
@@ -239,21 +240,25 @@ fn run_inner(
                         record: e.record,
                         comp_ms: a.edge_comp,
                         tail_ms: a.iotup + a.edge_store,
-                        dispatched: Instant::now(),
+                        dispatched: Stopwatch::start(),
                     })
                     .map_err(|_| anyhow!("edge worker exited before the run finished"))?;
             }
             Dispatch::Cloud(req) => {
                 let cloud = Arc::clone(&cloud);
                 let done = done_tx.clone();
-                let dispatched = Instant::now();
+                let dispatched = Stopwatch::start();
                 let app_name = s.app.clone();
                 cloud_handles.push(std::thread::spawn(move || {
                     scaled_sleep(req.upld_ms + req.routing_ms, scale);
                     // the pools decide warm vs cold at (virtual) trigger
                     // time — the same ground truth the simulator applies
                     let (exec, record) = {
-                        let mut pools = cloud.lock().unwrap();
+                        // a worker panicking while holding the pool lock is
+                        // already fatal to the run (join surfaces it); keep
+                        // serving rather than compounding with a poison panic
+                        let mut pools =
+                            cloud.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                         let exec = device::execute_cloud(&req, &mut pools);
                         (exec, device::complete_cloud(&req, &exec))
                     };
@@ -299,7 +304,7 @@ fn run_inner(
                         Vec::new()
                     };
                     scaled_sleep(exec.start_ms + req.comp_ms + req.store_ms, scale);
-                    let measured_ms = dispatched.elapsed().as_secs_f64() * 1000.0 / scale;
+                    let measured_ms = dispatched.elapsed_s() * 1000.0 / scale;
                     let _ = done.send(Completion { record, measured_ms, obs, events });
                 }));
             }
@@ -326,7 +331,7 @@ fn run_inner(
     let wall: Vec<f64> = measured.iter().copied().flatten().collect();
     Ok(LiveOutcome {
         run: RunOutcome::from_slots(slots)?,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds: t0.elapsed_s(),
         wall_latency: latency_percentiles(&wall),
         wall_avg_e2e_ms: crate::util::stats::mean(&wall),
     })

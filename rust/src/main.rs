@@ -141,12 +141,12 @@ fn main() -> Result<()> {
             // time only the sharded run, not single-threaded workload
             // generation, so the printed tasks/s reflects threading
             let inits = fleet::scenario::build_fleet(&meta, &fs)?;
-            let t0 = std::time::Instant::now();
+            let t0 = skedge::obs::profile::Stopwatch::start();
             let mut o = fleet::shard::run_fleet(&meta, inits, &fs)?;
             if fs.record_events {
                 o.summary.fold_recorded_events(o.events.len() as u64);
             }
-            print_fleet_summary(&fs, &o, t0.elapsed().as_secs_f64());
+            print_fleet_summary(&fs, &o, t0.elapsed_s());
             if let Some(t) = &o.telemetry {
                 if let Some(path) = &metrics_path {
                     t.write_file(path)?;

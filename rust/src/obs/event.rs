@@ -184,14 +184,24 @@ pub enum TaskEvent {
 }
 
 impl TaskEvent {
-    /// Virtual time of the event.
+    /// Virtual time of the event. Exhaustive over every variant so adding
+    /// an event kind without a time is a compile error, not a panic.
     pub fn t_ms(&self) -> f64 {
         match self {
+            TaskEvent::Arrival { meta, .. }
+            | TaskEvent::Decision { meta, .. }
+            | TaskEvent::AdmissionDenied { meta, .. }
+            | TaskEvent::FailoverHop { meta, .. }
+            | TaskEvent::QueueWait { meta, .. }
+            | TaskEvent::ContainerStart { meta, .. }
+            | TaskEvent::Completion { meta, .. }
+            | TaskEvent::Rejection { meta, .. }
+            | TaskEvent::Observation { meta, .. }
+            | TaskEvent::Retraction { meta, .. } => meta.t_ms,
             TaskEvent::EpochBarrier { t_ms, .. }
             | TaskEvent::PoolHighWater { t_ms, .. }
             | TaskEvent::DeviceMove { t_ms, .. }
             | TaskEvent::ScenarioPhase { t_ms, .. } => *t_ms,
-            _ => self.meta().unwrap().t_ms,
         }
     }
 

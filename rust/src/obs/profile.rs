@@ -10,6 +10,29 @@
 //! measurement substrate the ROADMAP's million-device item (lock-free hot
 //! path) will be judged against.
 
+use std::time::Instant;
+
+/// The crate's one sanctioned wall-clock read. Every timing measurement —
+/// shard busy/wait splits, coordinator wall time, live-mode dispatch
+/// tails, the bench harness — goes through a [`Stopwatch`], so the
+/// determinism linter's wall-clock rule (detlint R3) and the clippy
+/// `disallowed-methods` list can pin `Instant::now` to this module alone.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start timing now.
+    #[allow(clippy::disallowed_methods)] // the one sanctioned wall-clock read
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
 /// Cumulative self-measurements of one worker shard.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ShardProfile {
@@ -123,6 +146,15 @@ impl RunProfile {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let t = Stopwatch::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
 
     #[test]
     fn derived_rates_guard_zero() {

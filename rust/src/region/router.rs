@@ -49,10 +49,9 @@ pub struct DeviceRouter {
 impl DeviceRouter {
     /// The implicit single-region router `sim::run` and topology-less
     /// fleets use: zero routing latency, reference pricing, private CIL.
-    pub fn single(n_configs: usize, tidl_belief_ms: f64) -> Self {
+    pub fn single(n_configs: usize, tidl_belief_ms: f64) -> Result<Self> {
         let topo = Arc::new(ResolvedTopology::single(n_configs));
         Self::new(topo, CilMode::Private, 0, vec![1.0], Vec::new(), tidl_belief_ms)
-            .expect("trivial router construction cannot fail")
     }
 
     /// Build a router for one device of a (possibly multi-region) fleet.
@@ -264,7 +263,7 @@ mod tests {
 
     #[test]
     fn trivial_router_has_zero_routing() {
-        let r = DeviceRouter::single(19, TIDL);
+        let r = DeviceRouter::single(19, TIDL).unwrap();
         assert_eq!(r.n_regions(), 1);
         assert_eq!(r.routing_ms(0), 0.0);
         assert_eq!(r.price_mult(0), 1.0);

@@ -158,7 +158,7 @@ impl XlaEngine {
     /// Request-path prediction for a single input size.
     pub fn predict(&self, size: f64) -> Result<RawPrediction> {
         let mut out = self.b1.run(&[size as f32], 1)?;
-        Ok(out.pop().unwrap())
+        out.pop().ok_or_else(|| anyhow!("b1 executable returned no output"))
     }
 
     /// Bulk scoring: chunks through the b64 executable (padding the tail),

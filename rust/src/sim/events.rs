@@ -48,6 +48,7 @@ impl Ord for Scheduled {
     }
 }
 impl PartialOrd for Scheduled {
+    // detlint: allow(float-cmp) — trait boilerplate delegating to the total Ord above
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
@@ -89,6 +90,15 @@ impl EventQueue {
     /// Earliest scheduled event without popping it (epoch-bounded stepping).
     pub fn peek(&self) -> Option<(f64, Event)> {
         self.heap.peek().map(|s| (s.at_ms, s.event))
+    }
+
+    /// Pop the earliest event only if it fires strictly before `cutoff_ms`
+    /// — epoch-bounded stepping without a peek-then-pop panic window.
+    pub fn pop_if_before(&mut self, cutoff_ms: f64) -> Option<(f64, Event)> {
+        match self.peek() {
+            Some((t, _)) if t < cutoff_ms => self.pop(),
+            _ => None,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -151,6 +161,18 @@ mod tests {
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_if_before_respects_the_cutoff() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, Event::Arrival { id: 1 });
+        q.schedule(9.0, Event::Arrival { id: 2 });
+        assert_eq!(q.pop_if_before(5.0), None, "cutoff is exclusive");
+        assert_eq!(q.pop_if_before(6.0), Some((5.0, Event::Arrival { id: 1 })));
+        assert_eq!(q.pop_if_before(6.0), None);
+        assert_eq!(q.pop_if_before(f64::INFINITY), Some((9.0, Event::Arrival { id: 2 })));
+        assert_eq!(q.pop_if_before(f64::INFINITY), None, "empty queue yields None");
     }
 
     #[test]

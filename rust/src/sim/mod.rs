@@ -171,9 +171,8 @@ fn run_inner(
                     // the response lands (the CloudStored event)
                     pending_obs[id] = Some(CloudObservation::from_execution(&req, &exec));
                 }
-                records[id] = Some(device::complete_cloud(&req, &exec));
+                let r = device::complete_cloud(&req, &exec);
                 if let Some(rec) = recorder.as_deref_mut() {
-                    let r = records[id].as_ref().unwrap();
                     let ev_meta = |t: f64| {
                         EventMeta::new(t, req.device_id, &settings.app, req.seq, req.task_id)
                     };
@@ -210,6 +209,7 @@ fn run_inner(
                         });
                     }
                 }
+                records[id] = Some(r);
             }
             Event::EdgeCompDone { .. } => dev.edge.drain_one(),
             Event::CloudStored { id } => {

@@ -53,6 +53,7 @@ where
         let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
         let mut g = Gen::new(seed);
         if let Err(msg) = prop(&mut g) {
+            // detlint: allow(panic-path) — property harness: failure must panic the enclosing #[test]
             panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}");
         }
     }

@@ -57,6 +57,7 @@ impl Table {
         let i = *self
             .index
             .get(name)
+            // detlint: allow(panic-path) — schema accessor: a checked-in artifact table missing a column is unrecoverable
             .unwrap_or_else(|| panic!("csv has no column `{name}`"));
         &self.columns[i]
     }

@@ -68,6 +68,7 @@ impl Json {
     /// fields that must exist in meta.json.
     pub fn req(&self, key: &str) -> &Json {
         self.get(key)
+            // detlint: allow(panic-path) — schema accessor: a missing meta.json key is unrecoverable
             .unwrap_or_else(|| panic!("missing required json key `{key}`"))
     }
 
@@ -79,6 +80,7 @@ impl Json {
     }
 
     pub fn f64(&self) -> f64 {
+        // detlint: allow(panic-path) — schema accessor twin of `as_f64`; see `req`
         self.as_f64().expect("expected json number")
     }
 
@@ -94,6 +96,7 @@ impl Json {
     }
 
     pub fn str(&self) -> &str {
+        // detlint: allow(panic-path) — schema accessor twin of `as_str`; see `req`
         self.as_str().expect("expected json string")
     }
 
@@ -105,6 +108,7 @@ impl Json {
     }
 
     pub fn arr(&self) -> &[Json] {
+        // detlint: allow(panic-path) — schema accessor twin of `as_arr`; see `req`
         self.as_arr().expect("expected json array")
     }
 
@@ -116,6 +120,7 @@ impl Json {
     }
 
     pub fn obj(&self) -> &BTreeMap<String, Json> {
+        // detlint: allow(panic-path) — schema accessor twin of `as_obj`; see `req`
         self.as_obj().expect("expected json object")
     }
 
@@ -281,7 +286,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s =
+            std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -327,7 +333,9 @@ impl<'a> Parser<'a> {
                     // copy a full UTF-8 char
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        return Err(self.err("invalid utf-8"));
+                    };
                     s.push(c);
                     self.i += c.len_utf8();
                 }

@@ -38,7 +38,9 @@ static REPLAY_CACHE: std::sync::Mutex<
 /// Load the replay table for an app (cached per path).
 pub fn load_replay_cached(meta: &Meta, app: &str) -> Result<std::sync::Arc<Vec<TaskActuals>>> {
     let path = meta.eval_csv_path(app);
-    let mut guard = REPLAY_CACHE.lock().unwrap();
+    // poison recovery: the cache only memoizes reparseable CSV tables, so a
+    // panic in another thread never leaves it logically corrupt
+    let mut guard = REPLAY_CACHE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     let cache = guard.get_or_insert_with(Default::default);
     if let Some(rows) = cache.get(&path) {
         return Ok(rows.clone());
