@@ -3,7 +3,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts verify soak record-replay analyze-demo lint
+.PHONY: artifacts test-python clean-artifacts verify soak record-replay analyze-demo lint alloc-check merge-smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
@@ -25,6 +25,31 @@ lint:
 	cd rust && cargo run --release -p detlint
 	cd rust && cargo clippy --all-targets -- -D warnings
 	cd rust && cargo clippy -p detlint --all-targets -- -D warnings
+
+# Allocation-regression pin: drives a shard's epoch loop directly under a
+# counting global allocator and fails if any steady-state epoch (after
+# prewarm + warmup) performs a single heap allocation. Release mode so
+# the measured path is the one the benchmarks run. Assumes
+# `make artifacts` has run.
+alloc-check:
+	cd rust && cargo test --release --test alloc -- --nocapture
+
+# Per-region vs global epoch-barrier merge fingerprint smoke through the
+# CLI: the same 2-shard fleet under both --merge strategies must print
+# identical fingerprints (the bitwise-equivalence guarantee end to end;
+# the in-process pins live in rust/tests/fleet.rs and resilience.rs).
+# Assumes `make artifacts` has run.
+merge-smoke:
+	cd rust && cargo run --release --quiet -- fleet --devices 12 --duration-s 6 \
+		--scenario poisson --shards 2 --topology duo --merge per-region \
+		| tee /tmp/skedge-merge-pr.out
+	cd rust && cargo run --release --quiet -- fleet --devices 12 --duration-s 6 \
+		--scenario poisson --shards 2 --topology duo --merge global \
+		| tee /tmp/skedge-merge-global.out
+	@a=$$(grep '^fingerprint' /tmp/skedge-merge-pr.out); \
+	b=$$(grep '^fingerprint' /tmp/skedge-merge-global.out); \
+	if [ "$$a" = "$$b" ]; then echo "merge-smoke: strategies agree ($$a)"; \
+	else echo "merge-smoke: MISMATCH: per-region '$$a' vs global '$$b'" >&2; exit 1; fi
 
 # Long-soak nondeterminism smoke: the 10-epoch outage storm (caps + rate
 # limits + queueing + failover + region blackouts + correlated device

@@ -1,40 +1,87 @@
 //! Fleet simulator throughput: device×tasks/s through the sharded
-//! predict→decide→merge pipeline at 1 / 10 / 100 / 1000 devices.
+//! predict→decide→merge pipeline at 1 / 10 / 100 / 1000 / 10000 devices
+//! (100000 with `SKEDGE_BENCH_XL=1`; `SKEDGE_BENCH_QUICK=1` stops at
+//! 1000), plus a per-region vs global merge comparison and a memory
+//! high-water column.
 //!
 //! Workload generation is excluded from the timed region (it is a one-time
 //! setup cost in real sweeps too). Writes the measured baseline to
 //! `BENCH_fleet.json` at the repo root so later performance PRs have a
-//! trajectory to beat. Run: `cargo bench --bench fleet`.
+//! trajectory to beat. Set `SKEDGE_BENCH_BASELINE=path/to/BENCH_fleet.json`
+//! to compare against a saved baseline: any sweep size regressing more
+//! than 10% in tasks/s fails the bench. Run: `cargo bench --bench fleet`.
 
 use std::time::Instant;
 
 use skedge::benchkit::{black_box, section};
-use skedge::config::{default_artifact_dir, FleetSettings, Meta};
+use skedge::config::{default_artifact_dir, FleetSettings, MergeMode, Meta};
 use skedge::experiments::fleet_scaling::DEVICE_SWEEP;
 use skedge::fleet::{scenario, shard};
+use skedge::util::json::Json;
 
 const DURATION_MS: f64 = 10_000.0;
 const SHARDS: usize = 4;
+/// tasks/s may drop this fraction below a saved baseline before the
+/// bench fails (wall-clock noise floor on shared runners)
+const REGRESSION_TOLERANCE: f64 = 0.10;
+
+/// Peak resident set (MB) from `/proc/self/status`; `None` off Linux.
+fn vm_hwm_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+/// Best-effort reset of the peak-RSS counter so each sweep size reports
+/// its own high water rather than the cumulative process peak. Needs a
+/// writable `/proc/self/clear_refs`; silently a no-op elsewhere, in which
+/// case the column is monotonic across sizes (sizes ascend, so the
+/// largest — the one that matters — is still accurate).
+fn reset_vm_hwm() {
+    let _ = std::fs::write("/proc/self/clear_refs", "5");
+}
+
+struct SweepRow {
+    devices: usize,
+    tasks: usize,
+    secs: f64,
+    tasks_per_s: f64,
+    hwm_mb: Option<f64>,
+}
 
 fn main() -> anyhow::Result<()> {
     let meta = Meta::load(&default_artifact_dir())?;
+
+    let mut sweep: Vec<usize> = DEVICE_SWEEP.to_vec();
+    if std::env::var_os("SKEDGE_BENCH_QUICK").is_none() {
+        sweep.push(10_000);
+        if std::env::var_os("SKEDGE_BENCH_XL").is_some() {
+            sweep.push(100_000);
+        }
+    }
     section(&format!(
         "fleet throughput (diurnal ir/fd/stt mix, {:.0} virtual s, {SHARDS} shards)",
         DURATION_MS / 1e3
     ));
 
-    let mut rows = Vec::new();
+    let mut rows: Vec<SweepRow> = Vec::new();
     // harness self-profile of the final (largest) sweep run: per-shard
     // busy/wait split and coordinator merge time, emitted into the JSON
     let mut profile: Option<skedge::obs::RunProfile> = None;
-    for devices in DEVICE_SWEEP {
+    for &devices in &sweep {
         let fs = FleetSettings::new(devices)
             .with_duration_ms(DURATION_MS)
             .with_shards(SHARDS)
             .with_seed(2020);
         let inits = scenario::build_fleet(&meta, &fs)?;
         let n_tasks: usize = inits.iter().map(|d| d.tasks.len()).sum();
-        let runs = if devices >= 1000 { 2 } else { 4 };
+        let runs = match devices {
+            0..=999 => 4,
+            1000..=9_999 => 2,
+            _ => 1,
+        };
+        reset_vm_hwm();
         let mut per_run = Vec::with_capacity(runs);
         for _ in 0..runs {
             let inits = inits.clone();
@@ -49,23 +96,59 @@ fn main() -> anyhow::Result<()> {
         // practice for wall-clock throughput baselines)
         let secs = per_run[(per_run.len() - 1) / 2];
         let tasks_per_s = n_tasks as f64 / secs.max(1e-9);
+        let hwm_mb = vm_hwm_mb();
+        let mem = hwm_mb.map_or_else(|| "      n/a".into(), |m| format!("{m:>7.0} MB"));
         println!(
-            "{:>5} devices   {:>8} tasks   {:>10.3} s/run   {:>12.0} tasks/s",
+            "{:>6} devices   {:>9} tasks   {:>10.3} s/run   {:>12.0} tasks/s   {mem} peak",
             devices, n_tasks, secs, tasks_per_s
         );
-        rows.push((devices, n_tasks, tasks_per_s));
+        rows.push(SweepRow { devices, tasks: n_tasks, secs, tasks_per_s, hwm_mb });
     }
 
-    // retained vs streaming aggregation at the largest sweep size: the
-    // streaming fold keeps O(devices + sketch) state instead of every
-    // per-task record, so this isolates the cost/benefit of `--stream-metrics`
-    let devices = *DEVICE_SWEEP.last().unwrap();
+    // per-region vs global epoch-barrier merge at the 1000-device size:
+    // same seed and workload, so the delta isolates the coordinator's
+    // merge strategy (outcomes are pinned bitwise identical in
+    // rust/tests/fleet.rs)
+    section("merge strategy: per-region lanes vs single global worklist (1000 devices)");
+    let mut merge_rows = Vec::new();
+    for (label, mode) in [("per-region", MergeMode::PerRegion), ("global", MergeMode::Global)] {
+        let fs = FleetSettings::new(1000)
+            .with_duration_ms(DURATION_MS)
+            .with_shards(SHARDS)
+            .with_seed(2020)
+            .with_merge(mode);
+        let inits = scenario::build_fleet(&meta, &fs)?;
+        let n_tasks: usize = inits.iter().map(|d| d.tasks.len()).sum();
+        let mut best = f64::INFINITY;
+        let mut merge_s = 0.0;
+        for _ in 0..2 {
+            let inits = inits.clone();
+            let t0 = Instant::now();
+            let o = shard::run_fleet(&meta, inits, &fs)?;
+            let wall = t0.elapsed().as_secs_f64();
+            if wall < best {
+                best = wall;
+                merge_s = o.profile.merge_s;
+            }
+            black_box(o);
+        }
+        println!(
+            "{label:>10}   {:>9} tasks   {:>10.3} s/run   {:>8.3} s in merge",
+            n_tasks, best, merge_s
+        );
+        merge_rows.push((label, best, merge_s));
+    }
+
+    // retained vs streaming aggregation at 1000 devices: the streaming
+    // fold keeps O(devices + sketch) state instead of every per-task
+    // record, so this isolates the cost/benefit of `--stream-metrics`
+    let agg_devices = 1000usize;
     section(&format!(
-        "aggregation: retained records vs --stream-metrics ({devices} devices)"
+        "aggregation: retained records vs --stream-metrics ({agg_devices} devices)"
     ));
     let mut agg_rows = Vec::new();
     for (label, stream) in [("retained", false), ("streaming", true)] {
-        let fs = FleetSettings::new(devices)
+        let fs = FleetSettings::new(agg_devices)
             .with_duration_ms(DURATION_MS)
             .with_shards(SHARDS)
             .with_seed(2020)
@@ -83,7 +166,7 @@ fn main() -> anyhow::Result<()> {
         let secs = per_run[0];
         let tasks_per_s = n_tasks as f64 / secs.max(1e-9);
         println!(
-            "{label:>10}   {:>8} tasks   {:>10.3} s/run   {:>12.0} tasks/s",
+            "{label:>10}   {:>9} tasks   {:>10.3} s/run   {:>12.0} tasks/s",
             n_tasks, secs, tasks_per_s
         );
         agg_rows.push((label, n_tasks, tasks_per_s));
@@ -97,22 +180,41 @@ fn main() -> anyhow::Result<()> {
     json.push_str(&format!("  \"shards\": {SHARDS},\n"));
     json.push_str("  \"unit\": \"tasks_per_second\",\n");
     json.push_str("  \"results\": [\n");
-    for (i, (devices, tasks, tps)) in rows.iter().enumerate() {
+    for (i, r) in rows.iter().enumerate() {
         let comma = if i + 1 < rows.len() { "," } else { "" };
+        let mem = r.hwm_mb.map_or("null".into(), |m| format!("{m:.1}"));
         json.push_str(&format!(
-            "    {{\"devices\": {devices}, \"tasks\": {tasks}, \"tasks_per_s\": {tps:.1}}}{comma}\n"
+            "    {{\"devices\": {}, \"tasks\": {}, \"wall_s\": {:.3}, \"tasks_per_s\": {:.1}, \"peak_rss_mb\": {mem}}}{comma}\n",
+            r.devices, r.tasks, r.secs, r.tasks_per_s
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"merge\": [\n");
+    for (i, (label, wall, merge_s)) in merge_rows.iter().enumerate() {
+        let comma = if i + 1 < merge_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"mode\": \"{label}\", \"wall_s\": {wall:.3}, \"merge_s\": {merge_s:.3}}}{comma}\n"
         ));
     }
     json.push_str("  ],\n");
     if let Some(p) = &profile {
         println!();
         print!("{}", p.render());
-        json.push_str(&format!("  \"profile_devices\": {},\n", DEVICE_SWEEP.last().unwrap()));
+        json.push_str(&format!("  \"profile_devices\": {},\n", sweep.last().unwrap()));
         json.push_str("  \"profile\": {\n");
         json.push_str(&format!("    \"wall_s\": {:.3},\n", p.wall_s));
         json.push_str(&format!("    \"merge_s\": {:.3},\n", p.merge_s));
         json.push_str(&format!("    \"events_total\": {},\n", p.events_total()));
         json.push_str(&format!("    \"tasks_per_s\": {:.1},\n", p.tasks_per_s()));
+        json.push_str(&format!(
+            "    \"merge_regions_active\": {},\n",
+            p.merge_regions_active
+        ));
+        json.push_str(&format!(
+            "    \"merge_regions_contended\": {},\n",
+            p.merge_regions_contended
+        ));
+        json.push_str(&format!("    \"merge_interleaved\": {},\n", p.merge_interleaved));
         json.push_str("    \"shards\": [\n");
         for (i, s) in p.shards.iter().enumerate() {
             let comma = if i + 1 < p.shards.len() { "," } else { "" };
@@ -128,7 +230,7 @@ fn main() -> anyhow::Result<()> {
         json.push_str("    ]\n");
         json.push_str("  },\n");
     }
-    json.push_str(&format!("  \"aggregation_devices\": {devices},\n"));
+    json.push_str(&format!("  \"aggregation_devices\": {agg_devices},\n"));
     json.push_str("  \"aggregation\": [\n");
     for (i, (label, tasks, tps)) in agg_rows.iter().enumerate() {
         let comma = if i + 1 < agg_rows.len() { "," } else { "" };
@@ -140,5 +242,43 @@ fn main() -> anyhow::Result<()> {
     let path = format!("{}/../BENCH_fleet.json", env!("CARGO_MANIFEST_DIR"));
     std::fs::write(&path, json)?;
     println!("\nwrote {path}");
+
+    // saved-baseline gate: compare against a previous BENCH_fleet.json
+    // (the new results are already written above, so a failing run still
+    // leaves its numbers on disk for inspection)
+    if let Ok(baseline) = std::env::var("SKEDGE_BENCH_BASELINE") {
+        section(&format!("baseline comparison vs {baseline}"));
+        let base = Json::parse(&std::fs::read_to_string(&baseline)?)?;
+        let mut regressions = Vec::new();
+        for b in base.req("results").arr() {
+            let devices = b.req("devices").usize();
+            let base_tps = b.req("tasks_per_s").f64();
+            let Some(now) = rows.iter().find(|r| r.devices == devices) else {
+                println!("{devices:>6} devices   (not in this sweep, skipped)");
+                continue;
+            };
+            let ratio = now.tasks_per_s / base_tps.max(1e-9);
+            let verdict = if ratio < 1.0 - REGRESSION_TOLERANCE { "REGRESSED" } else { "ok" };
+            println!(
+                "{devices:>6} devices   {base_tps:>12.0} -> {:>12.0} tasks/s   ({:+.1}%)  {verdict}",
+                now.tasks_per_s,
+                (ratio - 1.0) * 100.0
+            );
+            if ratio < 1.0 - REGRESSION_TOLERANCE {
+                regressions.push((devices, ratio));
+            }
+        }
+        if !regressions.is_empty() {
+            anyhow::bail!(
+                "tasks/s regressed >{:.0}% vs {baseline} at {} sweep size(s): {:?}",
+                REGRESSION_TOLERANCE * 100.0,
+                regressions.len(),
+                regressions
+                    .iter()
+                    .map(|(d, r)| format!("{d} devices ({:+.1}%)", (r - 1.0) * 100.0))
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
     Ok(())
 }

@@ -116,6 +116,38 @@ impl FleetScenario {
     }
 }
 
+/// Epoch-barrier merge strategy (`--merge`). Both modes are bitwise
+/// identical for any shard count — the per-region lanes reproduce the
+/// global canonical `(time, device, seq)` order region by region (and
+/// globally when failover couples regions). Per-region is the default;
+/// global remains as the escape hatch / equivalence oracle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeMode {
+    /// partition the epoch worklist into index-keyed per-region lanes and
+    /// drain each lane independently (interleaving by global canonical
+    /// order only when failover can hop requests across regions)
+    PerRegion,
+    /// one global worklist sorted in canonical order (pre-PR-9 behavior)
+    Global,
+}
+
+impl MergeMode {
+    pub fn parse(s: &str) -> Result<MergeMode> {
+        match s {
+            "per-region" | "region" => Ok(MergeMode::PerRegion),
+            "global" => Ok(MergeMode::Global),
+            _ => bail!("unknown merge mode `{s}` (per-region | global)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MergeMode::PerRegion => "per-region",
+            MergeMode::Global => "global",
+        }
+    }
+}
+
 /// Settings for one fleet simulation.
 #[derive(Debug, Clone)]
 pub struct FleetSettings {
@@ -162,6 +194,9 @@ pub struct FleetSettings {
     pub metrics: bool,
     /// telemetry window length override (ms); None = the epoch length
     pub metrics_window_ms: Option<f64>,
+    /// epoch-barrier merge strategy (`--merge`); both modes are pinned
+    /// bitwise identical, per-region is the default
+    pub merge: MergeMode,
 }
 
 impl FleetSettings {
@@ -191,6 +226,7 @@ impl FleetSettings {
             replay_moves: None,
             metrics: false,
             metrics_window_ms: None,
+            merge: MergeMode::PerRegion,
         }
     }
 
@@ -238,6 +274,12 @@ impl FleetSettings {
     /// Override the telemetry window length (default: the epoch length).
     pub fn with_metrics_window_ms(mut self, w: f64) -> Self {
         self.metrics_window_ms = Some(w);
+        self
+    }
+
+    /// Select the epoch-barrier merge strategy (`--merge`).
+    pub fn with_merge(mut self, m: MergeMode) -> Self {
+        self.merge = m;
         self
     }
 
@@ -385,6 +427,17 @@ mod tests {
         assert_eq!(fs.app_mix.len(), 3, "mixed ir/fd/stt by default");
         assert!(fs.shards >= 1);
         assert_eq!(fs.feedback, FeedbackMode::Off, "feedback off by default");
+        assert_eq!(fs.merge, MergeMode::PerRegion, "per-region merge by default");
+    }
+
+    #[test]
+    fn merge_mode_parses() {
+        assert_eq!(MergeMode::parse("per-region").unwrap(), MergeMode::PerRegion);
+        assert_eq!(MergeMode::parse("region").unwrap(), MergeMode::PerRegion);
+        assert_eq!(MergeMode::parse("global").unwrap(), MergeMode::Global);
+        assert!(MergeMode::parse("nope").is_err());
+        assert_eq!(MergeMode::Global.label(), "global");
+        assert_eq!(MergeMode::PerRegion.label(), "per-region");
     }
 
     #[test]

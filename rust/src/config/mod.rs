@@ -10,7 +10,7 @@ mod fleet;
 mod region;
 mod settings;
 
-pub use fleet::{FleetScenario, FleetSettings};
+pub use fleet::{FleetScenario, FleetSettings, MergeMode};
 pub use region::{
     CilMode, MobilityEvent, OutageWindow, RegionSettings, ThrottlePolicy, TopologySpec,
 };

@@ -34,7 +34,7 @@ use crate::platform::greengrass::EdgeExecutor;
 use crate::platform::lambda::{CloudExecution, CloudPlatform};
 use crate::platform::latency::GroundTruthSampler;
 use crate::platform::pricing::aws_pricing;
-use crate::predictor::{Backend, Placement, Predictor};
+use crate::predictor::{Backend, Placement, Prediction, Predictor};
 use crate::region::DeviceRouter;
 use crate::workload::Task;
 
@@ -267,6 +267,9 @@ pub struct Device<'a> {
     /// buffered device-side events of the current epoch — the runner
     /// drains these (`std::mem::take`) into its `Recorder` at each barrier
     pub events: Vec<TaskEvent>,
+    /// reusable per-arrival prediction buffer (`assemble_into` target):
+    /// keeps the steady-state ingest path free of heap allocation
+    pred_scratch: Prediction,
 }
 
 impl<'a> Device<'a> {
@@ -343,6 +346,7 @@ impl<'a> Device<'a> {
             failover,
             recording: false,
             events: Vec::new(),
+            pred_scratch: Prediction::default(),
         })
     }
 
@@ -372,9 +376,11 @@ impl<'a> Device<'a> {
                 self.events.push(TaskEvent::DeviceMove { t_ms: at_ms, device: self.profile.id, to });
             }
         }
-        let pred = self.router.assemble(&self.predictor, raw, now);
-        let decision = self.engine.decide(&pred, self.edge.predicted_wait(now));
-        self.router.note_placement(decision.placement, &pred, now);
+        self.router
+            .assemble_into(&self.predictor, raw, now, &mut self.pred_scratch);
+        let pred = &self.pred_scratch;
+        let decision = self.engine.decide(pred, self.edge.predicted_wait(now));
+        self.router.note_placement(decision.placement, pred, now);
         let fields = DecisionFields {
             predicted_e2e_ms: decision.predicted_e2e_ms,
             predicted_cost: decision.predicted_cost,
@@ -473,7 +479,7 @@ impl<'a> Device<'a> {
                 // CIL; its tag is the feedback correlation handle
                 let belief_tag = self.router.last_update_tag(region);
                 let alternates = if self.failover {
-                    self.build_alternates(&pred, a, region, decision.allowed_cost)
+                    self.build_alternates(pred, a, region, decision.allowed_cost)
                 } else {
                     Vec::new()
                 };
@@ -592,6 +598,18 @@ impl<'a> Device<'a> {
             self.router
                 .observe(obs.region, obs.j, obs.tag, obs.trigger_ms, obs.busy_ms, obs.warm);
         }
+    }
+
+    /// Pre-size every growable buffer this device touches on the
+    /// steady-state ingest path — the prediction scratch (sized by one
+    /// throwaway assemble of `shaped`, a raw prediction with the right
+    /// config count) and the working-CIL belief lists, which grow by at
+    /// most one entry per placement — so later arrivals allocate nothing
+    /// (see `rust/tests/alloc.rs`). Assembly is read-only on router and
+    /// predictor state, so outcomes are bitwise unaffected.
+    pub fn prewarm(&mut self, n_tasks: usize, shaped: &RawPrediction) {
+        self.router.reserve_beliefs(n_tasks);
+        self.router.assemble_into(&self.predictor, shaped, 0.0, &mut self.pred_scratch);
     }
 }
 

@@ -34,19 +34,37 @@ impl DeviceSummary {
         deadline_ms: f64,
         records: &[TaskRecord],
     ) -> DeviceSummary {
-        let served: Vec<&TaskRecord> = records.iter().filter(|r| r.is_served()).collect();
-        let e2e: Vec<f64> = served.iter().map(|r| r.actual_e2e_ms).collect();
-        let violations = served.iter().filter(|r| r.actual_e2e_ms > deadline_ms).count();
+        // one pass over the records: only the e2e sample the percentile
+        // assembly needs is materialized (the cost sum keeps record order,
+        // so totals stay bitwise identical to the old multi-pass build)
+        let mut e2e: Vec<f64> = Vec::with_capacity(records.len());
+        let mut edge_count = 0usize;
+        let mut violations = 0usize;
+        let mut actual_cost = 0.0f64;
+        for r in records {
+            if !r.is_served() {
+                continue;
+            }
+            if r.is_edge() {
+                edge_count += 1;
+            }
+            if r.actual_e2e_ms > deadline_ms {
+                violations += 1;
+            }
+            actual_cost += r.actual_cost;
+            e2e.push(r.actual_e2e_ms);
+        }
+        let served = e2e.len();
         DeviceSummary {
             device,
             app: app.to_string(),
             n: records.len(),
-            edge_count: served.iter().filter(|r| r.is_edge()).count(),
-            cloud_count: served.iter().filter(|r| !r.is_edge()).count(),
-            rejected: records.len() - served.len(),
+            edge_count,
+            cloud_count: served - edge_count,
+            rejected: records.len() - served,
             latency: latency_percentiles(&e2e),
-            deadline_violation_pct: violations as f64 / served.len().max(1) as f64 * 100.0,
-            actual_cost: served.iter().map(|r| r.actual_cost).sum(),
+            deadline_violation_pct: violations as f64 / served.max(1) as f64 * 100.0,
+            actual_cost,
         }
     }
 }

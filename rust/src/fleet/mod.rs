@@ -49,6 +49,7 @@ pub use device::{
 };
 pub use metrics::{DeviceSummary, FleetSummary, LatencyPercentiles, RegionBreakdown};
 pub use scenario::{DeviceInit, DeviceRegionInit};
+pub use shard::{EpochOutput, ShardCore};
 
 /// Result of one fleet run.
 pub struct FleetOutcome {

@@ -27,6 +27,21 @@
 //! deterministic as the merge itself (pinned in
 //! `rust/tests/resilience.rs`).
 //!
+//! ## Per-region merge lanes
+//!
+//! The canonical order is only ever *consumed* per serving region: one
+//! admission attempt touches its region's pools/gate/hub plus
+//! order-invariant sinks (keyed record slots, the final-sorted event
+//! stream, `ExactSum`-backed streaming/telemetry folds, max-folds). The
+//! default `--merge per-region` therefore keeps one pending lane per
+//! region and drains each lane in its own canonical order — with
+//! failover on, lanes are interleaved by global attempt order, since a
+//! denial hops items between lanes. Either way the run is bitwise
+//! identical to the single global worklist (`--merge global`) for any
+//! shard count (pinned in `rust/tests/fleet.rs` and
+//! `rust/tests/resilience.rs`), and the coordinator only pays sort cost
+//! where work actually landed. See [`MergeState`].
+//!
 //! ## Hub-CIL epochs
 //!
 //! In hub mode the coordinator additionally absorbs every new request's
@@ -47,7 +62,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{CilMode, FeedbackMode, FleetSettings, Meta, PredictorBackendKind};
+use crate::config::{CilMode, FeedbackMode, FleetSettings, MergeMode, Meta, PredictorBackendKind};
 use crate::metrics::TaskRecord;
 use crate::models::{NativeModels, RawPrediction};
 use crate::predictor::cil::Cil;
@@ -72,10 +87,13 @@ use super::FleetOutcome;
 /// One barrier command: step to `epoch_end`, optionally adopting fresh
 /// hub-CIL snapshots first (hub mode only), then folding in the realized
 /// outcomes of this shard's devices merged last epoch (feedback mode only).
+/// Carries a recycled [`EpochOutput`] so steady-state epochs reuse the
+/// previous round's buffers instead of allocating fresh ones.
 struct EpochCmd {
     epoch_end: f64,
     hub: Option<Arc<Vec<Cil>>>,
     obs: Vec<CloudObservation>,
+    out: EpochOutput,
 }
 
 /// Immutable scoring backends shared by every device requesting the same
@@ -119,36 +137,86 @@ fn build_bank(meta: &Meta, inits: &[DeviceInit]) -> Result<ModelBank> {
     Ok(bank)
 }
 
-/// One device plus its run state inside a shard.
+/// One device plus its run state inside a shard. Hot per-epoch scalars
+/// live in [`DeviceLanes`] instead — the epoch loops scan those
+/// contiguously rather than striding through these cold structs.
 struct DeviceRun<'a> {
     device: Device<'a>,
     tasks: Vec<crate::workload::Task>,
     queue: EventQueue,
-    arrivals_left: usize,
     /// epoch-batched raw predictions, indexed by task id
     raw_cache: Vec<Option<RawPrediction>>,
+}
+
+/// Hot per-device scalars in struct-of-arrays layout, one entry per
+/// [`DeviceRun`] at the same index.
+#[derive(Default)]
+struct DeviceLanes {
+    /// arrivals not yet ingested
+    arrivals_left: Vec<usize>,
     /// next task not yet batch-scored (tasks are arrival-sorted)
-    next_unscored: usize,
-    /// whether this device scores through the shared batched path
-    batched: bool,
-    /// effective deadline δ — the streaming fold counts per-device
-    /// deadline violations shard-side
-    deadline_ms: f64,
+    next_unscored: Vec<usize>,
+    /// effective deadline δ — the streaming/telemetry folds count
+    /// per-device deadline violations shard-side
+    deadline_ms: Vec<f64>,
     /// index into the telemetry app table (0 when telemetry is off)
-    app_idx: usize,
+    app_idx: Vec<usize>,
+    /// slot into the shard's slot-ordered backend bank (`usize::MAX` for
+    /// devices scoring per-task outside the batched path)
+    bank_slot: Vec<usize>,
+}
+
+/// Reusable per-shard scoring buffers: cleared (capacity retained) every
+/// epoch, so steady-state bulk scoring performs zero heap allocation
+/// (asserted by `rust/tests/alloc.rs` after [`ShardCore::prewarm`]).
+struct EpochScratch {
+    /// per-bank-slot input sizes accumulated this epoch
+    group_sizes: Vec<Vec<f64>>,
+    /// per-bank-slot (run index, task id) targets matching `group_sizes`
+    group_slots: Vec<Vec<(usize, usize)>>,
+    /// free-list of raw-prediction buffers: popped by the native bulk
+    /// scorer, refilled by the stepper once each arrival is ingested
+    raw_pool: Vec<RawPrediction>,
+    /// f32 forest scratch for the native `predict_into` path
+    f32_scratch: Vec<f32>,
+}
+
+impl EpochScratch {
+    fn new(n_slots: usize) -> EpochScratch {
+        EpochScratch {
+            group_sizes: (0..n_slots).map(|_| Vec::new()).collect(),
+            group_slots: (0..n_slots).map(|_| Vec::new()).collect(),
+            raw_pool: Vec::new(),
+            f32_scratch: Vec::new(),
+        }
+    }
 }
 
 impl<'a> DeviceRun<'a> {
     /// Step this device's event queue up to (exclusive) `epoch_end`.
-    fn step_until(&mut self, epoch_end: f64, out: &mut EpochOutput) -> Result<()> {
+    /// Consumed raw predictions return to `raw_pool` for the next epoch's
+    /// bulk scorer.
+    fn step_until(
+        &mut self,
+        epoch_end: f64,
+        out: &mut EpochOutput,
+        arrivals_left: &mut usize,
+        deadline_ms: f64,
+        app_idx: usize,
+        raw_pool: &mut Vec<RawPrediction>,
+    ) -> Result<()> {
         while let Some((now, ev)) = self.queue.pop_if_before(epoch_end) {
             out.last_event_ms = out.last_event_ms.max(now);
             out.events_popped += 1;
             match ev {
                 Event::Arrival { id } => {
-                    self.arrivals_left -= 1;
+                    *arrivals_left -= 1;
                     let dispatch = match self.raw_cache[id].take() {
-                        Some(raw) => self.device.ingest_raw(&self.tasks[id], now, &raw)?,
+                        Some(raw) => {
+                            let d = self.device.ingest_raw(&self.tasks[id], now, &raw)?;
+                            raw_pool.push(raw);
+                            d
+                        }
                         None => self.device.ingest(&self.tasks[id], now)?,
                     };
                     match dispatch {
@@ -160,12 +228,12 @@ impl<'a> DeviceRun<'a> {
                             // coordinator-side in `Collector::put`, so no
                             // record is ever counted twice
                             if let Some(t) = &mut out.telemetry {
-                                t.fold(&e.record, self.app_idx, self.deadline_ms);
+                                t.fold(&e.record, app_idx, deadline_ms);
                             }
                             // streaming mode folds the record here and
                             // drops it — the shard never retains records
                             match &mut out.stream {
-                                Some(s) => s.fold(&e.record, self.deadline_ms),
+                                Some(s) => s.fold(&e.record, deadline_ms),
                                 None => {
                                     out.edge_records.push((self.device.profile.id, e.record))
                                 }
@@ -186,8 +254,12 @@ impl<'a> DeviceRun<'a> {
     }
 }
 
-/// What one shard reports back at an epoch barrier.
-struct EpochOutput {
+/// What one shard reports back at an epoch barrier. Recycled between
+/// epochs: the coordinator drains it, [`clear`](EpochOutput::clear)s it
+/// (capacity retained), re-[`arm`](EpochOutput::arm)s the fold sinks, and
+/// ships it back with the next [`EpochCmd`].
+#[derive(Default)]
+pub struct EpochOutput {
     edge_records: Vec<(usize, TaskRecord)>,
     requests: Vec<CloudRequest>,
     arrivals_left: usize,
@@ -212,68 +284,124 @@ struct EpochOutput {
 impl EpochOutput {
     /// `stream_dims` is `Some((n_regions, n_configs))` in streaming mode.
     fn new(stream_dims: Option<(usize, usize)>, telem: Option<&TelemetryCfg>) -> Self {
-        EpochOutput {
-            edge_records: Vec::new(),
-            requests: Vec::new(),
-            arrivals_left: 0,
-            events_left: 0,
-            peak_edge_queue: 0,
-            last_event_ms: 0.0,
-            events: Vec::new(),
-            stream: stream_dims.map(|(r, c)| Box::new(StreamingSummary::new(r, c))),
-            telemetry: telem.map(|c| Box::new(c.new_telemetry())),
-            events_popped: 0,
-            profile: None,
-        }
+        let mut out = EpochOutput::default();
+        out.arm(stream_dims, telem);
+        out
+    }
+
+    /// Arm the per-epoch fold sinks (the coordinator takes them while
+    /// draining, so a recycled output needs fresh ones each round).
+    fn arm(&mut self, stream_dims: Option<(usize, usize)>, telem: Option<&TelemetryCfg>) {
+        self.stream = stream_dims.map(|(r, c)| Box::new(StreamingSummary::new(r, c)));
+        self.telemetry = telem.map(|c| Box::new(c.new_telemetry()));
+    }
+
+    /// Reset for reuse, retaining buffer capacities.
+    pub fn clear(&mut self) {
+        self.edge_records.clear();
+        self.requests.clear();
+        self.arrivals_left = 0;
+        self.events_left = 0;
+        self.peak_edge_queue = 0;
+        self.last_event_ms = 0.0;
+        self.events.clear();
+        self.stream = None;
+        self.telemetry = None;
+        self.events_popped = 0;
+        self.profile = None;
+    }
+
+    /// Pre-size the result buffers to the per-epoch upper bound (`n_tasks`
+    /// across the shard) so steady-state epochs never regrow them.
+    pub fn reserve(&mut self, n_tasks: usize) {
+        self.edge_records.reserve(n_tasks);
+        self.requests.reserve(n_tasks);
+    }
+
+    /// Arrivals still queued across the shard after the last epoch.
+    pub fn arrivals_left(&self) -> usize {
+        self.arrivals_left
+    }
+
+    /// Cloud requests this epoch handed to the coordinator merge.
+    pub fn n_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Edge records this epoch retained for the collector.
+    pub fn n_edge_records(&self) -> usize {
+        self.edge_records.len()
     }
 }
 
 /// Batch-score this epoch's arrivals across all of a shard's devices,
-/// grouped per app, through the shared backend's [`Backend::raw_batch`].
-/// For native banks this amortizes grouping/dispatch over the shared
-/// mirror; for XLA banks the group is chunked through the compiled b64
-/// artifact (falling back to b1 inside the engine when no bulk artifact
-/// was built). Raw predictions are pure functions of input size, so the
-/// path is outcome-identical to per-task scoring (pinned by
-/// `ingest_raw_matches_per_task_scoring` and the batched-fleet tests).
+/// grouped per bank slot (one slot per distinct (app, backend kind)).
+/// Native slots run allocation-free: each task scores through
+/// [`NativeModels::predict_into`] into a pooled [`RawPrediction`] buffer
+/// recycled from earlier epochs. Other backends fall back to
+/// [`Backend::raw_batch`] (XLA groups chunk through the compiled b64
+/// artifact, which allocates its result vectors). Raw predictions are
+/// pure functions of input size, so both paths are outcome-identical to
+/// per-task scoring (pinned by `ingest_raw_matches_per_task_scoring` and
+/// the batched-fleet tests).
 fn score_epoch(
     runs: &mut [DeviceRun],
-    bank: &ModelBank,
+    lanes: &mut DeviceLanes,
+    bank_slots: &[Arc<Backend>],
+    scratch: &mut EpochScratch,
     epoch_end: f64,
     prof: &mut ShardProfile,
 ) -> Result<()> {
-    type Group = (Vec<f64>, Vec<(usize, usize)>);
-    let mut groups: BTreeMap<(String, PredictorBackendKind), Group> = BTreeMap::new();
-    for (ri, run) in runs.iter_mut().enumerate() {
-        if !run.batched || run.next_unscored >= run.tasks.len() {
+    for sizes in &mut scratch.group_sizes {
+        sizes.clear();
+    }
+    for slots in &mut scratch.group_slots {
+        slots.clear();
+    }
+    for (ri, run) in runs.iter().enumerate() {
+        let slot = lanes.bank_slot[ri];
+        if slot == usize::MAX {
             continue;
         }
-        // a batched run's shared backend came from the bank, so its kind
-        // recovers the bank key exactly
-        let key = (
-            run.device.profile.app.clone(),
-            run.device.predictor.backend().kind(),
-        );
-        let entry = groups.entry(key).or_default();
-        while run.next_unscored < run.tasks.len()
-            && run.tasks[run.next_unscored].arrive_ms < epoch_end
-        {
-            let t = &run.tasks[run.next_unscored];
-            entry.0.push(t.actuals.size);
-            entry.1.push((ri, t.id));
-            run.next_unscored += 1;
+        let mut next = lanes.next_unscored[ri];
+        while next < run.tasks.len() && run.tasks[next].arrive_ms < epoch_end {
+            let t = &run.tasks[next];
+            scratch.group_sizes[slot].push(t.actuals.size);
+            scratch.group_slots[slot].push((ri, t.id));
+            next += 1;
         }
+        lanes.next_unscored[ri] = next;
     }
-    for (key, (sizes, slots)) in groups {
-        let Some(backend) = bank.get(&key) else { continue };
+    for slot in 0..bank_slots.len() {
+        if scratch.group_sizes[slot].is_empty() {
+            continue;
+        }
+        let sizes = &scratch.group_sizes[slot];
         prof.scored_batches += 1;
         prof.scored_tasks += sizes.len() as u64;
         prof.max_batch = prof.max_batch.max(sizes.len() as u64);
-        let raws = backend.raw_batch(&sizes).with_context(|| {
-            format!("bulk-scoring {} arrivals for app `{}`", sizes.len(), key.0)
-        })?;
-        for (raw, (ri, tid)) in raws.into_iter().zip(slots) {
-            runs[ri].raw_cache[tid] = Some(raw);
+        match bank_slots[slot].as_ref() {
+            Backend::Native(nm) => {
+                for (&size, &(ri, tid)) in sizes.iter().zip(&scratch.group_slots[slot]) {
+                    let mut raw = match scratch.raw_pool.pop() {
+                        Some(raw) => {
+                            prof.raw_reused += 1;
+                            raw
+                        }
+                        None => RawPrediction::default(),
+                    };
+                    nm.predict_into(size, &mut raw, &mut scratch.f32_scratch);
+                    runs[ri].raw_cache[tid] = Some(raw);
+                }
+            }
+            backend => {
+                let raws = backend.raw_batch(sizes).with_context(|| {
+                    format!("bulk-scoring {} arrivals through bank slot {slot}", sizes.len())
+                })?;
+                for (raw, &(ri, tid)) in raws.into_iter().zip(&scratch.group_slots[slot]) {
+                    runs[ri].raw_cache[tid] = Some(raw);
+                }
+            }
         }
     }
     Ok(())
@@ -281,13 +409,14 @@ fn score_epoch(
 
 /// Instantiate one device's run state: router from its region init, the
 /// app's shared model instance when available, and the arrival queue.
+/// Returns the run plus its hot lane scalars (arrivals left, deadline).
 fn build_run<'a>(
     meta: &'a Meta,
     topo: &Arc<ResolvedTopology>,
     mode: CilMode,
     bank: &ModelBank,
     init: DeviceInit,
-) -> Result<DeviceRun<'a>> {
+) -> Result<(DeviceRun<'a>, usize, f64)> {
     let tidl = init.settings.tidl_belief_ms.unwrap_or(meta.tidl_mean_ms);
     let router = DeviceRouter::new(
         topo.clone(),
@@ -300,7 +429,6 @@ fn build_run<'a>(
     let shared = bank
         .get(&(init.profile.app.clone(), init.settings.backend))
         .cloned();
-    let batched = shared.is_some();
     let deadline_ms = init
         .settings
         .deadline_ms
@@ -310,24 +438,220 @@ fn build_run<'a>(
     for t in &init.tasks {
         queue.schedule(t.arrive_ms, Event::Arrival { id: t.id });
     }
+    // headroom for the two completion events an edge placement schedules
+    // per popped arrival (the live set is at most arrivals + 2×in-flight,
+    // bounded by 2n) — steady-state stepping then never regrows the heap
+    queue.reserve(init.tasks.len());
     let arrivals_left = init.tasks.len();
     let raw_cache = vec![None; init.tasks.len()];
-    Ok(DeviceRun {
-        device,
-        tasks: init.tasks,
-        queue,
-        arrivals_left,
-        raw_cache,
-        next_unscored: 0,
-        batched,
-        deadline_ms,
-        app_idx: 0,
-    })
+    Ok((DeviceRun { device, tasks: init.tasks, queue, raw_cache }, arrivals_left, deadline_ms))
 }
 
-/// Worker body: build this shard's devices, then serve epoch commands until
-/// the command channel closes. Errors are reported through the result
-/// channel; the worker never panics on expected failure modes.
+/// The single-shard epoch engine: devices, their hot lanes, the
+/// slot-ordered backend bank, and the reusable scoring scratch. Extracted
+/// from the worker thread body so tests and benches — notably the
+/// allocation harness in `rust/tests/alloc.rs` — can drive shard epochs
+/// directly, without threads or channels.
+pub struct ShardCore<'a> {
+    runs: Vec<DeviceRun<'a>>,
+    /// hot per-device scalars, struct-of-arrays (indexed like `runs`)
+    lanes: DeviceLanes,
+    /// bank backends in `ModelBank` (BTreeMap) iteration order;
+    /// `DeviceLanes::bank_slot` indexes into this
+    bank_slots: Vec<Arc<Backend>>,
+    /// device id → local run index, for routing observations back
+    idx: BTreeMap<usize, usize>,
+    scratch: EpochScratch,
+    record: bool,
+    n_configs: usize,
+    stream_dims: Option<(usize, usize)>,
+    telem: Option<Arc<TelemetryCfg>>,
+    /// cumulative self-profile; wall times are observational only and
+    /// never enter any outcome or fingerprint
+    prof: ShardProfile,
+}
+
+impl<'a> ShardCore<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        meta: &'a Meta,
+        topo: &Arc<ResolvedTopology>,
+        mode: CilMode,
+        bank: &ModelBank,
+        inits: Vec<DeviceInit>,
+        record: bool,
+        stream_dims: Option<(usize, usize)>,
+        shard_idx: usize,
+        telem: Option<Arc<TelemetryCfg>>,
+    ) -> Result<ShardCore<'a>> {
+        let bank_slots: Vec<Arc<Backend>> = bank.values().cloned().collect();
+        let mut runs = Vec::with_capacity(inits.len());
+        let mut lanes = DeviceLanes::default();
+        for init in inits {
+            let dev_id = init.profile.id;
+            let key = (init.profile.app.clone(), init.settings.backend);
+            let bank_slot = bank.keys().position(|k| *k == key).unwrap_or(usize::MAX);
+            let app_idx = telem
+                .as_ref()
+                .and_then(|cfg| cfg.app_idx.get(dev_id).copied())
+                .unwrap_or(0);
+            let (mut run, arrivals_left, deadline_ms) = build_run(meta, topo, mode, bank, init)
+                .with_context(|| format!("building device {dev_id}"))?;
+            run.device.recording = record;
+            lanes.arrivals_left.push(arrivals_left);
+            lanes.next_unscored.push(0);
+            lanes.deadline_ms.push(deadline_ms);
+            lanes.app_idx.push(app_idx);
+            lanes.bank_slot.push(bank_slot);
+            runs.push(run);
+        }
+        let idx: BTreeMap<usize, usize> = runs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.device.profile.id, i))
+            .collect();
+        let scratch = EpochScratch::new(bank_slots.len());
+        Ok(ShardCore {
+            runs,
+            lanes,
+            bank_slots,
+            idx,
+            scratch,
+            record,
+            n_configs: meta.memory_configs_mb.len(),
+            stream_dims,
+            telem,
+            prof: ShardProfile { shard: shard_idx, ..Default::default() },
+        })
+    }
+
+    /// Build a one-shard core straight from fleet settings — the entry
+    /// point for harnesses that drive epochs directly (no threads, no
+    /// channels, no collector). Respects the settings' topology, CIL mode,
+    /// backend kinds, and recording flag; streaming/telemetry sinks are
+    /// armed per-output via [`ShardCore::new_output`].
+    pub fn from_settings(
+        meta: &'a Meta,
+        inits: Vec<DeviceInit>,
+        fs: &FleetSettings,
+    ) -> Result<ShardCore<'a>> {
+        let n_configs = meta.memory_configs_mb.len();
+        let resolved = Arc::new(ResolvedTopology::from_settings(fs, n_configs)?);
+        let mode = fs.topology.as_ref().map(|t| t.cil_mode).unwrap_or(CilMode::Private);
+        let bank = build_bank(meta, &inits)?;
+        Self::build(meta, &resolved, mode, &bank, inits, fs.record_events, None, 0, None)
+    }
+
+    /// A fresh epoch output with this core's fold sinks armed.
+    pub fn new_output(&self) -> EpochOutput {
+        EpochOutput::new(self.stream_dims, self.telem.as_deref())
+    }
+
+    /// Arrivals not yet ingested across the whole shard.
+    pub fn arrivals_left(&self) -> usize {
+        self.lanes.arrivals_left.iter().sum()
+    }
+
+    /// Pre-size every buffer the steady-state epoch path grows into —
+    /// scoring scratch, the raw-prediction pool, per-device prediction
+    /// scratch, belief lists, and `out`'s result buffers — so subsequent
+    /// epochs perform zero heap allocation (asserted by
+    /// `rust/tests/alloc.rs`). Purely an allocation warm-up: no simulation
+    /// state changes, so outcomes are bitwise unaffected.
+    pub fn prewarm(&mut self, out: &mut EpochOutput) {
+        let total: usize = self.runs.iter().map(|r| r.tasks.len()).sum();
+        for sizes in &mut self.scratch.group_sizes {
+            sizes.reserve(total);
+        }
+        for slots in &mut self.scratch.group_slots {
+            slots.reserve(total);
+        }
+        self.scratch.f32_scratch.reserve(self.n_configs);
+        while self.scratch.raw_pool.len() < total {
+            let mut raw = RawPrediction::default();
+            raw.comp_cloud_ms.reserve(self.n_configs);
+            raw.cost_cloud.reserve(self.n_configs);
+            self.scratch.raw_pool.push(raw);
+        }
+        // a correctly-shaped throwaway raw lets each device size its
+        // prediction scratch before its first real arrival
+        let shaped = RawPrediction {
+            upld_ms: 1.0,
+            comp_edge_ms: 1.0,
+            comp_cloud_ms: vec![1.0; self.n_configs],
+            cost_cloud: vec![0.0; self.n_configs],
+        };
+        for run in &mut self.runs {
+            let n = run.tasks.len();
+            run.device.prewarm(n, &shaped);
+        }
+        out.reserve(total);
+    }
+
+    /// One epoch: adopt hub snapshots, deliver realized outcomes, bulk-
+    /// score this epoch's arrivals, then step every device to `epoch_end`,
+    /// folding results into `out`. The caller passes a cleared (or fresh)
+    /// output; cleared buffers retain capacity, so steady-state epochs
+    /// allocate nothing after [`ShardCore::prewarm`].
+    pub fn run_epoch(
+        &mut self,
+        epoch_end: f64,
+        hub: Option<&[Cil]>,
+        obs: &[CloudObservation],
+        out: &mut EpochOutput,
+    ) -> Result<()> {
+        let busy_t = Stopwatch::start();
+        let popped_before = out.events_popped;
+        if let Some(hub) = hub {
+            for run in &mut self.runs {
+                run.device.router.refresh_from_hub(hub);
+            }
+        }
+        // realized outcomes land after any snapshot adoption: observations
+        // are fresher ground truth than the broadcast beliefs
+        for ob in obs {
+            if let Some(&ri) = self.idx.get(&ob.device_id) {
+                self.runs[ri].device.observe_cloud(ob);
+            }
+        }
+        score_epoch(
+            &mut self.runs,
+            &mut self.lanes,
+            &self.bank_slots,
+            &mut self.scratch,
+            epoch_end,
+            &mut self.prof,
+        )
+        .context("epoch bulk scoring")?;
+        for (ri, run) in self.runs.iter_mut().enumerate() {
+            run.step_until(
+                epoch_end,
+                out,
+                &mut self.lanes.arrivals_left[ri],
+                self.lanes.deadline_ms[ri],
+                self.lanes.app_idx[ri],
+                &mut self.scratch.raw_pool,
+            )
+            .with_context(|| format!("device {}", run.device.profile.id))?;
+            if self.record {
+                out.events.append(&mut run.device.events);
+            }
+        }
+        out.arrivals_left = self.lanes.arrivals_left.iter().sum();
+        out.events_left = self.runs.iter().map(|r| r.queue.len()).sum();
+        out.peak_edge_queue =
+            self.runs.iter().map(|r| r.device.peak_edge_queue).max().unwrap_or(0);
+        self.prof.epochs += 1;
+        self.prof.events += out.events_popped - popped_before;
+        self.prof.busy_s += busy_t.elapsed_s();
+        out.profile = Some(self.prof);
+        Ok(())
+    }
+}
+
+/// Worker body: build this shard's [`ShardCore`], then serve epoch
+/// commands until the command channel closes. Errors are reported through
+/// the result channel; the worker never panics on expected failure modes.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     meta: &Meta,
@@ -342,75 +666,28 @@ fn worker_loop(
     shard_idx: usize,
     telem: Option<Arc<TelemetryCfg>>,
 ) {
-    let mut runs: Vec<DeviceRun> = Vec::with_capacity(inits.len());
-    for init in inits {
-        let dev_id = init.profile.id;
-        match build_run(meta, &topo, mode, &bank, init) {
-            Ok(mut run) => {
-                run.device.recording = record;
-                if let Some(cfg) = &telem {
-                    run.app_idx = cfg.app_idx.get(dev_id).copied().unwrap_or(0);
-                }
-                runs.push(run);
-            }
-            Err(e) => {
-                let _ = results.send(Err(format!("building device {dev_id}: {e:#}")));
-                return;
-            }
+    let mut core = match ShardCore::build(
+        meta, &topo, mode, &bank, inits, record, stream_dims, shard_idx, telem,
+    ) {
+        Ok(core) => core,
+        Err(e) => {
+            let _ = results.send(Err(format!("{e:#}")));
+            return;
         }
-    }
-    // device id → local index, for routing observations back
-    let idx: BTreeMap<usize, usize> = runs
-        .iter()
-        .enumerate()
-        .map(|(i, r)| (r.device.profile.id, i))
-        .collect();
-    // cumulative self-profile; wall times are observational only and never
-    // enter any outcome or fingerprint
-    let mut prof = ShardProfile { shard: shard_idx, ..Default::default() };
+    };
     loop {
         let wait_t = Stopwatch::start();
         let cmd = match commands.recv() {
             Ok(cmd) => cmd,
             Err(_) => return, // command channel closed: run over
         };
-        prof.wait_s += wait_t.elapsed_s();
-        let busy_t = Stopwatch::start();
-        if let Some(hub) = &cmd.hub {
-            for run in &mut runs {
-                run.device.router.refresh_from_hub(hub);
-            }
-        }
-        // realized outcomes land after any snapshot adoption: observations
-        // are fresher ground truth than the broadcast beliefs
-        for ob in &cmd.obs {
-            if let Some(&ri) = idx.get(&ob.device_id) {
-                runs[ri].device.observe_cloud(ob);
-            }
-        }
-        if let Err(e) = score_epoch(&mut runs, &bank, cmd.epoch_end, &mut prof) {
-            let _ = results.send(Err(format!("epoch bulk scoring: {e:#}")));
+        core.prof.wait_s += wait_t.elapsed_s();
+        let mut out = cmd.out;
+        let hub = cmd.hub.as_deref().map(Vec::as_slice);
+        if let Err(e) = core.run_epoch(cmd.epoch_end, hub, &cmd.obs, &mut out) {
+            let _ = results.send(Err(format!("{e:#}")));
             return;
         }
-        let mut out = EpochOutput::new(stream_dims, telem.as_deref());
-        for run in &mut runs {
-            if let Err(e) = run.step_until(cmd.epoch_end, &mut out) {
-                let _ = results
-                    .send(Err(format!("device {}: {e:#}", run.device.profile.id)));
-                return;
-            }
-            if record {
-                out.events.append(&mut run.device.events);
-            }
-        }
-        out.arrivals_left = runs.iter().map(|r| r.arrivals_left).sum();
-        out.events_left = runs.iter().map(|r| r.queue.len()).sum();
-        out.peak_edge_queue =
-            runs.iter().map(|r| r.device.peak_edge_queue).max().unwrap_or(0);
-        prof.epochs += 1;
-        prof.events += out.events_popped;
-        prof.busy_s += busy_t.elapsed_s();
-        out.profile = Some(prof);
         if results.send(Ok(out)).is_err() {
             return; // coordinator gone
         }
@@ -467,10 +744,21 @@ fn req_meta(apps: &[String], req: &CloudRequest, t_ms: f64) -> EventMeta {
     EventMeta::new(t_ms, req.device_id, &apps[req.device_id], req.seq, req.task_id)
 }
 
+/// Coordinator-side reusable barrier buffers, refilled every epoch so the
+/// barrier loop does no steady-state allocation of its own: observation
+/// partitions by shard, and a spare pool of drained [`EpochOutput`]s
+/// recycled back to the workers.
+#[derive(Default)]
+struct BarrierScratch {
+    obs_parts: Vec<Vec<CloudObservation>>,
+    spare_outs: Vec<EpochOutput>,
+}
+
 /// One barrier round: command every shard to step to `epoch_end` (shipping
-/// the hub snapshots and last epoch's realized outcomes along), then
-/// collect edge records and this epoch's fresh cloud requests from all of
-/// them. Returns (arrivals still queued, total events still queued).
+/// the hub snapshots, last epoch's realized outcomes, and a recycled
+/// output buffer along), then collect edge records and this epoch's fresh
+/// cloud requests from all of them. Returns (arrivals still queued, total
+/// events still queued).
 #[allow(clippy::too_many_arguments)]
 fn barrier(
     cmd_txs: &[Sender<EpochCmd>],
@@ -483,16 +771,27 @@ fn barrier(
     peak_edge_queue: &mut usize,
     sim_end: &mut f64,
     prof: &mut RunProfile,
+    scratch: &mut BarrierScratch,
+    stream_dims: Option<(usize, usize)>,
+    telem: Option<&TelemetryCfg>,
 ) -> Result<(usize, usize)> {
     // observations are partitioned exactly like the devices were (round
     // robin by id), preserving their canonical merge order per shard
-    let mut obs_parts: Vec<Vec<CloudObservation>> =
-        (0..cmd_txs.len()).map(|_| Vec::new()).collect();
-    for ob in obs {
-        obs_parts[ob.device_id % cmd_txs.len()].push(ob);
+    if scratch.obs_parts.len() < cmd_txs.len() {
+        scratch.obs_parts.resize_with(cmd_txs.len(), Vec::new);
     }
-    for (tx, obs_part) in cmd_txs.iter().zip(obs_parts) {
-        let cmd = EpochCmd { epoch_end, hub: hub.clone(), obs: obs_part };
+    for ob in obs {
+        scratch.obs_parts[ob.device_id % cmd_txs.len()].push(ob);
+    }
+    for (si, tx) in cmd_txs.iter().enumerate() {
+        let mut out = scratch.spare_outs.pop().unwrap_or_default();
+        out.arm(stream_dims, telem);
+        let cmd = EpochCmd {
+            epoch_end,
+            hub: hub.clone(),
+            obs: std::mem::take(&mut scratch.obs_parts[si]),
+            out,
+        };
         if tx.send(cmd).is_err() {
             // the worker died before this epoch — surface its own report
             // (e.g. a device build error) instead of the generic message
@@ -507,38 +806,43 @@ fn barrier(
     let mut arrivals_left = 0;
     let mut events_left = 0;
     for _ in 0..cmd_txs.len() {
-        let out = res_rx
+        let mut out = res_rx
             .recv()
             .map_err(|_| anyhow!("a fleet shard exited before the epoch barrier"))?
             .map_err(|msg| anyhow!("fleet shard failed: {msg}"))?;
-        for (dev, rec) in out.edge_records {
+        for (dev, rec) in out.edge_records.drain(..) {
             let slot = rec.id;
             col.put(dev, slot, rec);
         }
-        if let Some(s) = out.stream {
+        if let Some(s) = out.stream.take() {
             if let Some(cs) = &mut col.stream {
                 cs.merge(&s);
             }
         }
-        if let Some(t) = out.telemetry {
+        if let Some(t) = out.telemetry.take() {
             if let Some(ct) = &mut col.telemetry {
                 ct.merge(&t);
             }
         }
-        if let Some(sp) = out.profile {
+        if let Some(sp) = out.profile.take() {
             // snapshots are cumulative, so the latest one wins
             if let Some(slot) = prof.shards.get_mut(sp.shard) {
                 *slot = sp;
             }
         }
         if let Some(r) = &mut col.recorder {
-            r.extend(out.events);
+            // pre-size from this shard's epoch volume before extending
+            r.reserve(out.events.len());
+            r.extend(out.events.drain(..));
         }
-        fresh.extend(out.requests);
+        // `append` drains the source while keeping its capacity for reuse
+        fresh.append(&mut out.requests);
         arrivals_left += out.arrivals_left;
         events_left += out.events_left;
         *peak_edge_queue = (*peak_edge_queue).max(out.peak_edge_queue);
         *sim_end = sim_end.max(out.last_event_ms);
+        out.clear();
+        scratch.spare_outs.push(out);
     }
     Ok((arrivals_left, events_left))
 }
@@ -549,7 +853,9 @@ fn barrier(
 /// (device, seq) tuple makes the order total even on pathological float
 /// inputs: it can never fall back to incomparable-as-equal semantics.
 fn absorb_into_hubs(fresh: &mut [CloudRequest], topo: &mut RegionTopology) {
-    fresh.sort_by(|a, b| {
+    // (device, seq) is unique per request, so the key is total and the
+    // unstable sort cannot reorder observably
+    fresh.sort_unstable_by(|a, b| {
         a.arrive_ms
             .total_cmp(&b.arrive_ms)
             .then_with(|| a.device_id.cmp(&b.device_id))
@@ -592,9 +898,11 @@ impl PendingServe {
 
 /// Descending canonical order (attempt time, device, seq) — `pop()` from
 /// the end yields the globally next admission attempt, so pool and
-/// admission state only ever move forward in virtual time.
+/// admission state only ever move forward in virtual time. The key is
+/// unique per item ((device, seq) identifies a request), so the unstable
+/// sort cannot reorder observably.
 fn sort_desc(work: &mut [PendingServe]) {
-    work.sort_by(|a, b| {
+    work.sort_unstable_by(|a, b| {
         b.attempt_ms
             .total_cmp(&a.attempt_ms)
             .then_with(|| b.req.device_id.cmp(&a.req.device_id))
@@ -616,24 +924,35 @@ fn insert_desc(work: &mut Vec<PendingServe>, item: PendingServe) {
     work.insert(pos, item);
 }
 
-/// Apply every pending request whose admission attempt lands before
-/// `horizon` to its region's shared pools, in canonical order, gated by
-/// per-region admission (capacity / rate / outage windows):
+/// What happened to one pending item after a single admission attempt.
+enum StepNext {
+    /// the attempt moved forward in virtual time (a queue slot, or a
+    /// failover hop into another region) — the item re-enters the
+    /// canonical order of its (possibly new) serving region
+    Requeue(PendingServe),
+    /// served or finally rejected: a record landed in the collector
+    Done,
+}
+
+/// One admission attempt for the globally next pending item — the caller
+/// guarantees `item.attempt_ms < horizon` (horizon deferral is driver
+/// policy, see [`MergeState`]). Gated by per-region admission (capacity /
+/// rate / outage windows):
 ///
 ///  * admitted now → execute against the pools (the always-admitted path
 ///    is byte-for-byte the paper's merge);
 ///  * admitted later (`ThrottlePolicy::Queue`) → the attempt moves to the
-///    slot time and re-enters the canonically-ordered worklist, so pool
+///    slot time and is handed back as [`StepNext::Requeue`], so pool
 ///    invocations stay monotone in virtual time and queued requests
 ///    compete fairly with later arrivals;
 ///  * denied → with failover, hop to the next engine-ranked alternate
 ///    region (denial notice travels back, the request re-routes out,
-///    `failover_hops`/`failover_routing_ms` accumulate); otherwise the
-///    task ends as a `rejected` record.
+///    `failover_hops`/`failover_routing_ms` accumulate) and requeue;
+///    otherwise the task ends as a `rejected` record.
 ///
-/// Attempts landing at or past `horizon` stay pending — a later epoch
-/// re-asks admission, which is decision-only and answers identically, so
-/// shard count and epoch length never enter the math.
+/// All state this touches is confined to the item's serving region plus
+/// order-invariant collector sinks — which is what makes per-region merge
+/// lanes equivalent to the single global worklist.
 ///
 /// With feedback on, each applied request's realized outcome is
 ///  * private mode: collected for delivery to the issuing device at the
@@ -646,36 +965,25 @@ fn insert_desc(work: &mut Vec<PendingServe>, item: PendingServe) {
 ///    already carries the corrected entry; re-applying it would
 ///    double-count the container).
 #[allow(clippy::too_many_arguments)]
-fn merge_ready(
-    pending: &mut Vec<PendingServe>,
-    horizon: f64,
+fn admit_step(
+    mut item: PendingServe,
     topo: &mut RegionTopology,
     col: &mut Collector,
     sim_end: &mut f64,
     feedback: bool,
     hub_mode: bool,
     obs_out: &mut Vec<CloudObservation>,
-) {
-    sort_desc(pending);
-    let mut work = std::mem::take(pending);
-    let mut deferred = Vec::new();
-    while let Some(mut item) = work.pop() {
-        if item.attempt_ms >= horizon {
-            deferred.push(item);
-            continue;
-        }
+) -> StepNext {
+    {
         let region = &mut topo.regions[item.serve.region];
         let waited = item.attempt_ms - item.base_ms;
         match region.admission.admit(item.attempt_ms, waited) {
             Admission::Admit { at_ms } if at_ms > item.attempt_ms => {
                 // queue-with-deadline: move the attempt to the slot time
-                // and re-enter the canonical order (or a later epoch)
+                // and re-enter the canonical order (the driver parks it
+                // past the horizon when the slot lands in a later epoch)
                 item.attempt_ms = at_ms;
-                if at_ms >= horizon {
-                    deferred.push(item);
-                } else {
-                    insert_desc(&mut work, item);
-                }
+                StepNext::Requeue(item)
             }
             Admission::Admit { at_ms } => {
                 item.serve.queue_wait_ms += waited;
@@ -764,6 +1072,7 @@ fn merge_ready(
                     col.record(done_ev);
                 }
                 col.put(item.req.device_id, item.req.task_id, rec);
+                StepNext::Done
             }
             Admission::Reject => {
                 region.admission.reject();
@@ -814,7 +1123,7 @@ fn merge_ready(
                     }
                     item.attempt_ms += added;
                     item.base_ms = item.attempt_ms;
-                    insert_desc(&mut work, item);
+                    StepNext::Requeue(item)
                 } else {
                     if col.recording() {
                         let ev = TaskEvent::Rejection {
@@ -829,11 +1138,232 @@ fn merge_ready(
                         item.req.task_id,
                         device::rejected_record(&item.req, &item.serve),
                     );
+                    StepNext::Done
                 }
             }
         }
     }
-    *pending = deferred;
+}
+
+/// Drain one canonically-ordered worklist (the global worklist, or one
+/// region's lane when failover is off — then every requeue is a queue
+/// slot in the same region): apply every attempt landing before `horizon`
+/// through [`admit_step`], re-inserting requeued items. Attempts at or
+/// past `horizon` stay pending in place — a later epoch re-asks
+/// admission, which is decision-only and answers identically, so shard
+/// count and epoch length never enter the math.
+#[allow(clippy::too_many_arguments)]
+fn drain_lane(
+    pending: &mut Vec<PendingServe>,
+    horizon: f64,
+    topo: &mut RegionTopology,
+    col: &mut Collector,
+    sim_end: &mut f64,
+    feedback: bool,
+    hub_mode: bool,
+    obs_out: &mut Vec<CloudObservation>,
+) {
+    // descending order: `pop()` yields the next attempt, and once the
+    // tail reaches the horizon everything remaining is deferred in place
+    while pending.last().is_some_and(|p| p.attempt_ms < horizon) {
+        let Some(item) = pending.pop() else { break };
+        match admit_step(item, topo, col, sim_end, feedback, hub_mode, obs_out) {
+            StepNext::Requeue(item) => insert_desc(pending, item),
+            StepNext::Done => {}
+        }
+    }
+}
+
+/// Drain per-region lanes as one globally ordered stream: repeatedly pop
+/// the lane whose head attempt is the global minimum. With failover on, a
+/// denial hops items between lanes, so this full interleave is what keeps
+/// the pop sequence identical to the global driver's.
+#[allow(clippy::too_many_arguments)]
+fn drain_interleaved(
+    lanes: &mut [Vec<PendingServe>],
+    horizon: f64,
+    topo: &mut RegionTopology,
+    col: &mut Collector,
+    sim_end: &mut f64,
+    feedback: bool,
+    hub_mode: bool,
+    obs_out: &mut Vec<CloudObservation>,
+    prof: &mut RunProfile,
+) {
+    loop {
+        let mut best: Option<(usize, f64, usize, u64)> = None;
+        for (r, lane) in lanes.iter().enumerate() {
+            let Some(head) = lane.last() else { continue };
+            if head.attempt_ms >= horizon {
+                // heads pop in ascending order, so the whole lane waits
+                continue;
+            }
+            let earlier = match best {
+                None => true,
+                Some((_, at, dev, seq)) => head
+                    .attempt_ms
+                    .total_cmp(&at)
+                    .then_with(|| head.req.device_id.cmp(&dev))
+                    .then_with(|| head.req.seq.cmp(&seq))
+                    .is_lt(),
+            };
+            if earlier {
+                best = Some((r, head.attempt_ms, head.req.device_id, head.req.seq));
+            }
+        }
+        let Some((r, ..)) = best else { break };
+        let Some(item) = lanes[r].pop() else { break };
+        prof.merge_interleaved += 1;
+        match admit_step(item, topo, col, sim_end, feedback, hub_mode, obs_out) {
+            // a hop re-routes the item into its new serving region's lane
+            StepNext::Requeue(item) => insert_desc(&mut lanes[item.serve.region], item),
+            StepNext::Done => {}
+        }
+    }
+}
+
+/// Which shard(s) contributed fresh requests to one region this epoch
+/// (contention accounting only — never semantics).
+#[derive(Clone, Copy, PartialEq)]
+enum FreshFrom {
+    None,
+    One(usize),
+    Many,
+}
+
+/// Pending-request store between epoch merges: one global canonical
+/// worklist (`--merge global`), or per-region lanes (the default).
+///
+/// ## Why per-region lanes are bitwise-equivalent to the global order
+///
+/// The canonical order restricted to one region is exactly the order the
+/// global driver processes that region's items in, and [`admit_step`]
+/// touches only (a) the item's serving region (pools, admission gate,
+/// hub, high-water marks) and (b) order-invariant sinks: keyed record
+/// slots, the final-sorted event stream, `ExactSum`-backed streaming and
+/// telemetry folds, and max-folds. Observation delivery is also
+/// order-safe: per-device relative order within a region is preserved,
+/// and observations for different regions touch disjoint working CILs.
+/// Cross-region coupling exists only with failover (a denial hops the
+/// item into another region's lane), so:
+///
+///  * failover off — each lane drains independently in its own canonical
+///    order, regions in index order;
+///  * failover on — [`drain_interleaved`] pops the lane whose head is
+///    the global minimum, which *is* the global pop order.
+///
+/// Either way the run is bitwise identical to `--merge global` for any
+/// shard count (pinned in `rust/tests/fleet.rs` and
+/// `rust/tests/resilience.rs`).
+enum MergeState {
+    Global {
+        pending: Vec<PendingServe>,
+    },
+    PerRegion {
+        /// per-region pending lanes, index-keyed by region id (no
+        /// hash-order iteration anywhere near the merge)
+        lanes: Vec<Vec<PendingServe>>,
+        /// per-region fresh-request provenance this epoch
+        fresh_from: Vec<FreshFrom>,
+        /// round-robin partition modulus: `device_id % n_shards` recovers
+        /// the shard a request came from
+        n_shards: usize,
+        /// whether the topology failover-routes denied requests
+        failover: bool,
+    },
+}
+
+impl MergeState {
+    fn new(mode: MergeMode, n_regions: usize, n_shards: usize, failover: bool) -> MergeState {
+        match mode {
+            MergeMode::Global => MergeState::Global { pending: Vec::new() },
+            MergeMode::PerRegion => MergeState::PerRegion {
+                lanes: (0..n_regions).map(|_| Vec::new()).collect(),
+                fresh_from: vec![FreshFrom::None; n_regions],
+                n_shards,
+                failover,
+            },
+        }
+    }
+
+    /// Total requests still pending (telemetry queue-depth hook).
+    fn pending_len(&self) -> usize {
+        match self {
+            MergeState::Global { pending } => pending.len(),
+            MergeState::PerRegion { lanes, .. } => lanes.iter().map(Vec::len).sum(),
+        }
+    }
+
+    /// Absorb this epoch's fresh cloud requests (drained from `fresh`,
+    /// which keeps its capacity for the next barrier).
+    fn push_fresh(&mut self, fresh: &mut Vec<CloudRequest>) {
+        match self {
+            MergeState::Global { pending } => {
+                pending.extend(fresh.drain(..).map(PendingServe::new));
+            }
+            MergeState::PerRegion { lanes, fresh_from, n_shards, .. } => {
+                for req in fresh.drain(..) {
+                    let shard = req.device_id % *n_shards;
+                    let from = &mut fresh_from[req.region];
+                    *from = match *from {
+                        FreshFrom::None => FreshFrom::One(shard),
+                        FreshFrom::One(s) if s == shard => FreshFrom::One(s),
+                        _ => FreshFrom::Many,
+                    };
+                    lanes[req.region].push(PendingServe::new(req));
+                }
+            }
+        }
+    }
+
+    /// Apply every pending attempt landing before `horizon` — admission
+    /// semantics live in [`admit_step`], shared by both drivers. Lane
+    /// counters land in `prof`; fingerprint-relevant state is identical
+    /// across drivers.
+    #[allow(clippy::too_many_arguments)]
+    fn merge_ready(
+        &mut self,
+        horizon: f64,
+        topo: &mut RegionTopology,
+        col: &mut Collector,
+        sim_end: &mut f64,
+        feedback: bool,
+        hub_mode: bool,
+        obs_out: &mut Vec<CloudObservation>,
+        prof: &mut RunProfile,
+    ) {
+        match self {
+            MergeState::Global { pending } => {
+                sort_desc(pending);
+                drain_lane(pending, horizon, topo, col, sim_end, feedback, hub_mode, obs_out);
+            }
+            MergeState::PerRegion { lanes, fresh_from, failover, .. } => {
+                for (r, lane) in lanes.iter_mut().enumerate() {
+                    if !lane.is_empty() {
+                        prof.merge_regions_active += 1;
+                        sort_desc(lane);
+                    }
+                    if fresh_from[r] == FreshFrom::Many {
+                        prof.merge_regions_contended += 1;
+                    }
+                    fresh_from[r] = FreshFrom::None;
+                }
+                if *failover {
+                    drain_interleaved(
+                        lanes, horizon, topo, col, sim_end, feedback, hub_mode, obs_out,
+                        prof,
+                    );
+                } else {
+                    // independent per-region drains, regions in index order
+                    for lane in lanes.iter_mut() {
+                        drain_lane(
+                            lane, horizon, topo, col, sim_end, feedback, hub_mode, obs_out,
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Run a fleet to completion across `fs.shards` worker threads against the
@@ -918,7 +1448,7 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
 
     let feedback = fs.feedback == FeedbackMode::Observe;
     let hub_mode = mode == CilMode::Hub;
-    let mut pending: Vec<PendingServe> = Vec::new();
+    let mut merge = MergeState::new(fs.merge, n_regions, n_shards, resolved.failover);
     let mut sim_end = 0.0f64;
     let mut peak_edge_queue = 0usize;
 
@@ -952,30 +1482,35 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         // realized outcomes from the previous epoch's merge, delivered to
         // the issuing devices with the next barrier command
         let mut carry_obs: Vec<CloudObservation> = Vec::new();
+        // persistent coordinator buffers: fresh requests, observation
+        // partitions, and the recycled epoch-output pool all keep their
+        // capacity across epochs
+        let mut fresh: Vec<CloudRequest> = Vec::new();
+        let mut scratch = BarrierScratch::default();
         let mut epoch_end = epoch_ms;
         let mut epoch_idx: u64 = 0;
         loop {
-            let mut fresh = Vec::new();
             let (arrivals_left, events_left) = barrier(
                 &cmd_txs, &res_rx, epoch_end, snapshots(&topo),
                 std::mem::take(&mut carry_obs), &mut col,
                 &mut fresh, &mut peak_edge_queue, &mut sim_end, &mut profile,
+                &mut scratch, stream_dims, telem_cfg.as_deref(),
             )?;
             if hub_mode {
                 absorb_into_hubs(&mut fresh, &mut topo);
             }
-            pending.extend(fresh.into_iter().map(PendingServe::new));
+            merge.push_fresh(&mut fresh);
             let merge_t = Stopwatch::start();
-            merge_ready(
-                &mut pending, epoch_end, &mut topo, &mut col, &mut sim_end,
-                feedback, hub_mode, &mut carry_obs,
+            merge.merge_ready(
+                epoch_end, &mut topo, &mut col, &mut sim_end,
+                feedback, hub_mode, &mut carry_obs, &mut profile,
             );
             profile.merge_s += merge_t.elapsed_s();
             if let Some(t) = &mut col.telemetry {
                 // admission-queue depth still pending after this epoch's
                 // merge, attributed to the last window the epoch closed
                 let w = ((epoch_end / t.window_ms).ceil() as u64).saturating_sub(1);
-                t.note_queue_depth(w, pending.len() as u64);
+                t.note_queue_depth(w, merge.pending_len() as u64);
             }
             col.record(TaskEvent::EpochBarrier { t_ms: epoch_end, epoch: epoch_idx });
             epoch_idx += 1;
@@ -983,18 +1518,18 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
                 // no arrival can emit further cloud requests; drain the
                 // remaining edge events in one unbounded pass and flush
                 if events_left > 0 {
-                    let mut fresh = Vec::new();
                     barrier(
                         &cmd_txs, &res_rx, f64::INFINITY, snapshots(&topo),
                         std::mem::take(&mut carry_obs), &mut col,
                         &mut fresh, &mut peak_edge_queue, &mut sim_end, &mut profile,
+                        &mut scratch, stream_dims, telem_cfg.as_deref(),
                     )?;
-                    pending.extend(fresh.into_iter().map(PendingServe::new));
+                    merge.push_fresh(&mut fresh);
                 }
                 let merge_t = Stopwatch::start();
-                merge_ready(
-                    &mut pending, f64::INFINITY, &mut topo, &mut col, &mut sim_end,
-                    feedback, hub_mode, &mut carry_obs,
+                merge.merge_ready(
+                    f64::INFINITY, &mut topo, &mut col, &mut sim_end,
+                    feedback, hub_mode, &mut carry_obs, &mut profile,
                 );
                 profile.merge_s += merge_t.elapsed_s();
                 break;
@@ -1136,6 +1671,53 @@ mod tests {
             assert_eq!(base.summary.n_tasks, other.summary.n_tasks);
             assert_eq!(base.sim_end_ms, other.sim_end_ms);
         }
+    }
+
+    #[test]
+    fn merge_modes_are_bitwise_identical() {
+        let meta = meta();
+        let fs = FleetSettings::new(8)
+            .with_seed(17)
+            .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_shards(2)
+            .with_scenario(FleetScenario::Poisson);
+        let per_region = run(&meta, &fs); // default merge mode
+        let global = run(&meta, &fs.clone().with_merge(MergeMode::Global));
+        assert_eq!(per_region.summary.fingerprint, global.summary.fingerprint);
+        assert_eq!(per_region.sim_end_ms, global.sim_end_ms);
+        // lane counters are per-region-merge observability only
+        assert!(per_region.profile.merge_regions_active > 0);
+        assert_eq!(global.profile.merge_regions_active, 0);
+        assert_eq!(global.profile.merge_interleaved, 0);
+    }
+
+    #[test]
+    fn shard_core_direct_drive_matches_fleet_run() {
+        // the extracted epoch engine (no threads, no channels) must see
+        // exactly the fleet's placement stream
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(33)
+            .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson);
+        let fleet = run(&meta, &fs);
+        let inits = build_fleet(&meta, &fs).unwrap();
+        let mut core = ShardCore::from_settings(&meta, inits, &fs).unwrap();
+        let mut out = core.new_output();
+        core.prewarm(&mut out);
+        let (mut edge, mut cloud) = (0, 0);
+        let mut epoch_end = 2_000.0;
+        while core.arrivals_left() > 0 {
+            core.run_epoch(epoch_end, None, &[], &mut out).unwrap();
+            edge += out.n_edge_records();
+            cloud += out.n_requests();
+            out.clear();
+            epoch_end += 2_000.0;
+        }
+        assert_eq!(edge, fleet.summary.edge_count);
+        assert_eq!(cloud, fleet.summary.cloud_count);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //!           [--objective O] [--seed S] [--rate-mult M] [--epoch-ms E]
 //!           [--drift-sigma S] [--outage-frac F] [--outage-period-s P]
 //!           [--outage-down-s D] [--feedback off|observe]
+//!           [--merge per-region|global]
 //!           [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
 //!           [--cil private|hub] [--cross-ms 60] [--route-jitter S]
 //!           [--move-frac F] [--move-at-s T]
@@ -38,7 +39,7 @@ use anyhow::{bail, Result};
 use skedge::cli::Args;
 use skedge::config::{
     default_artifact_dir, CilMode, ExperimentSettings, FeedbackMode, FleetScenario, FleetSettings,
-    Meta, Objective, PredictorBackendKind, ThrottlePolicy, TopologySpec,
+    MergeMode, Meta, Objective, PredictorBackendKind, ThrottlePolicy, TopologySpec,
 };
 use skedge::experiments;
 use skedge::fleet;
@@ -313,6 +314,9 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
     }
     if let Some(f) = args.get("feedback") {
         fs.feedback = FeedbackMode::parse(f)?;
+    }
+    if let Some(m) = args.get("merge") {
+        fs = fs.with_merge(MergeMode::parse(m)?);
     }
     if let Some(spec) = args.get("topology") {
         let mut topo = TopologySpec::parse(spec)?;
@@ -647,7 +651,7 @@ USAGE:
                  [--seed S] [--rate-mult M] [--period-s P] [--amplitude A]
                  [--burst-size N] [--drift-sigma S] [--outage-frac F]
                  [--outage-period-s P] [--outage-down-s D]
-                 [--feedback off|observe]
+                 [--feedback off|observe] [--merge per-region|global]
                  [--topology duo|triad|name:rtt[:price[:tz_s[:w]]],...]
                  [--cil private|hub] [--cross-ms 60] [--route-jitter S]
                  [--move-frac F] [--move-at-s T]
@@ -664,6 +668,9 @@ happens past the bound (drop, or queue up to a wait deadline); --failover
 retries a denied placement in the next-best surviving region (Eqn.-1 ranked,
 recorded as failover hops + added routing); --outage blacks out regions for
 scheduled windows; --scenario outage darkens correlated device groups.
+--merge picks the epoch-barrier strategy: per-region worklist merges
+(default; only contended regions pay sorting cost) or the single global
+worklist — both produce bitwise-identical results and fingerprints.
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
                  [--backend xla|native] [--feedback off|observe]
                  [--record PATH] [--metrics PATH]

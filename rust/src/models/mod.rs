@@ -18,7 +18,7 @@ pub use linear::Linear;
 /// Raw model outputs for one input — the exact tuple the XLA artifact
 /// returns: upload time, per-config cloud compute, edge compute, per-config
 /// cloud cost.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RawPrediction {
     pub upld_ms: f64,
     pub comp_cloud_ms: Vec<f64>,
@@ -54,19 +54,32 @@ impl NativeModels {
     /// Score one input size. Mirrors `python/compile/model.py::predict`
     /// (f32 feature math, matching the XLA artifact's numerics).
     pub fn predict(&self, size: f64) -> RawPrediction {
-        let upld = self.upld.eval(size * self.bytes_per_unit);
+        let mut out = RawPrediction::default();
+        self.predict_into(size, &mut out, &mut Vec::new());
+        out
+    }
+
+    /// Allocation-free twin of [`NativeModels::predict`]: scores into a
+    /// caller-owned [`RawPrediction`] (vectors cleared and refilled) using
+    /// a caller-owned f32 forest scratch buffer, so the fleet's per-epoch
+    /// bulk scorer can recycle both across tasks. Identical arithmetic —
+    /// the allocating form delegates here.
+    pub fn predict_into(&self, size: f64, out: &mut RawPrediction, f32_scratch: &mut Vec<f32>) {
+        out.upld_ms = self.upld.eval(size * self.bytes_per_unit);
         // tree-outer forest evaluation across all configs (§Perf)
-        let mut raw = vec![0f32; self.mems_f32.len()];
-        self.forest.eval_configs(size as f32, &self.mems_f32, &mut raw);
-        let mut comp_cloud = Vec::with_capacity(self.mems.len());
-        let mut cost_cloud = Vec::with_capacity(self.mems.len());
+        f32_scratch.clear();
+        f32_scratch.resize(self.mems_f32.len(), 0f32);
+        self.forest.eval_configs(size as f32, &self.mems_f32, f32_scratch);
+        out.comp_cloud_ms.clear();
+        out.comp_cloud_ms.reserve(self.mems.len());
+        out.cost_cloud.clear();
+        out.cost_cloud.reserve(self.mems.len());
         for (j, &mem) in self.mems.iter().enumerate() {
-            let c = (raw[j] as f64).max(1.0);
-            comp_cloud.push(c);
-            cost_cloud.push(self.pricing.cost(c, mem));
+            let c = (f32_scratch[j] as f64).max(1.0);
+            out.comp_cloud_ms.push(c);
+            out.cost_cloud.push(self.pricing.cost(c, mem));
         }
-        let comp_edge = self.edge_comp.eval(size).max(1.0);
-        RawPrediction { upld_ms: upld, comp_cloud_ms: comp_cloud, comp_edge_ms: comp_edge, cost_cloud }
+        out.comp_edge_ms = self.edge_comp.eval(size).max(1.0);
     }
 
     /// Batch scoring (used by figure generation and benches).
@@ -113,6 +126,27 @@ mod tests {
         for j in 0..19 {
             let want = meta.pricing.cost(p.comp_cloud_ms[j], meta.memory_configs_mb[j]);
             assert!((p.cost_cloud[j] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn predict_into_matches_predict_bitwise_across_reuse() {
+        // one scratch raw + f32 buffer recycled across sizes must produce
+        // exactly what fresh allocations do
+        let meta = meta();
+        let nm = NativeModels::from_meta(&meta, meta.app("fd"));
+        let mut out = nm.predict(1.0);
+        let mut f32s = Vec::new();
+        for &size in &[2.5e6, 1e3, 8e6, 45_000.0] {
+            nm.predict_into(size, &mut out, &mut f32s);
+            let fresh = nm.predict(size);
+            assert_eq!(out.upld_ms.to_bits(), fresh.upld_ms.to_bits());
+            assert_eq!(out.comp_edge_ms.to_bits(), fresh.comp_edge_ms.to_bits());
+            assert_eq!(out.comp_cloud_ms.len(), fresh.comp_cloud_ms.len());
+            for j in 0..out.comp_cloud_ms.len() {
+                assert_eq!(out.comp_cloud_ms[j].to_bits(), fresh.comp_cloud_ms[j].to_bits());
+                assert_eq!(out.cost_cloud[j].to_bits(), fresh.cost_cloud[j].to_bits());
+            }
         }
     }
 

@@ -263,9 +263,34 @@ impl TaskEvent {
         }
     }
 
+    /// Content tiebreak behind [`TaskEvent::canonical_cmp`]: distinguishes
+    /// same-kind events that share `(time, device, seq, task)` — e.g. two
+    /// regions' `PoolHighWater` marks at the same instant, or a request's
+    /// hop-0 and hop-1 `AdmissionDenied` at the same attempt time under a
+    /// zero-routing failover. Making the order total on distinct events
+    /// lets the collectors use unstable sorts and collect lanes in any
+    /// grouping without ever changing the merged stream.
+    fn tie_key(&self) -> (usize, usize, u64) {
+        match self {
+            // hop leads: a request's hop-0 denial precedes its hop-1 denial
+            // even when zero added routing lands them on one attempt time
+            TaskEvent::AdmissionDenied { region, hop, .. } => (*hop as usize, *region, 0),
+            TaskEvent::FailoverHop { from_region, to_region, hop, .. } => {
+                (*hop as usize, *from_region, *to_region as u64)
+            }
+            TaskEvent::QueueWait { region, waited_ms, .. } => (*region, 0, waited_ms.to_bits()),
+            TaskEvent::PoolHighWater { region, config, live, .. } => {
+                (*region, *config, *live as u64)
+            }
+            TaskEvent::DeviceMove { to, .. } => (*to, 0, 0),
+            _ => (0, 0, 0),
+        }
+    }
+
     /// Canonical stream order: `(time, device, seq, task, kind_rank)` with
-    /// run-level events sorting after task events at equal times. A stable
-    /// sort under this comparator makes a recorded stream shard-invariant:
+    /// run-level events sorting after task events at equal times, and a
+    /// content tiebreak making the order total on distinct events. Sorting
+    /// under this comparator makes a recorded stream shard-invariant:
     /// event *content* never depends on the shard partition, only the
     /// collection order does, and this comparator erases that.
     pub fn canonical_cmp(a: &TaskEvent, b: &TaskEvent) -> Ordering {
@@ -288,6 +313,7 @@ impl TaskEvent {
             .then(ka.2.cmp(&kb.2))
             .then(ka.3.cmp(&kb.3))
             .then(ka.4.cmp(&kb.4))
+            .then_with(|| a.tie_key().cmp(&b.tie_key()))
     }
 
     /// Serialize to the single shared JSON model (one JSONL line per
@@ -651,6 +677,24 @@ mod tests {
         assert_eq!(TaskEvent::canonical_cmp(&barrier, &a), Ordering::Greater, "run-level after tasks");
         assert_eq!(TaskEvent::canonical_cmp(&a, &mv), Ordering::Less, "move after its device's task events");
         assert_eq!(TaskEvent::canonical_cmp(&mv, &barrier), Ordering::Less, "move before run-level events");
+    }
+
+    #[test]
+    fn canonical_order_is_total_on_same_rank_ties() {
+        // two regions' pool marks at one instant share the whole meta-less
+        // key; the content tiebreak must order them region-ascending so an
+        // unstable sort can never flip them
+        let p0 = TaskEvent::PoolHighWater { t_ms: 9.0, region: 0, config: 2, live: 1 };
+        let p1 = TaskEvent::PoolHighWater { t_ms: 9.0, region: 1, config: 0, live: 3 };
+        assert_eq!(TaskEvent::canonical_cmp(&p0, &p1), Ordering::Less);
+        assert_eq!(TaskEvent::canonical_cmp(&p1, &p0), Ordering::Greater);
+        // a request denied at hop 0 then hop 1 at the same attempt time
+        // (zero added routing) orders by hop
+        let d0 = TaskEvent::AdmissionDenied { meta: meta0(), region: 1, hop: 0 };
+        let d1 = TaskEvent::AdmissionDenied { meta: meta0(), region: 0, hop: 1 };
+        assert_eq!(TaskEvent::canonical_cmp(&d0, &d1), Ordering::Less, "hop 0 first");
+        // equal events still compare equal
+        assert_eq!(TaskEvent::canonical_cmp(&p0, &p0.clone()), Ordering::Equal);
     }
 
     #[test]

@@ -52,6 +52,9 @@ pub struct ShardProfile {
     pub scored_tasks: u64,
     /// largest single scoring batch
     pub max_batch: u64,
+    /// raw-prediction buffers served from the shard's scratch pool instead
+    /// of freshly allocated (the allocation-free scoring hot path)
+    pub raw_reused: u64,
 }
 
 impl ShardProfile {
@@ -89,6 +92,14 @@ pub struct RunProfile {
     pub epochs: u64,
     /// tasks completed
     pub tasks: u64,
+    /// per-region merge: region lanes with pending work, summed over epochs
+    pub merge_regions_active: u64,
+    /// per-region merge: region lanes whose fresh requests arrived from
+    /// two or more shards in one epoch (true cross-shard contention)
+    pub merge_regions_contended: u64,
+    /// pending items drained through the failover k-way lane interleave
+    /// (zero with failover off or `--merge global`)
+    pub merge_interleaved: u64,
 }
 
 impl RunProfile {
@@ -97,7 +108,7 @@ impl RunProfile {
         for (i, s) in shards.iter_mut().enumerate() {
             s.shard = i;
         }
-        RunProfile { shards, wall_s: 0.0, merge_s: 0.0, epochs: 0, tasks: 0 }
+        RunProfile { shards, ..Default::default() }
     }
 
     /// Total device-stepper events across shards.
@@ -126,9 +137,15 @@ impl RunProfile {
             self.events_total(),
             self.merge_s,
         ));
+        out.push_str(&format!(
+            "  merge lanes: {} region-epochs active, {} contended, {} interleaved\n",
+            self.merge_regions_active,
+            self.merge_regions_contended,
+            self.merge_interleaved,
+        ));
         for s in &self.shards {
             out.push_str(&format!(
-                "  shard {}: busy {:.3}s  wait {:.3}s  ({:.0}% busy)  events {}  batches {} (mean {:.1}, max {})\n",
+                "  shard {}: busy {:.3}s  wait {:.3}s  ({:.0}% busy)  events {}  batches {} (mean {:.1}, max {})  raw reuse {}\n",
                 s.shard,
                 s.busy_s,
                 s.wait_s,
@@ -137,6 +154,7 @@ impl RunProfile {
                 s.scored_batches,
                 s.mean_batch(),
                 s.max_batch,
+                s.raw_reused,
             ));
         }
         out
@@ -177,10 +195,15 @@ mod tests {
         p.shards[0].scored_batches = 3;
         p.shards[0].scored_tasks = 12;
         p.shards[0].max_batch = 6;
+        p.shards[0].raw_reused = 11;
+        p.merge_regions_active = 8;
+        p.merge_regions_contended = 2;
+        p.merge_interleaved = 5;
         let text = p.render();
         assert!(text.contains("100 tasks (50 tasks/s)"));
         assert!(text.contains("shard 0: busy 1.500s  wait 0.500s  (75% busy)"));
-        assert!(text.contains("batches 3 (mean 4.0, max 6)"));
+        assert!(text.contains("batches 3 (mean 4.0, max 6)  raw reuse 11"));
+        assert!(text.contains("merge lanes: 8 region-epochs active, 2 contended, 5 interleaved"));
         assert!(text.contains("shard 1:"));
         assert_eq!(p.events_total(), 42);
     }

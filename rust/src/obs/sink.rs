@@ -3,10 +3,11 @@
 //! [`Recorder`] is what the runners thread through a recorded run: shards
 //! and the coordinator push events in whatever order they produce them
 //! (device-buffered, drained at each epoch barrier), and
-//! [`Recorder::into_events`] performs one final stable sort under the
-//! canonical `(time, device, seq, task, kind)` comparator. Because event
-//! *content* never depends on the shard partition, the sorted stream is
-//! shard-invariant (pinned in `rust/tests/events.rs`).
+//! [`Recorder::into_events`] performs one final sort under the canonical
+//! `(time, device, seq, task, kind, content)` comparator. The comparator
+//! is total on distinct events (content tiebreak) and event *content*
+//! never depends on the shard partition, so an unstable sort suffices and
+//! the sorted stream is shard-invariant (pinned in `rust/tests/events.rs`).
 //!
 //! [`EventSink`] abstracts the output: a JSONL file writer behind
 //! `--record PATH` ([`JsonlSink`]) or an in-memory buffer for tests
@@ -88,6 +89,12 @@ impl Recorder {
         Recorder::default()
     }
 
+    /// Pre-size the buffer (e.g. from a previous epoch's high-water mark)
+    /// so steady-state epochs extend without reallocating.
+    pub fn reserve(&mut self, additional: usize) {
+        self.buf.reserve(additional);
+    }
+
     pub fn push(&mut self, ev: TaskEvent) {
         self.buf.push(ev);
     }
@@ -104,10 +111,11 @@ impl Recorder {
         self.buf.is_empty()
     }
 
-    /// Finish the recording: stable-sort into canonical order and return
-    /// the stream.
+    /// Finish the recording: sort into canonical order and return the
+    /// stream. Unstable sort is safe: `canonical_cmp` is total on
+    /// distinct events, so no tie depends on collection order.
     pub fn into_events(mut self) -> Vec<TaskEvent> {
-        self.buf.sort_by(TaskEvent::canonical_cmp);
+        self.buf.sort_unstable_by(TaskEvent::canonical_cmp);
         self.buf
     }
 }

@@ -57,6 +57,16 @@ impl Cil {
         self.tidl_ms = tidl_ms;
     }
 
+    /// Pre-size every per-config belief list. [`Cil::update`] grows a list
+    /// by at most one entry per placement, so reserving a device's task
+    /// budget up front keeps the steady-state decision path allocation-free
+    /// (see `rust/tests/alloc.rs`).
+    pub fn reserve(&mut self, additional: usize) {
+        for list in &mut self.per_config {
+            list.reserve(additional);
+        }
+    }
+
     /// Drop containers believed destroyed by `now`.
     pub fn purge(&mut self, now: f64) {
         let tidl = self.tidl_ms;

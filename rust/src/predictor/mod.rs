@@ -42,7 +42,7 @@ pub struct CloudPrediction {
 }
 
 /// Full per-input prediction across Φ ∪ {λ_edge}.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Prediction {
     pub cloud: Vec<CloudPrediction>,
     /// predicted edge latency excluding queue wait: comp_e + iotup + store

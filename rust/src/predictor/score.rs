@@ -76,10 +76,28 @@ impl ScoringCtx {
         raw: &RawPrediction,
         now: f64,
     ) -> Prediction {
+        let mut out = Prediction::default();
+        self.assemble_regions_into(rows, raw, now, &mut out);
+        out
+    }
+
+    /// Allocation-free twin of [`ScoringCtx::assemble_regions`]: assembles
+    /// into a caller-owned [`Prediction`] whose `cloud` vector is cleared
+    /// and refilled, so a device can reuse one scratch prediction across
+    /// every arrival (the fleet hot path). Identical arithmetic — the
+    /// allocating form delegates here.
+    pub fn assemble_regions_into<'a>(
+        &self,
+        rows: impl IntoIterator<Item = RegionRow<'a>>,
+        raw: &RawPrediction,
+        now: f64,
+        out: &mut Prediction,
+    ) {
         let n_cfg = raw.comp_cloud_ms.len();
         let rows = rows.into_iter();
+        out.cloud.clear();
         // every caller's iterator (once / zip-map) has an exact lower bound
-        let mut cloud = Vec::with_capacity(rows.size_hint().0.max(1) * n_cfg);
+        out.cloud.reserve(rows.size_hint().0.max(1) * n_cfg);
         for row in rows {
             // time-to-trigger for this region: predicted upload + routing
             let lead = raw.upld_ms + row.routing_ms;
@@ -88,7 +106,7 @@ impl ScoringCtx {
                 let warm = row.cil.predicts_warm(j, trigger);
                 let start = if warm { self.start_warm_mean } else { self.start_cold_mean };
                 let comp = raw.comp_cloud_ms[j];
-                cloud.push(CloudPrediction {
+                out.cloud.push(CloudPrediction {
                     e2e_ms: lead + start + comp + self.store_mean,
                     cost: raw.cost_cloud[j] * row.price_mult,
                     warm,
@@ -98,13 +116,10 @@ impl ScoringCtx {
                 });
             }
         }
-        Prediction {
-            cloud,
-            edge_e2e_ms: raw.comp_edge_ms + self.edge_overhead_ms,
-            edge_comp_ms: raw.comp_edge_ms,
-            cloud_sigma_frac: self.cloud_sigma_frac,
-            edge_sigma_frac: self.edge_sigma_frac,
-        }
+        out.edge_e2e_ms = raw.comp_edge_ms + self.edge_overhead_ms;
+        out.edge_comp_ms = raw.comp_edge_ms;
+        out.cloud_sigma_frac = self.cloud_sigma_frac;
+        out.edge_sigma_frac = self.edge_sigma_frac;
     }
 }
 
@@ -275,6 +290,30 @@ mod tests {
         );
         let direct = c.assemble_one(&cil, &raw, 2_500.0);
         assert_bitwise_eq(&via_regions, &direct);
+    }
+
+    #[test]
+    fn assemble_into_reuses_scratch_bitwise() {
+        // the into-form must match the allocating form bitwise AND leave
+        // no stale rows behind when refilled with fewer candidates
+        let c = ctx();
+        let raw3 = raw(3);
+        let raw7 = raw(7);
+        let cils: Vec<Cil> = (0..3).map(|r| warmed_cil(7, r as f64 * 31.0)).collect();
+        let routing = [0.0, 62.5, 190.0];
+        let price = [1.0, 1.2, 0.85];
+        let rows = || {
+            cils.iter()
+                .zip(routing)
+                .zip(price)
+                .map(|((cil, routing_ms), price_mult)| RegionRow { routing_ms, price_mult, cil })
+        };
+        let mut scratch = c.assemble_regions(rows(), &raw7, 100.0);
+        // refill the bigger scratch with the smaller assembly
+        c.assemble_regions_into(rows(), &raw3, 777.125, &mut scratch);
+        let fresh = c.assemble_regions(rows(), &raw3, 777.125);
+        assert_eq!(scratch.cloud.len(), 3 * 3);
+        assert_bitwise_eq(&scratch, &fresh);
     }
 
     #[test]

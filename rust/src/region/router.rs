@@ -162,6 +162,33 @@ impl DeviceRouter {
         p.scoring_ctx().assemble_regions(rows, raw, now)
     }
 
+    /// Allocation-free twin of [`assemble`](Self::assemble): writes into a
+    /// caller-owned [`Prediction`] scratch (vectors cleared and refilled)
+    /// through [`ScoringCtx::assemble_regions_into`](crate::predictor::ScoringCtx::assemble_regions_into),
+    /// so devices can recycle one prediction buffer across every task.
+    pub fn assemble_into(&self, p: &Predictor, raw: &RawPrediction, now: f64, out: &mut Prediction) {
+        let rows = self
+            .topo
+            .regions
+            .iter()
+            .zip(&self.routing_ms)
+            .zip(&self.cils)
+            .map(|((spec, &routing_ms), cil)| RegionRow {
+                routing_ms,
+                price_mult: spec.price_mult,
+                cil,
+            });
+        p.scoring_ctx().assemble_regions_into(rows, raw, now, out);
+    }
+
+    /// Pre-size every working CIL's belief lists (see [`Cil::reserve`]) so
+    /// steady-state placement updates never regrow them.
+    pub fn reserve_beliefs(&mut self, additional: usize) {
+        for cil in &mut self.cils {
+            cil.reserve(additional);
+        }
+    }
+
     /// Record the engine's choice in the working CIL (paper `updateCIL`,
     /// region-routed). Edge placements leave container beliefs untouched.
     pub fn note_placement(&mut self, placement: Placement, pred: &Prediction, now: f64) {

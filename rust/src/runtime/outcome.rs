@@ -27,7 +27,9 @@ pub fn latency_percentiles(xs: &[f64]) -> Option<LatencyPercentiles> {
         return None;
     }
     let mut v = xs.to_vec();
-    v.sort_by(f64::total_cmp);
+    // `total_cmp`-equal f64s are bitwise identical, so the unstable sort
+    // cannot reorder observably
+    v.sort_unstable_by(f64::total_cmp);
     Some(LatencyPercentiles {
         p50: stats::percentile_sorted(&v, 50.0),
         p95: stats::percentile_sorted(&v, 95.0),

@@ -108,6 +108,12 @@ impl EventQueue {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Pre-size the heap (e.g. from a previous epoch's high-water mark) so
+    /// steady-state scheduling extends without reallocating.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
 }
 
 #[cfg(test)]

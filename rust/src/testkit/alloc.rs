@@ -1,0 +1,53 @@
+//! Counting global allocator for allocation-regression tests.
+//!
+//! Install [`CountingAlloc`] as the `#[global_allocator]` of a test
+//! binary, then bracket the code under test with [`allocations`] reads:
+//! the delta is the number of heap *acquisitions* (alloc / realloc /
+//! alloc_zeroed — frees are deliberately not counted, since a
+//! steady-state hot path may drop values it was handed without that
+//! implying regrowth). `rust/tests/alloc.rs` uses this to pin the fleet
+//! epoch loop at zero allocations after warmup.
+//!
+//! The counter is a relaxed atomic: the tests that read it drive the
+//! simulator single-threaded (via `ShardCore`), so no stricter ordering
+//! is needed, and the counter adds one fetch-add per allocation when
+//! installed — negligible against the allocation itself.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of heap acquisitions since process start (alloc + realloc +
+/// alloc_zeroed), if [`CountingAlloc`] is the global allocator; always 0
+/// otherwise.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// A [`System`]-backed allocator that counts every heap acquisition.
+pub struct CountingAlloc;
+
+// SAFETY: pure pass-through to `System`; the only added behaviour is a
+// relaxed counter increment, which cannot violate the GlobalAlloc
+// contract.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

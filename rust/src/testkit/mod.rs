@@ -5,6 +5,8 @@
 //! case index and seed so the exact input can be replayed deterministically.
 //! No shrinking — cases are small enough to debug directly from the seed.
 
+pub mod alloc;
+
 use crate::util::rng::Pcg32;
 
 /// Random-input generator handed to properties.

@@ -1,0 +1,67 @@
+//! Allocation-regression pin for the fleet epoch hot path.
+//!
+//! Installs the counting allocator from `skedge::testkit::alloc` as the
+//! global allocator and drives a shard directly through [`ShardCore`]
+//! (no worker threads, no coordinator — the exact per-epoch code the
+//! workers run). After [`ShardCore::prewarm`] and a few warmup epochs,
+//! every steady-state epoch must perform **zero** heap allocations:
+//! scoring reuses the pooled `RawPrediction` buffers, devices reuse
+//! their prediction scratch, belief lists are pre-reserved, and the
+//! output buffers are cleared-not-dropped between epochs.
+//!
+//! The run is fully seeded, so the assertion is deterministic — any
+//! failure is a real regression (a new allocation on the hot path), not
+//! flakiness. Run via `make alloc-check`.
+
+use skedge::config::{default_artifact_dir, FleetScenario, FleetSettings, Meta};
+use skedge::fleet::{scenario, ShardCore};
+use skedge::testkit::alloc::{allocations, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Epochs allowed to allocate: buffers that size off high-water marks
+/// (collector vectors, event-queue headroom) settle within the first few
+/// epochs; everything after must be allocation-free.
+const WARMUP_EPOCHS: usize = 3;
+
+#[test]
+fn steady_state_epochs_allocate_nothing() {
+    let meta = Meta::load(&default_artifact_dir()).expect("run `make artifacts` first");
+    // The default hot path: native backend, private CILs, Poisson
+    // arrivals, no recording / streaming / telemetry.
+    let fs = FleetSettings::new(8)
+        .with_seed(11)
+        .with_duration_ms(10_000.0)
+        .with_epoch_ms(1_000.0)
+        .with_scenario(FleetScenario::Poisson);
+    let inits = scenario::build_fleet(&meta, &fs).expect("scenario build");
+    let mut core = ShardCore::from_settings(&meta, inits, &fs).expect("shard build");
+    let mut out = core.new_output();
+    core.prewarm(&mut out);
+
+    let n_epochs = (fs.duration_ms / fs.epoch_ms) as usize;
+    assert!(n_epochs > WARMUP_EPOCHS + 2, "need measurable epochs after warmup");
+    let mut measured = 0usize;
+    for epoch in 0..n_epochs {
+        let epoch_end = (epoch + 1) as f64 * fs.epoch_ms;
+        let before = allocations();
+        core.run_epoch(epoch_end, None, &[], &mut out).expect("epoch");
+        let during = allocations() - before;
+        let (records, requests) = (out.n_edge_records(), out.n_requests());
+        out.clear();
+        if epoch >= WARMUP_EPOCHS {
+            assert_eq!(
+                during, 0,
+                "epoch {epoch} allocated {during} times on the steady-state path \
+                 ({records} edge records, {requests} cloud requests)"
+            );
+            measured += 1;
+        }
+    }
+    assert!(measured >= 2, "warmup consumed every epoch; extend the run");
+    // Drain any arrival parked exactly on the horizon (unmeasured — the
+    // pin covers steady-state epochs, not the final flush).
+    core.run_epoch(f64::INFINITY, None, &[], &mut out).expect("final drain");
+    assert_eq!(core.arrivals_left(), 0, "workload should drain by the final flush");
+}

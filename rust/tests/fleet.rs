@@ -8,7 +8,8 @@
 //!     performance knob, never a semantics knob.
 
 use skedge::config::{
-    default_artifact_dir, ExperimentSettings, FleetScenario, FleetSettings, Meta, Objective,
+    default_artifact_dir, CilMode, ExperimentSettings, FleetScenario, FleetSettings, MergeMode,
+    Meta, Objective, RegionSettings, TopologySpec,
 };
 use skedge::fleet;
 use skedge::sim;
@@ -100,6 +101,52 @@ fn drift_fleet_is_deterministic_and_shard_invariant() {
     }
     let again = fleet::run(&meta, &fs.clone().with_shards(3)).unwrap();
     assert_eq!(base.summary.fingerprint, again.summary.fingerprint, "not reproducible");
+}
+
+#[test]
+fn per_region_merge_is_bitwise_identical_to_global_merge() {
+    // The per-region worklist merge (the default) must be a pure
+    // performance knob: for any shard count and either CIL mode it
+    // reproduces the single global worklist — the pre-refactor merge
+    // algorithm, which `MergeMode::Global` still runs verbatim — bit for
+    // bit, recorded event stream included.
+    let meta = meta();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let topo = TopologySpec::new(vec![
+            RegionSettings::new("near", 5.0),
+            RegionSettings::new("far", 45.0).with_price_mult(1.15),
+        ])
+        .with_cross_penalty_ms(25.0)
+        .with_cil_mode(cil);
+        let fs = FleetSettings::new(10)
+            .with_seed(4242)
+            .with_duration_ms(8_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_topology(topo)
+            .with_recording(true);
+        let global =
+            fleet::run(&meta, &fs.clone().with_merge(MergeMode::Global).with_shards(2)).unwrap();
+        assert_eq!(global.profile.merge_regions_active, 0, "global mode has no lanes");
+        for shards in [1usize, 2, 4] {
+            let pr = fleet::run(&meta, &fs.clone().with_shards(shards)).unwrap();
+            assert_eq!(
+                pr.summary.fingerprint, global.summary.fingerprint,
+                "{cil:?}: per-region merge diverged at {shards} shards"
+            );
+            assert_eq!(pr.sim_end_ms, global.sim_end_ms);
+            assert_eq!(pr.summary.pool_high_water, global.summary.pool_high_water);
+            assert_eq!(pr.events, global.events, "{cil:?}: event streams diverged");
+            for (da, db) in pr.records.iter().zip(&global.records) {
+                for (a, b) in da.iter().zip(db) {
+                    assert_eq!(a.placement, b.placement);
+                    assert_eq!(a.actual_e2e_ms.to_bits(), b.actual_e2e_ms.to_bits());
+                    assert_eq!(a.actual_cost.to_bits(), b.actual_cost.to_bits());
+                    assert_eq!(a.warm_actual, b.warm_actual);
+                }
+            }
+            assert!(pr.profile.merge_regions_active > 0, "per-region lanes never engaged");
+        }
+    }
 }
 
 #[test]

@@ -23,8 +23,8 @@
 //!     observation at fleet scale.
 
 use skedge::config::{
-    default_artifact_dir, CilMode, FeedbackMode, FleetScenario, FleetSettings, Meta, OutageWindow,
-    RegionSettings, ThrottlePolicy, TopologySpec,
+    default_artifact_dir, CilMode, FeedbackMode, FleetScenario, FleetSettings, MergeMode, Meta,
+    OutageWindow, RegionSettings, ThrottlePolicy, TopologySpec,
 };
 use skedge::fleet::{self, FleetOutcome};
 use skedge::predictor::Placement;
@@ -198,6 +198,43 @@ fn capacity_queue_and_failover_preserve_epoch_invariance() {
         short.region_queued.iter().sum::<u64>() > 0,
         "queue throttling must actually engage for this pin to bite"
     );
+}
+
+#[test]
+fn merge_modes_agree_under_failover_queue_and_outages() {
+    // the hard case for the per-region merge: failover alternates cross
+    // region lanes, queue throttling parks attempts for later epochs, and
+    // an outage window flips admission answers mid-run. The k-way
+    // interleaved drain must still reproduce the single global worklist
+    // bit for bit at every shard count.
+    let meta = meta();
+    let mk = |merge: MergeMode, shards: usize| {
+        let topo = capped_duo(3, ThrottlePolicy::Queue { max_wait_ms: 6_000.0 }, true)
+            .with_outages(vec![OutageWindow {
+                region: 0,
+                start_ms: 3_000.0,
+                end_ms: 5_000.0,
+            }]);
+        let fs = fd_fleet(10, 10_000.0, topo).with_merge(merge).with_shards(shards);
+        fleet::run(&meta, &fs).unwrap()
+    };
+    let global = mk(MergeMode::Global, 2);
+    assert!(
+        global.summary.failover_hops_total > 0
+            && global.region_queued.iter().sum::<u64>() > 0,
+        "the pin needs failover hops and queue waits to actually bite"
+    );
+    for shards in [1usize, 2, 4] {
+        let pr = mk(MergeMode::PerRegion, shards);
+        assert_records_identical(&pr, &global, &format!("merge modes, {shards} shards"));
+        assert_eq!(pr.summary.rejected_count, global.summary.rejected_count);
+        assert_eq!(pr.summary.failover_hops_total, global.summary.failover_hops_total);
+        assert_eq!(pr.region_queued, global.region_queued);
+        assert!(
+            pr.profile.merge_interleaved > 0,
+            "failover must route through the interleaved drain"
+        );
+    }
 }
 
 // ---------------------------------------------------------------- pin 4
