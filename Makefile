@@ -3,7 +3,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts verify soak record-replay analyze-demo lint alloc-check merge-smoke
+.PHONY: artifacts test-python clean-artifacts verify soak record-replay analyze-demo lint alloc-check merge-smoke fabric-smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(ARTIFACTS)
@@ -50,6 +50,31 @@ merge-smoke:
 	b=$$(grep '^fingerprint' /tmp/skedge-merge-global.out); \
 	if [ "$$a" = "$$b" ]; then echo "merge-smoke: strategies agree ($$a)"; \
 	else echo "merge-smoke: MISMATCH: per-region '$$a' vs global '$$b'" >&2; exit 1; fi
+
+# Network-fabric smoke through the CLI: the same flash-crowd fleet run
+# three ways. `--fabric uncapped` must print the identical fingerprint to
+# no --fabric at all (the bitwise-identity guarantee end to end), while a
+# capped uplink must print a *different* one (congestion visibly changes
+# the run). The in-process pins live in rust/tests/network.rs. Assumes
+# `make artifacts` has run.
+fabric-smoke:
+	cd rust && cargo run --release --quiet -- fleet --devices 12 --duration-s 16 \
+		--scenario flash --shards 2 --topology duo \
+		| tee /tmp/skedge-fabric-off.out
+	cd rust && cargo run --release --quiet -- fleet --devices 12 --duration-s 16 \
+		--scenario flash --shards 2 --topology duo --fabric uncapped \
+		| tee /tmp/skedge-fabric-free.out
+	cd rust && cargo run --release --quiet -- fleet --devices 12 --duration-s 16 \
+		--scenario flash --shards 2 --topology duo --fabric uplink=4,latency=2 \
+		| tee /tmp/skedge-fabric-capped.out
+	@off=$$(grep '^fingerprint' /tmp/skedge-fabric-off.out); \
+	free=$$(grep '^fingerprint' /tmp/skedge-fabric-free.out); \
+	cap=$$(grep '^fingerprint' /tmp/skedge-fabric-capped.out); \
+	if [ "$$off" != "$$free" ]; then \
+		echo "fabric-smoke: MISMATCH: uncapped fabric '$$free' != off '$$off'" >&2; exit 1; fi; \
+	if [ "$$off" = "$$cap" ]; then \
+		echo "fabric-smoke: capped uplink did not change the run ($$cap)" >&2; exit 1; fi; \
+	echo "fabric-smoke: uncapped is identity ($$off), capped diverges ($$cap)"
 
 # Long-soak nondeterminism smoke: the 10-epoch outage storm (caps + rate
 # limits + queueing + failover + region blackouts + correlated device

@@ -27,6 +27,7 @@ impl Policy {
             deterministic: owned(&[
                 "fleet",
                 "region",
+                "fabric",
                 "sim",
                 "predictor",
                 "platform",
@@ -80,6 +81,7 @@ mod tests {
         let p = Policy::skedge();
         assert!(p.is_deterministic("fleet/shard.rs"));
         assert!(p.is_deterministic("sim/events.rs"));
+        assert!(p.is_deterministic("fabric/mod.rs"));
         assert!(!p.is_deterministic("util/json.rs"));
         // `fleet` must not match a sibling file that merely shares the prefix
         assert!(!p.is_deterministic("fleety.rs"));

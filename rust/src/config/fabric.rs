@@ -1,0 +1,162 @@
+//! Network-fabric configuration: the static parameters of the shared link
+//! graph (edge device → access network → region uplink) that the fabric
+//! discrete-event model and the Eqn.-1 transfer term both read.
+//!
+//! Capacities are Mbps; `f64::INFINITY` means uncapped. An uncapped link
+//! converts to an exact `0.0` ms-per-byte, and every fabric term is built
+//! so that `x + 0.0 == x` bitwise — which is what pins an uncongested
+//! fabric byte-identical to no fabric at all (`rust/tests/network.rs`).
+
+use anyhow::{bail, Context, Result};
+
+/// Milliseconds per byte at a given link capacity: 1 Mbps moves exactly
+/// 125 bytes per ms, so ms/byte = 0.008 / mbps. Uncapped (infinite)
+/// capacity maps to an exact 0.0 so the transfer term vanishes bitwise.
+pub fn ms_per_byte(mbps: f64) -> f64 {
+    if mbps.is_infinite() {
+        0.0
+    } else {
+        0.008 / mbps
+    }
+}
+
+/// Static link-graph parameters of one fleet's network fabric. The access
+/// leg (device → region edge) is private to each transfer; the region
+/// uplink is shared by every transfer routed to that region and is the
+/// link that congests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricSpec {
+    /// shared per-region uplink capacity (Mbps; INFINITY = uncapped)
+    pub uplink_mbps: f64,
+    /// per-device access-network capacity (Mbps; unshared)
+    pub access_mbps: f64,
+    /// fixed propagation latency of the access leg (ms)
+    pub access_latency_ms: f64,
+}
+
+impl FabricSpec {
+    /// The identity fabric: infinite bandwidth everywhere, zero access
+    /// latency. Bitwise equivalent to running without a fabric.
+    pub const UNCAPPED: FabricSpec = FabricSpec {
+        uplink_mbps: f64::INFINITY,
+        access_mbps: f64::INFINITY,
+        access_latency_ms: 0.0,
+    };
+
+    /// Parse a `--fabric` spec: `uncapped`, or a comma list of `k=v`
+    /// entries with keys `uplink` (Mbps), `access` (Mbps), `latency`
+    /// (ms). Omitted keys stay uncapped / zero.
+    pub fn parse(s: &str) -> Result<FabricSpec> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("uncapped") {
+            return Ok(FabricSpec::UNCAPPED);
+        }
+        let mut spec = FabricSpec::UNCAPPED;
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                bail!("fabric entry `{part}` is not k=v (keys: uplink, access, latency)");
+            };
+            let num: f64 = val
+                .trim()
+                .parse()
+                .with_context(|| format!("fabric `{key}` value `{val}` is not a number"))?;
+            match key.trim() {
+                "uplink" | "uplink-mbps" => spec.uplink_mbps = num,
+                "access" | "access-mbps" => spec.access_mbps = num,
+                "latency" | "latency-ms" => spec.access_latency_ms = num,
+                other => bail!("unknown fabric key `{other}` (keys: uplink, access, latency)"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject non-positive capacities and negative/NaN latencies.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.uplink_mbps > 0.0) {
+            bail!("fabric uplink capacity must be positive (got {})", self.uplink_mbps);
+        }
+        if !(self.access_mbps > 0.0) {
+            bail!("fabric access capacity must be positive (got {})", self.access_mbps);
+        }
+        if !(self.access_latency_ms >= 0.0) {
+            bail!("fabric access latency must be >= 0 (got {})", self.access_latency_ms);
+        }
+        Ok(())
+    }
+
+    /// ms per byte on the shared region uplink (0.0 when uncapped).
+    pub fn uplink_ms_per_byte(&self) -> f64 {
+        ms_per_byte(self.uplink_mbps)
+    }
+
+    /// ms per byte on the private access leg (0.0 when uncapped).
+    pub fn access_ms_per_byte(&self) -> f64 {
+        ms_per_byte(self.access_mbps)
+    }
+
+    /// The unshared access-leg time for one payload — propagation plus
+    /// serialization. Exact 0.0 for the uncapped fabric.
+    pub fn access_ms(&self, bytes: f64) -> f64 {
+        self.access_latency_ms + bytes * self.access_ms_per_byte()
+    }
+
+    /// True when every term is exactly zero — the bitwise-identity fabric.
+    pub fn is_uncongested(&self) -> bool {
+        self.uplink_mbps.is_infinite()
+            && self.access_mbps.is_infinite()
+            && self.access_latency_ms == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncapped_terms_are_exact_zero() {
+        let f = FabricSpec::UNCAPPED;
+        assert_eq!(f.uplink_ms_per_byte().to_bits(), 0.0f64.to_bits());
+        assert_eq!(f.access_ms(123_456.0).to_bits(), 0.0f64.to_bits());
+        assert!(f.is_uncongested());
+        // the identity really is bitwise: x + every fabric term == x
+        let x = 1234.5678f64;
+        assert_eq!((x + f.access_ms(1e6)).to_bits(), x.to_bits());
+    }
+
+    #[test]
+    fn parse_uncapped_and_kv_forms() {
+        assert_eq!(FabricSpec::parse("uncapped").unwrap(), FabricSpec::UNCAPPED);
+        let f = FabricSpec::parse("uplink=100,access=50,latency=2").unwrap();
+        assert_eq!(f.uplink_mbps, 100.0);
+        assert_eq!(f.access_mbps, 50.0);
+        assert_eq!(f.access_latency_ms, 2.0);
+        assert!(!f.is_uncongested());
+        // partial spec: everything else stays uncapped
+        let g = FabricSpec::parse("uplink=8").unwrap();
+        assert_eq!(g.uplink_mbps, 8.0);
+        assert!(g.access_mbps.is_infinite());
+        assert_eq!(g.access_latency_ms, 0.0);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FabricSpec::parse("uplink=0").is_err(), "zero capacity");
+        assert!(FabricSpec::parse("uplink=-5").is_err(), "negative capacity");
+        assert!(FabricSpec::parse("latency=-1").is_err(), "negative latency");
+        assert!(FabricSpec::parse("bogus=1").is_err(), "unknown key");
+        assert!(FabricSpec::parse("uplink:100").is_err(), "not k=v");
+        assert!(FabricSpec::parse("uplink=fast").is_err(), "not a number");
+    }
+
+    #[test]
+    fn ms_per_byte_is_125_bytes_per_ms_per_mbps() {
+        // 1 Mbps = 125 bytes/ms; 10 Mbps moves 1250 bytes in 1 ms
+        assert!((ms_per_byte(1.0) - 0.008).abs() < 1e-15);
+        assert!((ms_per_byte(10.0) * 1250.0 - 1.0).abs() < 1e-12);
+    }
+}

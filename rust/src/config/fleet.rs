@@ -197,6 +197,10 @@ pub struct FleetSettings {
     /// epoch-barrier merge strategy (`--merge`); both modes are pinned
     /// bitwise identical, per-region is the default
     pub merge: MergeMode,
+    /// shared-link network fabric (`--fabric`); None = the static
+    /// routing-row model, and an uncongested spec is pinned bitwise
+    /// identical to None (`rust/tests/network.rs`)
+    pub fabric: Option<super::FabricSpec>,
 }
 
 impl FleetSettings {
@@ -227,6 +231,7 @@ impl FleetSettings {
             metrics: false,
             metrics_window_ms: None,
             merge: MergeMode::PerRegion,
+            fabric: None,
         }
     }
 
@@ -280,6 +285,12 @@ impl FleetSettings {
     /// Select the epoch-barrier merge strategy (`--merge`).
     pub fn with_merge(mut self, m: MergeMode) -> Self {
         self.merge = m;
+        self
+    }
+
+    /// Enable the shared-link network fabric (`--fabric`).
+    pub fn with_fabric(mut self, f: super::FabricSpec) -> Self {
+        self.fabric = Some(f);
         self
     }
 

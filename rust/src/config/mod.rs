@@ -6,10 +6,12 @@
 //! native mirror backend), ground-truth generative parameters (for the Rust
 //! workload generator) and per-app experiment constants.
 
+mod fabric;
 mod fleet;
 mod region;
 mod settings;
 
+pub use fabric::FabricSpec;
 pub use fleet::{FleetScenario, FleetSettings, MergeMode};
 pub use region::{
     CilMode, MobilityEvent, OutageWindow, RegionSettings, ThrottlePolicy, TopologySpec,

@@ -1,0 +1,558 @@
+//! Deterministic network-fabric model: shared links with bandwidth
+//! contention (edge device → access network → region uplink).
+//!
+//! Each cloud transfer crosses two legs. The **access leg** (device →
+//! region edge) is private to the transfer: a fixed propagation latency
+//! plus payload / access-bandwidth, computed closed-form. The **region
+//! uplink** is shared by every transfer routed to that region and is the
+//! link that congests: it is modelled as a processor-sharing queue where
+//! the link's capacity is split evenly across all transfers overlapping in
+//! virtual time, with the fair share recomputed at every transfer
+//! start/finish boundary.
+//!
+//! Determinism invariants (pinned by `rust/tests/network.rs` and the
+//! property suite):
+//!
+//! * **Canonical event order.** Link events are processed in strict
+//!   `(time, device, seq)` order with [`f64::total_cmp`] — ties (including
+//!   simultaneous finishes of equal-size transfers) resolve identically no
+//!   matter how transfers were enqueued, so the model is shard-invariant.
+//! * **Horizon-chunk invariance.** [`LinkQueue::advance`] processes events
+//!   *strictly before* the horizon and never materializes state *at* the
+//!   horizon: the queue rests at its last processed event, and a finish
+//!   lands the virtual-service clock exactly on the finisher's level (no
+//!   float dust accumulates between events). Advancing to `t1` then `t2`
+//!   is therefore bitwise identical to advancing straight to `t2` — epoch
+//!   length cannot change outcomes.
+//! * **Uncongested identity.** An uncapped link converts to an exact
+//!   `0.0` ms-per-byte, every fabric term becomes `x + 0.0`, and requests
+//!   pass through [`Fabric::ingest`] untouched — bitwise identical to
+//!   running with no fabric at all.
+//!
+//! The processor-sharing queue uses a *virtual service* representation:
+//! `vsrv` counts the cumulative per-flow service (bytes) since the link
+//! last went idle, advancing at `1 / (ms_per_byte × n_active)` bytes per
+//! ms. A transfer entering at level `v` with `b` payload bytes finishes
+//! when `vsrv` reaches `v + b`; the next finish among active flows is the
+//! minimum `(level, device, seq)`, and its wall-clock time is recovered as
+//! `now + (level − vsrv) × ms_per_byte × n_active`. This is the classic
+//! PS virtual-time construction — O(1) state per flow, one event per
+//! transfer start/finish, no per-byte stepping.
+
+use crate::config::FabricSpec;
+use crate::fleet::device::CloudRequest;
+
+/// One transfer released by a [`LinkQueue`]: the parked-slot handle it was
+/// enqueued with plus its realized finish time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Release {
+    /// caller-chosen handle (the [`Fabric`] parking-slot index)
+    pub slot: usize,
+    pub device: usize,
+    pub seq: u64,
+    /// virtual time at which the transfer's last byte cleared the link
+    pub finish_ms: f64,
+}
+
+/// An active flow on the shared link.
+#[derive(Debug, Clone, Copy)]
+struct Flow {
+    /// virtual-service level at which this transfer completes
+    level: f64,
+    device: usize,
+    seq: u64,
+    slot: usize,
+}
+
+/// A transfer waiting to start (its access leg has not yet delivered the
+/// first byte to the uplink).
+#[derive(Debug, Clone, Copy)]
+struct StartEv {
+    at_ms: f64,
+    device: usize,
+    seq: u64,
+    bytes: f64,
+    slot: usize,
+}
+
+/// The next link event due: a finish (active-flow index + time) or a start.
+enum Ev {
+    Finish(usize, f64),
+    Start(f64),
+}
+
+/// One shared link as a deterministic processor-sharing queue.
+///
+/// The API is transfer-level and self-contained so the property suite can
+/// drive a link directly: `push` transfers, `seal` the batch, `advance`
+/// to a horizon, collect [`Release`]s. Pushed start times must not precede
+/// events already processed by an earlier `advance`.
+pub struct LinkQueue {
+    ms_per_byte: f64,
+    /// virtual time of the most recently processed event — deliberately
+    /// *not* advanced to `advance` horizons (chunk invariance)
+    now_ms: f64,
+    /// cumulative per-flow service (bytes) since the link last went idle
+    vsrv: f64,
+    /// flows currently sharing the link, in start order
+    active: Vec<Flow>,
+    /// pending starts, sorted descending by `(time, device, seq)` so the
+    /// earliest is `pop()`-able from the tail
+    starts: Vec<StartEv>,
+}
+
+impl LinkQueue {
+    pub fn new(ms_per_byte: f64) -> LinkQueue {
+        LinkQueue {
+            ms_per_byte,
+            now_ms: 0.0,
+            vsrv: 0.0,
+            active: Vec::new(),
+            starts: Vec::new(),
+        }
+    }
+
+    /// Pre-size the flow buffers (allocation-clean steady state).
+    pub fn reserve(&mut self, n: usize) {
+        self.active.reserve(n);
+        self.starts.reserve(n);
+    }
+
+    /// Enqueue a transfer whose first byte reaches this link at `at_ms`.
+    /// Call [`LinkQueue::seal`] after a batch of pushes.
+    pub fn push(&mut self, at_ms: f64, device: usize, seq: u64, bytes: f64, slot: usize) {
+        self.starts.push(StartEv { at_ms, device, seq, bytes, slot });
+    }
+
+    /// Restore the pending-start order after a batch of pushes: descending
+    /// `(time, device, seq)`, so the earliest start sits at the tail. The
+    /// canonical key is unique per transfer, which is what makes the event
+    /// order independent of push order (and hence of shard count).
+    pub fn seal(&mut self) {
+        self.starts.sort_by(|a, b| {
+            b.at_ms
+                .total_cmp(&a.at_ms)
+                .then(b.device.cmp(&a.device))
+                .then(b.seq.cmp(&a.seq))
+        });
+    }
+
+    /// Flows currently sharing the link.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Bytes still to move: remaining bytes of active flows plus full
+    /// payloads of transfers that have not started yet.
+    pub fn backlog_bytes(&self) -> f64 {
+        let mut b = 0.0;
+        for f in &self.active {
+            b += (f.level - self.vsrv).max(0.0);
+        }
+        for s in &self.starts {
+            b += s.bytes;
+        }
+        b
+    }
+
+    /// The active flow that finishes next — minimum `(level, device, seq)`
+    /// — and its wall-clock finish time. The key is unique, so the choice
+    /// is independent of scan order.
+    fn next_finish(&self) -> Option<Ev> {
+        let mut best: Option<usize> = None;
+        for (i, f) in self.active.iter().enumerate() {
+            best = Some(match best {
+                None => i,
+                Some(j) => {
+                    let g = &self.active[j];
+                    let ord = f
+                        .level
+                        .total_cmp(&g.level)
+                        .then(f.device.cmp(&g.device))
+                        .then(f.seq.cmp(&g.seq));
+                    if ord.is_lt() {
+                        i
+                    } else {
+                        j
+                    }
+                }
+            });
+        }
+        best.map(|i| {
+            let f = &self.active[i];
+            let gap = (f.level - self.vsrv).max(0.0);
+            let n = self.active.len() as f64;
+            Ev::Finish(i, self.now_ms + gap * self.ms_per_byte * n)
+        })
+    }
+
+    /// Process every start/finish event *strictly before* `horizon`,
+    /// appending finished transfers to `out` in canonical order. State
+    /// rests at the last processed event, never at the horizon, so any
+    /// tiling of horizons replays the identical event sequence bitwise.
+    pub fn advance(&mut self, horizon: f64, out: &mut Vec<Release>) {
+        if self.ms_per_byte == 0.0 {
+            // Infinite capacity: every transfer completes the instant it
+            // reaches the link.
+            while let Some(s) = self.starts.last().copied() {
+                if !(s.at_ms < horizon) {
+                    break;
+                }
+                self.starts.pop();
+                self.now_ms = s.at_ms;
+                out.push(Release {
+                    slot: s.slot,
+                    device: s.device,
+                    seq: s.seq,
+                    finish_ms: s.at_ms,
+                });
+            }
+            return;
+        }
+        loop {
+            let next_start = self.starts.last().map(|s| s.at_ms);
+            let ev = match (self.next_finish(), next_start) {
+                (None, None) => break,
+                (Some(fin), None) => fin,
+                (None, Some(ts)) => Ev::Start(ts),
+                (Some(Ev::Finish(i, tf)), Some(ts)) => {
+                    // a finish wins ties with a simultaneous start: the
+                    // departing flow's share was already committed
+                    if tf.total_cmp(&ts).is_le() {
+                        Ev::Finish(i, tf)
+                    } else {
+                        Ev::Start(ts)
+                    }
+                }
+                (Some(Ev::Start(_)), _) => break, // next_finish never yields Start
+            };
+            match ev {
+                Ev::Finish(i, tf) => {
+                    if !(tf < horizon) {
+                        break;
+                    }
+                    self.finish_at(i, tf, out);
+                }
+                Ev::Start(ts) => {
+                    if !(ts < horizon) {
+                        break;
+                    }
+                    self.start_next(ts);
+                }
+            }
+        }
+    }
+
+    fn finish_at(&mut self, i: usize, t: f64, out: &mut Vec<Release>) {
+        let f = self.active.remove(i);
+        // land the virtual-service clock exactly on the finisher's level:
+        // no float dust accumulates between events, which is what makes
+        // horizon chunking bitwise-invisible
+        self.vsrv = f.level;
+        self.now_ms = t;
+        if self.active.is_empty() {
+            // link idle: re-anchor so vsrv stays bounded over long runs
+            self.vsrv = 0.0;
+        }
+        out.push(Release {
+            slot: f.slot,
+            device: f.device,
+            seq: f.seq,
+            finish_ms: t,
+        });
+    }
+
+    fn start_next(&mut self, t: f64) {
+        let Some(s) = self.starts.pop() else {
+            return;
+        };
+        let n = self.active.len();
+        if n > 0 {
+            // bring vsrv up to this instant under the old flow count
+            self.vsrv += (t - self.now_ms) / (self.ms_per_byte * n as f64);
+        }
+        self.now_ms = t;
+        self.active.push(Flow {
+            level: self.vsrv + s.bytes,
+            device: s.device,
+            seq: s.seq,
+            slot: s.slot,
+        });
+    }
+}
+
+/// The fleet-level fabric: one shared uplink [`LinkQueue`] per region plus
+/// parked in-flight [`CloudRequest`]s.
+///
+/// The coordinator drives it once per epoch barrier, after hub absorption
+/// and before the merge sees the batch:
+///
+/// 1. [`Fabric::ingest`] drains the barrier's fresh requests — each
+///    becomes a transfer on its chosen region's uplink starting at
+///    `trigger + access_ms(bytes)` (the request is parked meanwhile).
+/// 2. [`Fabric::advance`] to the epoch end releases finished transfers
+///    back into the batch with `trigger_ms` rewritten to the transfer
+///    finish and the added delay recorded in `fabric_xfer_ms`.
+///
+/// Requests whose transfer outlives the epoch stay parked and release in
+/// a later epoch — exactly how the merge already defers attempts beyond
+/// its horizon, so epoch tiling stays outcome-invariant.
+pub struct Fabric {
+    spec: FabricSpec,
+    links: Vec<LinkQueue>,
+    /// in-flight requests, indexed by the slot carried through the link
+    parked: Vec<Option<CloudRequest>>,
+    /// reusable parking slots
+    free: Vec<usize>,
+    in_flight: usize,
+    /// reusable release buffer for [`Fabric::advance`]
+    scratch: Vec<Release>,
+}
+
+impl Fabric {
+    pub fn new(spec: FabricSpec, n_regions: usize) -> Fabric {
+        let mpb = spec.uplink_ms_per_byte();
+        Fabric {
+            spec,
+            links: (0..n_regions).map(|_| LinkQueue::new(mpb)).collect(),
+            parked: Vec::new(),
+            free: Vec::new(),
+            in_flight: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &FabricSpec {
+        &self.spec
+    }
+
+    /// Transfers currently in flight (parked requests).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Pre-size every buffer for up to `n` in-flight transfers so the
+    /// steady-state epoch path allocates nothing.
+    pub fn reserve(&mut self, n: usize) {
+        self.parked.reserve(n);
+        self.free.reserve(n);
+        self.scratch.reserve(n);
+        for l in &mut self.links {
+            l.reserve(n);
+        }
+    }
+
+    /// Drain this barrier's fresh cloud requests into the fabric. With an
+    /// uncapped uplink there is no shared-link state: each request's
+    /// transfer completes after its private access leg, so the batch is
+    /// rewritten in place (order untouched) and nothing is parked — and
+    /// with the fully uncongested spec the rewrite adds an exact `0.0`,
+    /// bitwise identical to no fabric at all.
+    pub fn ingest(&mut self, fresh: &mut Vec<CloudRequest>) {
+        if fresh.is_empty() {
+            return;
+        }
+        if self.spec.uplink_ms_per_byte() == 0.0 {
+            for req in fresh.iter_mut() {
+                let xfer = self.spec.access_ms(req.bytes);
+                req.fabric_xfer_ms = xfer;
+                req.trigger_ms += xfer;
+            }
+            return;
+        }
+        for req in fresh.drain(..) {
+            let at = req.trigger_ms + self.spec.access_ms(req.bytes);
+            let slot = match self.free.pop() {
+                Some(s) => s,
+                None => {
+                    self.parked.push(None);
+                    self.parked.len() - 1
+                }
+            };
+            self.links[req.region].push(at, req.device_id, req.seq, req.bytes, slot);
+            self.parked[slot] = Some(req);
+            self.in_flight += 1;
+        }
+        for l in &mut self.links {
+            l.seal();
+        }
+    }
+
+    /// Advance every uplink to `horizon`, pushing finished transfers back
+    /// into `fresh` with `trigger_ms` rewritten to the transfer finish and
+    /// the added delay in `fabric_xfer_ms`. Regions are processed in index
+    /// order; downstream consumers (hub absorption, the merge) re-sort
+    /// canonically, so the refill order carries no information.
+    pub fn advance(&mut self, horizon: f64, fresh: &mut Vec<CloudRequest>) {
+        if self.in_flight == 0 {
+            return;
+        }
+        let mut scratch = std::mem::take(&mut self.scratch);
+        for link in &mut self.links {
+            scratch.clear();
+            link.advance(horizon, &mut scratch);
+            for rel in &scratch {
+                if let Some(mut req) = self.parked[rel.slot].take() {
+                    req.fabric_xfer_ms = rel.finish_ms - req.trigger_ms;
+                    req.trigger_ms = rel.finish_ms;
+                    self.free.push(rel.slot);
+                    self.in_flight -= 1;
+                    fresh.push(req);
+                }
+            }
+        }
+        self.scratch = scratch;
+    }
+
+    /// Drain every in-flight transfer (end of run).
+    pub fn settle(&mut self, fresh: &mut Vec<CloudRequest>) {
+        self.advance(f64::INFINITY, fresh);
+        debug_assert_eq!(self.in_flight, 0, "settle left transfers in flight");
+    }
+
+    /// The per-region `FabricView` snapshot: estimated uplink queue delay
+    /// (backlog bytes × ms-per-byte) per region. Shipped to devices with
+    /// the next epoch's command — one epoch stale, exactly like hub-CIL
+    /// snapshots — and added to the Eqn.-1 transfer term by the router.
+    pub fn queue_view(&self) -> Vec<f64> {
+        let mpb = self.spec.uplink_ms_per_byte();
+        self.links.iter().map(|l| l.backlog_bytes() * mpb).collect()
+    }
+
+    /// Flows currently sharing `region`'s uplink (telemetry gauge).
+    pub fn link_active(&self, region: usize) -> usize {
+        self.links[region].active_count()
+    }
+
+    /// Estimated drain time of `region`'s uplink backlog (telemetry gauge).
+    pub fn link_backlog_ms(&self, region: usize) -> f64 {
+        self.links[region].backlog_bytes() * self.spec.uplink_ms_per_byte()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1 Mbps moves 125 bytes per ms.
+    const MPB_1MBPS: f64 = 0.008;
+
+    fn drain(q: &mut LinkQueue, horizon: f64) -> Vec<Release> {
+        let mut out = Vec::new();
+        q.advance(horizon, &mut out);
+        out
+    }
+
+    #[test]
+    fn single_transfer_serializes_at_capacity() {
+        let mut q = LinkQueue::new(MPB_1MBPS);
+        q.push(0.0, 0, 0, 1000.0, 7);
+        q.seal();
+        let out = drain(&mut q, f64::INFINITY);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].slot, 7);
+        // 1000 bytes at 125 bytes/ms = 8 ms
+        assert!((out[0].finish_ms - 8.0).abs() < 1e-9, "{}", out[0].finish_ms);
+    }
+
+    #[test]
+    fn overlapping_transfers_fair_share() {
+        // A: 1000 B at t=0; B: 1000 B at t=4. Alone A would finish at 8.
+        // At t=4 A has moved 500 B; the remaining 500 B drain at half rate
+        // (8 ms), so A finishes at 12; B's leftover 500 B then drain at
+        // full rate, finishing at 16 — total bytes / capacity, as work
+        // conservation demands.
+        let mut q = LinkQueue::new(MPB_1MBPS);
+        q.push(0.0, 0, 0, 1000.0, 0);
+        q.push(4.0, 1, 0, 1000.0, 1);
+        q.seal();
+        let out = drain(&mut q, f64::INFINITY);
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].device, out[1].device), (0, 1));
+        assert!((out[0].finish_ms - 12.0).abs() < 1e-9, "{}", out[0].finish_ms);
+        assert!((out[1].finish_ms - 16.0).abs() < 1e-9, "{}", out[1].finish_ms);
+    }
+
+    #[test]
+    fn equal_transfers_tie_in_device_seq_order() {
+        let mut q = LinkQueue::new(MPB_1MBPS);
+        // pushed out of canonical order on purpose — seal restores it
+        q.push(0.0, 1, 3, 1000.0, 1);
+        q.push(0.0, 0, 5, 1000.0, 0);
+        q.seal();
+        let out = drain(&mut q, f64::INFINITY);
+        assert_eq!(out.len(), 2);
+        // both finish at 16 (2000 B shared); ties resolve (device, seq)
+        assert_eq!((out[0].device, out[1].device), (0, 1));
+        assert_eq!(out[0].finish_ms.to_bits(), out[1].finish_ms.to_bits());
+        assert!((out[0].finish_ms - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn horizon_chunking_is_bitwise_invariant() {
+        // messy float payloads/starts; chunk boundaries land both between
+        // and exactly on event times (a finish at 8.0 vs horizon 8.0 must
+        // defer — strictly-before semantics)
+        let loads: [(f64, usize, u64, f64); 4] = [
+            (0.0, 0, 0, 1000.0),
+            (1.3, 1, 0, 777.7),
+            (4.0, 2, 0, 1234.5),
+            (9.25, 0, 1, 50.0),
+        ];
+        let mut one = LinkQueue::new(MPB_1MBPS);
+        let mut chunked = LinkQueue::new(MPB_1MBPS);
+        for (i, &(t, d, s, b)) in loads.iter().enumerate() {
+            one.push(t, d, s, b, i);
+            chunked.push(t, d, s, b, i);
+        }
+        one.seal();
+        chunked.seal();
+        let straight = drain(&mut one, f64::INFINITY);
+        let mut tiled = Vec::new();
+        for h in [1.3, 4.0, 8.0, 9.25, 11.0, f64::INFINITY] {
+            chunked.advance(h, &mut tiled);
+        }
+        assert_eq!(straight.len(), loads.len());
+        assert_eq!(straight.len(), tiled.len());
+        for (a, b) in straight.iter().zip(&tiled) {
+            assert_eq!((a.slot, a.device, a.seq), (b.slot, b.device, b.seq));
+            assert_eq!(a.finish_ms.to_bits(), b.finish_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn events_at_horizon_defer_to_next_chunk() {
+        let mut q = LinkQueue::new(MPB_1MBPS);
+        q.push(0.0, 0, 0, 1000.0, 0);
+        q.seal();
+        // finish is exactly 8.0: advancing to 8.0 must release nothing
+        assert!(drain(&mut q, 8.0).is_empty());
+        let out = drain(&mut q, f64::INFINITY);
+        assert_eq!(out.len(), 1);
+        assert!((out[0].finish_ms - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncapped_link_releases_at_start_bitwise() {
+        let mut q = LinkQueue::new(0.0);
+        q.push(3.75, 1, 0, 1e9, 1);
+        q.push(1.5, 0, 0, 1e9, 0);
+        q.seal();
+        let out = drain(&mut q, f64::INFINITY);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].finish_ms.to_bits(), 1.5f64.to_bits());
+        assert_eq!(out[1].finish_ms.to_bits(), 3.75f64.to_bits());
+    }
+
+    #[test]
+    fn pending_start_beyond_horizon_stays_queued() {
+        let mut q = LinkQueue::new(MPB_1MBPS);
+        q.push(5.0, 0, 0, 100.0, 0);
+        q.seal();
+        assert!(drain(&mut q, 2.0).is_empty());
+        assert_eq!(q.active_count(), 0);
+        assert!((q.backlog_bytes() - 100.0).abs() < 1e-12);
+        let out = drain(&mut q, f64::INFINITY);
+        assert_eq!(out.len(), 1);
+    }
+}

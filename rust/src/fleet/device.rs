@@ -129,9 +129,18 @@ pub struct CloudRequest {
     pub flat: usize,
     pub arrive_ms: f64,
     /// arrive + upload + routing: the instant the function fires against
-    /// the region's pool
+    /// the region's pool. With a network fabric the coordinator pushes
+    /// this out to the transfer's congested finish time before the merge
+    /// sees the request (the added delay lands in `fabric_xfer_ms`).
     pub trigger_ms: f64,
     pub upld_ms: f64,
+    /// payload size (bytes) — what the fabric serializes over the access
+    /// leg and the shared region uplink
+    pub bytes: f64,
+    /// realized fabric transfer delay added on top of `upld + routing`
+    /// (0.0 until the fabric releases the transfer; stays 0.0 without a
+    /// fabric, keeping the fire-time arithmetic bit-identical)
+    pub fabric_xfer_ms: f64,
     /// one-way routing latency to the chosen region at decision time
     pub routing_ms: f64,
     pub comp_ms: f64,
@@ -377,7 +386,7 @@ impl<'a> Device<'a> {
             }
         }
         self.router
-            .assemble_into(&self.predictor, raw, now, &mut self.pred_scratch);
+            .assemble_into(&self.predictor, raw, now, a.bytes, &mut self.pred_scratch);
         let pred = &self.pred_scratch;
         let decision = self.engine.decide(pred, self.edge.predicted_wait(now));
         self.router.note_placement(decision.placement, pred, now);
@@ -493,6 +502,8 @@ impl<'a> Device<'a> {
                     arrive_ms: now,
                     trigger_ms: now + a.upld + routing,
                     upld_ms: a.upld,
+                    bytes: a.bytes,
+                    fabric_xfer_ms: 0.0,
                     routing_ms: routing,
                     comp_ms: a.comp[j],
                     start_w_ms: a.start_w,
@@ -609,7 +620,8 @@ impl<'a> Device<'a> {
     /// predictor state, so outcomes are bitwise unaffected.
     pub fn prewarm(&mut self, n_tasks: usize, shaped: &RawPrediction) {
         self.router.reserve_beliefs(n_tasks);
-        self.router.assemble_into(&self.predictor, shaped, 0.0, &mut self.pred_scratch);
+        self.router
+            .assemble_into(&self.predictor, shaped, 0.0, 0.0, &mut self.pred_scratch);
     }
 }
 
@@ -683,13 +695,15 @@ impl CloudServe {
 }
 
 /// Apply a pending cloud request to its region's (shared) platform pools.
-/// Routing latency rides with the upload leg, so the container fires at
-/// `arrive + upld + routing` — exactly the request's trigger.
+/// Routing latency (and any realized fabric transfer delay) rides with the
+/// upload leg, so the container fires at `arrive + upld + routing +
+/// fabric_xfer` — the request's trigger. Without a fabric the extra term
+/// is an exact 0.0 and the arithmetic is bit-identical to the paper's.
 pub fn execute_cloud(req: &CloudRequest, cloud: &mut CloudPlatform) -> CloudExecution {
     cloud.execute(
         req.j,
         req.arrive_ms,
-        req.upld_ms + req.routing_ms,
+        req.upld_ms + req.routing_ms + req.fabric_xfer_ms,
         req.comp_ms,
         req.start_w_ms,
         req.start_c_ms,

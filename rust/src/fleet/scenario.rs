@@ -653,6 +653,34 @@ mod tests {
     }
 
     #[test]
+    fn flash_crowd_tasks_carry_payload_bytes() {
+        // the fabric transfer term scales with the payload, so scenario
+        // tasks must carry positive byte sizes into dispatch — device
+        // scoring feeds `actuals.bytes` straight into the Eqn.-1 xfer
+        // estimate (`score::fabric_xfer_term_rides_the_upload_leg` pins
+        // the scoring side; this pins the workload side)
+        let meta = meta();
+        let fs = FleetSettings::new(6)
+            .with_seed(7)
+            .with_duration_ms(16_000.0)
+            .with_scenario(FleetScenario::FlashCrowd {
+                at_ms: 10_000.0,
+                ramp_ms: 5_000.0,
+                peak_mult: 4.0,
+            });
+        let inits = build_fleet(&meta, &fs).unwrap();
+        let bytes: Vec<f64> = inits
+            .iter()
+            .flat_map(|i| i.tasks.iter().map(|t| t.actuals.bytes))
+            .collect();
+        assert!(bytes.len() > 20, "flash crowd generated {} tasks", bytes.len());
+        assert!(bytes.iter().all(|&b| b > 0.0), "task without payload bytes");
+        // sizes are drawn per task, not a per-app constant: the congested
+        // transfer estimate genuinely differentiates tasks
+        assert!(bytes.iter().any(|&b| b != bytes[0]), "payload sizes all identical");
+    }
+
+    #[test]
     fn drift_is_deterministic_and_moves_rates_per_device() {
         let fs = FleetSettings::new(1)
             .with_scenario(FleetScenario::Drift { sigma: 0.5 })

@@ -92,6 +92,9 @@ use super::FleetOutcome;
 struct EpochCmd {
     epoch_end: f64,
     hub: Option<Arc<Vec<Cil>>>,
+    /// per-region uplink queue-delay snapshot (`FabricView`; fabric runs
+    /// only), broadcast one epoch stale exactly like the hub snapshots
+    fabric: Option<Arc<Vec<f64>>>,
     obs: Vec<CloudObservation>,
     out: EpochOutput,
 }
@@ -597,6 +600,7 @@ impl<'a> ShardCore<'a> {
         &mut self,
         epoch_end: f64,
         hub: Option<&[Cil]>,
+        fabric: Option<&[f64]>,
         obs: &[CloudObservation],
         out: &mut EpochOutput,
     ) -> Result<()> {
@@ -605,6 +609,11 @@ impl<'a> ShardCore<'a> {
         if let Some(hub) = hub {
             for run in &mut self.runs {
                 run.device.router.refresh_from_hub(hub);
+            }
+        }
+        if let Some(q) = fabric {
+            for run in &mut self.runs {
+                run.device.router.refresh_fabric(q);
             }
         }
         // realized outcomes land after any snapshot adoption: observations
@@ -684,7 +693,8 @@ fn worker_loop(
         core.prof.wait_s += wait_t.elapsed_s();
         let mut out = cmd.out;
         let hub = cmd.hub.as_deref().map(Vec::as_slice);
-        if let Err(e) = core.run_epoch(cmd.epoch_end, hub, &cmd.obs, &mut out) {
+        let fabric = cmd.fabric.as_deref().map(Vec::as_slice);
+        if let Err(e) = core.run_epoch(cmd.epoch_end, hub, fabric, &cmd.obs, &mut out) {
             let _ = results.send(Err(format!("{e:#}")));
             return;
         }
@@ -765,6 +775,7 @@ fn barrier(
     res_rx: &Receiver<Result<EpochOutput, String>>,
     epoch_end: f64,
     hub: Option<Arc<Vec<Cil>>>,
+    fabric: Option<Arc<Vec<f64>>>,
     obs: Vec<CloudObservation>,
     col: &mut Collector,
     fresh: &mut Vec<CloudRequest>,
@@ -789,6 +800,7 @@ fn barrier(
         let cmd = EpochCmd {
             epoch_end,
             hub: hub.clone(),
+            fabric: fabric.clone(),
             obs: std::mem::take(&mut scratch.obs_parts[si]),
             out,
         };
@@ -1061,6 +1073,7 @@ fn admit_step(
                         stages: Stages {
                             upld: item.req.upld_ms,
                             routing: item.req.routing_ms,
+                            xfer: item.req.fabric_xfer_ms,
                             extra_routing: item.serve.extra_routing_ms,
                             queue_wait: item.serve.queue_wait_ms,
                             start: exec.start_ms,
@@ -1448,6 +1461,17 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
 
     let feedback = fs.feedback == FeedbackMode::Observe;
     let hub_mode = mode == CilMode::Hub;
+    // the network fabric (if any) lives with the coordinator, exactly like
+    // the region pools: transfers enter at the barrier in canonical order
+    // and the shared-uplink contention is resolved once, shard-invariantly
+    let mut fabric_model = resolved.fabric.map(|spec| {
+        let mut f = crate::fabric::Fabric::new(spec, n_regions);
+        f.reserve(expected_tasks);
+        f
+    });
+    // latest per-region uplink queue snapshot (`FabricView`), broadcast
+    // with the NEXT epoch's command — one epoch stale, like hub snapshots
+    let mut fabric_view: Option<Arc<Vec<f64>>> = None;
     let mut merge = MergeState::new(fs.merge, n_regions, n_shards, resolved.failover);
     let mut sim_end = 0.0f64;
     let mut peak_edge_queue = 0usize;
@@ -1491,13 +1515,29 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
         let mut epoch_idx: u64 = 0;
         loop {
             let (arrivals_left, events_left) = barrier(
-                &cmd_txs, &res_rx, epoch_end, snapshots(&topo),
+                &cmd_txs, &res_rx, epoch_end, snapshots(&topo), fabric_view.clone(),
                 std::mem::take(&mut carry_obs), &mut col,
                 &mut fresh, &mut peak_edge_queue, &mut sim_end, &mut profile,
                 &mut scratch, stream_dims, telem_cfg.as_deref(),
             )?;
             if hub_mode {
                 absorb_into_hubs(&mut fresh, &mut topo);
+            }
+            if let Some(f) = &mut fabric_model {
+                // after hub absorption (beliefs form at decision time) and
+                // before the merge: every fresh request's upload crosses
+                // the fabric, and only transfers finishing inside this
+                // epoch re-enter the batch — later finishers stay parked,
+                // exactly how the merge defers attempts beyond its horizon
+                f.ingest(&mut fresh);
+                f.advance(epoch_end, &mut fresh);
+                fabric_view = Some(Arc::new(f.queue_view()));
+                if let Some(t) = &mut col.telemetry {
+                    let w = ((epoch_end / t.window_ms).ceil() as u64).saturating_sub(1);
+                    for r in 0..n_regions {
+                        t.note_link(w, r, f.link_active(r) as u64, f.link_backlog_ms(r));
+                    }
+                }
             }
             merge.push_fresh(&mut fresh);
             let merge_t = Stopwatch::start();
@@ -1520,10 +1560,18 @@ pub fn run_fleet(meta: &Meta, inits: Vec<DeviceInit>, fs: &FleetSettings) -> Res
                 if events_left > 0 {
                     barrier(
                         &cmd_txs, &res_rx, f64::INFINITY, snapshots(&topo),
+                        fabric_view.clone(),
                         std::mem::take(&mut carry_obs), &mut col,
                         &mut fresh, &mut peak_edge_queue, &mut sim_end, &mut profile,
                         &mut scratch, stream_dims, telem_cfg.as_deref(),
                     )?;
+                    merge.push_fresh(&mut fresh);
+                }
+                if let Some(f) = &mut fabric_model {
+                    // drain every transfer still crossing an uplink — no
+                    // new arrivals exist, so the remaining releases are the
+                    // run's last cloud attempts
+                    f.settle(&mut fresh);
                     merge.push_fresh(&mut fresh);
                 }
                 let merge_t = Stopwatch::start();
@@ -1710,7 +1758,7 @@ mod tests {
         let (mut edge, mut cloud) = (0, 0);
         let mut epoch_end = 2_000.0;
         while core.arrivals_left() > 0 {
-            core.run_epoch(epoch_end, None, &[], &mut out).unwrap();
+            core.run_epoch(epoch_end, None, None, &[], &mut out).unwrap();
             edge += out.n_edge_records();
             cloud += out.n_requests();
             out.clear();

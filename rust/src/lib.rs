@@ -23,6 +23,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod fabric;
 pub mod fleet;
 pub mod live;
 pub mod testkit;

@@ -38,8 +38,8 @@ use anyhow::{bail, Result};
 
 use skedge::cli::Args;
 use skedge::config::{
-    default_artifact_dir, CilMode, ExperimentSettings, FeedbackMode, FleetScenario, FleetSettings,
-    MergeMode, Meta, Objective, PredictorBackendKind, ThrottlePolicy, TopologySpec,
+    default_artifact_dir, CilMode, ExperimentSettings, FabricSpec, FeedbackMode, FleetScenario,
+    FleetSettings, MergeMode, Meta, Objective, PredictorBackendKind, ThrottlePolicy, TopologySpec,
 };
 use skedge::experiments;
 use skedge::fleet;
@@ -318,6 +318,19 @@ fn fleet_settings_from_args(args: &Args) -> Result<FleetSettings> {
     if let Some(m) = args.get("merge") {
         fs = fs.with_merge(MergeMode::parse(m)?);
     }
+    // network fabric: --fabric SPEC, with --uplink-mbps / --access-latency-ms
+    // as single-knob shorthands; any of the three enables the model
+    let mut fabric = args.get("fabric").map(FabricSpec::parse).transpose()?;
+    if let Some(mbps) = args.f64("uplink-mbps")? {
+        fabric.get_or_insert(FabricSpec::UNCAPPED).uplink_mbps = mbps;
+    }
+    if let Some(ms) = args.f64("access-latency-ms")? {
+        fabric.get_or_insert(FabricSpec::UNCAPPED).access_latency_ms = ms;
+    }
+    if let Some(spec) = fabric {
+        spec.validate()?;
+        fs = fs.with_fabric(spec);
+    }
     if let Some(spec) = args.get("topology") {
         let mut topo = TopologySpec::parse(spec)?;
         if let Some(mode) = args.get("cil") {
@@ -459,6 +472,21 @@ fn print_fleet_summary(fs: &FleetSettings, o: &fleet::FleetOutcome, wall_s: f64)
             "topology       : {} regions, {} CIL",
             topo.n_regions(),
             topo.cil_mode.label()
+        );
+    }
+    if let Some(f) = &fs.fabric {
+        let cap = |mbps: f64| {
+            if mbps.is_infinite() {
+                "uncapped".to_string()
+            } else {
+                format!("{mbps} Mbps")
+            }
+        };
+        println!(
+            "fabric         : uplink {}, access {} (+{} ms latency)",
+            cap(f.uplink_mbps),
+            cap(f.access_mbps),
+            f.access_latency_ms
         );
     }
     if fs.feedback != FeedbackMode::Off {
@@ -658,6 +686,8 @@ USAGE:
                  [--region-cap N|name:N,...] [--region-rps R|name:R,...]
                  [--throttle reject|queue[:WAIT_S]] [--failover]
                  [--outage name:START_S-END_S,...]
+                 [--fabric uncapped|uplink=MBPS,access=MBPS,latency=MS]
+                 [--uplink-mbps X] [--access-latency-ms Y]
                  [--record PATH|off] [--replay PATH] [--stream-metrics]
                  [--metrics PATH] [--metrics-prom PATH]
                  [--metrics-window-ms W] [--profile]
@@ -671,6 +701,17 @@ scheduled windows; --scenario outage darkens correlated device groups.
 --merge picks the epoch-barrier strategy: per-region worklist merges
 (default; only contended regions pay sorting cost) or the single global
 worklist — both produce bitwise-identical results and fingerprints.
+
+Network fabric: --fabric turns on the shared-link model — each cloud
+transfer crosses a private access leg (latency + serialization) and a
+per-region uplink whose bandwidth is fair-shared by every transfer in
+flight there, so congestion delays cloud completions and the predictor's
+Eqn.-1 transfer term steers placement toward the edge when uplinks
+saturate. `--fabric uncapped` (or any spec with infinite capacities and
+zero latency) is bitwise identical to running without --fabric;
+--uplink-mbps / --access-latency-ms override single knobs. Per-link
+high-water gauges land in --metrics as `uplink_active` /
+`uplink_backlog_ms` rows.
   skedge live    --app fd [--set ...] [--scale 0.05] [--runs 4]
                  [--backend xla|native] [--feedback off|observe]
                  [--record PATH] [--metrics PATH]

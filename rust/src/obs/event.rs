@@ -58,6 +58,9 @@ impl EventMeta {
 pub struct Stages {
     pub upld: f64,
     pub routing: f64,
+    /// realized network-fabric transfer delay (shared-uplink contention;
+    /// 0.0 in every run without `--fabric`)
+    pub xfer: f64,
     /// extra one-way routing accumulated by failover hops
     pub extra_routing: f64,
     /// admission queue wait under `ThrottlePolicy::Queue`
@@ -78,6 +81,7 @@ impl Stages {
     pub fn total(&self) -> f64 {
         self.upld
             + self.routing
+            + self.xfer
             + self.extra_routing
             + self.queue_wait
             + self.start
@@ -93,6 +97,12 @@ impl Stages {
         let mut m = std::collections::BTreeMap::new();
         m.insert("upld".into(), Json::Num(self.upld));
         m.insert("routing".into(), Json::Num(self.routing));
+        if self.xfer != 0.0 {
+            // fabric runs only — elided otherwise so fabric-off event files
+            // stay byte-identical to the pre-fabric schema (still v2; the
+            // reader treats a missing `xfer` as 0.0)
+            m.insert("xfer".into(), Json::Num(self.xfer));
+        }
         m.insert("extra_routing".into(), Json::Num(self.extra_routing));
         m.insert("queue_wait".into(), Json::Num(self.queue_wait));
         m.insert("start".into(), Json::Num(self.start));
@@ -109,6 +119,7 @@ impl Stages {
         Ok(Stages {
             upld: req_f64(v, "upld")?,
             routing: req_f64(v, "routing")?,
+            xfer: opt_f64(v, "xfer"),
             extra_routing: req_f64(v, "extra_routing")?,
             queue_wait: req_f64(v, "queue_wait")?,
             start: req_f64(v, "start")?,
@@ -553,6 +564,12 @@ fn opt_usize(v: &Json, key: &str) -> Option<usize> {
     v.get(key).and_then(Json::as_f64).map(|x| x as usize)
 }
 
+/// Optional numeric field defaulting to 0.0 — for stages elided from the
+/// serialized form when zero (e.g. `xfer` in fabric-off runs).
+fn opt_f64(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
 /// The versioned header line written at the top of every event file.
 pub fn header_line() -> String {
     format!("{{\"schema\":\"{SCHEMA_NAME}\",\"version\":{SCHEMA_VERSION}}}")
@@ -710,6 +727,7 @@ mod tests {
         let s = Stages {
             upld: 1.0,
             routing: 2.0,
+            xfer: 12.0,
             extra_routing: 3.0,
             queue_wait: 4.0,
             start: 5.0,
@@ -720,6 +738,20 @@ mod tests {
             iotup: 10.0,
             edge_store: 11.0,
         };
-        assert_eq!(s.total(), 66.0);
+        assert_eq!(s.total(), 78.0);
+    }
+
+    #[test]
+    fn zero_xfer_stage_is_elided_and_reads_back() {
+        // fabric-off completions must serialize byte-identically to the
+        // pre-fabric schema: no `xfer` key at all — and both forms parse
+        let off = Stages { upld: 1.5, routing: 0.25, ..Default::default() };
+        let json = off.to_json();
+        assert!(json.get("xfer").is_none(), "zero xfer must not serialize");
+        assert_eq!(Stages::from_json(&json).unwrap(), off);
+        let on = Stages { upld: 1.5, xfer: 321.125, ..Default::default() };
+        let json = on.to_json();
+        assert_eq!(json.get("xfer").and_then(Json::as_f64), Some(321.125));
+        assert_eq!(Stages::from_json(&json).unwrap(), on);
     }
 }

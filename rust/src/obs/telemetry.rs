@@ -63,8 +63,20 @@ impl TelemetryCfg {
             regions: Arc::clone(&self.regions),
             cells: BTreeMap::new(),
             queue_depth: BTreeMap::new(),
+            link_gauge: BTreeMap::new(),
         }
     }
+}
+
+/// Per-window high-water state of one region's fabric uplink (fabric runs
+/// only; the map stays empty — and the metrics file byte-identical —
+/// without `--fabric`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LinkGauge {
+    /// max concurrent transfers sharing the uplink
+    pub active: u64,
+    /// max estimated backlog drain time (ms)
+    pub backlog_ms: f64,
 }
 
 /// One `(window, region, app)` cell of mergeable aggregates.
@@ -121,6 +133,9 @@ pub struct Telemetry {
     cells: BTreeMap<(u64, usize, usize), WindowCell>,
     /// per-window admission-queue depth high-water (coordinator-observed)
     queue_depth: BTreeMap<u64, u64>,
+    /// `(window, region)` → fabric-uplink high-water gauges
+    /// (coordinator-observed; empty without `--fabric`)
+    link_gauge: BTreeMap<(u64, usize), LinkGauge>,
 }
 
 impl Telemetry {
@@ -175,6 +190,18 @@ impl Telemetry {
         }
     }
 
+    /// Record one region's fabric-uplink state for a window (per-window
+    /// max of both gauges is kept).
+    pub fn note_link(&mut self, window: u64, region: usize, active: u64, backlog_ms: f64) {
+        let slot = self.link_gauge.entry((window, region)).or_default();
+        if active > slot.active {
+            slot.active = active;
+        }
+        if backlog_ms > slot.backlog_ms {
+            slot.backlog_ms = backlog_ms;
+        }
+    }
+
     /// Merge another partial in (cell-wise; order-invariant).
     pub fn merge(&mut self, other: &Telemetry) {
         for (k, v) in &other.cells {
@@ -182,6 +209,9 @@ impl Telemetry {
         }
         for (&w, &d) in &other.queue_depth {
             self.note_queue_depth(w, d);
+        }
+        for (&(w, r), g) in &other.link_gauge {
+            self.note_link(w, r, g.active, g.backlog_ms);
         }
     }
 
@@ -258,6 +288,23 @@ impl Telemetry {
             m.insert("value".into(), Json::Num(depth as f64));
             out.push_str(&Json::Obj(m).to_string());
             out.push('\n');
+        }
+        // fabric-uplink gauges (`--fabric` runs only): two rows per
+        // (window, region), in canonical map order
+        for (&(w, region), g) in &self.link_gauge {
+            for (name, value) in
+                [("uplink_active", g.active as f64), ("uplink_backlog_ms", g.backlog_ms)]
+            {
+                let mut m = BTreeMap::new();
+                m.insert("kind".into(), Json::Str("gauge".into()));
+                m.insert("name".into(), Json::Str(name.into()));
+                m.insert("region".into(), Json::Str(self.region_name(region)));
+                m.insert("window".into(), Json::Num(w as f64));
+                m.insert("t_ms".into(), Json::Num(w as f64 * self.window_ms));
+                m.insert("value".into(), Json::Num(value));
+                out.push_str(&Json::Obj(m).to_string());
+                out.push('\n');
+            }
         }
         out
     }
@@ -449,6 +496,24 @@ mod tests {
         let text = t.to_jsonl();
         assert!(text.contains("\"name\":\"queue_depth\",\"t_ms\":0,\"value\":7,\"window\":0"));
         assert!(text.contains("\"value\":1,\"window\":2"));
+    }
+
+    #[test]
+    fn link_gauge_keeps_window_max_and_merges() {
+        let c = cfg();
+        let mut t = c.new_telemetry();
+        t.note_link(0, 1, 3, 40.5);
+        t.note_link(0, 1, 7, 12.0); // active max wins, backlog max kept separately
+        let mut other = c.new_telemetry();
+        other.note_link(0, 1, 5, 99.5);
+        other.note_link(1, 0, 2, 8.0);
+        t.merge(&other);
+        let text = t.to_jsonl();
+        assert!(text.contains("\"name\":\"uplink_active\",\"region\":\"r1\",\"t_ms\":0,\"value\":7"));
+        assert!(text.contains("\"name\":\"uplink_backlog_ms\",\"region\":\"r1\",\"t_ms\":0,\"value\":99.5"));
+        assert!(text.contains("\"name\":\"uplink_active\",\"region\":\"r0\",\"t_ms\":5000,\"value\":2"));
+        // and a fabric-off series emits no uplink rows at all
+        assert!(!c.new_telemetry().to_jsonl().contains("uplink"));
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub struct ScoringCtx {
 #[derive(Debug, Clone, Copy)]
 pub struct RegionRow<'a> {
     pub routing_ms: f64,
+    /// network-fabric transfer estimate for this payload to this region
+    /// (access leg + uplink serialization + queue snapshot). Exactly 0.0
+    /// without a fabric, which keeps the lead `upld + routing + 0.0`
+    /// bit-identical to the pre-fabric static-row model.
+    pub xfer_ms: f64,
     pub price_mult: f64,
     pub cil: &'a Cil,
 }
@@ -59,7 +64,7 @@ impl ScoringCtx {
     /// one CIL with zero routing latency and reference pricing.
     pub fn assemble_one(&self, cil: &Cil, raw: &RawPrediction, now: f64) -> Prediction {
         self.assemble_regions(
-            std::iter::once(RegionRow { routing_ms: 0.0, price_mult: 1.0, cil }),
+            std::iter::once(RegionRow { routing_ms: 0.0, xfer_ms: 0.0, price_mult: 1.0, cil }),
             raw,
             now,
         )
@@ -100,7 +105,8 @@ impl ScoringCtx {
         out.cloud.reserve(rows.size_hint().0.max(1) * n_cfg);
         for row in rows {
             // time-to-trigger for this region: predicted upload + routing
-            let lead = raw.upld_ms + row.routing_ms;
+            // + the fabric transfer estimate (0.0 without a fabric)
+            let lead = raw.upld_ms + row.routing_ms + row.xfer_ms;
             let trigger = now + lead;
             for j in 0..n_cfg {
                 let warm = row.cil.predicts_warm(j, trigger);
@@ -268,6 +274,7 @@ mod tests {
         for now in [0.0, 777.125, 44_000.5] {
             let rows = (0..3).map(|r| RegionRow {
                 routing_ms: routing[r],
+                xfer_ms: 0.0,
                 price_mult: price[r],
                 cil: &cils[r],
             });
@@ -284,7 +291,7 @@ mod tests {
         let raw = raw(19);
         let cil = warmed_cil(19, 3.0);
         let via_regions = c.assemble_regions(
-            std::iter::once(RegionRow { routing_ms: 0.0, price_mult: 1.0, cil: &cil }),
+            std::iter::once(RegionRow { routing_ms: 0.0, xfer_ms: 0.0, price_mult: 1.0, cil: &cil }),
             &raw,
             2_500.0,
         );
@@ -306,7 +313,12 @@ mod tests {
             cils.iter()
                 .zip(routing)
                 .zip(price)
-                .map(|((cil, routing_ms), price_mult)| RegionRow { routing_ms, price_mult, cil })
+                .map(|((cil, routing_ms), price_mult)| RegionRow {
+                    routing_ms,
+                    xfer_ms: 0.0,
+                    price_mult,
+                    cil,
+                })
         };
         let mut scratch = c.assemble_regions(rows(), &raw7, 100.0);
         // refill the bigger scratch with the smaller assembly
@@ -322,8 +334,8 @@ mod tests {
         let raw = raw(3);
         let mut cil = Cil::new(3, TIDL);
         cil.update(0, 0.0, 1000.0); // idle (warm) from t = 1000
-        let near = RegionRow { routing_ms: 0.0, price_mult: 1.0, cil: &cil };
-        let far = RegionRow { routing_ms: 400.0, price_mult: 2.0, cil: &cil };
+        let near = RegionRow { routing_ms: 0.0, xfer_ms: 0.0, price_mult: 1.0, cil: &cil };
+        let far = RegionRow { routing_ms: 400.0, xfer_ms: 0.0, price_mult: 2.0, cil: &cil };
         let p = c.assemble_regions([near, far], &raw, 600.0);
         // near trigger 600 + 431.25 ≈ 1031 → warm; e2e carries no routing
         assert!(p.cloud[0].warm);
@@ -331,5 +343,26 @@ mod tests {
         assert_eq!(p.cloud[3].upld_ms, raw.upld_ms + 400.0);
         assert!(p.cloud[3].e2e_ms > p.cloud[0].e2e_ms);
         assert_eq!(p.cloud[3].cost, p.cloud[0].cost * 2.0);
+    }
+
+    #[test]
+    fn fabric_xfer_term_rides_the_upload_leg() {
+        // the fabric transfer estimate shifts the trigger (warm assessment)
+        // and the e2e exactly like routing latency — and a 0.0 term is a
+        // bitwise no-op (the uncongested-identity invariant)
+        let c = ctx();
+        let raw = raw(3);
+        let mut cil = Cil::new(3, TIDL);
+        cil.update(0, 0.0, 1000.0); // idle (warm) from t = 1000
+        let mk = |xfer_ms| RegionRow { routing_ms: 25.0, xfer_ms, price_mult: 1.0, cil: &cil };
+        let free = c.assemble_regions([mk(0.0)], &raw, 600.0);
+        let congested = c.assemble_regions([mk(5_000.0)], &raw, 600.0);
+        assert_eq!(free.cloud[0].upld_ms.to_bits(), (raw.upld_ms + 25.0).to_bits());
+        assert_eq!(congested.cloud[0].upld_ms, raw.upld_ms + 25.0 + 5_000.0);
+        assert_eq!(congested.cloud[0].e2e_ms - free.cloud[0].e2e_ms, 5_000.0);
+        // 600 + 431.25 + 25 → warm; pushing the trigger out 5 s drifts the
+        // container past its believed idle expiry only if T_idl allows —
+        // here both stay warm, but the trigger the CIL saw moved
+        assert!(free.cloud[0].warm && congested.cloud[0].warm);
     }
 }

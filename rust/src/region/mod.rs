@@ -65,6 +65,8 @@ pub struct ResolvedTopology {
     pub failover: bool,
     /// scheduled region blackout windows
     pub outages: Vec<OutageWindow>,
+    /// shared-link network fabric (None = static routing rows only)
+    pub fabric: Option<crate::config::FabricSpec>,
 }
 
 impl ResolvedTopology {
@@ -82,9 +84,14 @@ impl ResolvedTopology {
                     throttle: spec.throttle,
                     failover: spec.failover,
                     outages: spec.outages.clone(),
+                    fabric: fs.fabric,
                 })
             }
-            None => Ok(Self::single(n_configs)),
+            None => {
+                let mut t = Self::single(n_configs);
+                t.fabric = fs.fabric;
+                Ok(t)
+            }
         }
     }
 
@@ -98,6 +105,7 @@ impl ResolvedTopology {
             throttle: ThrottlePolicy::Reject,
             failover: false,
             outages: Vec::new(),
+            fabric: None,
         }
     }
 

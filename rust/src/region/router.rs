@@ -36,6 +36,17 @@ pub struct DeviceRouter {
     /// per-region working CIL: private beliefs, or the latest hub snapshot
     /// overlaid with this device's own within-epoch placements
     cils: Vec<Cil>,
+    /// fixed per-transfer fabric latency (access propagation; 0 without a
+    /// fabric)
+    fab_const_ms: f64,
+    /// per-byte fabric serialization (access + uplink legs; 0 without a
+    /// fabric — every fabric term then stays an exact 0.0, keeping
+    /// assembly bit-identical to the static-row model)
+    fab_ms_per_byte: f64,
+    /// latest per-region uplink queue-delay snapshot (`FabricView`),
+    /// refreshed at epoch barriers like hub snapshots; all zeros without a
+    /// fabric
+    fab_queue_ms: Vec<f64>,
     /// pending (at_ms, to_region) mobility events, sorted by time
     moves: Vec<(f64, usize)>,
     next_move: usize,
@@ -77,6 +88,13 @@ impl DeviceRouter {
         }
         moves.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let cils = (0..n).map(|_| Cil::new(topo.n_configs, tidl_belief_ms)).collect();
+        let (fab_const_ms, fab_ms_per_byte) = match &topo.fabric {
+            Some(f) => (
+                f.access_latency_ms,
+                f.access_ms_per_byte() + f.uplink_ms_per_byte(),
+            ),
+            None => (0.0, 0.0),
+        };
         let mut router = DeviceRouter {
             topo,
             mode,
@@ -84,6 +102,9 @@ impl DeviceRouter {
             jitter,
             routing_ms: vec![0.0; n],
             cils,
+            fab_const_ms,
+            fab_ms_per_byte,
+            fab_queue_ms: vec![0.0; n],
             moves,
             next_move: 0,
             moves_applied: 0,
@@ -145,17 +166,23 @@ impl DeviceRouter {
     /// through the shared Eqn.-1 core
     /// ([`ScoringCtx::assemble_regions`](crate::predictor::ScoringCtx::assemble_regions)):
     /// one [`RegionRow`] per region, pairing the device's current routing
-    /// latency and the region's price multiplier with that region's working
-    /// CIL. No second Eqn.-1 body lives here.
-    pub fn assemble(&self, p: &Predictor, raw: &RawPrediction, now: f64) -> Prediction {
+    /// latency, its fabric transfer estimate for this task's `bytes`
+    /// (access leg + uplink serialization + the region's stale queue
+    /// snapshot; exact 0.0 without a fabric), and the region's price
+    /// multiplier with that region's working CIL. No second Eqn.-1 body
+    /// lives here.
+    pub fn assemble(&self, p: &Predictor, raw: &RawPrediction, now: f64, bytes: f64) -> Prediction {
+        let xfer_base = self.fab_const_ms + bytes * self.fab_ms_per_byte;
         let rows = self
             .topo
             .regions
             .iter()
             .zip(&self.routing_ms)
             .zip(&self.cils)
-            .map(|((spec, &routing_ms), cil)| RegionRow {
+            .zip(&self.fab_queue_ms)
+            .map(|(((spec, &routing_ms), cil), &fab_queue)| RegionRow {
                 routing_ms,
+                xfer_ms: xfer_base + fab_queue,
                 price_mult: spec.price_mult,
                 cil,
             });
@@ -166,19 +193,38 @@ impl DeviceRouter {
     /// caller-owned [`Prediction`] scratch (vectors cleared and refilled)
     /// through [`ScoringCtx::assemble_regions_into`](crate::predictor::ScoringCtx::assemble_regions_into),
     /// so devices can recycle one prediction buffer across every task.
-    pub fn assemble_into(&self, p: &Predictor, raw: &RawPrediction, now: f64, out: &mut Prediction) {
+    pub fn assemble_into(
+        &self,
+        p: &Predictor,
+        raw: &RawPrediction,
+        now: f64,
+        bytes: f64,
+        out: &mut Prediction,
+    ) {
+        let xfer_base = self.fab_const_ms + bytes * self.fab_ms_per_byte;
         let rows = self
             .topo
             .regions
             .iter()
             .zip(&self.routing_ms)
             .zip(&self.cils)
-            .map(|((spec, &routing_ms), cil)| RegionRow {
+            .zip(&self.fab_queue_ms)
+            .map(|(((spec, &routing_ms), cil), &fab_queue)| RegionRow {
                 routing_ms,
+                xfer_ms: xfer_base + fab_queue,
                 price_mult: spec.price_mult,
                 cil,
             });
         p.scoring_ctx().assemble_regions_into(rows, raw, now, out);
+    }
+
+    /// Adopt the latest per-region uplink queue-delay snapshot
+    /// (`FabricView`), broadcast at epoch barriers exactly like hub-CIL
+    /// snapshots. Only called when a fabric is configured; the row stays
+    /// all-zero otherwise.
+    pub fn refresh_fabric(&mut self, queue_ms: &[f64]) {
+        debug_assert_eq!(queue_ms.len(), self.fab_queue_ms.len());
+        self.fab_queue_ms.clone_from_slice(queue_ms);
     }
 
     /// Pre-size every working CIL's belief lists (see [`Cil::reserve`]) so

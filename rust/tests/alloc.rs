@@ -46,7 +46,7 @@ fn steady_state_epochs_allocate_nothing() {
     for epoch in 0..n_epochs {
         let epoch_end = (epoch + 1) as f64 * fs.epoch_ms;
         let before = allocations();
-        core.run_epoch(epoch_end, None, &[], &mut out).expect("epoch");
+        core.run_epoch(epoch_end, None, None, &[], &mut out).expect("epoch");
         let during = allocations() - before;
         let (records, requests) = (out.n_edge_records(), out.n_requests());
         out.clear();
@@ -62,6 +62,6 @@ fn steady_state_epochs_allocate_nothing() {
     assert!(measured >= 2, "warmup consumed every epoch; extend the run");
     // Drain any arrival parked exactly on the horizon (unmeasured — the
     // pin covers steady-state epochs, not the final flush).
-    core.run_epoch(f64::INFINITY, None, &[], &mut out).expect("final drain");
+    core.run_epoch(f64::INFINITY, None, None, &[], &mut out).expect("final drain");
     assert_eq!(core.arrivals_left(), 0, "workload should drain by the final flush");
 }

@@ -193,6 +193,38 @@ fn fleet_record_replay_roundtrip_is_bitwise_in_both_cil_modes() {
     }
 }
 
+#[test]
+fn fabric_record_replay_roundtrip_is_bitwise() {
+    // a congested fabric delays transfers but is still a pure function of
+    // the canonical request stream, so record → replay stays a bitwise
+    // fixed point with a capped uplink — and the recorded completions
+    // carry the congested transfer stage
+    let meta = meta();
+    let spec = skedge::config::FabricSpec::parse("uplink=4,latency=2").unwrap();
+    let topo = TopologySpec::new(vec![
+        RegionSettings::new("near", 5.0),
+        RegionSettings::new("far", 45.0).with_price_mult(1.15),
+    ])
+    .with_cross_penalty_ms(25.0);
+    let fs = FleetSettings::new(8)
+        .with_seed(91)
+        .with_duration_ms(8_000.0)
+        .with_epoch_ms(2_000.0)
+        .with_scenario(FleetScenario::Poisson)
+        .with_topology(topo)
+        .with_fabric(spec);
+    let orig = fleet::run(&meta, &fs.clone().with_recording(true)).unwrap();
+    assert!(!orig.events.is_empty(), "recording produced no events");
+    let congested = orig.events.iter().any(|e| match e {
+        TaskEvent::Completion { stages, .. } => stages.xfer > 0.0,
+        _ => false,
+    });
+    assert!(congested, "capped uplink never congested — no xfer stage recorded");
+    let rows = extract_arrivals(&orig.events).unwrap();
+    let re = fleet::run(&meta, &fs.clone().with_replay_trace(Arc::new(rows))).unwrap();
+    assert_records_identical(&orig, &re, "fabric replay");
+}
+
 // ------------------------------------- recording observes, never changes
 
 /// A capped two-region fleet with queue throttling and failover: dense

@@ -1,0 +1,196 @@
+//! Network-fabric pins: the invariants the shared-link model is built on.
+//!
+//!  1. **Identity** — an uncongested fabric (infinite bandwidth, zero
+//!     access latency) is *bitwise* identical to running without a fabric
+//!     at all: every transfer term is an exact `+ 0.0`, so fingerprints
+//!     and full record fields match in both CIL modes and under any shard
+//!     count. Running with `--fabric` absent touches zero fabric code
+//!     paths, so the default path stays byte-identical to the pre-fabric
+//!     baseline.
+//!  2. **Shard invariance** — the congested fabric is a coordinator model
+//!     driven in canonical `(time, device, seq)` order, so a capped run
+//!     fingerprints identically across shard counts. (Epoch *chunking* of
+//!     the link simulation itself is bitwise-invariant — pinned in the
+//!     `fabric` module — but the broadcast backlog snapshot is taken at
+//!     epoch barriers, so the epoch length is a model parameter, exactly
+//!     like hub-CIL snapshot cadence.)
+//!  3. **Saturation steers placement** — a flash crowd over a capped
+//!     uplink congests the shared link; the Eqn.-1 transfer term grows
+//!     and the placement mix shifts strictly toward the edge during the
+//!     crowd window, relative to the uncongested twin.
+
+use skedge::config::{
+    default_artifact_dir, CilMode, FabricSpec, FleetScenario, FleetSettings, Meta,
+    RegionSettings, TopologySpec,
+};
+use skedge::fleet::{self, FleetOutcome};
+
+fn meta() -> Meta {
+    Meta::load(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+/// Full-field record comparison (same oracle as the events round-trip
+/// suite): fingerprint plus every outcome-bearing field, bitwise.
+fn assert_records_identical(a: &FleetOutcome, b: &FleetOutcome, what: &str) {
+    assert_eq!(a.summary.fingerprint, b.summary.fingerprint, "{what}: fingerprint");
+    assert_eq!(a.sim_end_ms, b.sim_end_ms, "{what}: sim end");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: device count");
+    for (da, db) in a.records.iter().zip(&b.records) {
+        assert_eq!(da.len(), db.len(), "{what}: task count");
+        for (x, y) in da.iter().zip(db) {
+            assert_eq!(x.placement, y.placement, "{what}: task {}", x.id);
+            assert_eq!(x.actual_e2e_ms.to_bits(), y.actual_e2e_ms.to_bits(), "{what}: e2e");
+            assert_eq!(x.predicted_e2e_ms.to_bits(), y.predicted_e2e_ms.to_bits(), "{what}: pred");
+            assert_eq!(x.actual_cost.to_bits(), y.actual_cost.to_bits(), "{what}: cost");
+            assert_eq!(x.warm_actual, y.warm_actual, "{what}: warm");
+            assert_eq!(x.rejected, y.rejected, "{what}: rejected");
+            assert_eq!(x.failover_hops, y.failover_hops, "{what}: hops");
+        }
+    }
+}
+
+/// The standard two-region topology the round-trip suites use.
+fn duo(cil: CilMode) -> TopologySpec {
+    TopologySpec::new(vec![
+        RegionSettings::new("near", 5.0),
+        RegionSettings::new("far", 45.0).with_price_mult(1.15),
+    ])
+    .with_cross_penalty_ms(25.0)
+    .with_cil_mode(cil)
+}
+
+// ------------------------------------------------------------- identity
+
+#[test]
+fn uncongested_fabric_is_bitwise_identical_to_no_fabric() {
+    // --fabric uncapped must be indistinguishable from no --fabric at all:
+    // the uplink ms/byte is an exact 0.0, the access leg contributes an
+    // exact + 0.0, and the ingest fast path releases requests at their
+    // original trigger times. Pinned bitwise in both CIL modes and across
+    // 1/2/4 shards against the single fabric-off baseline.
+    let meta = meta();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let fs = FleetSettings::new(12)
+            .with_seed(23)
+            .with_duration_ms(8_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_topology(duo(cil));
+        let base = fleet::run(&meta, &fs.clone().with_shards(1)).unwrap();
+        assert!(base.summary.cloud_count > 0, "{cil:?}: baseline never used the cloud");
+        for shards in [1usize, 2, 4] {
+            let off = fleet::run(&meta, &fs.clone().with_shards(shards)).unwrap();
+            assert_records_identical(&base, &off, &format!("{cil:?}/{shards} shards, no fabric"));
+            let on = fleet::run(
+                &meta,
+                &fs.clone().with_shards(shards).with_fabric(FabricSpec::UNCAPPED),
+            )
+            .unwrap();
+            assert_records_identical(
+                &base,
+                &on,
+                &format!("{cil:?}/{shards} shards, uncapped fabric"),
+            );
+        }
+    }
+}
+
+#[test]
+fn uncongested_fabric_is_identity_without_a_topology_too() {
+    // the implicit single-region fleet takes the topology-less resolution
+    // path; the identity must hold there as well
+    let meta = meta();
+    let fs = FleetSettings::new(8).with_seed(5).with_duration_ms(6_000.0);
+    let base = fleet::run(&meta, &fs).unwrap();
+    let on = fleet::run(&meta, &fs.clone().with_fabric(FabricSpec::UNCAPPED)).unwrap();
+    assert_records_identical(&base, &on, "single-region uncapped fabric");
+}
+
+// ------------------------------------------------- congested invariance
+
+#[test]
+fn capped_fabric_is_shard_invariant() {
+    // congestion is computed by the coordinator from the canonically
+    // ordered request stream, so the shard partition may not leak into
+    // results even when the shared link is saturated
+    let meta = meta();
+    let spec = FabricSpec::parse("uplink=4,latency=2").unwrap();
+    for cil in [CilMode::Private, CilMode::Hub] {
+        let fs = FleetSettings::new(12)
+            .with_seed(23)
+            .with_duration_ms(8_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_topology(duo(cil))
+            .with_fabric(spec);
+        let base = fleet::run(&meta, &fs.clone().with_shards(1)).unwrap();
+        for shards in [2usize, 4] {
+            let o = fleet::run(&meta, &fs.clone().with_shards(shards)).unwrap();
+            assert_records_identical(&base, &o, &format!("{cil:?} capped fabric, {shards} shards"));
+        }
+    }
+}
+
+// ------------------------------------------------------------ saturation
+
+/// Fraction of served crowd-window arrivals that executed on the edge.
+fn crowd_edge_fraction(o: &FleetOutcome, from_ms: f64) -> (f64, usize) {
+    let (mut edge, mut total) = (0usize, 0usize);
+    for r in o.records.iter().flatten() {
+        if r.arrive_ms >= from_ms && r.is_served() {
+            total += 1;
+            if r.is_edge() {
+                edge += 1;
+            }
+        }
+    }
+    (edge as f64 / total.max(1) as f64, total)
+}
+
+#[test]
+fn capped_uplink_pushes_the_flash_crowd_to_the_edge() {
+    // the regression the fabric exists to produce: a flash crowd over a
+    // capped uplink saturates the shared link, the congested transfer
+    // estimate inflates the cloud rows, and placement shifts strictly
+    // toward the edge during the crowd window — while the uncongested
+    // twin (same seed, same arrivals) keeps its cloud-heavy mix
+    let meta = meta();
+    let crowd_at = 10_000.0;
+    let fs = FleetSettings::new(12)
+        .with_seed(9)
+        .with_duration_ms(16_000.0)
+        .with_epoch_ms(2_000.0)
+        .with_shards(2)
+        .with_scenario(FleetScenario::FlashCrowd {
+            at_ms: crowd_at,
+            ramp_ms: 3_000.0,
+            peak_mult: 6.0,
+        })
+        .with_topology(duo(CilMode::Private));
+    let uncapped = fleet::run(&meta, &fs.clone().with_fabric(FabricSpec::UNCAPPED)).unwrap();
+    let capped_spec = FabricSpec::parse("uplink=4,latency=2").unwrap();
+    let capped = fleet::run(&meta, &fs.clone().with_fabric(capped_spec)).unwrap();
+
+    // the capped link visibly changed the run
+    assert_ne!(
+        uncapped.summary.fingerprint, capped.summary.fingerprint,
+        "capped uplink did not change the run"
+    );
+
+    let (free_frac, free_n) = crowd_edge_fraction(&uncapped, crowd_at);
+    let (cap_frac, cap_n) = crowd_edge_fraction(&capped, crowd_at);
+    assert!(free_n > 50 && cap_n > 50, "crowd too small ({free_n}/{cap_n} served)");
+    assert!(
+        free_frac < 1.0,
+        "uncongested twin sent nothing to the cloud — saturation has nothing to shift"
+    );
+    assert!(
+        cap_frac > free_frac,
+        "edge fraction must rise under saturation: capped {cap_frac:.3} vs \
+         uncongested {free_frac:.3}"
+    );
+
+    // and the congested twin is still deterministic
+    let again = fleet::run(&meta, &fs.with_fabric(capped_spec)).unwrap();
+    assert_records_identical(&capped, &again, "capped flash crowd rerun");
+}

@@ -484,6 +484,154 @@ fn prop_unlimited_capacity_means_zero_hops() {
     });
 }
 
+/// Random transfer load for the fabric link properties: `(at_ms, device,
+/// seq, bytes)` with unique `(device, seq)` keys and plenty of overlap.
+fn random_transfers(g: &mut Gen) -> Vec<(f64, usize, u64, f64)> {
+    let n = g.usize_range(2, 24);
+    (0..n)
+        .map(|i| {
+            (
+                g.f64_range(0.0, 200.0),
+                g.usize_range(0, 5),
+                i as u64, // unique per device via the seq tiebreak
+                g.f64_range(100.0, 50_000.0),
+            )
+        })
+        .collect()
+}
+
+/// Fabric satellite pin: per-link conservation. No transfer ever finishes
+/// faster than a dedicated link would move its bytes, every queued
+/// transfer is released exactly once, and the link's aggregate drain rate
+/// never exceeds its capacity — the observable form of "concurrent
+/// fair shares sum to at most the link capacity at every boundary".
+#[test]
+fn prop_link_conservation_and_capacity() {
+    use skedge::fabric::LinkQueue;
+    check("link-conservation", 200, |g| {
+        let mpb = g.f64_range(1e-4, 1e-2); // 0.8–80 Mbps
+        let mut q = LinkQueue::new(mpb);
+        let load = random_transfers(g);
+        for &(at, dev, seq, bytes) in &load {
+            q.push(at, dev, seq, bytes, seq as usize);
+        }
+        q.seal();
+        let mut rel = Vec::new();
+        q.advance(f64::INFINITY, &mut rel);
+        prop_assert!(rel.len() == load.len(), "released {} of {}", rel.len(), load.len());
+        prop_assert!(q.active_count() == 0 && q.backlog_bytes() == 0.0, "link not drained");
+        let first_start = load.iter().map(|l| l.0).fold(f64::INFINITY, f64::min);
+        for r in &rel {
+            let (at, _, _, bytes) = load[r.slot];
+            // dedicated-link floor: sharing can only slow a transfer down
+            let floor = at + bytes * mpb;
+            prop_assert!(
+                r.finish_ms >= floor - 1e-6 * floor,
+                "slot {} finished at {} < dedicated-link floor {floor}", r.slot, r.finish_ms
+            );
+            // capacity ceiling: bytes fully drained by any finish time
+            // never exceed capacity x elapsed (fair shares sum <= 1/mpb)
+            let drained: f64 = rel
+                .iter()
+                .filter(|o| o.finish_ms <= r.finish_ms)
+                .map(|o| load[o.slot].3)
+                .sum();
+            let budget = (r.finish_ms - first_start) / mpb;
+            prop_assert!(
+                drained <= budget * (1.0 + 1e-9) + 1e-6,
+                "{drained} bytes drained by {} exceeds capacity budget {budget}", r.finish_ms
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Fabric satellite pin: transfer-time monotonicity. Adding one more
+/// concurrent transfer to a shared link never makes any existing transfer
+/// finish earlier.
+#[test]
+fn prop_adding_a_transfer_never_speeds_existing_ones() {
+    use skedge::fabric::LinkQueue;
+    check("link-monotone", 200, |g| {
+        let mpb = g.f64_range(1e-4, 1e-2);
+        let load = random_transfers(g);
+        let extra = (
+            g.f64_range(0.0, 250.0),
+            g.usize_range(0, 5),
+            load.len() as u64,
+            g.f64_range(100.0, 80_000.0),
+        );
+        let run = |with_extra: bool| {
+            let mut q = LinkQueue::new(mpb);
+            for &(at, dev, seq, bytes) in &load {
+                q.push(at, dev, seq, bytes, seq as usize);
+            }
+            if with_extra {
+                q.push(extra.0, extra.1, extra.2, extra.3, extra.2 as usize);
+            }
+            q.seal();
+            let mut rel = Vec::new();
+            q.advance(f64::INFINITY, &mut rel);
+            rel
+        };
+        let base = run(false);
+        let loaded = run(true);
+        for b in &base {
+            let Some(l) = loaded.iter().find(|l| l.slot == b.slot) else {
+                return Err(format!("slot {} vanished under extra load", b.slot));
+            };
+            prop_assert!(
+                l.finish_ms >= b.finish_ms - 1e-6 * b.finish_ms.max(1.0),
+                "slot {} sped up under load: {} -> {}", b.slot, b.finish_ms, l.finish_ms
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Fabric satellite pin: with the fabric enabled, every completion's
+/// stage decomposition (now including the congested transfer stage) still
+/// sums to its end-to-end latency, and the xfer stage is non-negative —
+/// positive somewhere once the capped uplink congests.
+#[test]
+fn prop_fabric_stage_conservation_end_to_end() {
+    use skedge::config::FabricSpec;
+    use skedge::obs::TaskEvent;
+    let meta = Meta::load(&default_artifact_dir()).unwrap();
+    check("fabric-stage-conservation", 6, |g| {
+        let spec = FabricSpec {
+            uplink_mbps: g.f64_range(2.0, 16.0),
+            access_mbps: f64::INFINITY,
+            access_latency_ms: g.f64_range(0.0, 5.0),
+        };
+        let fs = FleetSettings::new(g.usize_range(4, 9))
+            .with_seed(g.usize_range(0, 1 << 30) as u64)
+            .with_duration_ms(6_000.0)
+            .with_epoch_ms(2_000.0)
+            .with_scenario(FleetScenario::Poisson)
+            .with_shards(g.usize_range(1, 3))
+            .with_topology(TopologySpec::parse("duo").unwrap())
+            .with_fabric(spec)
+            .with_recording(true);
+        let o = fleet::run(&meta, &fs).map_err(|e| e.to_string())?;
+        let mut saw_completion = false;
+        for ev in &o.events {
+            if let TaskEvent::Completion { e2e_ms, stages, edge, .. } = ev {
+                saw_completion = true;
+                prop_assert!(stages.xfer >= 0.0, "negative xfer stage");
+                prop_assert!(!(*edge && stages.xfer != 0.0), "edge task paid the uplink");
+                let total = stages.total();
+                prop_assert!(
+                    (total - e2e_ms).abs() <= 1e-6 * e2e_ms.max(1.0),
+                    "stage sum {total} != e2e {e2e_ms} (xfer {})", stages.xfer
+                );
+            }
+        }
+        prop_assert!(saw_completion, "run produced no completions");
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_forest_bounded_by_leaf_range() {
     check("forest-bounded", 100, |g| {

@@ -103,7 +103,7 @@ fn live_and_sim_prediction_paths_are_bit_equal() {
 
             // both paths must assemble the same prediction, bit for bit
             let raw_sim = dev.predictor.raw(size).unwrap();
-            let pred_sim = dev.router.assemble(&dev.predictor, &raw_sim, now);
+            let pred_sim = dev.router.assemble(&dev.predictor, &raw_sim, now, t.actuals.bytes);
             let pred_live = live_pred.predict(size, now).unwrap();
             let what = format!("{objective:?} task {}", t.id);
             assert_prediction_bits_eq(&pred_live, &pred_sim, &what);
@@ -186,7 +186,7 @@ fn one_region_assemble_regions_equals_assemble_one_in_both_cil_modes() {
                 p.cil.set_tidl_ms(meta.tidl_mean_ms);
             }
             let raw = p.raw(t.actuals.size).unwrap();
-            let via_regions = router.assemble(&p, &raw, now);
+            let via_regions = router.assemble(&p, &raw, now, t.actuals.bytes);
             let via_one = p.assemble(&raw, now);
             assert_prediction_bits_eq(&via_regions, &via_one, &format!("{mode:?} task {i}"));
 
